@@ -1,0 +1,84 @@
+"""AOT: lower the L2 monitor_step graph to HLO *text* artifacts.
+
+The interchange format is HLO text, not ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The HLO text parser on the rust side reassigns ids, so text round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Emits one artifact per (W, K) bank-shape variant plus a manifest the rust
+runtime uses to pick a variant at startup.  Adding a variant is a one-line
+change to ``VARIANTS``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: (W, K) bank shapes to pre-compile.  W = max concurrent workloads,
+#: K = max media types per workload.  The paper's experiments use 30
+#: workloads x 1 media type; 64x4 is the default runtime variant, the
+#: others serve tests (small) and headroom/perf study (large).
+VARIANTS = ((8, 2), (64, 4), (256, 8))
+
+MANIFEST = "manifest.json"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(w: int, k: int) -> str:
+    lowered = jax.jit(model.monitor_step).lower(*model.example_args(w, k))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default=",".join(f"{w}x{k}" for w, k in VARIANTS),
+        help="comma-separated WxK list, e.g. 64x4,256x8",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    variants = []
+    for spec in args.variants.split(","):
+        w, k = (int(x) for x in spec.strip().split("x"))
+        name = f"monitor_step_w{w}k{k}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_variant(w, k)
+        with open(path, "w") as f:
+            f.write(text)
+        variants.append({"w": w, "k": k, "file": name})
+        print(f"wrote {name}: {len(text)} chars")
+
+    manifest = {
+        "format": "hlo-text",
+        "params_layout": list(model.PARAMS_LAYOUT),
+        "outputs": ["b_hat", "pi", "r", "s", "n_star", "n_next"],
+        "variants": variants,
+    }
+    with open(os.path.join(args.out_dir, MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {MANIFEST} ({len(variants)} variants)")
+
+
+if __name__ == "__main__":
+    main()

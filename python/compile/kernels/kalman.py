@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: masked batched scalar-Kalman update (Dithen eqs. 6-9).
+
+Dithen runs one scalar Kalman filter per (workload, media-type) pair to
+estimate the compute-unit-seconds (CUS) cost ``b_{w,k}`` of one media item.
+At every monitoring instant the whole bank of ``B = W_max * K_max`` filters
+is updated at once; that update is the compute hot-spot of the control
+plane and is what this kernel implements.
+
+Per slot ``j`` (time update + conditional measurement update):
+
+    pi_minus[j] = pi[j] + sigma_z2                       (eq. 6)
+    kappa[j]    = pi_minus[j] / (pi_minus[j] + sigma_v2) (eq. 7)
+    if meas_mask[j]:
+        b'[j]  = b[j] + kappa[j] * (b_tilde[j] - b[j])   (eq. 8)
+        pi'[j] = (1 - kappa[j]) * pi_minus[j]            (eq. 9)
+    else:            # no measurement between t-1 and t: time update only
+        b'[j]  = b[j]
+        pi'[j] = pi_minus[j]
+
+The mask is soft (0.0 / 1.0) so the whole bank is branch-free and
+vectorizes on the VPU.  The kernel is tiled over slots with ``BlockSpec``
+so one block (default 256 lanes x 3 input vectors + 2 outputs, f32) stays
+well under VMEM limits; sigma_z^2 / sigma_v^2 ride along as a (2,) vector
+broadcast into every block.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the rust runtime
+(xla crate / PJRT CPU) executes directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 256
+
+
+def _kalman_kernel(b_ref, pi_ref, bt_ref, mask_ref, sig_ref, b_out_ref, pi_out_ref):
+    """One block of the masked Kalman bank update."""
+    b = b_ref[...]
+    pi = pi_ref[...]
+    bt = bt_ref[...]
+    mask = mask_ref[...]
+    sigma_z2 = sig_ref[0]
+    sigma_v2 = sig_ref[1]
+
+    pi_minus = pi + sigma_z2                       # eq. (6)
+    kappa = pi_minus / (pi_minus + sigma_v2)       # eq. (7)
+    innov = bt - b
+    b_meas = b + kappa * innov                     # eq. (8)
+    pi_meas = (1.0 - kappa) * pi_minus             # eq. (9)
+
+    # soft-select measurement vs. pure time update
+    b_out_ref[...] = mask * b_meas + (1.0 - mask) * b
+    pi_out_ref[...] = mask * pi_meas + (1.0 - mask) * pi_minus
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def kalman_update(b_hat, pi, b_tilde, meas_mask, sigmas, *, block: int = DEFAULT_BLOCK):
+    """Masked Kalman bank update over a flat slot vector.
+
+    Args:
+      b_hat:     f32[B]   current CUS estimates.
+      pi:        f32[B]   current error covariances.
+      b_tilde:   f32[B]   newest CUS measurements (ignored where mask==0).
+      meas_mask: f32[B]   1.0 where a measurement arrived, else 0.0.
+      sigmas:    f32[2]   (sigma_z^2, sigma_v^2) process/measurement noise.
+      block:     slots per Pallas block; B must be divisible by it (the
+                 caller pads; see model.monitor_step).
+
+    Returns:
+      (b_hat', pi') both f32[B].
+    """
+    (n,) = b_hat.shape
+    if n % block != 0:
+        # fall back to one whole-array block for small/odd test shapes
+        block = n
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    sig_spec = pl.BlockSpec((2,), lambda i: (0,))
+    out_shape = [
+        jax.ShapeDtypeStruct(b_hat.shape, b_hat.dtype),
+        jax.ShapeDtypeStruct(pi.shape, pi.dtype),
+    ]
+    return tuple(
+        pl.pallas_call(
+            _kalman_kernel,
+            grid=grid,
+            in_specs=[spec, spec, spec, spec, sig_spec],
+            out_specs=[spec, spec],
+            out_shape=out_shape,
+            interpret=True,
+        )(b_hat, pi, b_tilde, meas_mask, sigmas)
+    )

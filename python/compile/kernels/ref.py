@@ -1,0 +1,56 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest/hypothesis suite checks the Pallas
+kernels against (and, transitively, what the rust-side estimator bank is
+validated against through the AOT artifact parity tests).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kalman_update_ref(b_hat, pi, b_tilde, meas_mask, sigmas):
+    """Reference masked Kalman bank update (Dithen eqs. 6-9)."""
+    sigma_z2, sigma_v2 = sigmas[0], sigmas[1]
+    pi_minus = pi + sigma_z2
+    kappa = pi_minus / (pi_minus + sigma_v2)
+    b_meas = b_hat + kappa * (b_tilde - b_hat)
+    pi_meas = (1.0 - kappa) * pi_minus
+    b_new = meas_mask * b_meas + (1.0 - meas_mask) * b_hat
+    pi_new = meas_mask * pi_meas + (1.0 - meas_mask) * pi_minus
+    return b_new, pi_new
+
+
+def required_cus_ref(m_rem, slot_mask, b_hat):
+    """Reference masked weighted row sum (Dithen eq. 1)."""
+    return jnp.sum(m_rem * slot_mask * b_hat, axis=1)
+
+
+def service_rates_ref(r, d, wl_mask, n_tot, alpha, beta, n_w_max=jnp.inf):
+    """Reference proportional-fair service rates (Dithen eqs. 11-14).
+
+    s*_w = r_w / d_w; if N* > N_tot + alpha downscale by (N_tot+alpha)/N*,
+    if N* < beta*N_tot upscale by beta*N_tot/N*, else keep.
+    """
+    safe_d = jnp.where(d > 0.0, d, 1.0)
+    s_star = jnp.minimum(jnp.where(wl_mask > 0.0, r / safe_d, 0.0), n_w_max)
+    n_star = jnp.sum(s_star)
+    hi = n_tot + alpha
+    lo = beta * n_tot
+    scale = jnp.where(
+        n_star > hi,
+        hi / jnp.maximum(n_star, 1e-30),
+        jnp.where(n_star < lo, lo / jnp.maximum(n_star, 1e-30), 1.0),
+    )
+    # no demand at all -> no scaling
+    scale = jnp.where(n_star > 0.0, scale, 1.0)
+    return s_star * scale, n_star
+
+
+def aimd_ref(n_tot, n_star, alpha, beta, n_min, n_max):
+    """Reference AIMD step (Dithen Fig. 4)."""
+    incr = n_tot <= n_star
+    up = jnp.minimum(n_tot + alpha, n_max)
+    down = jnp.maximum(beta * n_tot, n_min)
+    return jnp.where(incr, up, down)

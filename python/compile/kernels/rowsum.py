@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: masked weighted row-reduction (Dithen eq. 1).
+
+Computes, per workload ``w``, the required compute-unit-seconds
+
+    r_w = sum_k  m_{w,k} * slot_mask_{w,k} * b_hat_{w,k}
+
+over the ``[W, K]`` (workload x media-type) slot matrix.  This is the
+reduction half of the monitoring-instant update; the elementwise Kalman
+half lives in kernels/kalman.py.
+
+Tiled with ``BlockSpec`` over the workload axis; K (media types per
+workload, <= 16 in practice) always fits one block row, so each grid step
+reduces a ``(block_w, K)`` tile to ``(block_w,)`` partial outputs with a
+single in-VMEM row sum — no cross-block accumulation needed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_W = 64
+
+
+def _rowsum_kernel(m_ref, mask_ref, b_ref, r_out_ref):
+    m = m_ref[...]
+    mask = mask_ref[...]
+    b = b_ref[...]
+    r_out_ref[...] = jnp.sum(m * mask * b, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w",))
+def required_cus(m_rem, slot_mask, b_hat, *, block_w: int = DEFAULT_BLOCK_W):
+    """Masked weighted row sum: r[w] = sum_k m[w,k]*mask[w,k]*b[w,k].
+
+    Args:
+      m_rem:     f32[W, K] remaining media items per slot.
+      slot_mask: f32[W, K] 1.0 for active slots.
+      b_hat:     f32[W, K] CUS estimates per slot.
+      block_w:   workloads per Pallas block; W must divide (caller pads).
+
+    Returns:
+      f32[W] required CUSs per workload (eq. 1).
+    """
+    w, k = m_rem.shape
+    if w % block_w != 0:
+        block_w = w
+    grid = (w // block_w,)
+    in_spec = pl.BlockSpec((block_w, k), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((block_w,), lambda i: (i,))
+    return pl.pallas_call(
+        _rowsum_kernel,
+        grid=grid,
+        in_specs=[in_spec, in_spec, in_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((w,), b_hat.dtype),
+        interpret=True,
+    )(m_rem, slot_mask, b_hat)

@@ -1,0 +1,121 @@
+"""L2: the Dithen monitoring-instant compute graph.
+
+``monitor_step`` is the whole per-tick numeric workload of the Global
+Controller Instance (GCI), fused into one jitted graph:
+
+  1. masked Kalman bank update of all W*K CUS estimators   (L1 kernel)
+  2. required CUSs per workload, r_w = sum_k m*b            (L1 kernel)
+  3. proportional-fair service rates s_w with AIMD-aware
+     up/down scaling                                        (eqs. 11-14)
+  4. the AIMD decision for N_tot[t+1]                       (Fig. 4)
+
+Python only runs at *build* time: aot.py lowers this function once per
+(W, K) variant to HLO text, and the rust coordinator executes the artifact
+through PJRT on every monitoring tick.
+
+Conventions: all arrays are f32; W and K are compile-time constants baked
+into each artifact; inactive slots carry ``slot_mask == 0`` and are
+numerically inert. Scalar knobs are packed into ``params`` so the artifact
+has a small, fixed argument list:
+
+  params = f32[8]:
+    [sigma_z2, sigma_v2, n_tot, alpha, beta, n_min, n_max, n_w_max]
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.kalman import kalman_update
+from .kernels.rowsum import required_cus
+
+#: index layout of the packed scalar parameter vector
+PARAMS_LAYOUT = (
+    "sigma_z2", "sigma_v2", "n_tot", "alpha", "beta", "n_min", "n_max", "n_w_max",
+)
+N_PARAMS = len(PARAMS_LAYOUT)
+
+
+def monitor_step(b_hat, pi, b_tilde, meas_mask, m_rem, slot_mask, d, params):
+    """One Dithen monitoring instant over the full estimator bank.
+
+    Args:
+      b_hat:     f32[W, K] CUS estimates.
+      pi:        f32[W, K] Kalman error covariances.
+      b_tilde:   f32[W, K] new CUS measurements.
+      meas_mask: f32[W, K] 1.0 where b_tilde is a real measurement.
+      m_rem:     f32[W, K] remaining media items.
+      slot_mask: f32[W, K] 1.0 for active (workload, media-type) slots.
+      d:         f32[W]    remaining time-to-completion per workload (s).
+      params:    f32[8]    packed scalars, see PARAMS_LAYOUT.
+
+    Returns tuple:
+      b_hat':  f32[W, K] updated estimates
+      pi':     f32[W, K] updated covariances
+      r:       f32[W]    required CUSs per workload (eq. 1)
+      s:       f32[W]    adjusted service rates (eqs. 11-14)
+      n_star:  f32[]     optimal total CUs (eq. 12)
+      n_next:  f32[]     AIMD CU target for t+1 (Fig. 4)
+    """
+    w, k = b_hat.shape
+    sigma_z2, sigma_v2, n_tot, alpha, beta, n_min, n_max, n_w_max = (
+        params[i] for i in range(N_PARAMS)
+    )
+    sigmas = jnp.stack([sigma_z2, sigma_v2])
+
+    # --- 1. Kalman bank update (Pallas, flat over B = W*K slots) --------
+    flat = lambda a: a.reshape(w * k)
+    b_new, pi_new = kalman_update(
+        flat(b_hat), flat(pi), flat(b_tilde), flat(meas_mask), sigmas
+    )
+    b_new = b_new.reshape(w, k)
+    pi_new = pi_new.reshape(w, k)
+    # estimators only exist on active slots
+    b_new = slot_mask * b_new + (1.0 - slot_mask) * b_hat
+    pi_new = slot_mask * pi_new + (1.0 - slot_mask) * pi
+
+    # --- 2. required CUSs per workload (Pallas row reduction) -----------
+    r = required_cus(m_rem, slot_mask, b_new)
+
+    # --- 3. proportional-fair service rates (eqs. 11-14) ----------------
+    wl_mask = (jnp.sum(slot_mask, axis=1) > 0.0).astype(b_hat.dtype)
+    safe_d = jnp.where(d > 0.0, d, 1.0)
+    # eq. (11), with the per-workload cap N_{w,max} (§II-E-4): a workload
+    # can never use more than n_w_max CUs, so demand beyond it is inert
+    s_star = jnp.minimum(jnp.where(wl_mask > 0.0, r / safe_d, 0.0), n_w_max)
+    n_star = jnp.sum(s_star)                                    # eq. (12)
+    hi = n_tot + alpha
+    lo = beta * n_tot
+    denom = jnp.maximum(n_star, jnp.asarray(1e-30, b_hat.dtype))
+    scale = jnp.where(n_star > hi, hi / denom,                  # eq. (13)
+                      jnp.where(n_star < lo, lo / denom, 1.0))  # eq. (14)
+    scale = jnp.where(n_star > 0.0, scale, 1.0)
+    s = s_star * scale
+
+    # --- 4. AIMD decision for the next instant (Fig. 4) -----------------
+    n_next = jnp.where(
+        n_tot <= n_star,
+        jnp.minimum(n_tot + alpha, n_max),
+        jnp.maximum(beta * n_tot, n_min),
+    )
+
+    return b_new, pi_new, r, s, n_star, n_next
+
+
+def example_args(w: int, k: int):
+    """ShapeDtypeStructs for lowering a (W, K) variant."""
+    f32 = jnp.float32
+    mat = jax.ShapeDtypeStruct((w, k), f32)
+    return (
+        mat, mat, mat, mat, mat, mat,
+        jax.ShapeDtypeStruct((w,), f32),
+        jax.ShapeDtypeStruct((N_PARAMS,), f32),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def jitted():
+    return jax.jit(monitor_step)

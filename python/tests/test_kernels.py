@@ -1,0 +1,137 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, dtypes, masks and magnitudes; every property
+asserts allclose against ref.py.  This is the core numeric signal the rest
+of the stack (AOT artifact -> rust runtime) inherits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.kalman import kalman_update
+from compile.kernels.rowsum import required_cus
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32 = np.float32
+F64 = np.float64
+
+
+def _tol(dtype):
+    return dict(rtol=1e-5, atol=1e-5) if dtype == F32 else dict(rtol=1e-12, atol=1e-12)
+
+
+@st.composite
+def kalman_case(draw):
+    n = draw(st.integers(min_value=1, max_value=1024))
+    dtype = draw(st.sampled_from([F32, F64]))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    b_hat = rng.uniform(0.0, 1e4, n).astype(dtype)
+    pi = rng.uniform(0.0, 10.0, n).astype(dtype)
+    b_tilde = rng.uniform(0.0, 1e4, n).astype(dtype)
+    mask = (rng.uniform(size=n) < draw(st.floats(0.0, 1.0))).astype(dtype)
+    sigmas = np.array(
+        [draw(st.floats(1e-3, 5.0)), draw(st.floats(1e-3, 5.0))], dtype=dtype
+    )
+    return b_hat, pi, b_tilde, mask, sigmas
+
+
+@settings(max_examples=60, deadline=None)
+@given(kalman_case())
+def test_kalman_matches_ref(case):
+    b_hat, pi, b_tilde, mask, sigmas = case
+    got_b, got_pi = kalman_update(b_hat, pi, b_tilde, mask, sigmas)
+    want_b, want_pi = ref.kalman_update_ref(b_hat, pi, b_tilde, mask, sigmas)
+    tol = _tol(b_hat.dtype)
+    np.testing.assert_allclose(got_b, want_b, **tol)
+    np.testing.assert_allclose(got_pi, want_pi, **tol)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(1, 300),
+    st.integers(1, 16),
+    st.sampled_from([F32, F64]),
+    st.integers(0, 2**31 - 1),
+)
+def test_rowsum_matches_ref(w, k, dtype, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.integers(0, 1000, (w, k)).astype(dtype)
+    mask = (rng.uniform(size=(w, k)) < 0.7).astype(dtype)
+    b = rng.uniform(0.0, 100.0, (w, k)).astype(dtype)
+    got = required_cus(m, mask, b)
+    want = ref.required_cus_ref(m, mask, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_kalman_paper_initialization_converges():
+    """Paper init: b_hat[0]=pi[0]=0, sigma_z2=sigma_v2=0.5; constant
+    measurements must converge to the measured value (underdamped from 0)."""
+    n = 4
+    b = np.zeros(n, F32)
+    pi = np.zeros(n, F32)
+    sig = np.array([0.5, 0.5], F32)
+    target = np.full(n, 37.0, F32)
+    ones = np.ones(n, F32)
+    for _ in range(50):
+        b, pi = kalman_update(b, pi, target, ones, sig)
+    np.testing.assert_allclose(np.asarray(b), target, rtol=1e-3)
+
+
+def test_kalman_gain_bounds():
+    """kappa in (0,1): update never overshoots the innovation."""
+    n = 64
+    rng = np.random.default_rng(0)
+    b = rng.uniform(0, 100, n).astype(F32)
+    pi = rng.uniform(0, 5, n).astype(F32)
+    bt = rng.uniform(0, 100, n).astype(F32)
+    ones = np.ones(n, F32)
+    sig = np.array([0.5, 0.5], F32)
+    b2, _ = kalman_update(b, pi, bt, ones, sig)
+    lo = np.minimum(b, bt) - 1e-4
+    hi = np.maximum(b, bt) + 1e-4
+    assert np.all(np.asarray(b2) >= lo) and np.all(np.asarray(b2) <= hi)
+
+
+def test_kalman_mask_zero_is_time_update_only():
+    n = 8
+    rng = np.random.default_rng(1)
+    b = rng.uniform(0, 100, n).astype(F32)
+    pi = rng.uniform(0, 5, n).astype(F32)
+    bt = rng.uniform(0, 100, n).astype(F32)
+    zeros = np.zeros(n, F32)
+    sig = np.array([0.5, 0.25], F32)
+    b2, pi2 = kalman_update(b, pi, bt, zeros, sig)
+    np.testing.assert_allclose(np.asarray(b2), b, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(pi2), pi + 0.5, rtol=1e-6)
+
+
+def test_rowsum_empty_mask_is_zero():
+    w, k = 16, 4
+    m = np.full((w, k), 5.0, F32)
+    b = np.full((w, k), 3.0, F32)
+    got = required_cus(m, np.zeros((w, k), F32), b)
+    np.testing.assert_allclose(np.asarray(got), np.zeros(w, F32))
+
+
+@pytest.mark.parametrize("block", [32, 64, 256])
+def test_kalman_block_size_invariance(block):
+    """Result must not depend on the Pallas BlockSpec tiling."""
+    n = 512
+    rng = np.random.default_rng(2)
+    b = rng.uniform(0, 100, n).astype(F32)
+    pi = rng.uniform(0, 5, n).astype(F32)
+    bt = rng.uniform(0, 100, n).astype(F32)
+    mask = (rng.uniform(size=n) < 0.5).astype(F32)
+    sig = np.array([0.5, 0.5], F32)
+    got = kalman_update(b, pi, bt, mask, sig, block=block)
+    want = kalman_update(b, pi, bt, mask, sig, block=n)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]), rtol=1e-6)

@@ -1,0 +1,143 @@
+"""L2 correctness: monitor_step graph semantics + shapes + AOT lowering."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+F32 = np.float32
+
+
+def make_params(sigma_z2=0.5, sigma_v2=0.5, n_tot=10.0, alpha=5.0, beta=0.9,
+                n_min=10.0, n_max=100.0, n_w_max=10.0):
+    return np.array(
+        [sigma_z2, sigma_v2, n_tot, alpha, beta, n_min, n_max, n_w_max], F32
+    )
+
+
+def random_state(w, k, seed=0, active=0.8, measured=0.6):
+    rng = np.random.default_rng(seed)
+    b_hat = rng.uniform(0, 500, (w, k)).astype(F32)
+    pi = rng.uniform(0, 5, (w, k)).astype(F32)
+    b_tilde = rng.uniform(0, 500, (w, k)).astype(F32)
+    slot_mask = (rng.uniform(size=(w, k)) < active).astype(F32)
+    meas_mask = ((rng.uniform(size=(w, k)) < measured) * slot_mask).astype(F32)
+    m_rem = (rng.integers(0, 1000, (w, k)) * slot_mask).astype(F32)
+    d = rng.uniform(60, 7620, w).astype(F32)
+    return b_hat, pi, b_tilde, meas_mask, m_rem, slot_mask, d
+
+
+def run_step(w, k, seed=0, **pkw):
+    state = random_state(w, k, seed)
+    params = make_params(**pkw)
+    out = model.jitted()(*state, params)
+    return state, params, out
+
+
+def test_shapes():
+    w, k = 16, 4
+    _, _, (b, pi, r, s, n_star, n_next) = run_step(w, k)
+    assert b.shape == (w, k) and pi.shape == (w, k)
+    assert r.shape == (w,) and s.shape == (w,)
+    assert n_star.shape == () and n_next.shape == ()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 48), st.integers(1, 8), st.integers(0, 2**31 - 1))
+def test_matches_composed_reference(w, k, seed):
+    """monitor_step == ref-Kalman + ref-rowsum + ref-rates + ref-AIMD."""
+    state = random_state(w, k, seed)
+    b_hat, pi, b_tilde, meas_mask, m_rem, slot_mask, d = state
+    params = make_params()
+    got = model.jitted()(*state, params)
+
+    sig = np.array([0.5, 0.5], F32)
+    want_b, want_pi = ref.kalman_update_ref(b_hat, pi, b_tilde, meas_mask, sig)
+    want_b = slot_mask * want_b + (1 - slot_mask) * b_hat
+    want_pi = slot_mask * want_pi + (1 - slot_mask) * pi
+    want_r = ref.required_cus_ref(m_rem, slot_mask, np.asarray(want_b))
+    wl_mask = (slot_mask.sum(axis=1) > 0).astype(F32)
+    want_s, want_nstar = ref.service_rates_ref(
+        np.asarray(want_r), d, wl_mask, 10.0, 5.0, 0.9, 10.0
+    )
+    want_next = ref.aimd_ref(10.0, want_nstar, 5.0, 0.9, 10.0, 100.0)
+
+    np.testing.assert_allclose(got[0], want_b, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got[1], want_pi, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got[2], want_r, rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(got[3], want_s, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(got[4], want_nstar, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(got[5], want_next, rtol=1e-5)
+
+
+def test_service_rates_respect_aimd_bounds():
+    """After adjustment, sum(s) <= N_tot + alpha whenever demand had to be
+    downscaled (eq. 13)."""
+    w, k = 32, 4
+    state = random_state(w, k, seed=3)
+    params = make_params(n_tot=5.0, alpha=5.0)
+    out = model.jitted()(*state, params)
+    s, n_star = np.asarray(out[3]), float(out[4])
+    if n_star > 5.0 + 5.0:
+        assert s.sum() <= 5.0 + 5.0 + 1e-2
+
+
+def test_aimd_additive_increase_and_cap():
+    # huge demand -> increase by alpha, capped at n_max
+    state = random_state(8, 2, seed=4)
+    out = model.jitted()(
+        *state, make_params(n_tot=98.0, alpha=5.0, n_max=100.0, n_w_max=1e9)
+    )
+    assert float(out[5]) == 100.0
+    out = model.jitted()(
+        *state, make_params(n_tot=20.0, alpha=5.0, n_max=100.0, n_w_max=1e9)
+    )
+    n_star = float(out[4])
+    if n_star >= 20.0:
+        assert float(out[5]) == 25.0
+
+
+def test_aimd_multiplicative_decrease_and_floor():
+    # zero demand -> decrease by beta, floored at n_min
+    w, k = 8, 2
+    zeros = np.zeros((w, k), F32)
+    d = np.full(w, 3600.0, F32)
+    args = (zeros, zeros, zeros, zeros, zeros, zeros, d)
+    out = model.jitted()(*args, make_params(n_tot=50.0, beta=0.9, n_min=10.0))
+    assert abs(float(out[5]) - 45.0) < 1e-4
+    out = model.jitted()(*args, make_params(n_tot=10.5, beta=0.9, n_min=10.0))
+    assert float(out[5]) == 10.0
+
+
+def test_inactive_slots_are_inert():
+    """A fully-masked slot's state must pass through unchanged."""
+    w, k = 8, 2
+    state = list(random_state(w, k, seed=5, active=1.0))
+    state[5] = np.zeros((w, k), F32)  # slot_mask
+    out = model.jitted()(*state, make_params())
+    np.testing.assert_allclose(out[0], state[0], rtol=1e-6)
+    np.testing.assert_allclose(out[1], state[1], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[2]), np.zeros(w, F32))
+
+
+def test_aot_lowering_roundtrip(tmp_path):
+    """lower -> HLO text -> non-empty, parseable header, deterministic."""
+    from compile import aot
+
+    text = aot.lower_variant(8, 2)
+    assert "HloModule" in text and "ENTRY" in text
+    text2 = aot.lower_variant(8, 2)
+    assert text == text2
+
+
+def test_aot_variant_shapes_in_hlo():
+    from compile import aot
+
+    text = aot.lower_variant(8, 2)
+    assert "f32[8,2]" in text and "f32[8]" in text

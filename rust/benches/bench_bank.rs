@@ -1,0 +1,64 @@
+//! L1/L2 hot-path benchmark: one estimator-bank monitoring step, XLA
+//! (AOT Pallas/JAX via PJRT) vs native rust, across bank shapes.
+//!
+//! This is the compute kernel executed at every GCI monitoring instant;
+//! its latency budget is the monitoring interval (60 s), so anything in
+//! the µs–ms range leaves 4–6 orders of magnitude of headroom — the
+//! numbers here feed EXPERIMENTS.md §Perf.
+
+mod common;
+
+use dithen::estimation::{Backend, Bank, BankParams, TickInputs};
+use dithen::runtime::Engine;
+use dithen::util::rng::Rng;
+
+fn params() -> BankParams {
+    BankParams {
+        sigma_z2: 0.5,
+        sigma_v2: 0.5,
+        alpha: 5.0,
+        beta: 0.9,
+        n_min: 10.0,
+        n_max: 100.0,
+        n_w_max: 10.0,
+    }
+}
+
+fn inputs(w: usize, k: usize, rng: &mut Rng) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let wk = w * k;
+    let slot: Vec<f32> = (0..wk).map(|_| 1.0).collect();
+    let meas: Vec<f32> = (0..wk).map(|_| if rng.f64() < 0.7 { 1.0 } else { 0.0 }).collect();
+    let bt: Vec<f32> = (0..wk).map(|_| rng.uniform(1.0, 200.0) as f32).collect();
+    let m: Vec<f32> = (0..wk).map(|_| rng.int(0, 500) as f32).collect();
+    let d: Vec<f32> = (0..w).map(|_| rng.uniform(60.0, 7620.0) as f32).collect();
+    (slot, meas, bt, m, d)
+}
+
+fn main() {
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut rng = Rng::new(0xBE);
+    for &(w, k) in &[(8usize, 2usize), (64, 4), (256, 8)] {
+        let (slot, meas, bt, m, d) = inputs(w, k, &mut rng);
+        let tick = TickInputs {
+            b_tilde: &bt,
+            meas_mask: &meas,
+            m_rem: &m,
+            slot_mask: &slot,
+            d: &d,
+            n_tot: 10.0,
+        };
+        let mut native = Bank::new(w, k, params(), Backend::Native);
+        common::bench(&format!("bank_step/native/{w}x{k}"), 50, 2000, || {
+            native.step(&tick).unwrap()
+        });
+        if artifacts.join("manifest.json").exists() {
+            let engine = Engine::load(&artifacts).unwrap();
+            let mut xla = Bank::new(w, k, params(), Backend::Xla(engine));
+            common::bench(&format!("bank_step/xla/{w}x{k}"), 20, 500, || {
+                xla.step(&tick).unwrap()
+            });
+        } else {
+            eprintln!("artifacts missing; skipping XLA bench for {w}x{k}");
+        }
+    }
+}

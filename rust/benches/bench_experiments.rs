@@ -1,0 +1,88 @@
+//! End-to-end experiment benchmarks — one per paper table/figure family.
+//!
+//! Times a complete simulated experiment (the same code paths `dithen
+//! repro` runs): Table II's estimation run, Fig. 8/9 + Table III's cost
+//! runs per policy, Table IV's Lambda pricing sweep, and Fig. 10/11's
+//! Split–Merge runs. Wall time here is the cost of regenerating each
+//! paper artifact.
+
+mod common;
+
+use dithen::cloud::lambda::price_batch;
+use dithen::config::Config;
+use dithen::coordinator::PolicyKind;
+use dithen::platform::{run_experiment, RunOpts};
+use dithen::workload::{cnn_splitmerge, lambda_suite, paper_suite, wordcount_splitmerge};
+
+fn cfg() -> Config {
+    let mut c = Config::paper_defaults();
+    c.use_xla = false; // keep benches backend-independent; see bench_bank
+    c.control.monitor_interval_s = 300;
+    c
+}
+
+fn main() {
+    let cfg = cfg();
+
+    // Table II family: the full suite under AIMD/Kalman (1-min ticks)
+    common::bench("table2/suite_run_1min", 1, 5, || {
+        let mut c = cfg.clone();
+        c.control.monitor_interval_s = 60;
+        run_experiment(c, paper_suite(cfg.seed), RunOpts {
+            fixed_ttc_s: Some(7620),
+            horizon_s: 12 * 3600,
+            ..Default::default()
+        })
+        .unwrap()
+    });
+
+    // Fig. 8 / Table III family: one cost run per policy
+    for policy in [
+        PolicyKind::Aimd,
+        PolicyKind::Reactive,
+        PolicyKind::Mwa,
+        PolicyKind::Lr,
+        PolicyKind::AmazonAs1,
+    ] {
+        let ttc = if policy == PolicyKind::AmazonAs1 { None } else { Some(7620) };
+        common::bench(&format!("fig8/{}", policy.name()), 1, 5, || {
+            run_experiment(cfg.clone(), paper_suite(cfg.seed), RunOpts {
+                policy,
+                fixed_ttc_s: ttc,
+                horizon_s: 16 * 3600,
+                ..Default::default()
+            })
+            .unwrap()
+        });
+    }
+
+    // Table IV family: Lambda pricing of 75k tasks
+    let suite = lambda_suite(cfg.seed, 25_000);
+    common::bench("table4/lambda_pricing_75k_tasks", 2, 20, || {
+        suite
+            .iter()
+            .map(|s| {
+                let d: Vec<f64> = s.tasks.iter().map(|t| t.true_cus).collect();
+                price_batch(&cfg.lambda, &d)
+            })
+            .collect::<Vec<_>>()
+    });
+
+    // Fig. 10/11 family: Split–Merge runs
+    common::bench("fig10/cnn_splitmerge", 1, 5, || {
+        run_experiment(cfg.clone(), vec![cnn_splitmerge(cfg.seed)], RunOpts {
+            fixed_ttc_s: Some(5130),
+            horizon_s: 12 * 3600,
+            ..Default::default()
+        })
+        .unwrap()
+    });
+    common::bench("fig11/wordcount_splitmerge", 1, 5, || {
+        run_experiment(cfg.clone(), vec![wordcount_splitmerge(cfg.seed)], RunOpts {
+            fixed_ttc_s: Some(3510),
+            horizon_s: 12 * 3600,
+            ..Default::default()
+        })
+        .unwrap()
+    });
+}

@@ -1,0 +1,77 @@
+//! Substrate micro-benchmarks: the building blocks under the platform
+//! loop — spot-market trace generation (Fig. 12), task-DB operations,
+//! tracker assignment, chunk execution model, and the event queue.
+
+mod common;
+
+use std::collections::BTreeMap;
+
+use dithen::cloud::Market;
+use dithen::config::{MarketCfg, StorageCfg};
+use dithen::coordinator::Tracker;
+use dithen::db::TaskDb;
+use dithen::lci::execute_chunk;
+use dithen::sim::{Engine, Event};
+use dithen::storage::ObjectStore;
+use dithen::util::rng::Rng;
+use dithen::workload::{App, WorkloadSpec};
+
+fn main() {
+    // Fig. 12 substrate: 3-month price simulation for 6 types
+    common::bench("market/3mo_6type_trace", 2, 50, || {
+        Market::new(MarketCfg::default(), 7, 24 * 91)
+    });
+
+    // task DB: insert + claim + complete cycle for 10k tasks
+    common::bench("db/10k_task_lifecycle", 1, 30, || {
+        let mut db = TaskDb::new();
+        for t in 0..10_000 {
+            db.insert(0, 0, t);
+        }
+        for t in 0..10_000 {
+            db.claim((0, t), 1);
+            db.complete((0, t), 1.0, t as u64, 0);
+        }
+        db.workload_complete(0)
+    });
+
+    // tracker: 64 workloads, 1000 tick+assign cycles
+    common::bench("tracker/64wl_1k_cycles", 2, 50, || {
+        let mut tr = Tracker::new(10.0);
+        let rates: BTreeMap<usize, f64> = (0..64).map(|w| (w, 0.7)).collect();
+        for w in 0..64usize {
+            tr.register(w);
+            tr.set_pending(w, true);
+        }
+        for _ in 0..1000 {
+            tr.tick(&rates);
+            while let Some(w) = tr.next_assignment() {
+                tr.on_assign(w);
+                tr.on_release(w);
+            }
+        }
+        tr.allocated(0)
+    });
+
+    // chunk execution model (the per-chunk simulation cost)
+    let rng = Rng::new(1);
+    let spec = WorkloadSpec::generate(0, App::FaceDetection, 1000, None, &rng);
+    let storage = ObjectStore::new(StorageCfg::default());
+    let tasks: Vec<usize> = (0..100).collect();
+    common::bench("lci/execute_chunk_100_tasks", 10, 2000, || {
+        execute_chunk(&spec, &tasks, false, &storage)
+    });
+
+    // event queue throughput
+    common::bench("sim/100k_event_churn", 1, 20, || {
+        let mut e = Engine::new();
+        for i in 0..100_000u64 {
+            e.schedule(i % 1000, Event::MonitorTick);
+        }
+        let mut n = 0;
+        while e.next().is_some() {
+            n += 1;
+        }
+        n
+    });
+}

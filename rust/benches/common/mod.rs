@@ -1,0 +1,45 @@
+//! Minimal benchmark harness (the offline vendor set has no criterion).
+//!
+//! Each bench binary is `harness = false` and uses `bench()` to report
+//! mean / p50 / p95 wall time per iteration after a warm-up, in a stable
+//! one-line format that EXPERIMENTS.md §Perf records.
+
+use std::time::Instant;
+
+/// Run `f` for `iters` timed iterations (after `warmup` untimed ones) and
+/// print statistics. Returns the mean nanoseconds per iteration.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> f64 {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p50 = samples[samples.len() / 2];
+    let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+    println!(
+        "bench {name:<44} mean {:>12} p50 {:>12} p95 {:>12} (n={iters})",
+        fmt_ns(mean),
+        fmt_ns(p50),
+        fmt_ns(p95),
+    );
+    mean
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}

@@ -1,0 +1,279 @@
+//! Command-line interface (hand-rolled: the offline vendor set has no
+//! clap). Subcommands:
+//!
+//! ```text
+//! dithen repro <exp|all>      regenerate a paper table/figure (see list)
+//! dithen run [options]        run the platform on the paper suite
+//! dithen list                 list experiment ids
+//! dithen market               print current simulated spot prices
+//! dithen --help
+//! ```
+//!
+//! Common options: `--config <file>`, `--set k=v` (repeatable),
+//! `--policy <aimd|reactive|mwa|lr|as1|as10>`, `--estimator
+//! <kalman|adhoc|arma>`, `--ttc <seconds>`, `--seed <n>`, `--native`.
+
+use crate::config::Config;
+use crate::coordinator::PolicyKind;
+use crate::estimation::EstimatorKind;
+use crate::platform::{Platform, RunOpts};
+use crate::workload::paper_suite;
+
+pub const USAGE: &str = "\
+dithen — Computation-as-a-Service control plane (TCC 2016 reproduction)
+
+USAGE:
+    dithen <COMMAND> [OPTIONS]
+
+COMMANDS:
+    repro <exp|all>   regenerate a paper table/figure (fig5..fig12, table2..table5)
+    run               run the platform on the 30-workload paper suite
+    list              list experiment ids
+    market            print the simulated spot-price snapshot
+
+OPTIONS:
+    --config <file>        load a TOML config
+    --set <section.key=v>  override one config value (repeatable)
+    --policy <p>           aimd | reactive | mwa | lr | as1 | as10
+    --estimator <e>        kalman | adhoc | arma
+    --ttc <seconds>        fixed per-workload TTC (0 = best effort)
+    --seed <n>             master seed
+    --native               force the native estimator bank (skip XLA)
+    -h, --help             show this help
+";
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Cli {
+    pub command: String,
+    pub arg: Option<String>,
+    pub config_file: Option<String>,
+    pub overrides: Vec<String>,
+    pub policy: Option<String>,
+    pub estimator: Option<String>,
+    pub ttc: Option<u64>,
+    pub seed: Option<u64>,
+    pub native: bool,
+    pub help: bool,
+}
+
+#[derive(Debug, PartialEq)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+/// Parse an argv (excluding argv[0]).
+pub fn parse(args: &[String]) -> Result<Cli, CliError> {
+    let mut cli = Cli::default();
+    let mut it = args.iter().peekable();
+    let need_value = |it: &mut std::iter::Peekable<std::slice::Iter<String>>,
+                          flag: &str|
+     -> Result<String, CliError> {
+        it.next()
+            .cloned()
+            .ok_or_else(|| CliError(format!("missing value for {flag}")))
+    };
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "-h" | "--help" => cli.help = true,
+            "--config" => cli.config_file = Some(need_value(&mut it, "--config")?),
+            "--set" => cli.overrides.push(need_value(&mut it, "--set")?),
+            "--policy" => cli.policy = Some(need_value(&mut it, "--policy")?),
+            "--estimator" => cli.estimator = Some(need_value(&mut it, "--estimator")?),
+            "--ttc" => {
+                let v = need_value(&mut it, "--ttc")?;
+                cli.ttc = Some(v.parse().map_err(|_| CliError(format!("bad --ttc '{v}'")))?);
+            }
+            "--seed" => {
+                let v = need_value(&mut it, "--seed")?;
+                cli.seed = Some(v.parse().map_err(|_| CliError(format!("bad --seed '{v}'")))?);
+            }
+            "--native" => cli.native = true,
+            flag if flag.starts_with('-') => {
+                return Err(CliError(format!("unknown flag '{flag}'")));
+            }
+            cmd if cli.command.is_empty() => cli.command = cmd.to_string(),
+            arg if cli.arg.is_none() => cli.arg = Some(arg.to_string()),
+            extra => return Err(CliError(format!("unexpected argument '{extra}'"))),
+        }
+    }
+    Ok(cli)
+}
+
+pub fn parse_policy(s: &str) -> Result<PolicyKind, CliError> {
+    Ok(match s {
+        "aimd" => PolicyKind::Aimd,
+        "reactive" => PolicyKind::Reactive,
+        "mwa" => PolicyKind::Mwa,
+        "lr" => PolicyKind::Lr,
+        "as1" => PolicyKind::AmazonAs1,
+        "as10" => PolicyKind::AmazonAs10,
+        other => return Err(CliError(format!("unknown policy '{other}'"))),
+    })
+}
+
+pub fn parse_estimator(s: &str) -> Result<EstimatorKind, CliError> {
+    Ok(match s {
+        "kalman" => EstimatorKind::Kalman,
+        "adhoc" => EstimatorKind::AdHoc,
+        "arma" => EstimatorKind::Arma,
+        other => return Err(CliError(format!("unknown estimator '{other}'"))),
+    })
+}
+
+/// Build the effective config from CLI flags.
+pub fn build_config(cli: &Cli) -> anyhow::Result<Config> {
+    let mut cfg = match &cli.config_file {
+        Some(f) => Config::load_file(f)?,
+        None => Config::paper_defaults(),
+    };
+    for ov in &cli.overrides {
+        cfg.apply_override(ov)?;
+    }
+    if let Some(seed) = cli.seed {
+        cfg.seed = seed;
+    }
+    if cli.native {
+        cfg.use_xla = false;
+    }
+    Ok(cfg)
+}
+
+/// Entry point used by main().
+pub fn main_with(args: &[String]) -> anyhow::Result<i32> {
+    let cli = match parse(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return Ok(2);
+        }
+    };
+    if cli.help || cli.command.is_empty() {
+        println!("{USAGE}");
+        return Ok(0);
+    }
+    let cfg = build_config(&cli)?;
+    match cli.command.as_str() {
+        "list" => {
+            for id in crate::experiments::ALL {
+                println!("{id}");
+            }
+        }
+        "repro" => {
+            let what = cli.arg.as_deref().unwrap_or("all");
+            if what == "all" {
+                crate::experiments::run_all(&cfg)?;
+            } else {
+                crate::experiments::run(what, &cfg)?;
+            }
+        }
+        "run" => {
+            let opts = RunOpts {
+                policy: cli
+                    .policy
+                    .as_deref()
+                    .map(parse_policy)
+                    .transpose()?
+                    .unwrap_or(PolicyKind::Aimd),
+                estimator: cli
+                    .estimator
+                    .as_deref()
+                    .map(parse_estimator)
+                    .transpose()?
+                    .unwrap_or(EstimatorKind::Kalman),
+                fixed_ttc_s: match cli.ttc {
+                    Some(0) => None,
+                    Some(t) => Some(t),
+                    None => Some(crate::experiments::cost::TTC_LONG_S),
+                },
+                horizon_s: 24 * 3600,
+                ..Default::default()
+            };
+            let suite = paper_suite(cfg.seed);
+            let n_tasks: usize = suite.iter().map(|w| w.n_tasks()).sum();
+            let platform = Platform::new(cfg.clone(), suite, opts.clone());
+            println!(
+                "running {} workloads / {} tasks | policy={:?} estimator={:?} backend={}",
+                30,
+                n_tasks,
+                opts.policy,
+                opts.estimator,
+                platform.backend_name()
+            );
+            let m = platform.run()?;
+            println!(
+                "done at {} | cost ${:.3} (LB ${:.3}) | max instances {} | TTC compliance {:.0}% | ticks {} @ {:.1} µs",
+                crate::util::table::fmt_hm(m.finished_at as f64),
+                m.total_cost,
+                m.lower_bound_cost(cfg.market.base_spot_price),
+                m.max_instances,
+                100.0 * m.ttc_compliance(),
+                m.ticks,
+                m.mean_tick_ns() / 1000.0
+            );
+        }
+        "market" => {
+            crate::experiments::market::run_table5(&cfg)?;
+        }
+        other => {
+            eprintln!("error: unknown command '{other}'\n\n{USAGE}");
+            return Ok(2);
+        }
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_repro_command() {
+        let c = parse(&argv("repro fig8 --seed 7 --native")).unwrap();
+        assert_eq!(c.command, "repro");
+        assert_eq!(c.arg.as_deref(), Some("fig8"));
+        assert_eq!(c.seed, Some(7));
+        assert!(c.native);
+    }
+
+    #[test]
+    fn parses_run_with_options() {
+        let c = parse(&argv("run --policy mwa --estimator arma --ttc 5820")).unwrap();
+        assert_eq!(c.policy.as_deref(), Some("mwa"));
+        assert_eq!(c.estimator.as_deref(), Some("arma"));
+        assert_eq!(c.ttc, Some(5820));
+    }
+
+    #[test]
+    fn rejects_unknown_flag() {
+        assert!(parse(&argv("run --bogus")).is_err());
+        assert!(parse(&argv("run --ttc notanumber")).is_err());
+        assert!(parse(&argv("repro fig8 extra-arg")).is_err());
+    }
+
+    #[test]
+    fn policy_and_estimator_names() {
+        assert_eq!(parse_policy("aimd").unwrap(), PolicyKind::Aimd);
+        assert_eq!(parse_policy("as10").unwrap(), PolicyKind::AmazonAs10);
+        assert!(parse_policy("nope").is_err());
+        assert_eq!(parse_estimator("arma").unwrap(), EstimatorKind::Arma);
+        assert!(parse_estimator("nope").is_err());
+    }
+
+    #[test]
+    fn config_overrides_apply() {
+        let c = parse(&argv("run --set control.alpha=7 --seed 3")).unwrap();
+        let cfg = build_config(&c).unwrap();
+        assert_eq!(cfg.control.alpha, 7.0);
+        assert_eq!(cfg.seed, 3);
+    }
+}

@@ -1,0 +1,238 @@
+//! Spot-instance lifecycle and billing (the `a_{i,j}[t]` bookkeeping).
+//!
+//! EC2 spot semantics modeled per §II-C / §IV:
+//!   * requesting an instance incurs a boot delay before it can work;
+//!   * billing is per started `billing_increment_s` (hourly for EC2) at
+//!     the spot price in force when the increment starts;
+//!   * `a_{i,j}[t]` = seconds remaining in the already-billed increment —
+//!     AIMD terminates the instances with the *smallest* remaining time
+//!     (their sunk cost is nearly used up).
+
+use crate::sim::SimTime;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstanceState {
+    /// Spot request placed, still booting.
+    Booting,
+    /// Running and available for task execution.
+    Running,
+    /// Marked for termination once its current chunk finishes.
+    Draining,
+    /// Terminated; no further billing.
+    Terminated,
+}
+
+/// One spot instance of some catalogue type.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub id: u64,
+    pub type_idx: usize,
+    pub cus: u32,
+    pub state: InstanceState,
+    /// When the spot request was placed.
+    pub requested_at: SimTime,
+    /// When it became Running (boot complete).
+    pub ready_at: Option<SimTime>,
+    /// When it was terminated.
+    pub terminated_at: Option<SimTime>,
+    /// End of the currently-billed increment (absolute sim time).
+    pub billed_until: SimTime,
+    /// Total $ billed so far.
+    pub cost: f64,
+    /// Number of billing increments paid.
+    pub increments: u32,
+    /// Busy seconds accumulated (for utilization metrics / Amazon AS).
+    pub busy_s: u64,
+    /// Id of the chunk currently executing, if any.
+    pub current_chunk: Option<u64>,
+}
+
+impl Instance {
+    pub fn new(id: u64, type_idx: usize, cus: u32, now: SimTime) -> Self {
+        Instance {
+            id,
+            type_idx,
+            cus,
+            state: InstanceState::Booting,
+            requested_at: now,
+            ready_at: None,
+            terminated_at: None,
+            billed_until: now, // first increment charged at boot-complete
+            cost: 0.0,
+            increments: 0,
+            busy_s: 0,
+            current_chunk: None,
+        }
+    }
+
+    /// Remaining pre-billed seconds, a_{i,j}[t]. Zero for terminated.
+    pub fn remaining_billed(&self, now: SimTime) -> SimTime {
+        if self.state == InstanceState::Terminated {
+            return 0;
+        }
+        self.billed_until.saturating_sub(now)
+    }
+
+    pub fn is_active(&self, now: SimTime) -> bool {
+        let _ = now;
+        matches!(self.state, InstanceState::Running | InstanceState::Draining)
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.state == InstanceState::Running && self.current_chunk.is_none()
+    }
+
+    /// Charge billing increments so the instance is paid up through `now`.
+    /// `price` is the $/hr spot price at the start of each new increment;
+    /// `increment_s` the billing quantum. Returns $ newly billed.
+    pub fn bill_through(&mut self, now: SimTime, price_at: impl Fn(SimTime) -> f64, increment_s: SimTime) -> f64 {
+        if self.state == InstanceState::Terminated {
+            return 0.0;
+        }
+        let mut newly = 0.0;
+        while self.billed_until <= now {
+            let price = price_at(self.billed_until);
+            let charge = price * (increment_s as f64 / 3600.0);
+            self.cost += charge;
+            newly += charge;
+            self.increments += 1;
+            self.billed_until += increment_s;
+        }
+        newly
+    }
+
+    /// Mark boot complete.
+    pub fn boot_complete(&mut self, now: SimTime) {
+        debug_assert_eq!(self.state, InstanceState::Booting);
+        self.state = InstanceState::Running;
+        self.ready_at = Some(now);
+    }
+
+    /// Terminate now (or drain if busy: terminates after chunk completion).
+    pub fn terminate(&mut self, now: SimTime) {
+        match self.state {
+            InstanceState::Terminated => {}
+            _ if self.current_chunk.is_some() => self.state = InstanceState::Draining,
+            _ => {
+                self.state = InstanceState::Terminated;
+                self.terminated_at = Some(now);
+            }
+        }
+    }
+
+    /// Finish the current chunk; returns true if the instance terminated
+    /// because it was draining.
+    pub fn finish_chunk(&mut self, now: SimTime, busy: SimTime) -> bool {
+        self.busy_s += busy;
+        self.current_chunk = None;
+        if self.state == InstanceState::Draining {
+            self.state = InstanceState::Terminated;
+            self.terminated_at = Some(now);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// CPU utilization over the instance's active lifetime so far, in
+    /// [0, 1]. This is what the Amazon-AS baseline's 20 % rule reads
+    /// (mpstat / wmic in the paper).
+    pub fn utilization(&self, now: SimTime) -> f64 {
+        let start = match self.ready_at {
+            Some(t) => t,
+            None => return 0.0,
+        };
+        let end = self.terminated_at.unwrap_or(now);
+        if end <= start {
+            return 0.0;
+        }
+        (self.busy_s as f64 / (end - start) as f64).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst() -> Instance {
+        Instance::new(1, 0, 1, 100)
+    }
+
+    #[test]
+    fn bills_hourly_increments_at_spot_price() {
+        let mut i = inst();
+        i.boot_complete(190);
+        let billed = i.bill_through(190, |_| 0.0081, 3600);
+        assert!((billed - 0.0081).abs() < 1e-12);
+        assert_eq!(i.billed_until, 100 + 3600);
+        // nothing more due within the hour
+        assert_eq!(i.bill_through(3000, |_| 0.0081, 3600), 0.0);
+        // crossing into hour 2 charges again
+        let billed = i.bill_through(3700, |_| 0.009, 3600);
+        assert!((billed - 0.009).abs() < 1e-12);
+        assert_eq!(i.increments, 2);
+    }
+
+    #[test]
+    fn remaining_billed_counts_down() {
+        let mut i = inst();
+        i.boot_complete(100);
+        i.bill_through(100, |_| 0.0081, 3600);
+        assert_eq!(i.remaining_billed(100), 3600);
+        assert_eq!(i.remaining_billed(1300), 2400);
+        i.terminate(1300);
+        assert_eq!(i.remaining_billed(1300), 0);
+    }
+
+    #[test]
+    fn terminate_busy_instance_drains() {
+        let mut i = inst();
+        i.boot_complete(100);
+        i.current_chunk = Some(9);
+        i.terminate(200);
+        assert_eq!(i.state, InstanceState::Draining);
+        let died = i.finish_chunk(500, 300);
+        assert!(died);
+        assert_eq!(i.state, InstanceState::Terminated);
+        assert_eq!(i.terminated_at, Some(500));
+    }
+
+    #[test]
+    fn terminate_idle_is_immediate() {
+        let mut i = inst();
+        i.boot_complete(100);
+        i.terminate(150);
+        assert_eq!(i.state, InstanceState::Terminated);
+        // idempotent
+        i.terminate(160);
+        assert_eq!(i.terminated_at, Some(150));
+    }
+
+    #[test]
+    fn no_billing_after_termination() {
+        let mut i = inst();
+        i.boot_complete(100);
+        i.bill_through(100, |_| 0.0081, 3600);
+        i.terminate(200);
+        assert_eq!(i.bill_through(50_000, |_| 0.0081, 3600), 0.0);
+        assert_eq!(i.increments, 1);
+    }
+
+    #[test]
+    fn utilization_tracks_busy_fraction() {
+        let mut i = inst();
+        i.boot_complete(100);
+        i.current_chunk = Some(1);
+        i.finish_chunk(600, 250);
+        // 250 busy out of 500 elapsed
+        assert!((i.utilization(600) - 0.5).abs() < 1e-9);
+        assert_eq!(i.utilization(100), 0.0); // degenerate window guarded
+    }
+
+    #[test]
+    fn booting_instance_has_zero_utilization() {
+        let i = inst();
+        assert_eq!(i.utilization(1000), 0.0);
+        assert!(!i.is_idle());
+    }
+}

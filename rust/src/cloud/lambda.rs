@@ -1,0 +1,100 @@
+//! AWS Lambda pricing + execution model (§V-D / Table IV).
+//!
+//! The paper's account of why Lambda loses on heavy tasks:
+//! Lambda allocates `memory_gb / host_memory_gb × host_cores` fractional
+//! cores, so a task whose full-core duration is `d` runs for
+//! `d / core_fraction` wall seconds, billed per 100 ms GB-second plus a
+//! per-request fee. Dithen always gives a task a whole core.
+
+use crate::config::LambdaCfg;
+
+/// Cost + duration of executing one task on Lambda.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LambdaExec {
+    /// Wall-clock duration on the fractional core, seconds.
+    pub duration_s: f64,
+    /// Billed duration after the 100 ms quantum round-up, seconds.
+    pub billed_s: f64,
+    /// Total $ cost (GB-seconds + request fee).
+    pub cost: f64,
+}
+
+/// Fraction of one core a function of `memory_gb` receives.
+pub fn core_fraction(cfg: &LambdaCfg) -> f64 {
+    ((cfg.memory_gb / cfg.host_memory_gb) * cfg.host_cores).min(1.0)
+}
+
+/// Price one task whose *full-core* compute time is `full_core_s` seconds.
+pub fn price_task(cfg: &LambdaCfg, full_core_s: f64) -> LambdaExec {
+    let frac = core_fraction(cfg).max(1e-9);
+    let duration_s = full_core_s / frac;
+    let quanta = (duration_s / cfg.billing_quantum_s).ceil().max(1.0);
+    let billed_s = quanta * cfg.billing_quantum_s;
+    let cost = billed_s * cfg.memory_gb * cfg.price_per_gb_s + cfg.price_per_request;
+    LambdaExec { duration_s, billed_s, cost }
+}
+
+/// Price a batch of tasks; returns (total cost, mean cost per task).
+pub fn price_batch(cfg: &LambdaCfg, full_core_secs: &[f64]) -> (f64, f64) {
+    let total: f64 = full_core_secs.iter().map(|&s| price_task(cfg, s).cost).sum();
+    let mean = if full_core_secs.is_empty() { 0.0 } else { total / full_core_secs.len() as f64 };
+    (total, mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> LambdaCfg {
+        LambdaCfg::default()
+    }
+
+    #[test]
+    fn paper_core_fraction_example() {
+        // §V-D: 1 GB function on a 4 GB / 2-core host -> 1/4 x 2 = 0.5 core.
+        assert!((core_fraction(&cfg()) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fractional_core_prolongs_execution() {
+        let e = price_task(&cfg(), 2.0);
+        assert!((e.duration_s - 4.0).abs() < 1e-9); // 2 s / 0.5 core
+    }
+
+    #[test]
+    fn rounds_up_to_100ms() {
+        let e = price_task(&cfg(), 0.011); // 22 ms wall -> 100 ms billed
+        assert!((e.billed_s - 0.1).abs() < 1e-12);
+        let e = price_task(&cfg(), 0.06); // 120 ms wall -> 200 ms billed
+        assert!((e.billed_s - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_grows_linearly_in_duration() {
+        let a = price_task(&cfg(), 1.0);
+        let b = price_task(&cfg(), 2.0);
+        let marginal = b.cost - a.cost;
+        // one extra full-core second = 2 billed seconds at 1 GB
+        assert!((marginal - 2.0 * cfg().price_per_gb_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_mean_matches_manual() {
+        let (total, mean) = price_batch(&cfg(), &[1.0, 2.0, 3.0]);
+        let manual: f64 = [1.0, 2.0, 3.0].iter().map(|&s| price_task(&cfg(), s).cost).sum();
+        assert!((total - manual).abs() < 1e-12);
+        assert!((mean - manual / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_batch_is_free() {
+        assert_eq!(price_batch(&cfg(), &[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn heavier_memory_gets_more_core() {
+        let mut c = cfg();
+        c.memory_gb = 2.0;
+        assert!((core_fraction(&c) - 1.0).abs() < 1e-12); // capped at 1 core
+    }
+}

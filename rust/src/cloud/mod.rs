@@ -1,0 +1,12 @@
+//! Cloud substrate: EC2 spot-market + instance + billing simulator, and
+//! the Lambda pricing model. See DESIGN.md §2 for the substitution
+//! rationale (paper ran on live AWS; repro band 0 ⇒ simulate).
+
+pub mod instance;
+pub mod lambda;
+pub mod market;
+pub mod provider;
+
+pub use instance::{Instance, InstanceState};
+pub use market::{instance_type, InstanceType, Market, CATALOG};
+pub use provider::{FleetView, Provider};

@@ -1,0 +1,307 @@
+//! IaaS provider facade — the simulator's equivalent of the AWS SDK EC2
+//! class the paper names: `requestSpotInstances()`, `terminateInstances()`,
+//! `describeInstances()` (§II-C), plus the billing engine.
+//!
+//! The provider owns all instances and the market; the coordinator only
+//! talks to this API, so swapping in a real cloud backend would touch
+//! nothing above this layer.
+
+use std::collections::BTreeMap;
+
+use crate::cloud::instance::{Instance, InstanceState};
+use crate::cloud::market::Market;
+use crate::config::MarketCfg;
+use crate::sim::SimTime;
+
+/// Summary of fleet state, as `describeInstances()` would return.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FleetView {
+    pub booting: usize,
+    pub running: usize,
+    pub draining: usize,
+    pub terminated: usize,
+    /// Total active CUs, N_tot[t] (running + draining; booting excluded —
+    /// they cannot take work yet but are counted by `committed_cus`).
+    pub active_cus: f64,
+    /// CUs including booting instances (what scaling decisions see, so a
+    /// pending request is not double-fulfilled).
+    pub committed_cus: f64,
+    /// c_tot[t]: pre-billed compute-unit-seconds still available (eq. 3).
+    pub c_tot: f64,
+}
+
+/// The cloud provider simulator.
+#[derive(Debug)]
+pub struct Provider {
+    market: Market,
+    cfg: MarketCfg,
+    instances: BTreeMap<u64, Instance>,
+    next_id: u64,
+    /// Cumulative $ billed across all instances.
+    total_cost: f64,
+    /// (time, cumulative cost) samples, appended on every billing event.
+    cost_curve: Vec<(SimTime, f64)>,
+}
+
+impl Provider {
+    pub fn new(cfg: MarketCfg, seed: u64, horizon_hours: usize) -> Self {
+        Provider {
+            market: Market::new(cfg.clone(), seed, horizon_hours),
+            cfg,
+            instances: BTreeMap::new(),
+            next_id: 0,
+            total_cost: 0.0,
+            cost_curve: vec![(0, 0.0)],
+        }
+    }
+
+    pub fn market(&self) -> &Market {
+        &self.market
+    }
+
+    /// requestSpotInstances(): place a spot request for one instance of
+    /// catalogue type `type_idx`. Returns (id, ready_at) — the caller
+    /// schedules an `InstanceReady` event at `ready_at`.
+    pub fn request_spot_instance(&mut self, type_idx: usize, now: SimTime) -> (u64, SimTime) {
+        let cus = crate::cloud::market::CATALOG[type_idx].cus;
+        self.next_id += 1;
+        let id = self.next_id;
+        self.instances.insert(id, Instance::new(id, type_idx, cus, now));
+        (id, now + self.cfg.boot_delay_s)
+    }
+
+    /// Boot completion: the instance becomes Running and its first billing
+    /// increment is charged (EC2 bills from launch).
+    pub fn instance_ready(&mut self, id: u64, now: SimTime) {
+        // billing below needs &self.market while the instance is &mut;
+        // snapshot the price function inputs first.
+        let (type_idx, state) = {
+            let inst = &self.instances[&id];
+            (inst.type_idx, inst.state)
+        };
+        if state != InstanceState::Booting {
+            return; // terminated while booting
+        }
+        let price = self.market.spot_price(type_idx, now);
+        let inst = self.instances.get_mut(&id).unwrap();
+        inst.boot_complete(now);
+        inst.billed_until = now; // first increment starts at readiness
+        let billed = inst.bill_through(now, |_| price, self.cfg.billing_increment_s);
+        self.total_cost += billed;
+        self.cost_curve.push((now, self.total_cost));
+    }
+
+    /// terminateInstances(): terminate (or drain) the given instance.
+    pub fn terminate_instance(&mut self, id: u64, now: SimTime) {
+        if let Some(inst) = self.instances.get_mut(&id) {
+            if inst.state == InstanceState::Booting {
+                // cancel the spot request before fulfilment: no billing
+                inst.state = InstanceState::Terminated;
+                inst.terminated_at = Some(now);
+            } else {
+                inst.terminate(now);
+            }
+        }
+    }
+
+    /// Advance billing for all active instances through `now`.
+    /// Must be called at (or before) every monitoring instant.
+    pub fn bill_through(&mut self, now: SimTime) {
+        let increment = self.cfg.billing_increment_s;
+        let mut newly = 0.0;
+        // collect ids to avoid holding a borrow over self.market
+        let ids: Vec<u64> = self.instances.keys().copied().collect();
+        for id in ids {
+            let type_idx = self.instances[&id].type_idx;
+            let market = &self.market;
+            let inst = self.instances.get_mut(&id).unwrap();
+            if inst.state == InstanceState::Booting || inst.state == InstanceState::Terminated {
+                continue;
+            }
+            newly += inst.bill_through(now, |t| market.spot_price(type_idx, t), increment);
+        }
+        if newly > 0.0 {
+            self.total_cost += newly;
+            self.cost_curve.push((now, self.total_cost));
+        }
+    }
+
+    /// describeInstances(): fleet summary at `now`.
+    pub fn describe(&self, now: SimTime) -> FleetView {
+        let mut v = FleetView::default();
+        for inst in self.instances.values() {
+            match inst.state {
+                InstanceState::Booting => {
+                    v.booting += 1;
+                    v.committed_cus += inst.cus as f64;
+                }
+                InstanceState::Running => {
+                    v.running += 1;
+                    v.active_cus += inst.cus as f64;
+                    v.committed_cus += inst.cus as f64;
+                    v.c_tot += (inst.cus as u64 * inst.remaining_billed(now)) as f64;
+                }
+                InstanceState::Draining => {
+                    v.draining += 1;
+                    v.active_cus += inst.cus as f64;
+                    v.committed_cus += inst.cus as f64;
+                    v.c_tot += (inst.cus as u64 * inst.remaining_billed(now)) as f64;
+                }
+                InstanceState::Terminated => v.terminated += 1,
+            }
+        }
+        v
+    }
+
+    pub fn instance(&self, id: u64) -> Option<&Instance> {
+        self.instances.get(&id)
+    }
+
+    pub fn instance_mut(&mut self, id: u64) -> Option<&mut Instance> {
+        self.instances.get_mut(&id)
+    }
+
+    pub fn instances(&self) -> impl Iterator<Item = &Instance> {
+        self.instances.values()
+    }
+
+    /// Idle running instances, cheapest-to-keep last: ordered by ascending
+    /// remaining billed time (the AIMD termination preference).
+    pub fn idle_instances_by_remaining(&self, now: SimTime) -> Vec<u64> {
+        let mut v: Vec<(u64, SimTime)> = self
+            .instances
+            .values()
+            .filter(|i| i.is_idle())
+            .map(|i| (i.id, i.remaining_billed(now)))
+            .collect();
+        v.sort_by_key(|&(id, rem)| (rem, id));
+        v.into_iter().map(|(id, _)| id).collect()
+    }
+
+    /// All running (not draining) instance ids, idle first.
+    pub fn running_instances(&self) -> Vec<u64> {
+        self.instances
+            .values()
+            .filter(|i| i.state == InstanceState::Running)
+            .map(|i| i.id)
+            .collect()
+    }
+
+    pub fn total_cost(&self) -> f64 {
+        self.total_cost
+    }
+
+    pub fn cost_curve(&self) -> &[(SimTime, f64)] {
+        &self.cost_curve
+    }
+
+    /// Average CPU utilization over running instances (Amazon AS input).
+    pub fn mean_utilization(&self, now: SimTime) -> f64 {
+        let us: Vec<f64> = self
+            .instances
+            .values()
+            .filter(|i| i.is_active(now))
+            .map(|i| i.utilization(now))
+            .collect();
+        crate::util::stats::mean(&us)
+    }
+
+    /// Maximum concurrently active instance count seen across the cost
+    /// curve — recomputed live by the platform; provided here for tests.
+    pub fn active_count(&self, now: SimTime) -> usize {
+        self.instances.values().filter(|i| i.is_active(now)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn provider() -> Provider {
+        Provider::new(MarketCfg::default(), 1, 24)
+    }
+
+    #[test]
+    fn request_boots_after_delay() {
+        let mut p = provider();
+        let (id, ready) = p.request_spot_instance(0, 100);
+        assert_eq!(ready, 100 + MarketCfg::default().boot_delay_s);
+        assert_eq!(p.describe(100).booting, 1);
+        p.instance_ready(id, ready);
+        let v = p.describe(ready);
+        assert_eq!(v.running, 1);
+        assert_eq!(v.active_cus, 1.0);
+        // first hour billed up front
+        assert!(p.total_cost() > 0.0);
+        assert_eq!(v.c_tot, 3600.0);
+    }
+
+    #[test]
+    fn cancel_before_boot_costs_nothing() {
+        let mut p = provider();
+        let (id, ready) = p.request_spot_instance(0, 0);
+        p.terminate_instance(id, 10);
+        p.instance_ready(id, ready); // late fulfilment is ignored
+        assert_eq!(p.total_cost(), 0.0);
+        assert_eq!(p.describe(ready).running, 0);
+    }
+
+    #[test]
+    fn billing_accrues_hourly() {
+        let mut p = provider();
+        let (id, ready) = p.request_spot_instance(0, 0);
+        p.instance_ready(id, ready);
+        let c1 = p.total_cost();
+        p.bill_through(ready + 3599);
+        assert_eq!(p.total_cost(), c1); // still within first hour
+        p.bill_through(ready + 3600);
+        assert!(p.total_cost() > c1);
+        assert_eq!(p.instance(id).unwrap().increments, 2);
+    }
+
+    #[test]
+    fn cost_curve_is_monotone() {
+        let mut p = provider();
+        let (a, ra) = p.request_spot_instance(0, 0);
+        let (b, rb) = p.request_spot_instance(1, 50);
+        p.instance_ready(a, ra);
+        p.instance_ready(b, rb);
+        for t in (0..20_000).step_by(600) {
+            p.bill_through(t);
+        }
+        let curve = p.cost_curve();
+        for w in curve.windows(2) {
+            assert!(w[1].0 >= w[0].0 && w[1].1 >= w[0].1 - 1e-12);
+        }
+    }
+
+    #[test]
+    fn idle_ordering_prefers_least_remaining() {
+        let mut p = provider();
+        let (a, ra) = p.request_spot_instance(0, 0);
+        p.instance_ready(a, ra);
+        // second instance starts an hour later: more remaining time
+        let (b, rb) = p.request_spot_instance(0, 1800);
+        p.instance_ready(b, rb);
+        let order = p.idle_instances_by_remaining(2000);
+        assert_eq!(order, vec![a, b]);
+    }
+
+    #[test]
+    fn describe_counts_draining_as_active() {
+        let mut p = provider();
+        let (id, ready) = p.request_spot_instance(0, 0);
+        p.instance_ready(id, ready);
+        p.instance_mut(id).unwrap().current_chunk = Some(1);
+        p.terminate_instance(id, ready + 10);
+        let v = p.describe(ready + 10);
+        assert_eq!(v.draining, 1);
+        assert_eq!(v.active_cus, 1.0);
+    }
+
+    #[test]
+    fn mean_utilization_empty_fleet_is_zero() {
+        let p = provider();
+        assert_eq!(p.mean_utilization(100), 0.0);
+    }
+}

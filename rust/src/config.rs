@@ -1,0 +1,466 @@
+//! Configuration system: typed config structs + a TOML-subset parser.
+//!
+//! Everything tunable in the platform — AIMD constants, monitoring
+//! interval, spot-market calibration, estimator noise, workload suite —
+//! lives here with the paper's §V values as defaults, and can be
+//! overridden from a config file (`dithen run --config platform.toml`)
+//! or key=value CLI overrides.
+//!
+//! The parser supports the subset we emit and document: `[section]`
+//! headers, `key = value` with string / float / int / bool values, and
+//! `#` comments. That is all the platform config needs; arrays/tables of
+//! tables are deliberately rejected with a clear error.
+
+use std::fmt;
+
+/// Paper §V: AIMD and platform control constants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlCfg {
+    /// AIMD additive constant α (CUs per increase step).
+    pub alpha: f64,
+    /// AIMD multiplicative constant β in (0, 1].
+    pub beta: f64,
+    /// Lower bound for total CUs, N_min.
+    pub n_min: f64,
+    /// Upper bound for total CUs, N_max.
+    pub n_max: f64,
+    /// Per-workload service-rate cap N_{w,max}.
+    pub n_w_max: f64,
+    /// Monitoring interval in seconds (paper: 60–300 s).
+    pub monitor_interval_s: u64,
+    /// Kalman process noise σ_z².
+    pub sigma_z2: f64,
+    /// Kalman measurement noise σ_v².
+    pub sigma_v2: f64,
+    /// Fraction of a workload's tasks executed in the footprinting stage.
+    pub footprint_frac: f64,
+    /// Footprinting task-count bounds.
+    pub footprint_min: usize,
+    pub footprint_max: usize,
+}
+
+impl Default for ControlCfg {
+    fn default() -> Self {
+        ControlCfg {
+            alpha: 5.0,
+            beta: 0.9,
+            n_min: 10.0,
+            n_max: 100.0,
+            n_w_max: 10.0,
+            monitor_interval_s: 60,
+            sigma_z2: 0.5,
+            sigma_v2: 0.5,
+            footprint_frac: 0.05,
+            footprint_min: 1,
+            footprint_max: 10,
+        }
+    }
+}
+
+/// Cloud-market simulator calibration (Appendix A / Table V).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MarketCfg {
+    /// Baseline m3.medium spot price ($/hr). Table V: 0.0081.
+    pub base_spot_price: f64,
+    /// On-demand price for m3.medium ($/hr). Table V: 0.067.
+    pub on_demand_price: f64,
+    /// Instance boot (spot fulfilment + AMI boot) delay, seconds.
+    pub boot_delay_s: u64,
+    /// Billing increment, seconds (EC2 spot: hourly).
+    pub billing_increment_s: u64,
+    /// Relative price volatility per sqrt(hour) for a 1-CU instance; larger
+    /// instances scale volatility by their CU count (Fig. 12 behaviour).
+    pub volatility: f64,
+    /// Mean-reversion strength of the price process (per hour).
+    pub reversion: f64,
+}
+
+impl Default for MarketCfg {
+    fn default() -> Self {
+        MarketCfg {
+            base_spot_price: 0.0081,
+            on_demand_price: 0.067,
+            boot_delay_s: 90,
+            billing_increment_s: 3600,
+            volatility: 0.02,
+            reversion: 0.5,
+        }
+    }
+}
+
+/// Storage / transfer model (S3 substitute).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StorageCfg {
+    /// Sustained transfer bandwidth per instance, bytes/s.
+    pub bandwidth_bps: f64,
+    /// Per-object request latency, seconds.
+    pub request_latency_s: f64,
+}
+
+impl Default for StorageCfg {
+    fn default() -> Self {
+        // Effective single-stream S3 throughput from an m3.medium incl.
+        // small-object overheads (2015-era), plus 60 ms per request.
+        // Calibrated so transfer ≈ 27 % of billed time (§V-C's footnote:
+        // removing transport would lower all costs by ~27 %).
+        StorageCfg { bandwidth_bps: 2.0e6, request_latency_s: 0.06 }
+    }
+}
+
+/// Lambda pricing model (§V-D).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LambdaCfg {
+    /// $ per GB-second (2015-era Lambda: $0.00001667 / GB-s).
+    pub price_per_gb_s: f64,
+    /// $ per request.
+    pub price_per_request: f64,
+    /// Billing quantum in seconds (Lambda bills per 100 ms).
+    pub billing_quantum_s: f64,
+    /// Configured function memory, GB (paper: 1024 MB).
+    pub memory_gb: f64,
+    /// Memory of the underlying host instance, GB, and its cores: Lambda
+    /// allocates memory_gb/host_memory_gb × host_cores fractional cores.
+    pub host_memory_gb: f64,
+    pub host_cores: f64,
+}
+
+impl Default for LambdaCfg {
+    fn default() -> Self {
+        LambdaCfg {
+            price_per_gb_s: 0.000_016_67,
+            price_per_request: 0.000_000_2,
+            billing_quantum_s: 0.1,
+            memory_gb: 1.0,
+            host_memory_gb: 4.0,
+            host_cores: 2.0,
+        }
+    }
+}
+
+/// Top-level platform configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub control: ControlCfg,
+    pub market: MarketCfg,
+    pub storage: StorageCfg,
+    pub lambda: LambdaCfg,
+    /// Master seed for all stochastic substreams.
+    pub seed: u64,
+    /// Directory holding AOT artifacts (manifest.json + HLO text).
+    pub artifacts_dir: String,
+    /// Prefer the XLA/PJRT estimator-bank backend when artifacts exist.
+    pub use_xla: bool,
+}
+
+impl Config {
+    pub fn paper_defaults() -> Self {
+        Config {
+            seed: 20161021, // paper's DOI date
+            artifacts_dir: "artifacts".into(),
+            use_xla: true,
+            ..Default::default()
+        }
+    }
+
+    /// Apply a parsed TOML document over the defaults.
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<(), ConfigError> {
+        for ((section, key), value) in &doc.entries {
+            self.apply_kv(section, key, value)?;
+        }
+        Ok(())
+    }
+
+    /// Apply one override, e.g. ("control", "alpha", "5.0") or a
+    /// dotted CLI override "control.alpha=5".
+    pub fn apply_kv(&mut self, section: &str, key: &str, v: &TomlValue) -> Result<(), ConfigError> {
+        let unknown = || ConfigError::UnknownKey(format!("{section}.{key}"));
+        let as_f = |v: &TomlValue| v.as_f64().ok_or(ConfigError::TypeMismatch(format!("{section}.{key}")));
+        let as_u = |v: &TomlValue| v.as_f64().map(|f| f as u64).ok_or(ConfigError::TypeMismatch(format!("{section}.{key}")));
+        match (section, key) {
+            ("control", "alpha") => self.control.alpha = as_f(v)?,
+            ("control", "beta") => self.control.beta = as_f(v)?,
+            ("control", "n_min") => self.control.n_min = as_f(v)?,
+            ("control", "n_max") => self.control.n_max = as_f(v)?,
+            ("control", "n_w_max") => self.control.n_w_max = as_f(v)?,
+            ("control", "monitor_interval_s") => self.control.monitor_interval_s = as_u(v)?,
+            ("control", "sigma_z2") => self.control.sigma_z2 = as_f(v)?,
+            ("control", "sigma_v2") => self.control.sigma_v2 = as_f(v)?,
+            ("control", "footprint_frac") => self.control.footprint_frac = as_f(v)?,
+            ("control", "footprint_min") => self.control.footprint_min = as_u(v)? as usize,
+            ("control", "footprint_max") => self.control.footprint_max = as_u(v)? as usize,
+            ("market", "base_spot_price") => self.market.base_spot_price = as_f(v)?,
+            ("market", "on_demand_price") => self.market.on_demand_price = as_f(v)?,
+            ("market", "boot_delay_s") => self.market.boot_delay_s = as_u(v)?,
+            ("market", "billing_increment_s") => self.market.billing_increment_s = as_u(v)?,
+            ("market", "volatility") => self.market.volatility = as_f(v)?,
+            ("market", "reversion") => self.market.reversion = as_f(v)?,
+            ("storage", "bandwidth_bps") => self.storage.bandwidth_bps = as_f(v)?,
+            ("storage", "request_latency_s") => self.storage.request_latency_s = as_f(v)?,
+            ("lambda", "price_per_gb_s") => self.lambda.price_per_gb_s = as_f(v)?,
+            ("lambda", "price_per_request") => self.lambda.price_per_request = as_f(v)?,
+            ("lambda", "billing_quantum_s") => self.lambda.billing_quantum_s = as_f(v)?,
+            ("lambda", "memory_gb") => self.lambda.memory_gb = as_f(v)?,
+            ("lambda", "host_memory_gb") => self.lambda.host_memory_gb = as_f(v)?,
+            ("lambda", "host_cores") => self.lambda.host_cores = as_f(v)?,
+            ("", "seed") => self.seed = as_u(v)?,
+            ("", "artifacts_dir") => {
+                self.artifacts_dir = v.as_str().ok_or(ConfigError::TypeMismatch("artifacts_dir".into()))?.to_string()
+            }
+            ("", "use_xla") => {
+                self.use_xla = v.as_bool().ok_or(ConfigError::TypeMismatch("use_xla".into()))?
+            }
+            _ => return Err(unknown()),
+        }
+        self.validate()
+    }
+
+    /// Parse and apply a `section.key=value` CLI override.
+    pub fn apply_override(&mut self, spec: &str) -> Result<(), ConfigError> {
+        let (path, raw) = spec
+            .split_once('=')
+            .ok_or_else(|| ConfigError::Syntax(format!("override '{spec}' missing '='")))?;
+        let (section, key) = match path.split_once('.') {
+            Some((s, k)) => (s, k),
+            None => ("", path),
+        };
+        let value = TomlValue::parse(raw.trim())
+            .map_err(|e| ConfigError::Syntax(format!("override '{spec}': {e}")))?;
+        self.apply_kv(section.trim(), key.trim(), &value)
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let bad = |m: &str| Err(ConfigError::Invalid(m.to_string()));
+        if self.control.alpha <= 0.0 {
+            return bad("control.alpha must be > 0");
+        }
+        if !(0.0 < self.control.beta && self.control.beta <= 1.0) {
+            return bad("control.beta must be in (0, 1]");
+        }
+        if self.control.n_min > self.control.n_max {
+            return bad("control.n_min must be <= control.n_max");
+        }
+        if self.control.monitor_interval_s == 0 {
+            return bad("control.monitor_interval_s must be > 0");
+        }
+        if !(0.0 < self.control.footprint_frac && self.control.footprint_frac <= 1.0) {
+            return bad("control.footprint_frac must be in (0, 1]");
+        }
+        if self.market.base_spot_price <= 0.0 || self.market.billing_increment_s == 0 {
+            return bad("market prices/billing must be positive");
+        }
+        if self.storage.bandwidth_bps <= 0.0 {
+            return bad("storage.bandwidth_bps must be > 0");
+        }
+        Ok(())
+    }
+
+    pub fn load_file(path: &str) -> Result<Config, ConfigError> {
+        let body = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError::Io(format!("{path}: {e}")))?;
+        let doc = parse_toml(&body)?;
+        let mut cfg = Config::paper_defaults();
+        cfg.apply_toml(&doc)?;
+        Ok(cfg)
+    }
+}
+
+#[derive(Debug)]
+pub enum ConfigError {
+    Syntax(String),
+    UnknownKey(String),
+    TypeMismatch(String),
+    Invalid(String),
+    Io(String),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Syntax(m) => write!(f, "config syntax error: {m}"),
+            ConfigError::UnknownKey(k) => write!(f, "unknown config key: {k}"),
+            ConfigError::TypeMismatch(k) => write!(f, "wrong value type for key: {k}"),
+            ConfigError::Invalid(m) => write!(f, "invalid config: {m}"),
+            ConfigError::Io(m) => write!(f, "config io error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// A parsed TOML-subset document: ordered (section, key) -> value.
+#[derive(Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: Vec<((String, String), TomlValue)>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Float(f64),
+    Int(i64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Parse a scalar literal: quoted string, bool, int or float.
+    pub fn parse(raw: &str) -> Result<TomlValue, String> {
+        let raw = raw.trim();
+        if raw.is_empty() {
+            return Err("empty value".into());
+        }
+        if let Some(inner) = raw.strip_prefix('"') {
+            return inner
+                .strip_suffix('"')
+                .map(|s| TomlValue::Str(s.to_string()))
+                .ok_or_else(|| "unterminated string".into());
+        }
+        match raw {
+            "true" => return Ok(TomlValue::Bool(true)),
+            "false" => return Ok(TomlValue::Bool(false)),
+            _ => {}
+        }
+        if raw.starts_with('[') {
+            return Err("arrays are not supported in this TOML subset".into());
+        }
+        if let Ok(i) = raw.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+        raw.parse::<f64>()
+            .map(TomlValue::Float)
+            .map_err(|_| format!("cannot parse value '{raw}'"))
+    }
+}
+
+/// Parse the supported TOML subset (see module docs).
+pub fn parse_toml(body: &str) -> Result<TomlDoc, ConfigError> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (lineno, line) in body.lines().enumerate() {
+        let line = match line.find('#') {
+            // '#' inside a quoted string is not a comment; handle the easy
+            // common case (comment after value) by checking quote parity.
+            Some(idx) if line[..idx].matches('"').count() % 2 == 0 => &line[..idx],
+            _ => line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(hdr) = line.strip_prefix('[') {
+            let name = hdr
+                .strip_suffix(']')
+                .ok_or_else(|| ConfigError::Syntax(format!("line {}: bad section header", lineno + 1)))?;
+            if name.starts_with('[') {
+                return Err(ConfigError::Syntax(format!(
+                    "line {}: array-of-tables not supported",
+                    lineno + 1
+                )));
+            }
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, raw) = line
+            .split_once('=')
+            .ok_or_else(|| ConfigError::Syntax(format!("line {}: expected key = value", lineno + 1)))?;
+        let value = TomlValue::parse(raw)
+            .map_err(|e| ConfigError::Syntax(format!("line {}: {e}", lineno + 1)))?;
+        doc.entries
+            .push(((section.clone(), key.trim().to_string()), value));
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = Config::paper_defaults();
+        assert_eq!(c.control.alpha, 5.0);
+        assert_eq!(c.control.beta, 0.9);
+        assert_eq!(c.control.n_min, 10.0);
+        assert_eq!(c.control.n_max, 100.0);
+        assert_eq!(c.control.n_w_max, 10.0);
+        assert_eq!(c.control.sigma_z2, 0.5);
+        assert_eq!(c.market.base_spot_price, 0.0081);
+        assert_eq!(c.market.billing_increment_s, 3600);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let doc = parse_toml(
+            r#"
+            seed = 7
+            use_xla = false
+            [control]
+            alpha = 3.5       # AIMD add
+            monitor_interval_s = 300
+            [market]
+            base_spot_price = 0.01
+            "#,
+        )
+        .unwrap();
+        let mut cfg = Config::paper_defaults();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert!(!cfg.use_xla);
+        assert_eq!(cfg.control.alpha, 3.5);
+        assert_eq!(cfg.control.monitor_interval_s, 300);
+        assert_eq!(cfg.market.base_spot_price, 0.01);
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        let doc = parse_toml("[control]\nbogus = 1").unwrap();
+        let mut cfg = Config::paper_defaults();
+        assert!(matches!(cfg.apply_toml(&doc), Err(ConfigError::UnknownKey(_))));
+    }
+
+    #[test]
+    fn rejects_invalid_values() {
+        let mut cfg = Config::paper_defaults();
+        assert!(cfg.apply_override("control.beta=1.5").is_err());
+        assert!(cfg.apply_override("control.alpha=-1").is_err());
+        assert!(cfg.apply_override("control.monitor_interval_s=0").is_err());
+    }
+
+    #[test]
+    fn cli_override() {
+        let mut cfg = Config::paper_defaults();
+        cfg.apply_override("control.beta=0.5").unwrap();
+        assert_eq!(cfg.control.beta, 0.5);
+        cfg.apply_override("seed=99").unwrap();
+        assert_eq!(cfg.seed, 99);
+        cfg.apply_override("artifacts_dir=\"x/y\"").unwrap();
+        assert_eq!(cfg.artifacts_dir, "x/y");
+    }
+
+    #[test]
+    fn rejects_arrays_and_bad_syntax() {
+        assert!(parse_toml("[a]\nk = [1,2]").is_err());
+        assert!(parse_toml("[[t]]").is_err());
+        assert!(parse_toml("novalue").is_err());
+    }
+}

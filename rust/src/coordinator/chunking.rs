@@ -1,0 +1,106 @@
+//! Footprinting and chunk sizing (§II-E-1).
+//!
+//! The footprinting stage executes a small fraction of a new workload's
+//! tasks to (i) verify the user code runs, (ii) seed the CUS estimator,
+//! and (iii) pick a chunk size such that one chunk's processing time is
+//! comparable to the monitoring interval — long "deadband" (environment
+//! setup) times mandate grouping many tasks per chunk so the setup cost
+//! amortizes.
+
+/// Number of footprinting tasks for a workload of `n_tasks` items:
+/// `frac` of the tasks, clamped to [min, max] and to the workload size.
+pub fn footprint_count(n_tasks: usize, frac: f64, min: usize, max: usize) -> usize {
+    let f = ((n_tasks as f64 * frac).round() as usize).clamp(min, max);
+    f.min(n_tasks)
+}
+
+/// Deadband-amortization factor: a chunk must be long enough that the
+/// per-chunk setup cost is a small fraction of it (§II-E-1: "long
+/// deadband times in tasks mandate the grouping of several tasks into
+/// large chunks"). The effective chunk-duration target is
+/// `max(monitor_interval, AMORTIZE × deadband)`.
+pub const AMORTIZE: f64 = 8.0;
+
+/// Chunk size from the current per-item time estimate.
+///
+/// Solves `deadband + n * per_item_s ≈ target` for n, where the target
+/// duration is the monitoring interval stretched (if needed) to amortize
+/// the deadband; clamped to [1, remaining]. `per_item_s` must include
+/// transfer time.
+pub fn chunk_size(per_item_s: f64, deadband_s: f64, target_s: f64, remaining: usize) -> usize {
+    if remaining == 0 {
+        return 0;
+    }
+    let target = target_s.max(AMORTIZE * deadband_s);
+    let budget = (target - deadband_s).max(per_item_s.max(1e-6));
+    let n = (budget / per_item_s.max(1e-6)).floor() as usize;
+    n.clamp(1, remaining)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn footprint_five_percent_clamped() {
+        // paper's example: ~5% of submitted inputs
+        assert_eq!(footprint_count(1000, 0.05, 1, 10), 10); // 50 -> cap 10
+        assert_eq!(footprint_count(100, 0.05, 1, 10), 5);
+        assert_eq!(footprint_count(10, 0.05, 1, 10), 1); // 0.5 -> min 1
+        assert_eq!(footprint_count(1, 0.05, 1, 10), 1);
+        assert_eq!(footprint_count(0, 0.05, 1, 10), 0);
+    }
+
+    #[test]
+    fn chunk_fills_monitoring_interval() {
+        // 2 s items, 0.5 s deadband, 60 s interval -> ~29 items
+        assert_eq!(chunk_size(2.0, 0.5, 60.0, 1000), 29);
+    }
+
+    #[test]
+    fn long_deadband_forces_large_chunks() {
+        // SIFT: 30 s setup stretches the target to 8x30 = 240 s even
+        // under 60 s monitoring -> (240-30)/6 = 35 items; a 300 s
+        // interval gives (300-30)/6 = 45
+        assert_eq!(chunk_size(6.0, 30.0, 60.0, 1000), 35);
+        assert_eq!(chunk_size(6.0, 30.0, 300.0, 1000), 45);
+    }
+
+    #[test]
+    fn heavy_items_chunk_singly() {
+        // 60 s transcodes under a 60 s interval -> one per chunk
+        assert_eq!(chunk_size(60.0, 1.0, 60.0, 500), 1);
+    }
+
+    #[test]
+    fn chunk_clamped_to_remaining() {
+        assert_eq!(chunk_size(0.1, 0.0, 60.0, 3), 3);
+        assert_eq!(chunk_size(1.0, 0.0, 60.0, 0), 0);
+    }
+
+    #[test]
+    fn chunk_always_at_least_one_when_work_remains() {
+        forall(
+            "chunk-size-bounds",
+            0xC4,
+            300,
+            |r| {
+                (
+                    r.uniform(1e-3, 300.0),       // per_item
+                    r.uniform(0.0, 120.0),        // deadband
+                    r.uniform(1.0, 600.0),        // target
+                    r.int(1, 10_000) as usize,    // remaining
+                )
+            },
+            |&(per, dead, target, rem)| {
+                let n = chunk_size(per, dead, target, rem);
+                if (1..=rem).contains(&n) {
+                    Ok(())
+                } else {
+                    Err(format!("chunk {n} outside [1, {rem}]"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,18 @@
+//! The Dithen coordinator (§II-E, §III, §IV): scaling policies, the
+//! tracker-style chunk allocator, footprinting/chunk sizing, TTC
+//! confirmation and the proportional-fair service-rate math.
+//!
+//! The integrated GCI monitoring loop that wires these to the substrates
+//! lives in [`crate::platform`].
+
+pub mod chunking;
+pub mod policy;
+pub mod service_rate;
+pub mod tracker;
+pub mod ttc;
+
+pub use chunking::{chunk_size, footprint_count};
+pub use policy::{Aimd, AmazonAs, Lr, Mwa, PolicyCtx, PolicyKind, Reactive, ScalingPolicy};
+pub use service_rate::service_rates;
+pub use tracker::Tracker;
+pub use ttc::{confirm, Confirmation};

@@ -1,0 +1,303 @@
+//! Instance-scaling policies: the proposed AIMD controller (Fig. 4) and
+//! the §V-C baselines — Reactive, MWA, LR (Gandhi / Krioukov et al.) and
+//! Amazon Autoscale's CPU-utilization rule.
+//!
+//! A policy maps the monitoring-instant context to the desired total CU
+//! count N_tot[t+1]; the platform then requests/terminates single-CU spot
+//! instances to meet it.
+
+use crate::util::stats;
+
+/// What a policy sees at a monitoring instant.
+#[derive(Debug, Clone)]
+pub struct PolicyCtx<'a> {
+    /// Simulated time (s).
+    pub now: u64,
+    /// Committed CUs (running + draining + booting) — what scaling has
+    /// already paid for or requested.
+    pub n_tot: f64,
+    /// Optimal CU demand N*_tot[t] from eq. (12) (estimation-based
+    /// policies only).
+    pub n_star: f64,
+    /// History of N*_tot at previous monitoring instants (oldest first,
+    /// including the current value as the last element).
+    pub n_star_history: &'a [f64],
+    /// Mean CPU utilization across active instances, in [0, 1].
+    pub mean_utilization: f64,
+    /// True when any workload still has pending/processing tasks.
+    pub work_pending: bool,
+}
+
+/// A CU-scaling policy.
+pub trait ScalingPolicy: std::fmt::Debug {
+    fn name(&self) -> &'static str;
+    /// Desired N_tot for the next interval (the platform clamps/rounds).
+    fn target(&mut self, ctx: &PolicyCtx) -> f64;
+    /// Whether the policy consumes CUS estimates (Amazon AS does not).
+    fn uses_estimation(&self) -> bool {
+        true
+    }
+    /// Policy evaluation period in seconds (Amazon AS: fixed 5 min).
+    fn eval_interval_s(&self) -> Option<u64> {
+        None
+    }
+}
+
+/// The proposed AIMD controller (Fig. 4).
+#[derive(Debug, Clone)]
+pub struct Aimd {
+    pub alpha: f64,
+    pub beta: f64,
+    pub n_min: f64,
+    pub n_max: f64,
+}
+
+impl Aimd {
+    pub fn from_config(c: &crate::config::ControlCfg) -> Self {
+        Aimd { alpha: c.alpha, beta: c.beta, n_min: c.n_min, n_max: c.n_max }
+    }
+}
+
+impl ScalingPolicy for Aimd {
+    fn name(&self) -> &'static str {
+        "AIMD"
+    }
+    fn target(&mut self, ctx: &PolicyCtx) -> f64 {
+        if ctx.n_tot <= ctx.n_star {
+            (ctx.n_tot + self.alpha).min(self.n_max)
+        } else {
+            (self.beta * ctx.n_tot).max(self.n_min)
+        }
+    }
+}
+
+/// Reactive: directly match demand, N_tot[t+1] = N*_tot[t] (§II-E-2's
+/// "direct way", called Reactive in §V-C).
+#[derive(Debug, Clone)]
+pub struct Reactive {
+    pub n_min: f64,
+    pub n_max: f64,
+}
+
+impl ScalingPolicy for Reactive {
+    fn name(&self) -> &'static str {
+        "Reactive"
+    }
+    fn target(&mut self, ctx: &PolicyCtx) -> f64 {
+        ctx.n_star.clamp(self.n_min, self.n_max)
+    }
+}
+
+/// Mean-weighted-average over the last six optimal settings (eq. 16).
+#[derive(Debug, Clone)]
+pub struct Mwa {
+    pub window: usize,
+    pub n_min: f64,
+    pub n_max: f64,
+}
+
+impl ScalingPolicy for Mwa {
+    fn name(&self) -> &'static str {
+        "MWA"
+    }
+    fn target(&mut self, ctx: &PolicyCtx) -> f64 {
+        let h = ctx.n_star_history;
+        let tail = if h.len() > self.window { &h[h.len() - self.window..] } else { h };
+        stats::mean(tail).clamp(self.n_min, self.n_max)
+    }
+}
+
+/// Linear-regression extrapolation from the last six optimal settings.
+#[derive(Debug, Clone)]
+pub struct Lr {
+    pub window: usize,
+    pub n_min: f64,
+    pub n_max: f64,
+}
+
+impl ScalingPolicy for Lr {
+    fn name(&self) -> &'static str {
+        "LR"
+    }
+    fn target(&mut self, ctx: &PolicyCtx) -> f64 {
+        let h = ctx.n_star_history;
+        if h.is_empty() {
+            return self.n_min;
+        }
+        stats::lr_extrapolate(h, self.window, 1.0).clamp(self.n_min, self.n_max)
+    }
+}
+
+/// Amazon Autoscale baseline: ±`step` instances on a 20 % mean-CPU rule,
+/// evaluated every five minutes (§V-C's configuration).
+#[derive(Debug, Clone)]
+pub struct AmazonAs {
+    /// Instances added/removed per evaluation (paper: 1 or 10).
+    pub step: f64,
+    /// Utilization threshold (paper: 0.20).
+    pub threshold: f64,
+    pub n_max: f64,
+}
+
+impl ScalingPolicy for AmazonAs {
+    fn name(&self) -> &'static str {
+        "Amazon AS"
+    }
+    fn target(&mut self, ctx: &PolicyCtx) -> f64 {
+        if ctx.mean_utilization > self.threshold {
+            (ctx.n_tot + self.step).min(self.n_max)
+        } else {
+            (ctx.n_tot - self.step).max(1.0)
+        }
+    }
+    fn uses_estimation(&self) -> bool {
+        false
+    }
+    fn eval_interval_s(&self) -> Option<u64> {
+        Some(300)
+    }
+}
+
+/// Which policy a run uses (the §V-C comparison set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Aimd,
+    Reactive,
+    Mwa,
+    Lr,
+    AmazonAs1,
+    AmazonAs10,
+}
+
+impl PolicyKind {
+    pub const COMPARISON: [PolicyKind; 4] =
+        [PolicyKind::Aimd, PolicyKind::Reactive, PolicyKind::Mwa, PolicyKind::Lr];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Aimd => "AIMD",
+            PolicyKind::Reactive => "Reactive",
+            PolicyKind::Mwa => "MWA",
+            PolicyKind::Lr => "LR",
+            PolicyKind::AmazonAs1 => "Amazon AS (+1)",
+            PolicyKind::AmazonAs10 => "Amazon AS (+10)",
+        }
+    }
+
+    /// Instantiate with the given control config.
+    ///
+    /// N_min/N_max are parameters *of the AIMD algorithm* (Fig. 4); the
+    /// predictive baselines track the demand estimate directly (floored
+    /// at one instance so progress is always possible, capped at N_max),
+    /// exactly the §V-C configuration where Reactive peaked at 28
+    /// instances while AIMD never left [10, 13].
+    pub fn build(&self, c: &crate::config::ControlCfg) -> Box<dyn ScalingPolicy> {
+        match self {
+            PolicyKind::Aimd => Box::new(Aimd::from_config(c)),
+            PolicyKind::Reactive => Box::new(Reactive { n_min: 1.0, n_max: c.n_max }),
+            PolicyKind::Mwa => Box::new(Mwa { window: 6, n_min: 1.0, n_max: c.n_max }),
+            PolicyKind::Lr => Box::new(Lr { window: 6, n_min: 1.0, n_max: c.n_max }),
+            PolicyKind::AmazonAs1 => {
+                Box::new(AmazonAs { step: 1.0, threshold: 0.20, n_max: c.n_max })
+            }
+            PolicyKind::AmazonAs10 => {
+                Box::new(AmazonAs { step: 10.0, threshold: 0.20, n_max: c.n_max })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ControlCfg;
+
+    fn ctx<'a>(n_tot: f64, n_star: f64, hist: &'a [f64], util: f64) -> PolicyCtx<'a> {
+        PolicyCtx {
+            now: 0,
+            n_tot,
+            n_star,
+            n_star_history: hist,
+            mean_utilization: util,
+            work_pending: true,
+        }
+    }
+
+    #[test]
+    fn aimd_additive_increase() {
+        let mut p = Aimd { alpha: 5.0, beta: 0.9, n_min: 10.0, n_max: 100.0 };
+        assert_eq!(p.target(&ctx(20.0, 30.0, &[], 0.9)), 25.0);
+        // cap at n_max
+        assert_eq!(p.target(&ctx(98.0, 200.0, &[], 0.9)), 100.0);
+    }
+
+    #[test]
+    fn aimd_multiplicative_decrease() {
+        let mut p = Aimd { alpha: 5.0, beta: 0.9, n_min: 10.0, n_max: 100.0 };
+        assert_eq!(p.target(&ctx(50.0, 30.0, &[], 0.9)), 45.0);
+        // floor at n_min
+        assert_eq!(p.target(&ctx(10.5, 0.0, &[], 0.9)), 10.0);
+    }
+
+    #[test]
+    fn aimd_equality_counts_as_increase() {
+        // Fig. 4: incr = TRUE when N_tot <= N*
+        let mut p = Aimd { alpha: 5.0, beta: 0.9, n_min: 10.0, n_max: 100.0 };
+        assert_eq!(p.target(&ctx(30.0, 30.0, &[], 0.9)), 35.0);
+    }
+
+    #[test]
+    fn reactive_matches_demand_with_clamps() {
+        let mut p = Reactive { n_min: 10.0, n_max: 100.0 };
+        assert_eq!(p.target(&ctx(5.0, 42.3, &[], 0.9)), 42.3);
+        assert_eq!(p.target(&ctx(5.0, 3.0, &[], 0.9)), 10.0);
+        assert_eq!(p.target(&ctx(5.0, 500.0, &[], 0.9)), 100.0);
+    }
+
+    #[test]
+    fn mwa_averages_window() {
+        let mut p = Mwa { window: 6, n_min: 0.0, n_max: 100.0 };
+        let h = [10.0, 20.0, 30.0, 40.0, 50.0, 60.0, 70.0];
+        // last six: 20..70 -> mean 45
+        assert_eq!(p.target(&ctx(0.0, 70.0, &h, 0.9)), 45.0);
+        // short history uses what exists
+        assert_eq!(p.target(&ctx(0.0, 0.0, &[12.0], 0.9)), 12.0);
+    }
+
+    #[test]
+    fn lr_extrapolates_trend() {
+        let mut p = Lr { window: 6, n_min: 0.0, n_max: 100.0 };
+        let h = [10.0, 20.0, 30.0, 40.0, 50.0, 60.0];
+        let t = p.target(&ctx(0.0, 60.0, &h, 0.9));
+        assert!((t - 70.0).abs() < 1e-9);
+        // empty history falls back to n_min
+        assert_eq!(p.target(&ctx(0.0, 0.0, &[], 0.9)), 0.0);
+    }
+
+    #[test]
+    fn amazon_as_follows_utilization() {
+        let mut p = AmazonAs { step: 10.0, threshold: 0.20, n_max: 100.0 };
+        assert_eq!(p.target(&ctx(20.0, 0.0, &[], 0.5)), 30.0);
+        assert_eq!(p.target(&ctx(20.0, 0.0, &[], 0.1)), 10.0);
+        // never below 1
+        assert_eq!(p.target(&ctx(3.0, 0.0, &[], 0.0)), 1.0);
+        assert!(!p.uses_estimation());
+        assert_eq!(p.eval_interval_s(), Some(300));
+    }
+
+    #[test]
+    fn kind_builds_all() {
+        let c = ControlCfg::default();
+        for k in [
+            PolicyKind::Aimd,
+            PolicyKind::Reactive,
+            PolicyKind::Mwa,
+            PolicyKind::Lr,
+            PolicyKind::AmazonAs1,
+            PolicyKind::AmazonAs10,
+        ] {
+            let p = k.build(&c);
+            assert!(!p.name().is_empty());
+        }
+    }
+}

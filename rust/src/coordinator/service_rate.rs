@@ -1,0 +1,139 @@
+//! Proportional-fair service rates (eqs. 10–14) — f64 native version.
+//!
+//! The XLA estimator bank computes the same quantities fused into the
+//! monitor_step artifact (Kalman-driven runs); this standalone version
+//! serves the ad-hoc/ARMA-driven comparison runs and the unit/property
+//! tests. Maximizing f(s_w) = r_w ln(s_w) − d_w s_w gives s*_w = r_w/d_w
+//! (eq. 11); the total is then reconciled with the available CUs through
+//! the AIMD-aware adjustments of eqs. (13)/(14).
+
+/// Compute adjusted service rates. `r[w]` required CUSs, `d[w]` remaining
+/// TTC seconds, `active[w]` whether the workload exists. Returns
+/// (rates, n_star).
+pub fn service_rates(
+    r: &[f64],
+    d: &[f64],
+    active: &[bool],
+    n_tot: f64,
+    alpha: f64,
+    beta: f64,
+    n_w_max: f64,
+) -> (Vec<f64>, f64) {
+    assert_eq!(r.len(), d.len());
+    assert_eq!(r.len(), active.len());
+    let mut s_star = vec![0.0; r.len()];
+    let mut n_star = 0.0;
+    for w in 0..r.len() {
+        if active[w] {
+            let safe_d = if d[w] > 0.0 { d[w] } else { 1.0 };
+            s_star[w] = (r[w] / safe_d).min(n_w_max); // eq. (11) + N_{w,max} cap
+            n_star += s_star[w];
+        }
+    }
+    let hi = n_tot + alpha;
+    let lo = beta * n_tot;
+    let scale = if n_star > hi {
+        hi / n_star // eq. (13)
+    } else if n_star > 0.0 && n_star < lo {
+        lo / n_star // eq. (14)
+    } else {
+        1.0
+    };
+    for s in s_star.iter_mut() {
+        *s *= scale;
+    }
+    (s_star, n_star)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn optimal_rate_is_r_over_d() {
+        let (s, n) = service_rates(&[100.0, 200.0], &[50.0, 50.0], &[true, true], 6.0, 5.0, 0.9, 1e9);
+        // n* = 2 + 4 = 6, within [beta*6, 6+5] -> no adjustment
+        assert_eq!(s, vec![2.0, 4.0]);
+        assert_eq!(n, 6.0);
+    }
+
+    #[test]
+    fn downscale_when_over_capacity() {
+        // n* = 20, n_tot = 5, hi = 10 -> scale 0.5 (eq. 13)
+        let (s, n) = service_rates(&[1000.0], &[50.0], &[true], 5.0, 5.0, 0.9, 1e9);
+        assert_eq!(n, 20.0);
+        assert_eq!(s, vec![10.0]);
+    }
+
+    #[test]
+    fn upscale_when_under_capacity() {
+        // n* = 1, n_tot = 10, lo = 9 -> scale 9 (eq. 14)
+        let (s, n) = service_rates(&[50.0], &[50.0], &[true], 10.0, 5.0, 0.9, 1e9);
+        assert_eq!(n, 1.0);
+        assert!((s[0] - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inactive_workloads_get_zero() {
+        let (s, n) = service_rates(&[100.0, 100.0], &[10.0, 10.0], &[true, false], 20.0, 5.0, 0.9, 1e9);
+        assert_eq!(s[1], 0.0);
+        assert_eq!(n, 10.0);
+    }
+
+    #[test]
+    fn zero_demand_no_scaling() {
+        let (s, n) = service_rates(&[0.0], &[10.0], &[true], 10.0, 5.0, 0.9, 1e9);
+        assert_eq!(s, vec![0.0]);
+        assert_eq!(n, 0.0);
+    }
+
+    #[test]
+    fn expired_deadline_clamps_to_one_second() {
+        let (s, _) = service_rates(&[100.0], &[0.0], &[true], 1000.0, 5.0, 0.9, 1e9);
+        // d=0 -> treated as 1 s -> s* = 100, within [900, 1005] -> upscaled
+        assert!(s[0] >= 100.0);
+    }
+
+    #[test]
+    fn adjusted_total_respects_aimd_bounds() {
+        forall(
+            "service-rates-bounded",
+            0x5E,
+            300,
+            |rng: &mut Rng| {
+                let n = rng.int(1, 40) as usize;
+                let r: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 50_000.0)).collect();
+                let d: Vec<f64> = (0..n).map(|_| rng.uniform(1.0, 10_000.0)).collect();
+                let active: Vec<bool> = (0..n).map(|_| rng.f64() < 0.8).collect();
+                let n_tot = rng.uniform(1.0, 100.0);
+                (r, d, active, n_tot)
+            },
+            |(r, d, active, n_tot)| {
+                let (s, n_star) = service_rates(r, d, active, *n_tot, 5.0, 0.9, 1e9);
+                let total: f64 = s.iter().sum();
+                if s.iter().any(|x| *x < 0.0) {
+                    return Err("negative rate".into());
+                }
+                // after adjustment the total must never exceed n_tot+alpha
+                // (when there was demand) and must reach beta*n_tot when
+                // demand existed below it
+                if n_star > 0.0 && total > n_tot + 5.0 + 1e-6 {
+                    return Err(format!("total {total} > hi {}", n_tot + 5.0));
+                }
+                if n_star > 0.0 && n_star < 0.9 * n_tot && (total - 0.9 * n_tot).abs() > 1e-6 {
+                    return Err(format!("upscale total {total} != lo {}", 0.9 * n_tot));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn rates_preserve_proportionality() {
+        // adjustment is a common scale: ratios s_i/s_j stay r_i d_j / (r_j d_i)
+        let (s, _) = service_rates(&[100.0, 300.0], &[10.0, 10.0], &[true, true], 2.0, 5.0, 0.9, 1e9);
+        assert!((s[1] / s[0] - 3.0).abs() < 1e-9);
+    }
+}

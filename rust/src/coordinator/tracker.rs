@@ -1,0 +1,264 @@
+//! Chunk allocation — the "BitTorrent-tracker" role of the GCI
+//! (§II-E-1): map idle instances to workloads according to the
+//! proportional-fair service rates.
+//!
+//! Service rates are fractional CUs; instances are integral. We use a
+//! credit (deficit round-robin) scheme: every monitoring interval each
+//! workload earns `s_w` credits; claiming an instance for one interval
+//! costs one credit. Workloads with the largest credit balance (and
+//! pending tasks) get instances first, which realizes fractional rates
+//! over time — e.g. s_w = 0.5 holds an instance every other interval —
+//! and keeps long-run allocation proportional to s_w.
+
+use std::collections::BTreeMap;
+
+/// Per-workload scheduling state.
+#[derive(Debug, Clone, Default)]
+pub struct WlSched {
+    /// Accumulated service credits.
+    pub credit: f64,
+    /// Instances currently executing this workload's chunks.
+    pub allocated: usize,
+    /// Whether the workload has pending tasks to hand out.
+    pub has_pending: bool,
+}
+
+/// The tracker: deficit-round-robin allocator over workloads.
+#[derive(Debug, Default)]
+pub struct Tracker {
+    state: BTreeMap<usize, WlSched>,
+    /// Per-workload cap on concurrent instances (N_{w,max}).
+    cap: f64,
+}
+
+impl Tracker {
+    pub fn new(n_w_max: f64) -> Self {
+        Tracker { state: BTreeMap::new(), cap: n_w_max }
+    }
+
+    pub fn register(&mut self, workload: usize) {
+        self.state.entry(workload).or_default();
+    }
+
+    pub fn remove(&mut self, workload: usize) {
+        self.state.remove(&workload);
+    }
+
+    /// Credit each workload with its service rate for one interval.
+    /// Credits are capped so a starved workload cannot build an unbounded
+    /// backlog and then monopolize the fleet (cap = N_{w,max}).
+    pub fn tick(&mut self, rates: &BTreeMap<usize, f64>) {
+        for (w, st) in self.state.iter_mut() {
+            let s = rates.get(w).copied().unwrap_or(0.0);
+            st.credit = (st.credit + s).min(self.cap.max(1.0));
+        }
+    }
+
+    pub fn set_pending(&mut self, workload: usize, pending: bool) {
+        if let Some(st) = self.state.get_mut(&workload) {
+            st.has_pending = pending;
+        }
+    }
+
+    pub fn on_assign(&mut self, workload: usize) {
+        if let Some(st) = self.state.get_mut(&workload) {
+            st.allocated += 1;
+            st.credit -= 1.0;
+        }
+    }
+
+    pub fn on_release(&mut self, workload: usize) {
+        if let Some(st) = self.state.get_mut(&workload) {
+            st.allocated = st.allocated.saturating_sub(1);
+        }
+    }
+
+    pub fn allocated(&self, workload: usize) -> usize {
+        self.state.get(&workload).map(|s| s.allocated).unwrap_or(0)
+    }
+
+    pub fn credit(&self, workload: usize) -> f64 {
+        self.state.get(&workload).map(|s| s.credit).unwrap_or(0.0)
+    }
+
+    /// Pick the workload the next idle instance should serve: the one
+    /// with pending tasks, below its cap, and the highest credit; ties
+    /// break toward the lowest workload id (arrival order). Returns None
+    /// when no workload can use an instance (credit must be positive —
+    /// a workload only runs at its earned rate).
+    pub fn next_assignment(&self) -> Option<usize> {
+        self.state
+            .iter()
+            .filter(|(_, st)| {
+                st.has_pending && (st.allocated as f64) < self.cap && st.credit >= 1.0
+            })
+            .max_by(|(wa, a), (wb, b)| {
+                a.credit
+                    .partial_cmp(&b.credit)
+                    .unwrap()
+                    .then(wb.cmp(wa)) // lower id wins ties
+            })
+            .map(|(w, _)| *w)
+    }
+
+    /// Greedy FIFO assignment, ignoring rates (Amazon-AS mode): earliest
+    /// workload with pending tasks.
+    pub fn next_fifo(&self) -> Option<usize> {
+        self.state
+            .iter()
+            .find(|(_, st)| st.has_pending)
+            .map(|(w, _)| *w)
+    }
+
+    pub fn workloads(&self) -> impl Iterator<Item = usize> + '_ {
+        self.state.keys().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    fn rates(pairs: &[(usize, f64)]) -> BTreeMap<usize, f64> {
+        pairs.iter().copied().collect()
+    }
+
+    #[test]
+    fn highest_credit_wins() {
+        let mut t = Tracker::new(10.0);
+        t.register(0);
+        t.register(1);
+        t.set_pending(0, true);
+        t.set_pending(1, true);
+        t.tick(&rates(&[(0, 2.0), (1, 5.0)]));
+        assert_eq!(t.next_assignment(), Some(1));
+        t.on_assign(1);
+        // 1 has 4 credits left, still beats 0's 2
+        assert_eq!(t.next_assignment(), Some(1));
+    }
+
+    #[test]
+    fn fractional_rate_alternates() {
+        // s=0.5 should get an instance every other interval
+        let mut t = Tracker::new(10.0);
+        t.register(0);
+        t.set_pending(0, true);
+        let mut grants = 0;
+        for _ in 0..10 {
+            t.tick(&rates(&[(0, 0.5)]));
+            if t.next_assignment() == Some(0) {
+                t.on_assign(0);
+                t.on_release(0); // chunk finishes within the interval
+                grants += 1;
+            }
+        }
+        assert_eq!(grants, 5);
+    }
+
+    #[test]
+    fn respects_per_workload_cap() {
+        let mut t = Tracker::new(2.0);
+        t.register(0);
+        t.set_pending(0, true);
+        t.tick(&rates(&[(0, 10.0)]));
+        t.on_assign(0);
+        t.on_assign(0);
+        assert_eq!(t.allocated(0), 2);
+        assert_eq!(t.next_assignment(), None);
+    }
+
+    #[test]
+    fn skips_workloads_without_pending() {
+        let mut t = Tracker::new(10.0);
+        t.register(0);
+        t.register(1);
+        t.set_pending(0, false);
+        t.set_pending(1, true);
+        t.tick(&rates(&[(0, 9.0), (1, 1.0)]));
+        assert_eq!(t.next_assignment(), Some(1));
+    }
+
+    #[test]
+    fn credit_capped_at_n_w_max() {
+        let mut t = Tracker::new(3.0);
+        t.register(0);
+        for _ in 0..100 {
+            t.tick(&rates(&[(0, 5.0)]));
+        }
+        assert!(t.credit(0) <= 3.0 + 1e-9);
+    }
+
+    #[test]
+    fn ties_break_by_arrival_order() {
+        let mut t = Tracker::new(10.0);
+        for w in [3, 1, 2] {
+            t.register(w);
+            t.set_pending(w, true);
+        }
+        t.tick(&rates(&[(1, 2.0), (2, 2.0), (3, 2.0)]));
+        assert_eq!(t.next_assignment(), Some(1));
+    }
+
+    #[test]
+    fn fifo_ignores_credit() {
+        let mut t = Tracker::new(10.0);
+        t.register(0);
+        t.register(1);
+        t.set_pending(0, true);
+        t.set_pending(1, true);
+        t.tick(&rates(&[(1, 99.0)]));
+        assert_eq!(t.next_fifo(), Some(0));
+    }
+
+    #[test]
+    fn release_decrements_and_saturates() {
+        let mut t = Tracker::new(10.0);
+        t.register(0);
+        t.on_release(0); // no-op at zero
+        assert_eq!(t.allocated(0), 0);
+    }
+
+    #[test]
+    fn long_run_allocation_proportional_to_rates() {
+        forall(
+            "tracker-proportional-fairness",
+            0x7C,
+            30,
+            |r| {
+                let s0 = r.uniform(0.2, 5.0);
+                let s1 = r.uniform(0.2, 5.0);
+                (s0, s1)
+            },
+            |&(s0, s1)| {
+                let mut t = Tracker::new(100.0);
+                t.register(0);
+                t.register(1);
+                t.set_pending(0, true);
+                t.set_pending(1, true);
+                let (mut g0, mut g1) = (0.0f64, 0.0f64);
+                let rr = rates(&[(0, s0), (1, s1)]);
+                for _ in 0..400 {
+                    t.tick(&rr);
+                    // drain all grantable capacity this interval
+                    while let Some(w) = t.next_assignment() {
+                        t.on_assign(w);
+                        t.on_release(w);
+                        if w == 0 {
+                            g0 += 1.0;
+                        } else {
+                            g1 += 1.0;
+                        }
+                    }
+                }
+                let want = s0 / s1;
+                let got = g0 / g1.max(1.0);
+                if (got / want - 1.0).abs() < 0.15 {
+                    Ok(())
+                } else {
+                    Err(format!("grant ratio {got} vs rate ratio {want}"))
+                }
+            },
+        );
+    }
+}

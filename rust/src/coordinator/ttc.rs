@@ -1,0 +1,71 @@
+//! TTC confirmation (§II-E-4).
+//!
+//! Once a reliable CUS estimate exists (t_init), the GCI confirms the
+//! requested time-to-completion: if meeting it would need a service rate
+//! above the per-workload cap N_{w,max}, the TTC is extended so that the
+//! rate equals the cap.
+
+use crate::sim::SimTime;
+
+/// Result of confirming a workload's TTC.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Confirmation {
+    /// Confirmed absolute deadline.
+    pub deadline: SimTime,
+    /// Initial service rate s_w[t_init] implied by the confirmation.
+    pub rate: f64,
+    /// True if the requested TTC had to be extended.
+    pub extended: bool,
+}
+
+/// Confirm a TTC given the required CUSs `r` (eq. 1), the requested
+/// absolute `deadline`, the current time, and the rate cap.
+pub fn confirm(r: f64, deadline: SimTime, now: SimTime, n_w_max: f64) -> Confirmation {
+    let remaining = deadline.saturating_sub(now).max(1) as f64;
+    let rate = r / remaining; // eq. (11)
+    if rate <= n_w_max {
+        Confirmation { deadline, rate, extended: false }
+    } else {
+        // extend d so that r / d = n_w_max
+        let d = (r / n_w_max).ceil() as SimTime;
+        Confirmation { deadline: now + d, rate: n_w_max, extended: true }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn achievable_ttc_confirmed_unchanged() {
+        // 3600 CUS over 3600 s -> rate 1.0, under the cap of 10
+        let c = confirm(3600.0, 4600, 1000, 10.0);
+        assert_eq!(c.deadline, 4600);
+        assert!((c.rate - 1.0).abs() < 1e-12);
+        assert!(!c.extended);
+    }
+
+    #[test]
+    fn infeasible_ttc_extended_to_cap() {
+        // 72000 CUS over 3600 s would need rate 20 > cap 10
+        let c = confirm(72_000.0, 4600, 1000, 10.0);
+        assert!(c.extended);
+        assert!((c.rate - 10.0).abs() < 1e-12);
+        assert_eq!(c.deadline, 1000 + 7200);
+    }
+
+    #[test]
+    fn exactly_at_cap_not_extended() {
+        let c = confirm(36_000.0, 4600, 1000, 10.0);
+        assert!(!c.extended);
+        assert!((c.rate - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn past_deadline_degenerates_gracefully() {
+        // deadline already passed: remaining clamps to 1 s
+        let c = confirm(100.0, 500, 1000, 10.0);
+        assert!(c.extended);
+        assert_eq!(c.deadline, 1000 + 10);
+    }
+}

@@ -1,0 +1,319 @@
+//! Task-status database — the MySQL substitute of §II-E-1.
+//!
+//! The GCI allocates chunks "in a manner analogous to a BitTorrent
+//! tracker": LCIs *write* task status + duration measurements, the GCI
+//! *reads* pending/processing/completed sets. This store keeps exactly
+//! those semantics (indexed by workload and status, insertion-ordered
+//! within a status) so tracker behaviour is deterministic.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::sim::SimTime;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskStatus {
+    Pending,
+    Processing,
+    Completed,
+    Failed,
+}
+
+/// One media-processing task row.
+#[derive(Debug, Clone)]
+pub struct TaskRow {
+    pub workload: usize,
+    pub media_type: usize,
+    pub task: usize,
+    pub status: TaskStatus,
+    /// Instance currently/last processing it.
+    pub instance: Option<u64>,
+    /// Measured CUS to complete (set on completion).
+    pub measured_cus: Option<f64>,
+    /// Completion time.
+    pub completed_at: Option<SimTime>,
+    /// Exit status (0 normal, -1 abnormal — §II-A).
+    pub exit_code: i32,
+}
+
+/// Composite key: (workload, task index).
+pub type TaskKey = (usize, usize);
+
+#[derive(Debug, Default)]
+pub struct TaskDb {
+    rows: BTreeMap<TaskKey, TaskRow>,
+    by_status: BTreeMap<(usize, u8), BTreeSet<usize>>, // (workload, status) -> task ids
+    /// Incremental not-completed counters per (workload, media type):
+    /// the GCI reads m_{w,k}[t] every tick, so this must be O(1), not a
+    /// table scan (perf pass, §Perf).
+    remaining: BTreeMap<(usize, usize), u64>,
+}
+
+fn status_tag(s: TaskStatus) -> u8 {
+    match s {
+        TaskStatus::Pending => 0,
+        TaskStatus::Processing => 1,
+        TaskStatus::Completed => 2,
+        TaskStatus::Failed => 3,
+    }
+}
+
+impl TaskDb {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a new pending task.
+    pub fn insert(&mut self, workload: usize, media_type: usize, task: usize) {
+        let row = TaskRow {
+            workload,
+            media_type,
+            task,
+            status: TaskStatus::Pending,
+            instance: None,
+            measured_cus: None,
+            completed_at: None,
+            exit_code: 0,
+        };
+        let prev = self.rows.insert((workload, task), row);
+        assert!(prev.is_none(), "task ({workload},{task}) inserted twice");
+        self.by_status
+            .entry((workload, status_tag(TaskStatus::Pending)))
+            .or_default()
+            .insert(task);
+        *self.remaining.entry((workload, media_type)).or_default() += 1;
+    }
+
+    fn move_status(&mut self, key: TaskKey, to: TaskStatus) {
+        let row = self.rows.get_mut(&key).expect("unknown task");
+        let from = row.status;
+        row.status = to;
+        self.by_status
+            .get_mut(&(key.0, status_tag(from)))
+            .map(|s| s.remove(&key.1));
+        self.by_status
+            .entry((key.0, status_tag(to)))
+            .or_default()
+            .insert(key.1);
+    }
+
+    /// LCI claims a task for an instance (Pending -> Processing).
+    pub fn claim(&mut self, key: TaskKey, instance: u64) {
+        {
+            let row = self.rows.get(&key).expect("unknown task");
+            assert_eq!(row.status, TaskStatus::Pending, "claiming non-pending task {key:?}");
+        }
+        self.move_status(key, TaskStatus::Processing);
+        self.rows.get_mut(&key).unwrap().instance = Some(instance);
+    }
+
+    /// LCI reports completion with the measured CUS.
+    pub fn complete(&mut self, key: TaskKey, cus: f64, at: SimTime, exit_code: i32) {
+        {
+            let row = self.rows.get(&key).expect("unknown task");
+            assert_eq!(row.status, TaskStatus::Processing, "completing unclaimed task {key:?}");
+        }
+        let to = if exit_code == 0 { TaskStatus::Completed } else { TaskStatus::Failed };
+        self.move_status(key, to);
+        let row = self.rows.get_mut(&key).unwrap();
+        row.measured_cus = Some(cus);
+        row.completed_at = Some(at);
+        row.exit_code = exit_code;
+        if to == TaskStatus::Completed {
+            let media_type = row.media_type;
+            let c = self
+                .remaining
+                .get_mut(&(key.0, media_type))
+                .expect("remaining counter missing");
+            *c -= 1;
+        }
+    }
+
+    /// Requeue a processing task (instance lost / spot reclaimed).
+    pub fn requeue(&mut self, key: TaskKey) {
+        {
+            let row = self.rows.get(&key).expect("unknown task");
+            assert_eq!(row.status, TaskStatus::Processing);
+        }
+        self.move_status(key, TaskStatus::Pending);
+        self.rows.get_mut(&key).unwrap().instance = None;
+    }
+
+    pub fn get(&self, key: TaskKey) -> Option<&TaskRow> {
+        self.rows.get(&key)
+    }
+
+    /// Task ids in a given status for a workload (sorted).
+    pub fn tasks_with_status(&self, workload: usize, status: TaskStatus) -> Vec<usize> {
+        self.by_status
+            .get(&(workload, status_tag(status)))
+            .map(|s| s.iter().copied().collect())
+            .unwrap_or_default()
+    }
+
+    /// First `n` task ids of a status (ascending) without materializing
+    /// the full id set — build_chunk calls this on every assignment.
+    pub fn first_with_status(&self, workload: usize, status: TaskStatus, n: usize) -> Vec<usize> {
+        self.by_status
+            .get(&(workload, status_tag(status)))
+            .map(|s| s.iter().take(n).copied().collect())
+            .unwrap_or_default()
+    }
+
+    pub fn count_status(&self, workload: usize, status: TaskStatus) -> usize {
+        self.by_status
+            .get(&(workload, status_tag(status)))
+            .map(|s| s.len())
+            .unwrap_or(0)
+    }
+
+    /// Remaining (not completed) items per media type: m_{w,k}[t]. O(K)
+    /// via incremental counters.
+    pub fn remaining_by_type(&self, workload: usize, n_types: usize) -> Vec<f64> {
+        (0..n_types)
+            .map(|k| self.remaining.get(&(workload, k)).copied().unwrap_or(0) as f64)
+            .collect()
+    }
+
+    /// Completed-task CUS measurements for (workload, media type) within
+    /// (since, until] — the ME's per-interval measurement feed (eq. 4).
+    pub fn measurements_between(
+        &self,
+        workload: usize,
+        media_type: usize,
+        since: SimTime,
+        until: SimTime,
+    ) -> Vec<f64> {
+        self.rows
+            .values()
+            .filter(|r| {
+                r.workload == workload
+                    && r.media_type == media_type
+                    && r.status == TaskStatus::Completed
+                    && r.completed_at.map(|t| t > since && t <= until).unwrap_or(false)
+            })
+            .map(|r| r.measured_cus.unwrap())
+            .collect()
+    }
+
+    /// All completed CUS measurements for a workload/type (any time).
+    pub fn all_measurements(&self, workload: usize, media_type: usize) -> Vec<f64> {
+        self.rows
+            .values()
+            .filter(|r| {
+                r.workload == workload
+                    && r.media_type == media_type
+                    && r.status == TaskStatus::Completed
+            })
+            .map(|r| r.measured_cus.unwrap())
+            .collect()
+    }
+
+    /// A workload is complete when nothing is pending or processing.
+    pub fn workload_complete(&self, workload: usize) -> bool {
+        self.count_status(workload, TaskStatus::Pending) == 0
+            && self.count_status(workload, TaskStatus::Processing) == 0
+            && (self.count_status(workload, TaskStatus::Completed)
+                + self.count_status(workload, TaskStatus::Failed))
+                > 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn db_with(n: usize) -> TaskDb {
+        let mut db = TaskDb::new();
+        for t in 0..n {
+            db.insert(0, 0, t);
+        }
+        db
+    }
+
+    #[test]
+    fn lifecycle_pending_processing_completed() {
+        let mut db = db_with(3);
+        assert_eq!(db.tasks_with_status(0, TaskStatus::Pending), vec![0, 1, 2]);
+        db.claim((0, 1), 42);
+        assert_eq!(db.tasks_with_status(0, TaskStatus::Pending), vec![0, 2]);
+        assert_eq!(db.tasks_with_status(0, TaskStatus::Processing), vec![1]);
+        db.complete((0, 1), 3.5, 100, 0);
+        assert_eq!(db.get((0, 1)).unwrap().measured_cus, Some(3.5));
+        assert_eq!(db.count_status(0, TaskStatus::Completed), 1);
+        assert!(!db.workload_complete(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "inserted twice")]
+    fn double_insert_panics() {
+        let mut db = db_with(1);
+        db.insert(0, 0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "claiming non-pending")]
+    fn double_claim_panics() {
+        let mut db = db_with(1);
+        db.claim((0, 0), 1);
+        db.claim((0, 0), 2);
+    }
+
+    #[test]
+    fn failed_tasks_counted_separately() {
+        let mut db = db_with(2);
+        db.claim((0, 0), 1);
+        db.complete((0, 0), 1.0, 10, -1);
+        assert_eq!(db.count_status(0, TaskStatus::Failed), 1);
+        assert_eq!(db.count_status(0, TaskStatus::Completed), 0);
+    }
+
+    #[test]
+    fn requeue_returns_to_pending() {
+        let mut db = db_with(1);
+        db.claim((0, 0), 1);
+        db.requeue((0, 0));
+        assert_eq!(db.tasks_with_status(0, TaskStatus::Pending), vec![0]);
+        assert!(db.get((0, 0)).unwrap().instance.is_none());
+    }
+
+    #[test]
+    fn remaining_by_type_counts_non_completed() {
+        let mut db = TaskDb::new();
+        db.insert(3, 0, 0);
+        db.insert(3, 1, 1);
+        db.insert(3, 1, 2);
+        db.claim((3, 1), 9);
+        db.complete((3, 1), 2.0, 5, 0);
+        assert_eq!(db.remaining_by_type(3, 2), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn measurement_window_is_half_open() {
+        let mut db = db_with(3);
+        for (t, at) in [(0usize, 10u64), (1, 20), (2, 30)] {
+            db.claim((0, t), 1);
+            db.complete((0, t), t as f64, at, 0);
+        }
+        assert_eq!(db.measurements_between(0, 0, 10, 30), vec![1.0, 2.0]);
+        assert_eq!(db.all_measurements(0, 0).len(), 3);
+    }
+
+    #[test]
+    fn workload_complete_requires_all_done() {
+        let mut db = db_with(2);
+        db.claim((0, 0), 1);
+        db.complete((0, 0), 1.0, 1, 0);
+        assert!(!db.workload_complete(0));
+        db.claim((0, 1), 1);
+        db.complete((0, 1), 1.0, 2, -1); // failure still terminal
+        assert!(db.workload_complete(0));
+    }
+}

@@ -1,0 +1,81 @@
+//! "Ad-hoc" fixed-gain estimator (§V-B baseline).
+//!
+//! Same recursion as eq. (8) but with the scaling coefficient fixed at
+//! κ = 0.1, "which was shown to perform best amongst other settings".
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdHoc {
+    pub b_hat: f64,
+    pub kappa: f64,
+    pub last_meas: Option<f64>,
+}
+
+impl AdHoc {
+    pub fn new(kappa: f64) -> Self {
+        AdHoc { b_hat: 0.0, kappa, last_meas: None }
+    }
+
+    /// Paper setting κ = 0.1.
+    pub fn paper() -> Self {
+        Self::new(0.1)
+    }
+
+    pub fn seed(&mut self, b_tilde0: f64) {
+        self.last_meas = Some(b_tilde0);
+    }
+
+    pub fn update(&mut self, meas: Option<f64>) -> f64 {
+        if let Some(b_tilde) = meas.or(self.last_meas) {
+            self.b_hat += self.kappa * (b_tilde - self.b_hat);
+        }
+        if meas.is_some() {
+            self.last_meas = meas;
+        }
+        self.b_hat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_but_slower_than_kalman() {
+        use crate::estimation::kalman::Kalman;
+        let mut a = AdHoc::paper();
+        let mut k = Kalman::new(0.5, 0.5);
+        a.seed(10.0);
+        k.seed(10.0);
+        for _ in 0..10 {
+            a.update(Some(10.0));
+            k.update(Some(10.0));
+        }
+        // Kalman's early gains are ~0.5+, ad-hoc's fixed 0.1 trails badly
+        assert!((k.b_hat - 10.0).abs() < (a.b_hat - 10.0).abs());
+    }
+
+    #[test]
+    fn fixed_gain_recursion() {
+        let mut a = AdHoc::new(0.1);
+        a.seed(100.0);
+        let b1 = a.update(Some(100.0));
+        assert!((b1 - 10.0).abs() < 1e-12);
+        let b2 = a.update(Some(100.0));
+        assert!((b2 - 19.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_measurement_reuses_last() {
+        let mut a = AdHoc::new(0.5);
+        a.seed(10.0);
+        a.update(Some(10.0)); // 5.0
+        a.update(None); // reuse 10.0 -> 7.5
+        assert!((a.b_hat - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn never_seeded_stays_zero() {
+        let mut a = AdHoc::paper();
+        assert_eq!(a.update(None), 0.0);
+    }
+}

@@ -1,0 +1,114 @@
+//! Second-order ARMA workload estimator of Roy et al. (§V-B, eq. 15).
+//!
+//! `b̂[t+1] = δ·b_norm[t] + γ·b_norm[t-1] + (1-δ-γ)·b_norm[t-2]`, where
+//! b_norm[t] is the total execution time of the type so far divided by the
+//! fraction of the workload completed (the paper's normalization), and
+//! (δ, γ) take Roy et al.'s recommended weights.
+
+/// Roy et al. recommended coefficients (most recent sample dominates).
+pub const DELTA: f64 = 0.8;
+pub const GAMMA: f64 = 0.15;
+
+#[derive(Debug, Clone, Default)]
+pub struct Arma {
+    pub delta: f64,
+    pub gamma: f64,
+    /// Ring of the last three normalized observations (newest first).
+    window: Vec<f64>,
+    pub b_hat: f64,
+}
+
+impl Arma {
+    pub fn new(delta: f64, gamma: f64) -> Self {
+        Arma { delta, gamma, window: Vec::new(), b_hat: 0.0 }
+    }
+
+    pub fn paper() -> Self {
+        Self::new(DELTA, GAMMA)
+    }
+
+    /// Push a normalized per-item CUS observation b_norm[t]; returns the
+    /// new estimate. Until three observations exist, the estimate is the
+    /// weighted mean of what is available (weights renormalized).
+    pub fn update(&mut self, b_norm: f64) -> f64 {
+        self.window.insert(0, b_norm);
+        self.window.truncate(3);
+        let w = [self.delta, self.gamma, 1.0 - self.delta - self.gamma];
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (i, &x) in self.window.iter().enumerate() {
+            num += w[i] * x;
+            den += w[i];
+        }
+        self.b_hat = if den > 0.0 { num / den } else { 0.0 };
+        self.b_hat
+    }
+
+    /// Number of observations so far.
+    pub fn n_obs(&self) -> usize {
+        self.window.len()
+    }
+}
+
+/// Normalization helper: total execution time of a media type divided by
+/// the fraction completed, re-expressed per item. Given cumulative CUS
+/// spent `total_cus` on `done` of `total` items, the normalized per-item
+/// cost is (total_cus / done) — the paper's "divided by the percentage of
+/// the workload completed" scaled back to one item.
+pub fn normalize_per_item(total_cus: f64, done: usize) -> Option<f64> {
+    if done == 0 {
+        None
+    } else {
+        Some(total_cus / done as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_window_uses_paper_weights() {
+        let mut a = Arma::paper();
+        a.update(1.0); // t-2 eventually
+        a.update(2.0); // t-1
+        let b = a.update(3.0); // t
+        let want = 0.8 * 3.0 + 0.15 * 2.0 + 0.05 * 1.0;
+        assert!((b - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_window_renormalizes() {
+        let mut a = Arma::paper();
+        let b1 = a.update(10.0);
+        assert!((b1 - 10.0).abs() < 1e-12);
+        let b2 = a.update(20.0);
+        let want = (0.8 * 20.0 + 0.15 * 10.0) / 0.95;
+        assert!((b2 - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tracks_moving_average_no_underdamping() {
+        // ARMA is an MA estimator: on a constant signal it equals the
+        // signal immediately (no overshoot-then-settle like Kalman-from-0)
+        let mut a = Arma::paper();
+        for _ in 0..5 {
+            assert!((a.update(7.0) - 7.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn normalize_handles_zero_done() {
+        assert_eq!(normalize_per_item(100.0, 0), None);
+        assert_eq!(normalize_per_item(100.0, 4), Some(25.0));
+    }
+
+    #[test]
+    fn window_never_exceeds_three() {
+        let mut a = Arma::paper();
+        for i in 0..10 {
+            a.update(i as f64);
+        }
+        assert_eq!(a.n_obs(), 3);
+    }
+}

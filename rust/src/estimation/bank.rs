@@ -1,0 +1,426 @@
+//! The estimator bank: all W×K Kalman CUS estimators updated in one shot
+//! per monitoring instant, together with eqs. (1), (11)–(14) and the AIMD
+//! decision — i.e. the full numeric tick of the GCI.
+//!
+//! Two interchangeable backends:
+//!  * [`Backend::Xla`] — executes the AOT-compiled Pallas/JAX artifact
+//!    through PJRT ([`crate::runtime::Engine`]); the production hot path.
+//!  * [`Backend::Native`] — a bit-faithful f32 rust implementation; the
+//!    fallback when artifacts are absent, and the cross-check oracle.
+//!
+//! The parity test at the bottom asserts both backends agree to f32
+//! round-off on random states.
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, StepInputs, StepOutputs, N_PARAMS};
+
+/// Scalar knobs of the bank (mirrors PARAMS_LAYOUT in model.py minus
+/// n_tot, which varies per tick).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BankParams {
+    pub sigma_z2: f32,
+    pub sigma_v2: f32,
+    pub alpha: f32,
+    pub beta: f32,
+    pub n_min: f32,
+    pub n_max: f32,
+    pub n_w_max: f32,
+}
+
+impl BankParams {
+    pub fn from_config(c: &crate::config::ControlCfg) -> Self {
+        BankParams {
+            sigma_z2: c.sigma_z2 as f32,
+            sigma_v2: c.sigma_v2 as f32,
+            alpha: c.alpha as f32,
+            beta: c.beta as f32,
+            n_min: c.n_min as f32,
+            n_max: c.n_max as f32,
+            n_w_max: c.n_w_max as f32,
+        }
+    }
+}
+
+/// Which compute backend the bank uses.
+pub enum Backend {
+    Native,
+    Xla(Engine),
+}
+
+impl std::fmt::Debug for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Native => write!(f, "Native"),
+            Backend::Xla(_) => write!(f, "Xla"),
+        }
+    }
+}
+
+/// Per-tick inputs that vary (everything except the persistent state).
+#[derive(Debug, Clone)]
+pub struct TickInputs<'a> {
+    pub b_tilde: &'a [f32],
+    pub meas_mask: &'a [f32],
+    pub m_rem: &'a [f32],
+    pub slot_mask: &'a [f32],
+    pub d: &'a [f32],
+    pub n_tot: f32,
+}
+
+/// The estimator bank.
+#[derive(Debug)]
+pub struct Bank {
+    pub w: usize,
+    pub k: usize,
+    pub params: BankParams,
+    backend: Backend,
+    b_hat: Vec<f32>,
+    pi: Vec<f32>,
+}
+
+impl Bank {
+    pub fn new(w: usize, k: usize, params: BankParams, backend: Backend) -> Self {
+        Bank { w, k, params, backend, b_hat: vec![0.0; w * k], pi: vec![0.0; w * k] }
+    }
+
+    /// Try to build an XLA-backed bank; fall back to native (and report
+    /// which) if artifacts are missing.
+    pub fn with_best_backend(
+        w: usize,
+        k: usize,
+        params: BankParams,
+        artifacts_dir: &std::path::Path,
+        prefer_xla: bool,
+    ) -> (Self, &'static str) {
+        if prefer_xla {
+            if let Ok(engine) = Engine::load(artifacts_dir) {
+                // the bank must adopt the artifact's padded (W, K) shape;
+                // the caller masks the unused slots
+                if let Some(v) = engine.manifest().pick(w, k) {
+                    let (vw, vk) = (v.w, v.k);
+                    return (Self::new(vw, vk, params, Backend::Xla(engine)), "xla");
+                }
+            }
+        }
+        (Self::new(w, k, params, Backend::Native), "native")
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            Backend::Native => "native",
+            Backend::Xla(_) => "xla",
+        }
+    }
+
+    /// Direct (mutable) access to the persistent estimates — used when a
+    /// workload slot is freed/reused.
+    pub fn reset_slot(&mut self, w: usize, k: usize) {
+        let idx = w * self.k + k;
+        self.b_hat[idx] = 0.0;
+        self.pi[idx] = 0.0;
+    }
+
+    pub fn b_hat(&self) -> &[f32] {
+        &self.b_hat
+    }
+
+    pub fn pi(&self) -> &[f32] {
+        &self.pi
+    }
+
+    pub fn estimate(&self, w: usize, k: usize) -> f32 {
+        self.b_hat[w * self.k + k]
+    }
+
+    /// One monitoring-instant update; persists b_hat/pi internally and
+    /// returns the derived quantities.
+    pub fn step(&mut self, inp: &TickInputs) -> Result<StepOutputs> {
+        let wk = self.w * self.k;
+        anyhow::ensure!(inp.b_tilde.len() == wk, "b_tilde size");
+        anyhow::ensure!(inp.meas_mask.len() == wk, "meas_mask size");
+        anyhow::ensure!(inp.m_rem.len() == wk, "m_rem size");
+        anyhow::ensure!(inp.slot_mask.len() == wk, "slot_mask size");
+        anyhow::ensure!(inp.d.len() == self.w, "d size");
+        let out = match &mut self.backend {
+            Backend::Native => native_step(
+                self.w, self.k, &self.b_hat, &self.pi, inp, &self.params,
+            ),
+            Backend::Xla(engine) => {
+                let exe = engine.executable(self.w, self.k)?;
+                let params = [
+                    // must match PARAMS_LAYOUT in model.py
+                    self.params.sigma_z2,
+                    self.params.sigma_v2,
+                    inp.n_tot,
+                    self.params.alpha,
+                    self.params.beta,
+                    self.params.n_min,
+                    self.params.n_max,
+                    self.params.n_w_max,
+                ];
+                debug_assert_eq!(params.len(), N_PARAMS);
+                exe.run(&StepInputs {
+                    b_hat: &self.b_hat,
+                    pi: &self.pi,
+                    b_tilde: inp.b_tilde,
+                    meas_mask: inp.meas_mask,
+                    m_rem: inp.m_rem,
+                    slot_mask: inp.slot_mask,
+                    d: inp.d,
+                    params,
+                })?
+            }
+        };
+        self.b_hat.copy_from_slice(&out.b_hat);
+        self.pi.copy_from_slice(&out.pi);
+        Ok(out)
+    }
+}
+
+/// The native (rust, f32) implementation of the monitor_step graph —
+/// mirrors python/compile/model.py operation for operation.
+pub fn native_step(
+    w: usize,
+    k: usize,
+    b_hat: &[f32],
+    pi: &[f32],
+    inp: &TickInputs,
+    p: &BankParams,
+) -> StepOutputs {
+    let wk = w * k;
+    let mut b_new = vec![0.0f32; wk];
+    let mut pi_new = vec![0.0f32; wk];
+    // 1. masked Kalman update (eqs. 6-9), inert outside slot_mask
+    for i in 0..wk {
+        let pi_minus = pi[i] + p.sigma_z2;
+        let kappa = pi_minus / (pi_minus + p.sigma_v2);
+        let b_meas = b_hat[i] + kappa * (inp.b_tilde[i] - b_hat[i]);
+        let pi_meas = (1.0 - kappa) * pi_minus;
+        let m = inp.meas_mask[i];
+        let mut b = m * b_meas + (1.0 - m) * b_hat[i];
+        let mut pv = m * pi_meas + (1.0 - m) * pi_minus;
+        let s = inp.slot_mask[i];
+        b = s * b + (1.0 - s) * b_hat[i];
+        pv = s * pv + (1.0 - s) * pi[i];
+        b_new[i] = b;
+        pi_new[i] = pv;
+    }
+    // 2. r_w = sum_k m*mask*b (eq. 1)
+    let mut r = vec![0.0f32; w];
+    for wi in 0..w {
+        let mut acc = 0.0f32;
+        for ki in 0..k {
+            let i = wi * k + ki;
+            acc += inp.m_rem[i] * inp.slot_mask[i] * b_new[i];
+        }
+        r[wi] = acc;
+    }
+    // 3. proportional-fair service rates (eqs. 11-14)
+    let mut s_star = vec![0.0f32; w];
+    let mut n_star = 0.0f32;
+    for wi in 0..w {
+        let active = (0..k).any(|ki| inp.slot_mask[wi * k + ki] > 0.0);
+        let safe_d = if inp.d[wi] > 0.0 { inp.d[wi] } else { 1.0 };
+        // eq. (11) with the per-workload cap N_{w,max}
+        s_star[wi] = if active { (r[wi] / safe_d).min(p.n_w_max) } else { 0.0 };
+        n_star += s_star[wi];
+    }
+    let hi = inp.n_tot + p.alpha;
+    let lo = p.beta * inp.n_tot;
+    let denom = n_star.max(1e-30);
+    let mut scale = if n_star > hi {
+        hi / denom
+    } else if n_star < lo {
+        lo / denom
+    } else {
+        1.0
+    };
+    if n_star <= 0.0 {
+        scale = 1.0;
+    }
+    let s: Vec<f32> = s_star.iter().map(|x| x * scale).collect();
+    // 4. AIMD (Fig. 4)
+    let n_next = if inp.n_tot <= n_star {
+        (inp.n_tot + p.alpha).min(p.n_max)
+    } else {
+        (p.beta * inp.n_tot).max(p.n_min)
+    };
+    StepOutputs { b_hat: b_new, pi: pi_new, r, s, n_star, n_next }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn params() -> BankParams {
+        BankParams {
+            sigma_z2: 0.5,
+            sigma_v2: 0.5,
+            alpha: 5.0,
+            beta: 0.9,
+            n_min: 10.0,
+            n_max: 100.0,
+            n_w_max: 10.0,
+        }
+    }
+
+    fn random_tick(w: usize, k: usize, rng: &mut Rng) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, f32) {
+        let wk = w * k;
+        let slot: Vec<f32> = (0..wk).map(|_| if rng.f64() < 0.8 { 1.0 } else { 0.0 }).collect();
+        let meas: Vec<f32> = (0..wk)
+            .map(|i| if slot[i] > 0.0 && rng.f64() < 0.6 { 1.0 } else { 0.0 })
+            .collect();
+        let b_tilde: Vec<f32> = (0..wk).map(|_| rng.uniform(0.0, 300.0) as f32).collect();
+        let m_rem: Vec<f32> = (0..wk).map(|_| rng.int(0, 500) as f32).collect();
+        let d: Vec<f32> = (0..w).map(|_| rng.uniform(60.0, 7620.0) as f32).collect();
+        let n_tot = rng.uniform(1.0, 60.0) as f32;
+        (slot, meas, b_tilde, m_rem, d, n_tot)
+    }
+
+    #[test]
+    fn native_bank_converges_on_constant_measurements() {
+        let mut bank = Bank::new(4, 2, params(), Backend::Native);
+        let wk = 8;
+        let slot = vec![1.0f32; wk];
+        let meas = vec![1.0f32; wk];
+        let b_tilde = vec![42.0f32; wk];
+        let m_rem = vec![10.0f32; wk];
+        let d = vec![1000.0f32; 4];
+        for _ in 0..60 {
+            bank.step(&TickInputs {
+                b_tilde: &b_tilde,
+                meas_mask: &meas,
+                m_rem: &m_rem,
+                slot_mask: &slot,
+                d: &d,
+                n_tot: 10.0,
+            })
+            .unwrap();
+        }
+        for wi in 0..4 {
+            for ki in 0..2 {
+                assert!((bank.estimate(wi, ki) - 42.0).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn native_matches_scalar_kalman() {
+        // the bank's slot (0,0) must evolve exactly like estimation::kalman
+        // under the same measurement sequence (f32 vs f64 tolerance).
+        let mut bank = Bank::new(2, 2, params(), Backend::Native);
+        let mut scalar = crate::estimation::kalman::Kalman::new(0.5, 0.5);
+        let mut rng = Rng::new(0xBEEF);
+        let wk = 4;
+        let mut slot = vec![0.0f32; wk];
+        slot[0] = 1.0;
+        let m_rem = vec![1.0f32; wk];
+        let d = vec![100.0f32; 2];
+        for _ in 0..30 {
+            let x = rng.uniform(1.0, 50.0);
+            scalar.seed(x);
+            scalar.update(Some(x));
+            let mut b_tilde = vec![0.0f32; wk];
+            let mut meas = vec![0.0f32; wk];
+            b_tilde[0] = x as f32;
+            meas[0] = 1.0;
+            bank.step(&TickInputs {
+                b_tilde: &b_tilde,
+                meas_mask: &meas,
+                m_rem: &m_rem,
+                slot_mask: &slot,
+                d: &d,
+                n_tot: 10.0,
+            })
+            .unwrap();
+            assert!(
+                (bank.estimate(0, 0) as f64 - scalar.b_hat).abs() < 1e-3,
+                "bank={} scalar={}",
+                bank.estimate(0, 0),
+                scalar.b_hat
+            );
+        }
+    }
+
+    #[test]
+    fn xla_and_native_backends_agree() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let (w, k) = (8, 2);
+        let mut xla_bank = Bank::new(w, k, params(), Backend::Xla(Engine::load(&dir).unwrap()));
+        let mut nat_bank = Bank::new(w, k, params(), Backend::Native);
+        assert_eq!(xla_bank.backend_name(), "xla");
+        let mut rng = Rng::new(0xD17E);
+        for step in 0..25 {
+            let (slot, meas, b_tilde, m_rem, d, n_tot) = random_tick(w, k, &mut rng);
+            let inp = TickInputs {
+                b_tilde: &b_tilde,
+                meas_mask: &meas,
+                m_rem: &m_rem,
+                slot_mask: &slot,
+                d: &d,
+                n_tot,
+            };
+            let a = xla_bank.step(&inp).unwrap();
+            let b = nat_bank.step(&inp).unwrap();
+            for i in 0..w * k {
+                assert!(
+                    (a.b_hat[i] - b.b_hat[i]).abs() <= 1e-3 * (1.0 + b.b_hat[i].abs()),
+                    "step {step} b_hat[{i}]: xla={} native={}",
+                    a.b_hat[i],
+                    b.b_hat[i]
+                );
+                assert!((a.pi[i] - b.pi[i]).abs() <= 1e-4 * (1.0 + b.pi[i].abs()));
+            }
+            for wi in 0..w {
+                assert!(
+                    (a.r[wi] - b.r[wi]).abs() <= 1e-2 * (1.0 + b.r[wi].abs()),
+                    "step {step} r[{wi}]: xla={} native={}",
+                    a.r[wi],
+                    b.r[wi]
+                );
+                assert!((a.s[wi] - b.s[wi]).abs() <= 1e-2 * (1.0 + b.s[wi].abs()));
+            }
+            assert!((a.n_star - b.n_star).abs() <= 1e-2 * (1.0 + b.n_star.abs()));
+            assert!((a.n_next - b.n_next).abs() <= 1e-3 * (1.0 + b.n_next.abs()));
+        }
+    }
+
+    #[test]
+    fn bank_rejects_bad_sizes() {
+        let mut bank = Bank::new(2, 2, params(), Backend::Native);
+        let r = bank.step(&TickInputs {
+            b_tilde: &[0.0; 3],
+            meas_mask: &[0.0; 4],
+            m_rem: &[0.0; 4],
+            slot_mask: &[0.0; 4],
+            d: &[0.0; 2],
+            n_tot: 1.0,
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn reset_slot_clears_state() {
+        let mut bank = Bank::new(2, 2, params(), Backend::Native);
+        let slot = vec![1.0f32; 4];
+        bank.step(&TickInputs {
+            b_tilde: &[5.0; 4],
+            meas_mask: &[1.0; 4],
+            m_rem: &[1.0; 4],
+            slot_mask: &slot,
+            d: &[100.0; 2],
+            n_tot: 10.0,
+        })
+        .unwrap();
+        assert!(bank.estimate(1, 1) > 0.0);
+        bank.reset_slot(1, 1);
+        assert_eq!(bank.estimate(1, 1), 0.0);
+        assert!(bank.estimate(0, 0) > 0.0);
+    }
+}

@@ -1,0 +1,178 @@
+//! Convergence detection — when is a CUS estimate "reliable"? (§V-B)
+//!
+//! The paper's criteria, used to set the monitoring instant t_init at
+//! which the TTC can be confirmed:
+//!
+//! * **Kalman / ad-hoc**: both start from b̂ = 0 and overshoot
+//!   (underdamped); the estimate is declared reliable at the first
+//!   monitoring instant where the slope of b̂ across time turns negative.
+//! * **ARMA**: a moving-average estimator with no underdamped shape, so a
+//!   windowed-deviation rule is used instead: reliable when the deviation
+//!   of the last `window` estimates stays within `threshold` (20 %) of
+//!   their mean. The paper uses 3 samples for 5-min monitoring and 10 for
+//!   1-min monitoring.
+
+/// Slope-sign detector for underdamped estimators (Kalman, ad-hoc).
+#[derive(Debug, Clone, Default)]
+pub struct SlopeDetector {
+    prev: Option<f64>,
+    rose: bool,
+    converged_at: Option<usize>,
+    t: usize,
+}
+
+impl SlopeDetector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed the estimate at the next monitoring instant. Returns
+    /// Some(t_init) the first time convergence is detected.
+    pub fn push(&mut self, b_hat: f64) -> Option<usize> {
+        let t = self.t;
+        self.t += 1;
+        if let Some(prev) = self.prev {
+            let slope = b_hat - prev;
+            if slope > 0.0 {
+                self.rose = true;
+            }
+            // first negative slope after the initial rise
+            if self.rose && slope < 0.0 && self.converged_at.is_none() {
+                self.converged_at = Some(t);
+                self.prev = Some(b_hat);
+                return Some(t);
+            }
+        }
+        self.prev = Some(b_hat);
+        None
+    }
+
+    pub fn converged_at(&self) -> Option<usize> {
+        self.converged_at
+    }
+}
+
+/// Windowed-deviation detector for ARMA.
+#[derive(Debug, Clone)]
+pub struct DeviationDetector {
+    window: usize,
+    threshold: f64,
+    history: Vec<f64>,
+    converged_at: Option<usize>,
+}
+
+impl DeviationDetector {
+    /// `window`: number of trailing estimates compared; `threshold`:
+    /// maximum allowed |x - mean| / mean (paper: 0.20).
+    pub fn new(window: usize, threshold: f64) -> Self {
+        DeviationDetector { window, threshold, history: Vec::new(), converged_at: None }
+    }
+
+    /// Paper settings per monitoring interval: 3 samples for 5-min
+    /// monitoring, 10 for 1-min.
+    pub fn paper(monitor_interval_s: u64) -> Self {
+        let window = if monitor_interval_s <= 60 { 10 } else { 3 };
+        Self::new(window, 0.20)
+    }
+
+    pub fn push(&mut self, b_hat: f64) -> Option<usize> {
+        let t = self.history.len();
+        self.history.push(b_hat);
+        if self.converged_at.is_some() || self.history.len() < self.window {
+            return None;
+        }
+        let tail = &self.history[self.history.len() - self.window..];
+        let mean = crate::util::stats::mean(tail);
+        if mean <= 0.0 {
+            return None;
+        }
+        let ok = tail.iter().all(|x| (x - mean).abs() / mean <= self.threshold);
+        if ok {
+            self.converged_at = Some(t);
+            return Some(t);
+        }
+        None
+    }
+
+    pub fn converged_at(&self) -> Option<usize> {
+        self.converged_at
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slope_detects_peak_of_underdamped_rise() {
+        let mut d = SlopeDetector::new();
+        // 0 -> rises -> peaks at t=3 -> decays
+        let series = [0.0, 4.0, 7.0, 8.5, 8.0, 7.8, 7.9];
+        let mut hit = None;
+        for (t, &x) in series.iter().enumerate() {
+            if let Some(ti) = d.push(x) {
+                hit = Some((t, ti));
+                break;
+            }
+        }
+        assert_eq!(hit, Some((4, 4)));
+    }
+
+    #[test]
+    fn slope_ignores_monotone_rise() {
+        let mut d = SlopeDetector::new();
+        for x in [0.0, 1.0, 2.0, 3.0, 4.0] {
+            assert_eq!(d.push(x), None);
+        }
+        assert_eq!(d.converged_at(), None);
+    }
+
+    #[test]
+    fn slope_requires_prior_rise() {
+        // pure decay from the first sample: "rose" never set by a later
+        // climb, but the seed measurement itself counts as the rise only
+        // if a positive slope was seen. A strictly-decreasing series
+        // therefore never converges by this rule.
+        let mut d = SlopeDetector::new();
+        for x in [9.0, 8.0, 7.0] {
+            assert_eq!(d.push(x), None);
+        }
+    }
+
+    #[test]
+    fn slope_fires_once() {
+        let mut d = SlopeDetector::new();
+        let mut hits = 0;
+        for x in [0.0, 5.0, 4.0, 6.0, 3.0] {
+            if d.push(x).is_some() {
+                hits += 1;
+            }
+        }
+        assert_eq!(hits, 1);
+        assert_eq!(d.converged_at(), Some(2));
+    }
+
+    #[test]
+    fn deviation_waits_for_stability() {
+        let mut d = DeviationDetector::new(3, 0.20);
+        assert_eq!(d.push(10.0), None); // window not full
+        assert_eq!(d.push(30.0), None);
+        assert_eq!(d.push(50.0), None); // wild: 50 vs mean 30 = 66%
+        assert_eq!(d.push(48.0), None); // 30,50,48: 30 deviates 29.7%
+        assert_eq!(d.push(52.0), Some(4)); // 50,48,52 all within 4%
+        assert_eq!(d.converged_at(), Some(4));
+    }
+
+    #[test]
+    fn deviation_paper_windows() {
+        assert_eq!(DeviationDetector::paper(60).window, 10);
+        assert_eq!(DeviationDetector::paper(300).window, 3);
+    }
+
+    #[test]
+    fn deviation_handles_zero_mean() {
+        let mut d = DeviationDetector::new(2, 0.2);
+        assert_eq!(d.push(0.0), None);
+        assert_eq!(d.push(0.0), None); // mean 0: cannot normalize, no fire
+    }
+}

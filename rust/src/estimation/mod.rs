@@ -1,0 +1,36 @@
+//! CUS estimation (§II-E-3, §V-B): Kalman (proposed), ad-hoc fixed-gain
+//! and ARMA baselines, convergence detection, and the batched estimator
+//! bank with its XLA (Pallas/JAX AOT) and native backends.
+
+pub mod adhoc;
+pub mod arma;
+pub mod bank;
+pub mod convergence;
+pub mod kalman;
+
+pub use adhoc::AdHoc;
+pub use arma::Arma;
+pub use bank::{Backend, Bank, BankParams, TickInputs};
+pub use convergence::{DeviationDetector, SlopeDetector};
+pub use kalman::Kalman;
+
+/// Which estimator a simulation run uses (Table II comparisons).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EstimatorKind {
+    Kalman,
+    AdHoc,
+    Arma,
+}
+
+impl EstimatorKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EstimatorKind::Kalman => "Kalman-based",
+            EstimatorKind::AdHoc => "Ad-hoc",
+            EstimatorKind::Arma => "ARMA",
+        }
+    }
+
+    pub const ALL: [EstimatorKind; 3] =
+        [EstimatorKind::Kalman, EstimatorKind::AdHoc, EstimatorKind::Arma];
+}

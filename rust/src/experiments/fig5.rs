@@ -1,0 +1,54 @@
+//! Fig. 5: total input size of each of the thirty §V-A workloads.
+
+use crate::config::Config;
+use crate::util::table::{ascii_chart, write_csv, Table};
+use crate::workload::paper_suite;
+
+pub fn run(cfg: &Config) -> anyhow::Result<String> {
+    let suite = paper_suite(cfg.seed);
+    let mut t = Table::new(vec!["arrival slot", "workload", "tasks", "input size (MB)"]);
+    let mut series: Vec<(f64, f64)> = vec![];
+    let mut total_bytes = 0u64;
+    let mut total_tasks = 0usize;
+    for w in &suite {
+        let mb = w.total_bytes() as f64 / 1e6;
+        t.row(vec![
+            format!("{}", w.id),
+            w.name.clone(),
+            format!("{}", w.n_tasks()),
+            format!("{mb:.1}"),
+        ]);
+        series.push((w.id as f64, mb));
+        total_bytes += w.total_bytes();
+        total_tasks += w.n_tasks();
+    }
+    let chart = ascii_chart(
+        "Fig. 5 — input size per workload (MB)",
+        &[("size", &series)],
+        60,
+        12,
+    );
+    write_csv(&format!("{}/fig5.csv", super::OUT_DIR), "workload", &[("size_mb", &series)])?;
+    let summary = format!(
+        "total: {} workloads, {} tasks, {:.2} GB of input\n",
+        suite.len(),
+        total_tasks,
+        total_bytes as f64 / 1e9
+    );
+    let out = format!("{}{}{}", t.render(), chart, summary);
+    println!("{out}");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_reports_thirty_workloads() {
+        let cfg = Config::paper_defaults();
+        let out = run(&cfg).unwrap();
+        assert!(out.contains("total: 30 workloads"));
+        assert!(std::path::Path::new("out/fig5.csv").exists());
+    }
+}

@@ -1,0 +1,101 @@
+//! Table IV: average per-image cost of the three ImageMagick functions on
+//! Amazon Lambda vs Dithen, over 25 000 images each.
+//!
+//! Lambda: the §V-D pricing model (fractional core = memory share, 100 ms
+//! billing quanta, per-request fee) applied to each task's full-core
+//! duration. Dithen: a platform run of the same workload, TTC tuned to
+//! roughly match Lambda's makespan (the paper matched execution times).
+
+use crate::config::Config;
+use crate::cloud::lambda::{core_fraction, price_batch};
+use crate::coordinator::PolicyKind;
+use crate::platform::{run_experiment, RunOpts};
+use crate::util::table::Table;
+use crate::workload::lambda_suite;
+
+pub const N_IMAGES: usize = 25_000;
+
+pub fn run(cfg: &Config) -> anyhow::Result<String> {
+    run_scaled(cfg, N_IMAGES)
+}
+
+/// `n_images` is parameterized so tests can run a scaled-down version.
+pub fn run_scaled(cfg: &Config, n_images: usize) -> anyhow::Result<String> {
+    let suite = lambda_suite(cfg.seed, n_images);
+    let mut t = Table::new(vec![
+        "function",
+        "Lambda cost ($/img)",
+        "Dithen cost ($/img)",
+        "ratio",
+    ]);
+    let mut ratios = vec![];
+    let mut lambda_total = 0.0;
+    let mut dithen_total = 0.0;
+    for spec in &suite {
+        // Lambda side: price each task's true full-core duration
+        let durations: Vec<f64> = spec.tasks.iter().map(|t| t.true_cus).collect();
+        let (l_total, l_per) = price_batch(&cfg.lambda, &durations);
+
+        // Dithen side: run the workload alone; TTC ≈ Lambda makespan
+        // (Lambda executes with wide parallelism, so its makespan is set
+        // by invocation throughput; the paper tuned Dithen to match —
+        // we give Dithen the same wall-clock budget: total fractional-core
+        // time spread over ~N_w,max instances, floored at 20 min)
+        let frac = core_fraction(&cfg.lambda);
+        let lambda_wall: f64 = durations.iter().sum::<f64>() / frac / cfg.control.n_w_max;
+        let ttc = (lambda_wall.ceil() as u64).max(1200);
+        let spec_run = spec.clone();
+        let name = spec.name.clone();
+        let m = run_experiment(
+            cfg.clone(),
+            vec![crate::workload::WorkloadSpec { id: 0, ..spec_run }],
+            RunOpts {
+                policy: PolicyKind::Aimd,
+                fixed_ttc_s: Some(ttc),
+                horizon_s: 24 * 3600,
+                ..Default::default()
+            },
+        )?;
+        let d_per = m.total_cost / n_images as f64;
+        let ratio = l_per / d_per.max(1e-12);
+        ratios.push(ratio);
+        lambda_total += l_total;
+        dithen_total += m.total_cost;
+        t.row(vec![
+            name,
+            format!("{l_per:.2e}"),
+            format!("{d_per:.2e}"),
+            format!("{ratio:.2}"),
+        ]);
+    }
+    let overall = lambda_total / dithen_total.max(1e-12);
+    t.row(vec![
+        "Overall Average".into(),
+        format!("{:.2e}", lambda_total / (3 * n_images) as f64),
+        format!("{:.2e}", dithen_total / (3 * n_images) as f64),
+        format!("{overall:.2}"),
+    ]);
+    let summary = format!(
+        "Dithen runs the ImageMagick workloads at {overall:.2}x lower cost than Lambda \
+         ({:.0}% reduction)\n",
+        100.0 * (1.0 - 1.0 / overall.max(1e-12))
+    );
+    let out = format!("{}{}", t.render(), summary);
+    println!("{out}");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaled_run_produces_expected_shape() {
+        let mut cfg = Config::paper_defaults();
+        cfg.use_xla = false;
+        cfg.control.n_min = 4.0;
+        let out = run_scaled(&cfg, 800).unwrap();
+        assert!(out.contains("im-blur"));
+        assert!(out.contains("Overall Average"));
+    }
+}

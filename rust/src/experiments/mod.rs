@@ -1,0 +1,63 @@
+//! Paper-reproduction harness: one module per table/figure of §V and
+//! Appendix A. Each `run_*` function executes the experiment on the
+//! simulated substrates, prints the paper-shaped rows/series, writes CSVs
+//! under `out/`, and returns a summary string recorded in EXPERIMENTS.md.
+//!
+//! Index (see DESIGN.md §5):
+//!   fig5        workload-suite input sizes
+//!   fig6, fig7  estimator convergence traces (FFMPEG, SIFT)
+//!   table2      time-to-estimate + MAE per estimator / app class
+//!   fig8, fig9  cumulative cost under the two fixed TTCs
+//!   table3      overall cost + max instances
+//!   table4      Lambda vs Dithen ImageMagick cost
+//!   fig10,fig11 Split–Merge workload cost curves
+//!   fig12,table5  spot-market traces and catalogue
+
+pub mod ablation;
+pub mod cost;
+pub mod estimators;
+pub mod fig5;
+pub mod lambda;
+pub mod market;
+pub mod splitmerge;
+
+use crate::config::Config;
+
+/// Where experiment CSVs land.
+pub const OUT_DIR: &str = "out";
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig5", "fig6", "fig7", "table2", "fig8", "fig9", "table3", "table4", "fig10", "fig11",
+    "fig12", "table5", "ablation",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, cfg: &Config) -> anyhow::Result<String> {
+    match id {
+        "fig5" => fig5::run(cfg),
+        "fig6" => estimators::run_fig(cfg, crate::workload::App::Transcode, "fig6"),
+        "fig7" => estimators::run_fig(cfg, crate::workload::App::SiftMatlab, "fig7"),
+        "table2" => estimators::run_table2(cfg),
+        "fig8" => cost::run_fig(cfg, cost::TTC_LONG_S, "fig8"),
+        "fig9" => cost::run_fig(cfg, cost::TTC_SHORT_S, "fig9"),
+        "table3" => cost::run_table3(cfg),
+        "table4" => lambda::run(cfg),
+        "fig10" => splitmerge::run_cnn(cfg),
+        "fig11" => splitmerge::run_wordcount(cfg),
+        "fig12" => market::run_fig12(cfg),
+        "table5" => market::run_table5(cfg),
+        "ablation" => ablation::run(cfg),
+        other => anyhow::bail!("unknown experiment id '{other}' (use one of {ALL:?})"),
+    }
+}
+
+/// Run every experiment; returns the concatenated reports.
+pub fn run_all(cfg: &Config) -> anyhow::Result<String> {
+    let mut out = String::new();
+    for id in ALL {
+        out.push_str(&format!("\n########## {id} ##########\n"));
+        out.push_str(&run(id, cfg)?);
+    }
+    Ok(out)
+}

@@ -1,0 +1,87 @@
+//! Fig. 10 / Fig. 11: cumulative cost of the §V-E Split–Merge workloads
+//! (deep-CNN ensemble classification; Gutenberg word histogram) under
+//! Dithen's AIMD vs Amazon AS, with the lower bound.
+
+use crate::config::Config;
+use crate::coordinator::PolicyKind;
+use crate::platform::{run_experiment, RunOpts};
+use crate::util::table::{ascii_chart, fmt_hm, write_csv, Table};
+use crate::workload::{cnn_splitmerge, wordcount_splitmerge, WorkloadSpec};
+
+/// §V-E TTCs: 1 hr 35 min (CNN) and 1 hr 05 min (word histogram); the
+/// split stage gets 90 % of the overall TTC.
+pub const TTC_CNN_S: u64 = 3600 + 35 * 60;
+pub const TTC_WORDCOUNT_S: u64 = 3600 + 5 * 60;
+
+fn run_one(cfg: &Config, spec: WorkloadSpec, ttc: u64, name: &str) -> anyhow::Result<String> {
+    let split_ttc = (ttc as f64 * 0.9) as u64;
+    let mut curves: Vec<(String, Vec<(f64, f64)>)> = vec![];
+    let mut rows = vec![];
+    let mut lb = 0.0;
+    for (label, policy, ttc_opt) in [
+        ("AIMD", PolicyKind::Aimd, Some(split_ttc)),
+        ("Amazon AS", PolicyKind::AmazonAs1, None),
+    ] {
+        let m = run_experiment(
+            cfg.clone(),
+            vec![spec.clone()],
+            RunOpts {
+                policy,
+                fixed_ttc_s: ttc_opt,
+                horizon_s: 12 * 3600,
+                ..Default::default()
+            },
+        )?;
+        if label == "AIMD" {
+            lb = m.lower_bound_cost(cfg.market.base_spot_price);
+        }
+        rows.push((label, m.total_cost, m.max_instances, m.finished_at));
+        curves.push((label.to_string(), m.cost_curve_hours()));
+    }
+    let series: Vec<(&str, &[(f64, f64)])> =
+        curves.iter().map(|(n, c)| (n.as_str(), c.as_slice())).collect();
+    let chart = ascii_chart(
+        &format!("{name} — cumulative cost ($), TTC = {}", fmt_hm(ttc as f64)),
+        &series,
+        70,
+        14,
+    );
+    write_csv(&format!("{}/{name}.csv", super::OUT_DIR), "hours", &series)?;
+    let mut t = Table::new(vec!["method", "cost ($)", "max instances", "finished"]);
+    for (label, cost, maxi, fin) in &rows {
+        t.row(vec![
+            label.to_string(),
+            format!("{cost:.3}"),
+            format!("{maxi}"),
+            fmt_hm(*fin as f64),
+        ]);
+    }
+    t.row(vec!["LB".into(), format!("{lb:.3}"), "-".into(), "-".into()]);
+    let aimd = rows[0].1;
+    let as_cost = rows[1].1;
+    let summary = format!(
+        "Amazon AS costs {:.2}x AIMD; AIMD is {:.0}% above LB\n",
+        as_cost / aimd.max(1e-12),
+        100.0 * (aimd - lb) / lb.max(1e-12)
+    );
+    let out = format!("{chart}{}{summary}", t.render());
+    println!("{out}");
+    Ok(out)
+}
+
+pub fn run_cnn(cfg: &Config) -> anyhow::Result<String> {
+    run_one(cfg, cnn_splitmerge(cfg.seed), TTC_CNN_S, "fig10")
+}
+
+pub fn run_wordcount(cfg: &Config) -> anyhow::Result<String> {
+    run_one(cfg, wordcount_splitmerge(cfg.seed), TTC_WORDCOUNT_S, "fig11")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn ttc_constants_match_paper() {
+        assert_eq!(super::TTC_CNN_S, 5700);
+        assert_eq!(super::TTC_WORDCOUNT_S, 3900);
+    }
+}

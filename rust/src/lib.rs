@@ -1,0 +1,35 @@
+//! # Dithen — Computation-as-a-Service control plane (IEEE TCC 2016)
+//!
+//! Full reproduction of *"Dithen: A Computation-as-a-Service Cloud
+//! Platform For Large-Scale Multimedia Processing"* (Doyle, Giotsas,
+//! Anam, Andreopoulos) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: GCI monitoring loop, Kalman /
+//!   ad-hoc / ARMA CUS estimation, proportional-fair service rates, AIMD
+//!   instance scaling and its baselines (Reactive, MWA, LR, Amazon AS,
+//!   lower bound), plus simulated substrates for everything the paper ran
+//!   on live AWS (spot market, instances + hourly billing, S3, task DB,
+//!   multimedia applications, Lambda pricing).
+//! * **L2/L1 (python/, build-time only)** — the per-monitoring-instant
+//!   estimator-bank graph (Pallas Kalman + row-reduction kernels) lowered
+//!   once to HLO text; executed here via the PJRT CPU client
+//!   ([`runtime`]). Python is never on the request path.
+//!
+//! See DESIGN.md for the architecture and the per-experiment index, and
+//! EXPERIMENTS.md for reproduced paper tables/figures.
+
+pub mod cli;
+pub mod cloud;
+pub mod config;
+pub mod coordinator;
+pub mod db;
+pub mod estimation;
+pub mod experiments;
+pub mod lci;
+pub mod metrics;
+pub mod platform;
+pub mod runtime;
+pub mod sim;
+pub mod storage;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,11 @@
+//! Leader entrypoint: `dithen <command>`. See `dithen --help`.
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dithen::cli::main_with(&args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

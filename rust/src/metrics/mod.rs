@@ -1,0 +1,180 @@
+//! Run metrics: everything the experiment harness needs to regenerate
+//! the paper's tables and figures from a platform run.
+
+use crate::sim::SimTime;
+
+/// Per-(workload, media-type) estimator trace (Fig. 6/7, Table II).
+#[derive(Debug, Clone, Default)]
+pub struct EstimatorTrace {
+    /// (time, estimate) at each monitoring instant, per estimator.
+    pub kalman: Vec<(SimTime, f64)>,
+    pub adhoc: Vec<(SimTime, f64)>,
+    pub arma: Vec<(SimTime, f64)>,
+    /// Convergence instants (absolute sim time), if reached.
+    pub kalman_t_init: Option<SimTime>,
+    pub adhoc_t_init: Option<SimTime>,
+    pub arma_t_init: Option<SimTime>,
+    /// Estimate value at each estimator's own t_init.
+    pub kalman_at_init: Option<f64>,
+    pub adhoc_at_init: Option<f64>,
+    pub arma_at_init: Option<f64>,
+    /// Ground truth: empirical mean measured CUS over the whole workload
+    /// (the paper's "final measured value" for MAE).
+    pub final_measured: Option<f64>,
+}
+
+impl EstimatorTrace {
+    /// Percentile MAE of one estimator at its t_init vs the final value.
+    pub fn mae_pct(&self, which: crate::estimation::EstimatorKind) -> Option<f64> {
+        use crate::estimation::EstimatorKind::*;
+        let at_init = match which {
+            Kalman => self.kalman_at_init,
+            AdHoc => self.adhoc_at_init,
+            Arma => self.arma_at_init,
+        }?;
+        let fin = self.final_measured?;
+        if fin <= 0.0 {
+            return None;
+        }
+        Some(100.0 * (at_init - fin).abs() / fin)
+    }
+
+    /// Time from workload arrival to the estimator's t_init.
+    pub fn time_to_estimate(
+        &self,
+        which: crate::estimation::EstimatorKind,
+        arrived_at: SimTime,
+    ) -> Option<f64> {
+        use crate::estimation::EstimatorKind::*;
+        let t = match which {
+            Kalman => self.kalman_t_init,
+            AdHoc => self.adhoc_t_init,
+            Arma => self.arma_t_init,
+        }?;
+        Some(t.saturating_sub(arrived_at) as f64)
+    }
+}
+
+/// Per-workload outcome.
+#[derive(Debug, Clone, Default)]
+pub struct WorkloadOutcome {
+    pub arrived_at: SimTime,
+    pub completed_at: Option<SimTime>,
+    pub deadline: Option<SimTime>,
+    pub ttc_extended: bool,
+    pub n_tasks: usize,
+    pub total_bytes: u64,
+}
+
+impl WorkloadOutcome {
+    pub fn met_ttc(&self) -> Option<bool> {
+        Some(self.completed_at? <= self.deadline?)
+    }
+}
+
+/// Everything recorded during one platform run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    /// (time, cumulative $) — the Fig. 8/9/10/11 curves.
+    pub cost_curve: Vec<(SimTime, f64)>,
+    /// (time, active instances) samples at each monitoring instant.
+    pub instances_curve: Vec<(SimTime, usize)>,
+    /// (time, N*_tot) demand curve.
+    pub n_star_curve: Vec<(SimTime, f64)>,
+    /// Max concurrent active instances (Table III row 4).
+    pub max_instances: usize,
+    /// Final total cost ($).
+    pub total_cost: f64,
+    /// Estimator traces keyed by (workload, media type).
+    pub traces: std::collections::BTreeMap<(usize, usize), EstimatorTrace>,
+    pub outcomes: Vec<WorkloadOutcome>,
+    /// Total true CUSs processed (compute + overheads), for LB.
+    pub total_busy_cus: f64,
+    /// Completion time of the whole run.
+    pub finished_at: SimTime,
+    /// Monitoring ticks executed and total tick wall-time (perf metric).
+    pub ticks: u64,
+    pub tick_wall_ns: u128,
+}
+
+impl RunMetrics {
+    /// Lower-bound cost (§V-C): all busy CUSs packed at 100 % occupancy,
+    /// billed in whole increments at the base spot price.
+    pub fn lower_bound_cost(&self, price_per_hour: f64) -> f64 {
+        (self.total_busy_cus / 3600.0) * price_per_hour
+    }
+
+    /// Fraction of workloads that met their confirmed TTC.
+    pub fn ttc_compliance(&self) -> f64 {
+        let evald: Vec<bool> = self.outcomes.iter().filter_map(|o| o.met_ttc()).collect();
+        if evald.is_empty() {
+            return 1.0;
+        }
+        evald.iter().filter(|&&b| b).count() as f64 / evald.len() as f64
+    }
+
+    /// Cost curve as (hours, $) f64 pairs for charting.
+    pub fn cost_curve_hours(&self) -> Vec<(f64, f64)> {
+        self.cost_curve
+            .iter()
+            .map(|&(t, c)| (t as f64 / 3600.0, c))
+            .collect()
+    }
+
+    /// Mean wall time per monitoring tick, nanoseconds.
+    pub fn mean_tick_ns(&self) -> f64 {
+        if self.ticks == 0 {
+            0.0
+        } else {
+            self.tick_wall_ns as f64 / self.ticks as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimation::EstimatorKind;
+
+    #[test]
+    fn mae_pct_computation() {
+        let tr = EstimatorTrace {
+            kalman_at_init: Some(11.0),
+            final_measured: Some(10.0),
+            ..Default::default()
+        };
+        assert!((tr.mae_pct(EstimatorKind::Kalman).unwrap() - 10.0).abs() < 1e-9);
+        assert_eq!(tr.mae_pct(EstimatorKind::Arma), None);
+    }
+
+    #[test]
+    fn time_to_estimate_relative_to_arrival() {
+        let tr = EstimatorTrace { adhoc_t_init: Some(900), ..Default::default() };
+        assert_eq!(tr.time_to_estimate(EstimatorKind::AdHoc, 300), Some(600.0));
+        assert_eq!(tr.time_to_estimate(EstimatorKind::Kalman, 300), None);
+    }
+
+    #[test]
+    fn ttc_compliance_counts() {
+        let mut m = RunMetrics::default();
+        m.outcomes = vec![
+            WorkloadOutcome { completed_at: Some(50), deadline: Some(100), ..Default::default() },
+            WorkloadOutcome { completed_at: Some(150), deadline: Some(100), ..Default::default() },
+            WorkloadOutcome { completed_at: None, deadline: Some(100), ..Default::default() },
+        ];
+        assert!((m.ttc_compliance() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lower_bound_scales_with_cus() {
+        let m = RunMetrics { total_busy_cus: 7200.0, ..Default::default() };
+        assert!((m.lower_bound_cost(0.0081) - 2.0 * 0.0081).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_run_defaults() {
+        let m = RunMetrics::default();
+        assert_eq!(m.ttc_compliance(), 1.0);
+        assert_eq!(m.mean_tick_ns(), 0.0);
+    }
+}

@@ -1,0 +1,1083 @@
+//! The integrated Dithen platform: GCI monitoring loop over the simulated
+//! substrates (Fig. 1's architecture, end to end).
+//!
+//! One [`Platform::run`] call executes a complete experiment: workloads
+//! arrive at the front end, are footprinted, estimated (Kalman bank on
+//! the XLA/PJRT hot path), scheduled with proportional-fair service rates
+//! through the tracker, while the scaling policy (AIMD or a baseline)
+//! grows/shrinks the spot fleet. Everything is deterministic in
+//! `Config::seed`.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cloud::Provider;
+use crate::config::Config;
+use crate::coordinator::policy::{PolicyCtx, PolicyKind, ScalingPolicy};
+use crate::coordinator::{chunk_size, confirm, footprint_count, service_rates, Tracker};
+use crate::db::{TaskDb, TaskStatus};
+use crate::estimation::{
+    AdHoc, Arma, Bank, BankParams, DeviationDetector, EstimatorKind, SlopeDetector,
+};
+use crate::lci::{execute_chunk, Chunk};
+use crate::metrics::{EstimatorTrace, RunMetrics, WorkloadOutcome};
+use crate::sim::{Engine as SimEngine, Event, SimTime};
+use crate::storage::ObjectStore;
+use crate::workload::{Mode, WorkloadSpec};
+
+/// Run options for one experiment.
+#[derive(Debug, Clone)]
+pub struct RunOpts {
+    pub policy: PolicyKind,
+    /// Which estimator drives service rates (Table II comparisons). The
+    /// Kalman bank always runs (it is the platform hot path); ad-hoc and
+    /// ARMA estimators additionally run passively on the same
+    /// measurement stream so Fig. 6/7 can overlay all three.
+    pub estimator: EstimatorKind,
+    /// Fixed TTC applied to every workload (the §V-C experiments), or
+    /// None for best-effort (Amazon AS runs).
+    pub fixed_ttc_s: Option<u64>,
+    /// Seconds between workload arrivals.
+    pub arrival_interval_s: u64,
+    /// Hard stop (safety bound for tests).
+    pub horizon_s: u64,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts {
+            policy: PolicyKind::Aimd,
+            estimator: EstimatorKind::Kalman,
+            fixed_ttc_s: Some(7620), // 2 hr 07 min (§V-C experiment 1)
+            arrival_interval_s: crate::workload::ARRIVAL_INTERVAL_S,
+            horizon_s: 24 * 3600,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WlPhase {
+    /// Waiting for / executing footprinting tasks.
+    Footprinting,
+    /// Normal task execution with estimation.
+    Running,
+    /// Split done, merge step pending or executing (Split–Merge mode).
+    Merging,
+    Done,
+}
+
+/// Per-(workload, media-type) estimation state.
+#[derive(Debug)]
+struct SlotEst {
+    adhoc: AdHoc,
+    arma: Arma,
+    kalman_det: SlopeDetector,
+    adhoc_det: SlopeDetector,
+    arma_det: DeviationDetector,
+    /// Cumulative measured CUS and completed count (ARMA normalization).
+    cum_cus: f64,
+    cum_done: usize,
+    seeded: bool,
+}
+
+#[derive(Debug)]
+struct WlState {
+    phase: WlPhase,
+    arrived_at: SimTime,
+    deadline: Option<SimTime>,
+    ttc_extended: bool,
+    confirmed: bool,
+    /// Footprint task ids not yet dispatched / completed.
+    footprint_pending: Vec<usize>,
+    footprint_outstanding: usize,
+    footprint_meas: Vec<f64>,
+    completed_tasks: usize,
+    completed_at: Option<SimTime>,
+    /// Busy seconds of all executed split chunks (merge time derivation).
+    split_busy: f64,
+    merge_dispatched: bool,
+    merge_instance: Option<u64>,
+}
+
+/// The assembled platform.
+pub struct Platform {
+    cfg: Config,
+    opts: RunOpts,
+    sim: SimEngine,
+    provider: Provider,
+    storage: ObjectStore,
+    db: TaskDb,
+    bank: Bank,
+    tracker: Tracker,
+    policy: Box<dyn ScalingPolicy>,
+    specs: Vec<WorkloadSpec>,
+    wl: Vec<WlState>,
+    est: BTreeMap<(usize, usize), SlotEst>,
+    /// Measurements accumulated since the last tick per (w, k).
+    meas_buf: BTreeMap<(usize, usize), Vec<f64>>,
+    /// Last interval-mean measurement per (w, k) — reused when an
+    /// interval produces no completions (eq. 8 uses b̃[t-1]).
+    last_meas: BTreeMap<(usize, usize), f32>,
+    chunks: BTreeMap<u64, Chunk>,
+    next_chunk_id: u64,
+    /// Latest service rates (per workload id).
+    rates: BTreeMap<usize, f64>,
+    n_star_history: Vec<f64>,
+    last_policy_eval: SimTime,
+    k_max: usize,
+    metrics: RunMetrics,
+    arrived: usize,
+    all_done_at: Option<SimTime>,
+}
+
+impl Platform {
+    /// Build a platform over `specs` (workload `id`s must be their
+    /// arrival slots: 0, 1, 2, ...).
+    pub fn new(cfg: Config, specs: Vec<WorkloadSpec>, opts: RunOpts) -> Platform {
+        let n_w = specs.len().max(1);
+        let k_max = specs.iter().map(|s| s.n_types).max().unwrap_or(1);
+        let params = BankParams::from_config(&cfg.control);
+        let (bank, _backend) = Bank::with_best_backend(
+            n_w,
+            k_max,
+            params,
+            std::path::Path::new(&cfg.artifacts_dir),
+            cfg.use_xla,
+        );
+        let horizon_h = (opts.horizon_s / 3600 + 2) as usize;
+        let provider = Provider::new(cfg.market.clone(), cfg.seed, horizon_h);
+        let storage = ObjectStore::new(cfg.storage.clone());
+        let tracker = Tracker::new(cfg.control.n_w_max);
+        let policy = opts.policy.build(&cfg.control);
+        let wl = specs
+            .iter()
+            .map(|_| WlState {
+                phase: WlPhase::Footprinting,
+                arrived_at: 0,
+                deadline: None,
+                ttc_extended: false,
+                confirmed: false,
+                footprint_pending: vec![],
+                footprint_outstanding: 0,
+                footprint_meas: vec![],
+                completed_tasks: 0,
+                completed_at: None,
+                split_busy: 0.0,
+                merge_dispatched: false,
+                merge_instance: None,
+            })
+            .collect();
+        Platform {
+            cfg,
+            opts,
+            sim: SimEngine::new(),
+            provider,
+            storage,
+            db: TaskDb::new(),
+            bank,
+            tracker,
+            policy,
+            specs,
+            wl,
+            est: BTreeMap::new(),
+            meas_buf: BTreeMap::new(),
+            last_meas: BTreeMap::new(),
+            chunks: BTreeMap::new(),
+            next_chunk_id: 0,
+            rates: BTreeMap::new(),
+            n_star_history: vec![],
+            last_policy_eval: 0,
+            k_max,
+            metrics: RunMetrics::default(),
+            arrived: 0,
+            all_done_at: None,
+        }
+    }
+
+    /// Name of the estimator-bank backend in use ("xla" or "native").
+    pub fn backend_name(&self) -> &'static str {
+        self.bank.backend_name()
+    }
+
+    /// Execute the experiment to completion; returns the metrics.
+    pub fn run(mut self) -> Result<RunMetrics> {
+        // bootstrap fleet at N_min (AS starts from the same launch group)
+        let initial = self.cfg.control.n_min as usize;
+        for _ in 0..initial {
+            self.request_instance();
+        }
+        // workload arrivals
+        for w in 0..self.specs.len() {
+            self.sim
+                .schedule(w as u64 * self.opts.arrival_interval_s, Event::WorkloadArrival {
+                    workload: w,
+                });
+        }
+        // first monitoring tick
+        self.sim
+            .schedule(self.cfg.control.monitor_interval_s, Event::MonitorTick);
+
+        while let Some((now, event)) = self.sim.next() {
+            if now > self.opts.horizon_s {
+                break;
+            }
+            match event {
+                Event::WorkloadArrival { workload } => self.on_arrival(workload)?,
+                Event::InstanceReady { instance } => self.on_instance_ready(instance),
+                Event::ChunkDone { instance, chunk } => self.on_chunk_done(instance, chunk),
+                Event::MergeDone { workload } => self.on_merge_done(workload),
+                Event::MonitorTick => self.on_tick()?,
+                Event::FootprintDone { .. } => {} // handled inline
+            }
+            if self.all_done_at.is_some() {
+                break;
+            }
+        }
+
+        // wind down: terminate everything, settle billing
+        let now = self.sim.now();
+        let ids: Vec<u64> = self.provider.instances().map(|i| i.id).collect();
+        for id in ids {
+            self.provider.terminate_instance(id, now);
+        }
+        self.provider.bill_through(now);
+        self.metrics.total_cost = self.provider.total_cost();
+        self.metrics.cost_curve = self.provider.cost_curve().to_vec();
+        self.metrics.finished_at = self.all_done_at.unwrap_or(now);
+        self.metrics.outcomes = self
+            .wl
+            .iter()
+            .enumerate()
+            .map(|(w, st)| WorkloadOutcome {
+                arrived_at: st.arrived_at,
+                completed_at: st.completed_at,
+                deadline: st.deadline,
+                ttc_extended: st.ttc_extended,
+                n_tasks: self.specs[w].n_tasks(),
+                total_bytes: self.specs[w].total_bytes(),
+            })
+            .collect();
+        // finalize estimator traces with ground truth
+        for ((w, k), trace) in self.metrics.traces.iter_mut() {
+            let done = self.db.all_measurements(*w, *k);
+            if !done.is_empty() {
+                trace.final_measured = Some(crate::util::stats::mean(&done));
+            }
+        }
+        Ok(self.metrics)
+    }
+
+    // ----- event handlers -------------------------------------------------
+
+    fn on_arrival(&mut self, w: usize) -> Result<()> {
+        let now = self.sim.now();
+        self.arrived += 1;
+        let spec = &self.specs[w];
+        // upload inputs to storage (bookkeeping; transfer happens per chunk)
+        for (t, task) in spec.tasks.iter().enumerate() {
+            self.storage
+                .put(&format!("w{w:02}/input/item{t:06}"), task.bytes);
+            self.db.insert(w, task.media_type, t);
+        }
+        let st = &mut self.wl[w];
+        st.arrived_at = now;
+        st.deadline = self.opts.fixed_ttc_s.map(|d| now + d);
+        // footprinting: first F tasks (the paper samples a small
+        // percentage of the inputs)
+        let f = footprint_count(
+            spec.n_tasks(),
+            self.cfg.control.footprint_frac,
+            self.cfg.control.footprint_min,
+            self.cfg.control.footprint_max,
+        );
+        st.footprint_pending = (0..f).collect();
+        st.phase = WlPhase::Footprinting;
+        self.tracker.register(w);
+        for k in 0..spec.n_types {
+            self.est.entry((w, k)).or_insert_with(|| SlotEst {
+                adhoc: AdHoc::paper(),
+                arma: Arma::paper(),
+                kalman_det: SlopeDetector::new(),
+                adhoc_det: SlopeDetector::new(),
+                arma_det: DeviationDetector::paper(self.cfg.control.monitor_interval_s),
+                cum_cus: 0.0,
+                cum_done: 0,
+                seeded: false,
+            });
+            self.metrics
+                .traces
+                .entry((w, k))
+                .or_insert_with(EstimatorTrace::default);
+        }
+        self.assign_idle();
+        Ok(())
+    }
+
+    fn on_instance_ready(&mut self, id: u64) {
+        let now = self.sim.now();
+        self.provider.instance_ready(id, now);
+        self.sample_instances(now);
+        self.assign_idle();
+    }
+
+    fn on_chunk_done(&mut self, instance: u64, chunk_id: u64) {
+        let now = self.sim.now();
+        let chunk = match self.chunks.remove(&chunk_id) {
+            Some(c) => c,
+            None => return,
+        };
+        let w = chunk.workload;
+        let spec = &self.specs[w];
+        // re-derive the result (deterministic) to record measurements
+        let result = execute_chunk(spec, &chunk.tasks, chunk.footprint, &self.storage);
+        for (i, &t) in chunk.tasks.iter().enumerate() {
+            let cus = result.per_task_cus[i];
+            let k = spec.tasks[t].media_type;
+            self.db.complete((w, t), cus, now, result.exit_code);
+            self.meas_buf.entry((w, k)).or_default().push(cus);
+            let est = self.est.get_mut(&(w, k)).unwrap();
+            est.cum_cus += cus;
+            est.cum_done += 1;
+            self.storage
+                .put(&format!("w{w:02}/output/item{t:06}"), (spec.tasks[t].bytes as f64 * 0.3) as u64);
+        }
+        self.metrics.total_busy_cus += result.busy_s;
+        let st = &mut self.wl[w];
+        st.completed_tasks += chunk.tasks.len();
+        st.split_busy += result.busy_s;
+        if chunk.footprint {
+            st.footprint_outstanding -= chunk.tasks.len();
+            st.footprint_meas
+                .extend(chunk.tasks.iter().enumerate().map(|(i, _)| result.per_task_cus[i]));
+            if st.footprint_outstanding == 0 && st.footprint_pending.is_empty() {
+                self.finish_footprinting(w);
+            }
+        }
+        // instance becomes free (or dies if draining)
+        if let Some(inst) = self.provider.instance_mut(instance) {
+            inst.finish_chunk(now, result.busy_s.ceil() as SimTime);
+        }
+        self.tracker.on_release(w);
+        self.update_pending_flag(w);
+        self.check_workload_done(w);
+        self.assign_idle();
+    }
+
+    fn finish_footprinting(&mut self, w: usize) {
+        let now = self.sim.now();
+        let st = &mut self.wl[w];
+        st.phase = WlPhase::Running;
+        // seed estimators with the footprinting mean (b̃[0], §II-E-3)
+        let seed = crate::util::stats::mean(&st.footprint_meas);
+        let spec = &self.specs[w];
+        for k in 0..spec.n_types {
+            let est = self.est.get_mut(&(w, k)).unwrap();
+            est.adhoc.seed(seed);
+            est.seeded = true;
+            // the bank's slot sees the seed as its first measurement at
+            // the next tick through meas_buf (already recorded above)
+        }
+        let _ = now;
+        self.update_pending_flag(w);
+    }
+
+    fn on_merge_done(&mut self, w: usize) {
+        let now = self.sim.now();
+        let merge_inst = self.wl[w].merge_instance.take();
+        {
+            let st = &mut self.wl[w];
+            st.phase = WlPhase::Done;
+            st.completed_at = Some(now);
+        }
+        // release the aggregation instance
+        if let Some(id) = merge_inst {
+            if let Some(inst) = self.provider.instance_mut(id) {
+                inst.finish_chunk(now, 0);
+            }
+        }
+        self.tracker.remove(w);
+        self.check_all_done();
+        self.assign_idle();
+    }
+
+    fn on_tick(&mut self) -> Result<()> {
+        let now = self.sim.now();
+        let tick_start = Instant::now();
+        self.provider.bill_through(now);
+
+        // ----- ME: assemble bank inputs (eqs. 1-3 bookkeeping) ----------
+        let n_w = self.specs.len();
+        let k = self.k_max.max(1);
+        let (bw, bk) = (self.bank.w, self.bank.k);
+        let wk = bw * bk;
+        let mut b_tilde = vec![0.0f32; wk];
+        let mut meas_mask = vec![0.0f32; wk];
+        let mut m_rem = vec![0.0f32; wk];
+        let mut slot_mask = vec![0.0f32; wk];
+        let mut d = vec![0.0f32; bw];
+        for w in 0..n_w {
+            let st = &self.wl[w];
+            if st.arrived_at > now || matches!(st.phase, WlPhase::Done) || self.arrived <= w {
+                continue;
+            }
+            let remaining = self.db.remaining_by_type(w, self.specs[w].n_types);
+            let dl = st.deadline.unwrap_or(now + 3600);
+            // safety margin of one monitoring interval: allocation is
+            // interval-quantized, so pacing against the raw deadline
+            // systematically finishes up to one interval late
+            let margin = self.cfg.control.monitor_interval_s;
+            d[w] = dl.saturating_sub(now).saturating_sub(margin).max(1) as f32;
+            for ki in 0..self.specs[w].n_types.min(k) {
+                let idx = w * bk + ki;
+                slot_mask[idx] = 1.0;
+                m_rem[idx] = remaining[ki] as f32;
+                if let Some(buf) = self.meas_buf.get_mut(&(w, ki)) {
+                    if !buf.is_empty() {
+                        let m = crate::util::stats::mean(buf) as f32;
+                        b_tilde[idx] = m;
+                        meas_mask[idx] = 1.0;
+                        buf.clear();
+                        self.last_meas.insert((w, ki), m);
+                    } else if let Some(&last) = self.last_meas.get(&(w, ki)) {
+                        // eq. (8) uses b̃[t-1]: when no tasks of this type
+                        // completed in the interval, the previous
+                        // measurement is reused (the paper's estimator
+                        // keeps pulling toward the last observation)
+                        b_tilde[idx] = last;
+                        meas_mask[idx] = 1.0;
+                    }
+                }
+            }
+        }
+        let fleet = self.provider.describe(now);
+        let n_tot = fleet.active_cus as f32;
+
+        // ----- the L1/L2 hot path: estimator-bank step -------------------
+        let out = self.bank.step(&crate::estimation::TickInputs {
+            b_tilde: &b_tilde,
+            meas_mask: &meas_mask,
+            m_rem: &m_rem,
+            slot_mask: &slot_mask,
+            d: &d,
+            n_tot,
+        })?;
+
+        // ----- passive estimators + convergence + traces ----------------
+        let mut converged_now: Vec<usize> = vec![];
+        for w in 0..n_w {
+            if self.arrived <= w || matches!(self.wl[w].phase, WlPhase::Done) {
+                continue;
+            }
+            let spec = &self.specs[w];
+            for ki in 0..spec.n_types {
+                let idx = w * bk + ki;
+                if slot_mask[idx] == 0.0 {
+                    continue;
+                }
+                let had_meas = meas_mask[idx] > 0.0;
+                let est = self.est.get_mut(&(w, ki)).unwrap();
+                if !est.seeded {
+                    continue;
+                }
+                let kalman_b = out.b_hat[idx] as f64;
+                let m = if had_meas { Some(b_tilde[idx] as f64) } else { None };
+                let adhoc_b = est.adhoc.update(m);
+                let arma_b = match crate::estimation::arma::normalize_per_item(est.cum_cus, est.cum_done)
+                {
+                    Some(bn) if had_meas => est.arma.update(bn),
+                    _ => est.arma.b_hat,
+                };
+                let trace = self.metrics.traces.get_mut(&(w, ki)).unwrap();
+                trace.kalman.push((now, kalman_b));
+                trace.adhoc.push((now, adhoc_b));
+                trace.arma.push((now, arma_b));
+                if est.kalman_det.push(kalman_b).is_some() {
+                    trace.kalman_t_init = Some(now);
+                    trace.kalman_at_init = Some(kalman_b);
+                    if self.opts.estimator == EstimatorKind::Kalman {
+                        converged_now.push(w);
+                    }
+                }
+                if est.adhoc_det.push(adhoc_b).is_some() {
+                    trace.adhoc_t_init = Some(now);
+                    trace.adhoc_at_init = Some(adhoc_b);
+                    if self.opts.estimator == EstimatorKind::AdHoc {
+                        converged_now.push(w);
+                    }
+                }
+                if est.arma_det.push(arma_b).is_some() {
+                    trace.arma_t_init = Some(now);
+                    trace.arma_at_init = Some(arma_b);
+                    if self.opts.estimator == EstimatorKind::Arma {
+                        converged_now.push(w);
+                    }
+                }
+            }
+        }
+
+        // ----- service rates from the *driving* estimator ----------------
+        let (rates_vec, n_star) = self.driving_rates(&out, &slot_mask, &m_rem, &d, n_tot as f64);
+        self.rates = rates_vec
+            .iter()
+            .enumerate()
+            .map(|(w, &s)| (w, s.min(self.cfg.control.n_w_max)))
+            .collect();
+        self.n_star_history.push(n_star);
+        self.metrics.n_star_curve.push((now, n_star));
+
+        // ----- TTC confirmation at t_init (§II-E-4) ----------------------
+        for w in converged_now {
+            if self.wl[w].confirmed {
+                continue;
+            }
+            self.wl[w].confirmed = true;
+            if let Some(dl) = self.wl[w].deadline {
+                let r_w = self.driving_r(&out, w);
+                let c = confirm(r_w, dl, now, self.cfg.control.n_w_max);
+                let st = &mut self.wl[w];
+                st.deadline = Some(c.deadline);
+                st.ttc_extended = c.extended;
+            }
+        }
+
+        // ----- scaling policy ---------------------------------------------
+        let eval_due = match self.policy.eval_interval_s() {
+            Some(iv) => now.saturating_sub(self.last_policy_eval) >= iv,
+            None => true,
+        };
+        if eval_due {
+            self.last_policy_eval = now;
+            let work_pending = (0..n_w).any(|w| {
+                self.arrived > w && !matches!(self.wl[w].phase, WlPhase::Done)
+            });
+            let ctx = PolicyCtx {
+                now,
+                n_tot: fleet.committed_cus,
+                n_star,
+                n_star_history: &self.n_star_history,
+                mean_utilization: self.provider.mean_utilization(now),
+                work_pending,
+            };
+            let target = self.policy.target(&ctx).round().max(0.0);
+            self.adjust_fleet(target);
+        }
+
+        // ----- tracker credits + assignment -------------------------------
+        self.tracker.tick(&self.rates);
+        self.assign_idle();
+
+        self.metrics.ticks += 1;
+        self.metrics.tick_wall_ns += tick_start.elapsed().as_nanos();
+        self.sample_instances(now);
+
+        // continue while work remains or arrivals are still scheduled
+        let more_arrivals = self.arrived < self.specs.len();
+        let work_left = (0..n_w)
+            .any(|w| self.arrived > w && !matches!(self.wl[w].phase, WlPhase::Done));
+        if more_arrivals || work_left {
+            self.sim
+                .schedule(self.cfg.control.monitor_interval_s, Event::MonitorTick);
+        }
+        Ok(())
+    }
+
+    // ----- helpers ---------------------------------------------------------
+
+    /// r_w under the driving estimator.
+    fn driving_r(&self, out: &crate::runtime::StepOutputs, w: usize) -> f64 {
+        match self.opts.estimator {
+            EstimatorKind::Kalman => out.r[w] as f64,
+            other => {
+                let spec = &self.specs[w];
+                let remaining = self.db.remaining_by_type(w, spec.n_types);
+                let mut r = 0.0;
+                for ki in 0..spec.n_types {
+                    let est = &self.est[&(w, ki)];
+                    let b = match other {
+                        EstimatorKind::AdHoc => est.adhoc.b_hat,
+                        EstimatorKind::Arma => est.arma.b_hat,
+                        EstimatorKind::Kalman => unreachable!(),
+                    };
+                    r += remaining[ki] * b;
+                }
+                r
+            }
+        }
+    }
+
+    /// Service rates under the driving estimator.
+    fn driving_rates(
+        &self,
+        out: &crate::runtime::StepOutputs,
+        slot_mask: &[f32],
+        m_rem: &[f32],
+        d: &[f32],
+        n_tot: f64,
+    ) -> (Vec<f64>, f64) {
+        let n_w = self.specs.len();
+        let bk = self.bank.k;
+        match self.opts.estimator {
+            EstimatorKind::Kalman => {
+                let rates: Vec<f64> = (0..n_w).map(|w| out.s[w] as f64).collect();
+                (rates, out.n_star as f64)
+            }
+            other => {
+                let mut r = vec![0.0; n_w];
+                let mut dd = vec![0.0; n_w];
+                let mut active = vec![false; n_w];
+                for w in 0..n_w {
+                    dd[w] = d[w] as f64;
+                    for ki in 0..self.specs[w].n_types {
+                        let idx = w * bk + ki;
+                        if slot_mask[idx] > 0.0 {
+                            active[w] = true;
+                            let est = &self.est[&(w, ki)];
+                            let b = match other {
+                                EstimatorKind::AdHoc => est.adhoc.b_hat,
+                                EstimatorKind::Arma => est.arma.b_hat,
+                                EstimatorKind::Kalman => unreachable!(),
+                            };
+                            r[w] += m_rem[idx] as f64 * b;
+                        }
+                    }
+                }
+                service_rates(
+                    &r,
+                    &dd,
+                    &active,
+                    n_tot,
+                    self.cfg.control.alpha,
+                    self.cfg.control.beta,
+                    self.cfg.control.n_w_max,
+                )
+            }
+        }
+    }
+
+    fn request_instance(&mut self) {
+        let now = self.sim.now();
+        let (id, ready) = self.provider.request_spot_instance(0, now);
+        self.sim.schedule_at(ready, Event::InstanceReady { instance: id });
+    }
+
+    /// Scale the fleet toward `target` CUs.
+    ///
+    /// Down-scaling is *lazy* for the estimation-based methods: an excess
+    /// instance is only terminated when its pre-billed hour is nearly
+    /// exhausted (§IV: "the prudent action is always to terminate spot
+    /// instances with the smallest remaining time before renewal" — an
+    /// instance with 50 paid minutes left is free capacity; killing it
+    /// early and re-requesting later would double-bill the hour). Amazon
+    /// AS terminates immediately, as the real service does.
+    fn adjust_fleet(&mut self, target: f64) {
+        let now = self.sim.now();
+        let fleet = self.provider.describe(now);
+        let committed = fleet.committed_cus;
+        // §IV's billing-aware termination prudence is part of the
+        // *proposed* controller; the baselines set N_tot[t+1] directly
+        // (Gandhi et al. semantics) and Amazon AS terminates eagerly.
+        let lazy = self.opts.policy == PolicyKind::Aimd;
+        // renewal window: terminate before the next billing increment hits
+        let window = (self.cfg.control.monitor_interval_s * 3 / 2 + 1).max(120);
+        if target > committed {
+            let need = (target - committed).round() as usize;
+            for _ in 0..need {
+                self.request_instance();
+            }
+        } else if target < committed {
+            let mut excess = (committed - target).round() as usize;
+            // idle first, least remaining pre-billed time first (§IV)
+            for id in self.provider.idle_instances_by_remaining(now) {
+                if excess == 0 {
+                    break;
+                }
+                let rem = self
+                    .provider
+                    .instance(id)
+                    .map(|i| i.remaining_billed(now))
+                    .unwrap_or(0);
+                if !lazy || rem <= window {
+                    self.provider.terminate_instance(id, now);
+                    excess -= 1;
+                }
+            }
+            // then drain busy ones if still above target (same laziness)
+            if excess > 0 {
+                let mut busy: Vec<(u64, SimTime)> = self
+                    .provider
+                    .instances()
+                    .filter(|i| i.state == crate::cloud::InstanceState::Running && !i.is_idle())
+                    .map(|i| (i.id, i.remaining_billed(now)))
+                    .collect();
+                busy.sort_by_key(|&(id, rem)| (rem, id));
+                for (id, rem) in busy {
+                    if excess == 0 {
+                        break;
+                    }
+                    if !lazy || rem <= window {
+                        self.provider.terminate_instance(id, now);
+                        excess -= 1;
+                    }
+                }
+            }
+        }
+        self.sample_instances(now);
+    }
+
+    fn update_pending_flag(&mut self, w: usize) {
+        let runnable = matches!(self.wl[w].phase, WlPhase::Running)
+            && self.db.count_status(w, TaskStatus::Pending) > 0;
+        self.tracker.set_pending(w, runnable);
+    }
+
+    /// Dispatch work to every idle instance: footprint tasks first
+    /// (single-task chunks), then tracker-allocated chunks.
+    fn assign_idle(&mut self) {
+        let now = self.sim.now();
+        loop {
+            let idle: Vec<u64> = self
+                .provider
+                .instances()
+                .filter(|i| i.is_idle())
+                .map(|i| i.id)
+                .collect();
+            if idle.is_empty() {
+                break;
+            }
+            let mut assigned_any = false;
+            for inst_id in idle {
+                // 1. footprinting chunks take priority (small, unblock TTC)
+                if let Some((w, tasks)) = self.next_footprint_chunk() {
+                    self.dispatch_chunk(inst_id, w, tasks, true, now);
+                    assigned_any = true;
+                    continue;
+                }
+                // 2. regular chunk via tracker (or FIFO for Amazon AS)
+                let pick = if self.policy.uses_estimation() {
+                    self.tracker.next_assignment()
+                } else {
+                    self.tracker.next_fifo()
+                };
+                let w = match pick {
+                    Some(w) => w,
+                    None => continue,
+                };
+                let tasks = self.build_chunk(w, now);
+                if tasks.is_empty() {
+                    self.update_pending_flag(w);
+                    continue;
+                }
+                self.tracker.on_assign(w);
+                self.dispatch_chunk(inst_id, w, tasks, false, now);
+                assigned_any = true;
+            }
+            // 3. pending merge steps can use an idle instance
+            self.dispatch_merges();
+            if !assigned_any {
+                break;
+            }
+        }
+        self.dispatch_merges();
+    }
+
+    /// Next footprinting chunk: footprint tasks are grouped into (up to)
+    /// three chunks rather than singles so per-chunk setup time
+    /// ("deadband") is partially amortized even in the sampling stage —
+    /// otherwise a Matlab-style 30 s setup would make every footprint
+    /// measurement ~deadband-dominated (§II-E-1).
+    fn next_footprint_chunk(&mut self) -> Option<(usize, Vec<usize>)> {
+        for w in 0..self.wl.len() {
+            if self.arrived <= w {
+                continue;
+            }
+            let st = &mut self.wl[w];
+            if st.phase == WlPhase::Footprinting && !st.footprint_pending.is_empty() {
+                // group only when the app's setup time actually needs
+                // amortizing; cheap-setup apps footprint with parallel
+                // singles for the fastest possible seeding
+                let deadband = self.specs[w].app_model().deadband_s;
+                let total = st.footprint_pending.len() + st.footprint_outstanding;
+                let per_chunk = if deadband > 5.0 { total.div_ceil(3).max(1) } else { 1 };
+                let n = per_chunk.min(st.footprint_pending.len());
+                let tasks: Vec<usize> =
+                    st.footprint_pending.drain(..n).collect();
+                st.footprint_outstanding += tasks.len();
+                return Some((w, tasks));
+            }
+        }
+        None
+    }
+
+    /// Claim up to chunk_size pending tasks of workload w.
+    fn build_chunk(&mut self, w: usize, _now: SimTime) -> Vec<usize> {
+        let spec = &self.specs[w];
+        let model = spec.app_model();
+        // per-item estimate from the driving estimator (fallback:
+        // footprint seed; last resort: app deadband + 1s)
+        let est = self
+            .est
+            .get(&(w, 0))
+            .map(|e| match self.opts.estimator {
+                EstimatorKind::Kalman => self.bank.estimate(w, 0) as f64,
+                EstimatorKind::AdHoc => e.adhoc.b_hat,
+                EstimatorKind::Arma => e.arma.b_hat,
+            })
+            .filter(|&b| b > 0.0)
+            .or_else(|| {
+                let st = &self.wl[w];
+                if st.footprint_meas.is_empty() {
+                    None
+                } else {
+                    Some(crate::util::stats::mean(&st.footprint_meas))
+                }
+            })
+            .unwrap_or(model.mean_cus + 1.0);
+        let pending_n = self.db.count_status(w, TaskStatus::Pending);
+        let n = chunk_size(
+            est,
+            model.deadband_s,
+            self.cfg.control.monitor_interval_s as f64,
+            pending_n,
+        );
+        self.db.first_with_status(w, TaskStatus::Pending, n)
+    }
+
+    fn dispatch_chunk(&mut self, inst_id: u64, w: usize, tasks: Vec<usize>, footprint: bool, now: SimTime) {
+        for &t in &tasks {
+            self.db.claim((w, t), inst_id);
+        }
+        self.next_chunk_id += 1;
+        let id = self.next_chunk_id;
+        let spec = &self.specs[w];
+        let result = execute_chunk(spec, &tasks, footprint, &self.storage);
+        let chunk = Chunk { id, workload: w, instance: inst_id, tasks, footprint, started_at: now };
+        self.chunks.insert(id, chunk);
+        if let Some(inst) = self.provider.instance_mut(inst_id) {
+            inst.current_chunk = Some(id);
+        }
+        self.sim.schedule(
+            result.busy_s.ceil().max(1.0) as SimTime,
+            Event::ChunkDone { instance: inst_id, chunk: id },
+        );
+        self.update_pending_flag(w);
+    }
+
+    fn dispatch_merges(&mut self) {
+        let _now = self.sim.now();
+        for w in 0..self.wl.len() {
+            let needs_merge = {
+                let st = &self.wl[w];
+                st.phase == WlPhase::Merging && !st.merge_dispatched
+            };
+            if !needs_merge {
+                continue;
+            }
+            let idle = self
+                .provider
+                .instances()
+                .find(|i| i.is_idle())
+                .map(|i| i.id);
+            if let Some(inst_id) = idle {
+                let merge_frac = match self.specs[w].mode {
+                    Mode::SplitMerge { merge_frac } => merge_frac,
+                    Mode::Basic => 0.0,
+                };
+                let merge_s = (self.wl[w].split_busy * merge_frac).max(1.0);
+                self.metrics.total_busy_cus += merge_s;
+                if let Some(inst) = self.provider.instance_mut(inst_id) {
+                    inst.current_chunk = Some(u64::MAX); // merge marker
+                    inst.busy_s += merge_s.ceil() as SimTime;
+                }
+                self.wl[w].merge_dispatched = true;
+                self.wl[w].merge_instance = Some(inst_id);
+                self.sim
+                    .schedule(merge_s.ceil() as SimTime, Event::MergeDone { workload: w });
+            }
+        }
+    }
+
+    fn check_workload_done(&mut self, w: usize) {
+        let now = self.sim.now();
+        let spec = &self.specs[w];
+        if self.wl[w].completed_tasks < spec.n_tasks() {
+            return;
+        }
+        match spec.mode {
+            Mode::Basic => {
+                let st = &mut self.wl[w];
+                if st.phase != WlPhase::Done {
+                    st.phase = WlPhase::Done;
+                    st.completed_at = Some(now);
+                    self.tracker.remove(w);
+                    self.check_all_done();
+                }
+            }
+            Mode::SplitMerge { .. } => {
+                let st = &mut self.wl[w];
+                if st.phase == WlPhase::Running || st.phase == WlPhase::Footprinting {
+                    st.phase = WlPhase::Merging;
+                    self.tracker.set_pending(w, false);
+                    self.dispatch_merges();
+                }
+            }
+        }
+    }
+
+    fn check_all_done(&mut self) {
+        if self.arrived == self.specs.len()
+            && self.wl.iter().all(|st| st.phase == WlPhase::Done)
+        {
+            self.all_done_at = Some(self.sim.now());
+        }
+    }
+
+    fn sample_instances(&mut self, now: SimTime) {
+        let fleet = self.provider.describe(now);
+        let active = fleet.booting + fleet.running + fleet.draining;
+        self.metrics.instances_curve.push((now, active));
+        self.metrics.max_instances = self.metrics.max_instances.max(active);
+    }
+}
+
+/// Convenience: run one experiment.
+pub fn run_experiment(cfg: Config, specs: Vec<WorkloadSpec>, opts: RunOpts) -> Result<RunMetrics> {
+    Platform::new(cfg, specs, opts).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{App, WorkloadSpec};
+    use crate::util::rng::Rng;
+
+    fn small_cfg() -> Config {
+        let mut cfg = Config::paper_defaults();
+        cfg.use_xla = false; // unit tests use the native bank (fast)
+        cfg.control.n_min = 4.0;
+        cfg
+    }
+
+    fn small_suite(n_wl: usize, tasks_each: usize) -> Vec<WorkloadSpec> {
+        let rng = Rng::new(42);
+        (0..n_wl)
+            .map(|i| WorkloadSpec::generate(i, App::FaceDetection, tasks_each, None, &rng))
+            .collect()
+    }
+
+    fn fast_opts() -> RunOpts {
+        RunOpts {
+            fixed_ttc_s: Some(3600),
+            arrival_interval_s: 60,
+            horizon_s: 6 * 3600,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn completes_all_workloads() {
+        let m = run_experiment(small_cfg(), small_suite(3, 40), fast_opts()).unwrap();
+        assert_eq!(m.outcomes.len(), 3);
+        for o in &m.outcomes {
+            assert!(o.completed_at.is_some(), "workload never completed");
+        }
+        assert!(m.total_cost > 0.0);
+        assert!(m.max_instances >= 4);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = run_experiment(small_cfg(), small_suite(2, 30), fast_opts()).unwrap();
+        let b = run_experiment(small_cfg(), small_suite(2, 30), fast_opts()).unwrap();
+        assert_eq!(a.total_cost, b.total_cost);
+        assert_eq!(a.finished_at, b.finished_at);
+        assert_eq!(a.max_instances, b.max_instances);
+    }
+
+    #[test]
+    fn cost_is_monotone_and_above_lower_bound() {
+        let m = run_experiment(small_cfg(), small_suite(3, 60), fast_opts()).unwrap();
+        for wpair in m.cost_curve.windows(2) {
+            assert!(wpair[1].1 >= wpair[0].1);
+        }
+        let lb = m.lower_bound_cost(0.0081);
+        assert!(m.total_cost >= lb, "cost {} below LB {lb}", m.total_cost);
+    }
+
+    #[test]
+    fn estimator_traces_recorded_and_converge() {
+        // workload must span several monitoring intervals to converge
+        let m = run_experiment(small_cfg(), small_suite(2, 800), fast_opts()).unwrap();
+        let tr = &m.traces[&(0, 0)];
+        assert!(!tr.kalman.is_empty());
+        assert!(tr.final_measured.is_some());
+        assert!(tr.kalman_t_init.is_some(), "kalman never converged");
+    }
+
+    #[test]
+    fn all_policies_complete_the_suite() {
+        for policy in [
+            PolicyKind::Aimd,
+            PolicyKind::Reactive,
+            PolicyKind::Mwa,
+            PolicyKind::Lr,
+            PolicyKind::AmazonAs1,
+        ] {
+            let mut opts = fast_opts();
+            opts.policy = policy;
+            if policy == PolicyKind::AmazonAs1 {
+                opts.fixed_ttc_s = None;
+            }
+            let m = run_experiment(small_cfg(), small_suite(2, 25), opts).unwrap();
+            assert!(
+                m.outcomes.iter().all(|o| o.completed_at.is_some()),
+                "{policy:?} left workloads incomplete"
+            );
+        }
+    }
+
+    #[test]
+    fn all_estimators_drive_completion() {
+        for est in EstimatorKind::ALL {
+            let mut opts = fast_opts();
+            opts.estimator = est;
+            let m = run_experiment(small_cfg(), small_suite(2, 25), opts).unwrap();
+            assert!(m.outcomes.iter().all(|o| o.completed_at.is_some()));
+        }
+    }
+
+    #[test]
+    fn splitmerge_workload_runs_merge() {
+        let rng = Rng::new(9);
+        let spec = WorkloadSpec::generate_mode(
+            0,
+            App::CnnClassify,
+            30,
+            Mode::SplitMerge { merge_frac: 0.1 },
+            None,
+            &rng,
+        );
+        let m = run_experiment(small_cfg(), vec![spec], fast_opts()).unwrap();
+        assert!(m.outcomes[0].completed_at.is_some());
+    }
+
+    #[test]
+    fn ttc_honored_under_aimd() {
+        let mut opts = fast_opts();
+        opts.fixed_ttc_s = Some(2 * 3600);
+        let m = run_experiment(small_cfg(), small_suite(3, 40), opts).unwrap();
+        assert!(
+            m.ttc_compliance() >= 0.99,
+            "TTC compliance {}",
+            m.ttc_compliance()
+        );
+    }
+
+    #[test]
+    fn single_task_workload_degenerates_cleanly() {
+        let m = run_experiment(small_cfg(), small_suite(1, 1), fast_opts()).unwrap();
+        assert!(m.outcomes[0].completed_at.is_some());
+        assert_eq!(m.outcomes[0].n_tasks, 1);
+    }
+}

@@ -1,0 +1,338 @@
+//! PJRT runtime — loads the AOT-compiled monitor_step artifacts and
+//! executes them on the L3 hot path.
+//!
+//! `Engine` wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! One compiled executable per (W, K) bank-shape variant; variants are
+//! discovered through `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`).
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits protos with 64-bit ids the
+//! bundled xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json;
+
+/// Input/output layout of the monitor_step artifact (must match
+/// python/compile/model.py).
+pub const N_PARAMS: usize = 8;
+
+/// One (W, K) variant entry from the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Variant {
+    pub w: usize,
+    pub k: usize,
+    pub file: String,
+}
+
+/// Parsed artifacts manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub variants: Vec<Variant>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let body = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = json::parse(&body).map_err(|e| anyhow!("{e}"))?;
+        if doc.get("format").and_then(|f| f.as_str()) != Some("hlo-text") {
+            bail!("manifest format is not hlo-text");
+        }
+        let variants = doc
+            .get("variants")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing variants"))?
+            .iter()
+            .map(|v| -> Result<Variant> {
+                Ok(Variant {
+                    w: v.get("w").and_then(|x| x.as_usize()).ok_or_else(|| anyhow!("variant missing w"))?,
+                    k: v.get("k").and_then(|x| x.as_usize()).ok_or_else(|| anyhow!("variant missing k"))?,
+                    file: v
+                        .get("file")
+                        .and_then(|x| x.as_str())
+                        .ok_or_else(|| anyhow!("variant missing file"))?
+                        .to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if variants.is_empty() {
+            bail!("manifest has no variants");
+        }
+        Ok(Manifest { variants, dir: dir.to_path_buf() })
+    }
+
+    /// Smallest variant with w >= needed_w and k >= needed_k.
+    pub fn pick(&self, needed_w: usize, needed_k: usize) -> Option<&Variant> {
+        self.variants
+            .iter()
+            .filter(|v| v.w >= needed_w && v.k >= needed_k)
+            .min_by_key(|v| v.w * v.k)
+    }
+}
+
+/// Inputs to one monitor_step execution (row-major [W, K] matrices).
+#[derive(Debug, Clone)]
+pub struct StepInputs<'a> {
+    pub b_hat: &'a [f32],
+    pub pi: &'a [f32],
+    pub b_tilde: &'a [f32],
+    pub meas_mask: &'a [f32],
+    pub m_rem: &'a [f32],
+    pub slot_mask: &'a [f32],
+    pub d: &'a [f32],
+    /// [sigma_z2, sigma_v2, n_tot, alpha, beta, n_min, n_max, n_w_max]
+    pub params: [f32; N_PARAMS],
+}
+
+/// Outputs of one monitor_step execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepOutputs {
+    pub b_hat: Vec<f32>,
+    pub pi: Vec<f32>,
+    pub r: Vec<f32>,
+    pub s: Vec<f32>,
+    pub n_star: f32,
+    pub n_next: f32,
+}
+
+/// A compiled monitor_step executable for one (W, K) shape.
+pub struct Executable {
+    pub w: usize,
+    pub k: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executable").field("w", &self.w).field("k", &self.k).finish()
+    }
+}
+
+impl Executable {
+    /// Execute one monitoring step. Inputs must be exactly (w*k)-sized
+    /// matrices / w-sized vector, padded by the caller.
+    pub fn run(&self, inp: &StepInputs) -> Result<StepOutputs> {
+        let (w, k) = (self.w, self.k);
+        let wk = w * k;
+        for (name, buf) in [
+            ("b_hat", inp.b_hat),
+            ("pi", inp.pi),
+            ("b_tilde", inp.b_tilde),
+            ("meas_mask", inp.meas_mask),
+            ("m_rem", inp.m_rem),
+            ("slot_mask", inp.slot_mask),
+        ] {
+            if buf.len() != wk {
+                bail!("{name} has {} elements, want {wk}", buf.len());
+            }
+        }
+        if inp.d.len() != w {
+            bail!("d has {} elements, want {w}", inp.d.len());
+        }
+        // build literals straight from the raw bytes: vec1().reshape()
+        // would materialize each argument twice (perf pass, §Perf)
+        let as_bytes = |v: &[f32]| -> &[u8] {
+            // f32 slices reinterpret safely as bytes (align 4 -> 1)
+            unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, 4 * v.len()) }
+        };
+        let lit = |v: &[f32], dims: &[usize]| -> Result<xla::Literal> {
+            Ok(xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                dims,
+                as_bytes(v),
+            )?)
+        };
+        let args = [
+            lit(inp.b_hat, &[w, k])?,
+            lit(inp.pi, &[w, k])?,
+            lit(inp.b_tilde, &[w, k])?,
+            lit(inp.meas_mask, &[w, k])?,
+            lit(inp.m_rem, &[w, k])?,
+            lit(inp.slot_mask, &[w, k])?,
+            lit(inp.d, &[w])?,
+            lit(&inp.params, &[N_PARAMS])?,
+        ];
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != 6 {
+            bail!("expected 6-tuple output, got {}", parts.len());
+        }
+        let mut it = parts.into_iter();
+        let mut next = |_: &str| it.next().unwrap();
+        Ok(StepOutputs {
+            b_hat: next("b_hat").to_vec::<f32>()?,
+            pi: next("pi").to_vec::<f32>()?,
+            r: next("r").to_vec::<f32>()?,
+            s: next("s").to_vec::<f32>()?,
+            n_star: next("n_star").to_vec::<f32>()?[0],
+            n_next: next("n_next").to_vec::<f32>()?[0],
+        })
+    }
+}
+
+/// The PJRT engine: client + compiled executables, keyed by (W, K).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: BTreeMap<(usize, usize), Executable>,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("platform", &self.client.platform_name())
+            .field("variants", &self.manifest.variants)
+            .field("compiled", &self.compiled.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, manifest, compiled: BTreeMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Get (compiling on first use) the smallest executable covering
+    /// (needed_w, needed_k).
+    pub fn executable(&mut self, needed_w: usize, needed_k: usize) -> Result<&Executable> {
+        let variant = self
+            .manifest
+            .pick(needed_w, needed_k)
+            .ok_or_else(|| {
+                anyhow!("no artifact variant covers W={needed_w} K={needed_k}; re-run `make artifacts` with a larger variant")
+            })?
+            .clone();
+        let key = (variant.w, variant.k);
+        if !self.compiled.contains_key(&key) {
+            let path = self.manifest.dir.join(&variant.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.compiled
+                .insert(key, Executable { w: variant.w, k: variant.k, exe });
+        }
+        Ok(&self.compiled[&key])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // tests run from the crate root
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_loads_and_picks() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(!m.variants.is_empty());
+        let v = m.pick(8, 2).unwrap();
+        assert!(v.w >= 8 && v.k >= 2);
+        // smallest covering variant is chosen
+        let tiny = m.pick(1, 1).unwrap();
+        assert_eq!((tiny.w, tiny.k), (8, 2));
+        assert!(m.pick(100_000, 1).is_none());
+    }
+
+    #[test]
+    fn engine_runs_monitor_step_against_native_reference() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut eng = Engine::load(&artifacts_dir()).unwrap();
+        let exe = eng.executable(8, 2).unwrap();
+        let (w, k) = (exe.w, exe.k);
+        let wk = w * k;
+
+        // one active slot with one measurement; rest masked
+        let mut b_hat = vec![0.0f32; wk];
+        let pi = vec![0.0f32; wk];
+        let mut b_tilde = vec![0.0f32; wk];
+        let mut meas = vec![0.0f32; wk];
+        let mut m_rem = vec![0.0f32; wk];
+        let mut slot = vec![0.0f32; wk];
+        let mut d = vec![0.0f32; w];
+        b_hat[0] = 0.0;
+        b_tilde[0] = 10.0;
+        meas[0] = 1.0;
+        m_rem[0] = 100.0;
+        slot[0] = 1.0;
+        d[0] = 1000.0;
+        let params = [0.5, 0.5, 10.0, 5.0, 0.9, 10.0, 100.0, 10.0];
+        let out = exe
+            .run(&StepInputs {
+                b_hat: &b_hat,
+                pi: &pi,
+                b_tilde: &b_tilde,
+                meas_mask: &meas,
+                m_rem: &m_rem,
+                slot_mask: &slot,
+                d: &d,
+                params,
+            })
+            .unwrap();
+        // Kalman: pi_minus=0.5, kappa=0.5 -> b = 0 + 0.5*10 = 5
+        assert!((out.b_hat[0] - 5.0).abs() < 1e-5, "b={}", out.b_hat[0]);
+        assert!((out.pi[0] - 0.25).abs() < 1e-5);
+        // r = 100 * 5 = 500; s* = 500/1000 = 0.5 -> below beta*n_tot=9 so
+        // upscaled to 9 (eq. 14): s = 0.5 * (9/0.5) = 9
+        assert!((out.r[0] - 500.0).abs() < 1e-2);
+        assert!((out.n_star - 0.5).abs() < 1e-4);
+        assert!((out.s[0] - 9.0).abs() < 1e-3, "s={}", out.s[0]);
+        // AIMD: n_tot=10 > n_star=0.5 -> decrease: max(0.9*10, 10) = 10
+        assert!((out.n_next - 10.0).abs() < 1e-5);
+        // inactive slots untouched
+        assert!(out.b_hat[1..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn engine_rejects_wrong_sizes() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut eng = Engine::load(&artifacts_dir()).unwrap();
+        let exe = eng.executable(8, 2).unwrap();
+        let bad = vec![0.0f32; 3];
+        let ok = vec![0.0f32; exe.w * exe.k];
+        let d = vec![0.0f32; exe.w];
+        let r = exe.run(&StepInputs {
+            b_hat: &bad,
+            pi: &ok,
+            b_tilde: &ok,
+            meas_mask: &ok,
+            m_rem: &ok,
+            slot_mask: &ok,
+            d: &d,
+            params: [0.5, 0.5, 10.0, 5.0, 0.9, 10.0, 100.0, 10.0],
+        });
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! Cloud-storage substrate (the S3 stand-in, §II-C).
+//!
+//! Dithen uploads workload inputs/code to S3 and instances pull their
+//! chunk's inputs and push results back. For the control plane only the
+//! *transfer delay* matters (the paper measures ~27 % of billed time going
+//! to data transport), so this module is an object catalogue plus a
+//! deterministic bandwidth/latency delay model.
+
+use std::collections::BTreeMap;
+
+use crate::config::StorageCfg;
+
+/// One stored object (a media input, script, or result).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Object {
+    pub key: String,
+    pub size_bytes: u64,
+}
+
+/// Bucket-like object catalogue with prefix listing, mirroring the
+/// `getIterator('ListObjects')` usage in §II-D.
+#[derive(Debug, Default)]
+pub struct ObjectStore {
+    objects: BTreeMap<String, Object>,
+    cfg: StorageCfg,
+}
+
+impl ObjectStore {
+    pub fn new(cfg: StorageCfg) -> Self {
+        ObjectStore { objects: BTreeMap::new(), cfg }
+    }
+
+    pub fn put(&mut self, key: &str, size_bytes: u64) {
+        self.objects
+            .insert(key.to_string(), Object { key: key.to_string(), size_bytes });
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Object> {
+        self.objects.get(key)
+    }
+
+    pub fn delete(&mut self, key: &str) -> bool {
+        self.objects.remove(key).is_some()
+    }
+
+    /// List objects under a prefix (sorted by key, like S3).
+    pub fn list(&self, prefix: &str) -> Vec<&Object> {
+        self.objects
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(_, v)| v)
+            .collect()
+    }
+
+    pub fn count(&self, prefix: &str) -> usize {
+        self.list(prefix).len()
+    }
+
+    pub fn total_bytes(&self, prefix: &str) -> u64 {
+        self.list(prefix).iter().map(|o| o.size_bytes).sum()
+    }
+
+    /// Transfer time in seconds for `bytes` over one instance's share of
+    /// bandwidth, including per-request latency for `requests` objects.
+    pub fn transfer_time(&self, bytes: u64, requests: u64) -> f64 {
+        bytes as f64 / self.cfg.bandwidth_bps + requests as f64 * self.cfg.request_latency_s
+    }
+
+    pub fn cfg(&self) -> &StorageCfg {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ObjectStore {
+        ObjectStore::new(StorageCfg::default())
+    }
+
+    #[test]
+    fn put_get_delete() {
+        let mut s = store();
+        s.put("w1/input/a.jpg", 1000);
+        assert_eq!(s.get("w1/input/a.jpg").unwrap().size_bytes, 1000);
+        assert!(s.delete("w1/input/a.jpg"));
+        assert!(!s.delete("w1/input/a.jpg"));
+        assert!(s.get("w1/input/a.jpg").is_none());
+    }
+
+    #[test]
+    fn prefix_listing_is_exact() {
+        let mut s = store();
+        s.put("w1/input/a.jpg", 1);
+        s.put("w1/input/b.jpg", 2);
+        s.put("w1/output/a.out", 3);
+        s.put("w10/input/x.jpg", 4);
+        let keys: Vec<&str> = s.list("w1/input/").iter().map(|o| o.key.as_str()).collect();
+        assert_eq!(keys, vec!["w1/input/a.jpg", "w1/input/b.jpg"]);
+        assert_eq!(s.count("w1/"), 3);
+        assert_eq!(s.total_bytes("w1/input/"), 3);
+    }
+
+    #[test]
+    fn overwrite_replaces_size() {
+        let mut s = store();
+        s.put("k", 10);
+        s.put("k", 20);
+        assert_eq!(s.get("k").unwrap().size_bytes, 20);
+        assert_eq!(s.count(""), 1);
+    }
+
+    #[test]
+    fn transfer_time_scales_with_bytes_and_requests() {
+        let s = store();
+        let t1 = s.transfer_time(2_000_000, 1); // 1 s payload + latency
+        assert!((t1 - (1.0 + 0.06)).abs() < 1e-9);
+        let t2 = s.transfer_time(0, 10);
+        assert!((t2 - 0.6).abs() < 1e-9);
+    }
+}

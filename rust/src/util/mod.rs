@@ -1,0 +1,12 @@
+//! Self-contained utility substrates (no external deps beyond std).
+//!
+//! The offline vendor set ships neither rand, serde_json, clap nor
+//! criterion, so the pieces this crate needs — deterministic RNG, small
+//! statistics, a JSON subset parser, table/chart printers and a property-
+//! test helper — are implemented here and tested in place.
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,62 @@
+//! Tiny property-based testing helper (the vendor set has no proptest).
+//!
+//! `forall` runs a property over `n` random cases drawn from the crate's
+//! deterministic RNG; on failure it reports the failing case index and the
+//! seed so the case can be replayed exactly. Shrinking is intentionally
+//! out of scope — failures print enough context to debug directly.
+
+use super::rng::Rng;
+
+/// Run `prop` over `n` random cases. `gen` builds a case from an RNG;
+/// `prop` returns `Err(reason)` to fail. Panics with seed + case on error.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    n: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let root = Rng::new(seed);
+    for case in 0..n {
+        let mut rng = root.substream(case as u64);
+        let input = gen(&mut rng);
+        if let Err(why) = prop(&input) {
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case}): {why}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        forall("abs-nonneg", 1, 200, |r| r.gauss(0.0, 10.0), |x| {
+            if x.abs() >= 0.0 { Ok(()) } else { Err("negative abs".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn reports_failures() {
+        forall("always-fails", 2, 10, |r| r.f64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first: Vec<f64> = vec![];
+        forall("collect", 3, 5, |r| r.f64(), |x| {
+            first.push(*x);
+            Ok(())
+        });
+        let mut second: Vec<f64> = vec![];
+        forall("collect", 3, 5, |r| r.f64(), |x| {
+            second.push(*x);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,167 @@
+//! Small statistics toolbox used across estimators, metrics and benches.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation; 0.0 for len < 2.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile (nearest-rank, p in [0, 100]); NaN for empty input.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Mean absolute error between two equal-length series.
+pub fn mae(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f64>() / a.len() as f64
+}
+
+/// Ordinary least squares over (x, y): returns (slope, intercept).
+/// Degenerate inputs (len < 2 or zero x-variance) return slope 0 through
+/// the mean.
+pub fn linear_regression(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if x.len() < 2 {
+        return (0.0, mean(y));
+    }
+    let mx = mean(x);
+    let my = mean(y);
+    let sxx: f64 = x.iter().map(|v| (v - mx) * (v - mx)).sum();
+    if sxx == 0.0 {
+        return (0.0, my);
+    }
+    let sxy: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let slope = sxy / sxx;
+    (slope, my - slope * mx * (n / n))
+}
+
+/// Extrapolate a least-squares line fitted to the last `window` points of
+/// `y` (equally spaced at 1.0) `steps` steps beyond the final point.
+/// This is the "LR" capacity controller of Gandhi / Krioukov et al.
+pub fn lr_extrapolate(y: &[f64], window: usize, steps: f64) -> f64 {
+    let tail = if y.len() > window { &y[y.len() - window..] } else { y };
+    let xs: Vec<f64> = (0..tail.len()).map(|i| i as f64).collect();
+    let (m, b) = linear_regression(&xs, tail);
+    m * (tail.len() as f64 - 1.0 + steps) + b
+}
+
+/// Welford online mean/variance accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Online {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn std_basic() {
+        assert!((std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(std(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn percentile_basic() {
+        let v = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert_eq!(percentile(&v, 100.0), 5.0);
+    }
+
+    #[test]
+    fn mae_basic() {
+        assert_eq!(mae(&[1.0, 2.0], &[2.0, 4.0]), 1.5);
+    }
+
+    #[test]
+    fn regression_recovers_line() {
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 * v + 1.0).collect();
+        let (m, b) = linear_regression(&x, &y);
+        assert!((m - 3.0).abs() < 1e-9 && (b - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn regression_degenerate() {
+        let (m, b) = linear_regression(&[1.0], &[5.0]);
+        assert_eq!((m, b), (0.0, 5.0));
+        let (m, b) = linear_regression(&[2.0, 2.0], &[1.0, 3.0]);
+        assert_eq!(m, 0.0);
+        assert_eq!(b, 2.0);
+    }
+
+    #[test]
+    fn lr_extrapolation_continues_trend() {
+        let y: Vec<f64> = (0..6).map(|i| 2.0 * i as f64).collect(); // 0,2,..,10
+        let next = lr_extrapolate(&y, 6, 1.0);
+        assert!((next - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [1.0, 4.0, 2.0, 8.0, 5.0];
+        let mut o = Online::default();
+        for &x in &xs {
+            o.push(x);
+        }
+        assert!((o.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((o.std() - std(&xs)).abs() < 1e-12);
+        assert_eq!(o.count(), 5);
+    }
+}

@@ -1,0 +1,214 @@
+//! ASCII table / series printers for the paper-figure harness.
+//!
+//! Every `dithen repro <exp>` prints its rows through this module so the
+//! output format is uniform and easy to diff against EXPERIMENTS.md.
+
+/// Simple column-aligned table.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table { header: header.into_iter().map(Into::into).collect(), rows: vec![] }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = w[i].max(h.len());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let sep: String = w
+            .iter()
+            .map(|n| format!("+{}", "-".repeat(n + 2)))
+            .collect::<String>()
+            + "+";
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("| {:<width$} ", c, width = w[i]))
+                .collect::<String>()
+                + "|"
+        };
+        let mut out = String::new();
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format seconds as "XXm YYs" (paper's Table II convention).
+pub fn fmt_mmss(secs: f64) -> String {
+    let s = secs.round() as i64;
+    format!("{:02}m {:02}s", s / 60, s % 60)
+}
+
+/// Format seconds as "H hr M min".
+pub fn fmt_hm(secs: f64) -> String {
+    let s = secs.round() as i64;
+    format!("{} hr {:02} min", s / 3600, (s % 3600) / 60)
+}
+
+/// Render an (x, y) series as a coarse ASCII line chart: used by the
+/// `repro figN` commands to show curve *shape* in the terminal, alongside
+/// the CSV dump that carries the exact values.
+pub fn ascii_chart(title: &str, series: &[(&str, &[(f64, f64)])], width: usize, height: usize) -> String {
+    let mut out = format!("== {title} ==\n");
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (_, pts) in series {
+        for &(x, y) in *pts {
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+    }
+    if !xmin.is_finite() || xmax <= xmin {
+        return out + "(no data)\n";
+    }
+    if ymax <= ymin {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![b' '; width]; height];
+    let marks: &[u8] = b"*o+x#@%&";
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for &(x, y) in *pts {
+            let cx = ((x - xmin) / (xmax - xmin) * (width as f64 - 1.0)).round() as usize;
+            let cy = ((y - ymin) / (ymax - ymin) * (height as f64 - 1.0)).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = marks[si % marks.len()];
+        }
+    }
+    out.push_str(&format!("y: [{ymin:.4}, {ymax:.4}]\n"));
+    for row in grid {
+        out.push('|');
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("x: [{xmin:.1}, {xmax:.1}]   "));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("{}={} ", marks[si % marks.len()] as char, name));
+    }
+    out.push('\n');
+    out
+}
+
+/// Write series to a CSV file (one x column, one column per series).
+pub fn write_csv(
+    path: &str,
+    xlabel: &str,
+    series: &[(&str, &[(f64, f64)])],
+) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    // union of x values, sorted
+    let mut xs: Vec<f64> = series.iter().flat_map(|(_, p)| p.iter().map(|q| q.0)).collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.dedup();
+    write!(f, "{xlabel}")?;
+    for (name, _) in series {
+        write!(f, ",{name}")?;
+    }
+    writeln!(f)?;
+    for x in xs {
+        write!(f, "{x}")?;
+        for (_, pts) in series {
+            // last point at or before x (step interpolation)
+            let v = pts
+                .iter()
+                .take_while(|p| p.0 <= x)
+                .last()
+                .map(|p| p.1);
+            match v {
+                Some(v) => write!(f, ",{v}")?,
+                None => write!(f, ",")?,
+            }
+        }
+        writeln!(f)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["name", "value"]);
+        t.row(vec!["a", "1"]).row(vec!["long-name", "22"]);
+        let out = t.render();
+        assert!(out.contains("| name      | value |"));
+        assert!(out.contains("| long-name | 22    |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_mmss(825.0), "13m 45s");
+        assert_eq!(fmt_hm(7620.0), "2 hr 07 min");
+    }
+
+    #[test]
+    fn chart_handles_empty_and_flat() {
+        let empty: &[(f64, f64)] = &[];
+        let out = ascii_chart("t", &[("s", empty)], 10, 4);
+        assert!(out.contains("no data"));
+        let flat = [(0.0, 1.0), (1.0, 1.0)];
+        let out = ascii_chart("t", &[("s", &flat)], 10, 4);
+        assert!(out.contains('*'));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let a = [(0.0, 1.0), (2.0, 3.0)];
+        let path = "/tmp/dithen_test_csv.csv";
+        write_csv(path, "t", &[("a", &a)]).unwrap();
+        let body = std::fs::read_to_string(path).unwrap();
+        assert!(body.starts_with("t,a\n"));
+        assert!(body.contains("2,3"));
+    }
+}

@@ -1,0 +1,178 @@
+//! Application execution-time models — the stand-ins for the real
+//! multimedia binaries the paper runs (Viola-Jones, FFMPEG, OpenCV BRISK,
+//! Matlab SIFT, ImageMagick JS, CNN ensembles, word histogram).
+//!
+//! The control plane only ever observes per-task *durations* (CUSs), so a
+//! faithful substitute must reproduce the statistical properties the
+//! paper's estimators fight against:
+//!   * data-dependent, right-skewed durations (lognormal per item);
+//!   * per-chunk environment-setup "deadband" time — dominant for
+//!     Matlab-compiled SIFT (§II-E-1), mandating large chunks;
+//!   * non-representative footprinting: the paper reports initial
+//!     estimates up to 50 % above the converged value for face detection
+//!     and transcoding; we model it as a bias factor applied to the items
+//!     sampled by the footprinting stage.
+//!
+//! ImageMagick means are derived from Table IV's Lambda billing backwards
+//! (billed GB-seconds -> wall seconds at 0.5 core -> full-core seconds):
+//! blur 1.42 s, convolve 0.50 s, rotate 0.16 s per image.
+
+use crate::util::rng::Rng;
+
+/// Application classes appearing in §V.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum App {
+    /// Viola-Jones face detection (C++), §V-A.
+    FaceDetection,
+    /// FFMPEG video transcoding, §V-A.
+    Transcode,
+    /// OpenCV BRISK keypoint extraction, §V-A.
+    Brisk,
+    /// Matlab-compiled SIFT (deploytool + MCR), §V-A.
+    SiftMatlab,
+    /// ImageMagick blur (JS build), §V-D.
+    ImBlur,
+    /// ImageMagick convolve, §V-D.
+    ImConvolve,
+    /// ImageMagick rotate, §V-D.
+    ImRotate,
+    /// Deep-CNN ensemble image classification (Split step), §V-E.
+    CnnClassify,
+    /// Word-histogram text processing (Split step), §V-E.
+    WordHistogram,
+}
+
+/// Statistical model of one application's per-item behaviour.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AppModel {
+    pub app: App,
+    pub name: &'static str,
+    /// Mean full-core seconds (CUSs) per media item.
+    pub mean_cus: f64,
+    /// Coefficient of variation of per-item duration (data dependence).
+    pub cv: f64,
+    /// Environment-setup time per chunk invocation, seconds ("deadband").
+    pub deadband_s: f64,
+    /// Mean input size per item, bytes.
+    pub mean_item_bytes: f64,
+    /// CV of item size.
+    pub size_cv: f64,
+    /// Multiplier applied to footprint-sampled durations (sampling bias).
+    pub footprint_bias: f64,
+}
+
+/// Catalogue of all §V application models.
+pub const APP_MODELS: &[AppModel] = &[
+    AppModel { app: App::FaceDetection, name: "face-detection", mean_cus: 2.0, cv: 0.6, deadband_s: 0.5, mean_item_bytes: 1.5e6, size_cv: 0.6, footprint_bias: 1.5 },
+    AppModel { app: App::Transcode, name: "transcode", mean_cus: 60.0, cv: 0.5, deadband_s: 1.0, mean_item_bytes: 40e6, size_cv: 0.5, footprint_bias: 1.5 },
+    AppModel { app: App::Brisk, name: "brisk", mean_cus: 1.0, cv: 0.4, deadband_s: 0.3, mean_item_bytes: 1.2e6, size_cv: 0.5, footprint_bias: 1.1 },
+    AppModel { app: App::SiftMatlab, name: "sift-matlab", mean_cus: 6.0, cv: 0.4, deadband_s: 30.0, mean_item_bytes: 2.0e6, size_cv: 0.5, footprint_bias: 1.2 },
+    AppModel { app: App::ImBlur, name: "im-blur", mean_cus: 1.42, cv: 0.5, deadband_s: 0.2, mean_item_bytes: 1.0e6, size_cv: 0.8, footprint_bias: 1.1 },
+    AppModel { app: App::ImConvolve, name: "im-convolve", mean_cus: 0.50, cv: 0.5, deadband_s: 0.2, mean_item_bytes: 1.0e6, size_cv: 0.8, footprint_bias: 1.1 },
+    AppModel { app: App::ImRotate, name: "im-rotate", mean_cus: 0.16, cv: 0.5, deadband_s: 0.2, mean_item_bytes: 1.0e6, size_cv: 0.8, footprint_bias: 1.1 },
+    AppModel { app: App::CnnClassify, name: "cnn-classify", mean_cus: 4.0, cv: 0.3, deadband_s: 10.0, mean_item_bytes: 0.15e6, size_cv: 0.4, footprint_bias: 1.15 },
+    AppModel { app: App::WordHistogram, name: "word-histogram", mean_cus: 0.8, cv: 0.7, deadband_s: 0.3, mean_item_bytes: 0.4e6, size_cv: 1.0, footprint_bias: 1.05 },
+];
+
+pub fn model(app: App) -> &'static AppModel {
+    APP_MODELS.iter().find(|m| m.app == app).expect("unknown app")
+}
+
+impl AppModel {
+    /// Workload-level mean CUS: each submitted workload has its own
+    /// characteristic item cost (different codecs, image resolutions...),
+    /// drawn once per workload around the app mean.
+    pub fn workload_mean(&self, rng: &mut Rng) -> f64 {
+        self.mean_cus * rng.uniform(0.7, 1.4)
+    }
+
+    /// Full-core seconds for one item. Deterministic per rng substream.
+    pub fn task_cus(&self, workload_mean: f64, rng: &mut Rng) -> f64 {
+        rng.lognormal_mean_cv(workload_mean, self.cv).max(1e-3)
+    }
+
+    /// Input bytes for one item.
+    pub fn item_bytes(&self, rng: &mut Rng) -> u64 {
+        rng.lognormal_mean_cv(self.mean_item_bytes, self.size_cv).max(1.0) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalogue_covers_all_apps() {
+        for app in [
+            App::FaceDetection,
+            App::Transcode,
+            App::Brisk,
+            App::SiftMatlab,
+            App::ImBlur,
+            App::ImConvolve,
+            App::ImRotate,
+            App::CnnClassify,
+            App::WordHistogram,
+        ] {
+            assert_eq!(model(app).app, app);
+        }
+        assert_eq!(APP_MODELS.len(), 9);
+    }
+
+    #[test]
+    fn imagemagick_means_derived_from_table_iv() {
+        // Lambda Table IV reverse-engineering: blur must be the heaviest,
+        // rotate the lightest, by the paper's ratios (~2.8x and ~9x).
+        let blur = model(App::ImBlur).mean_cus;
+        let conv = model(App::ImConvolve).mean_cus;
+        let rot = model(App::ImRotate).mean_cus;
+        assert!(blur > conv && conv > rot);
+        assert!((blur / conv - 2.84).abs() < 0.1);
+        assert!((blur / rot - 8.9).abs() < 0.3);
+    }
+
+    #[test]
+    fn sift_deadband_dominates_single_items() {
+        // §II-E-1: Matlab setup time dwarfs one item's compute.
+        let m = model(App::SiftMatlab);
+        assert!(m.deadband_s > m.mean_cus);
+    }
+
+    #[test]
+    fn task_cus_mean_converges_to_workload_mean() {
+        let m = model(App::FaceDetection);
+        let mut rng = Rng::new(5);
+        let wm = 2.5;
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| m.task_cus(wm, &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - wm).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn task_cus_is_positive_and_deterministic() {
+        let m = model(App::Transcode);
+        let root = Rng::new(9);
+        let a = m.task_cus(60.0, &mut root.substream(3));
+        let b = m.task_cus(60.0, &mut root.substream(3));
+        assert_eq!(a, b);
+        assert!(a > 0.0);
+    }
+
+    #[test]
+    fn workload_mean_within_bounds() {
+        let m = model(App::Brisk);
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let wm = m.workload_mean(&mut rng);
+            assert!(wm >= m.mean_cus * 0.7 - 1e-9 && wm <= m.mean_cus * 1.4 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn footprint_bias_reflects_paper_anecdote() {
+        // face detection / transcoding footprint estimates ~50% high
+        assert_eq!(model(App::FaceDetection).footprint_bias, 1.5);
+        assert_eq!(model(App::Transcode).footprint_bias, 1.5);
+        assert!(model(App::WordHistogram).footprint_bias < 1.1);
+    }
+}

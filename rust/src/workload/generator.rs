@@ -1,0 +1,194 @@
+//! The §V-A experimental workload suite (Fig. 5) and §V-D/E workloads.
+//!
+//! Thirty workloads, introduced one every five minutes, in a fixed order:
+//!   * 8 Viola-Jones face detection, 1–1000 images each;
+//!   * 8 FFMPEG transcoding: six with 1–20 videos plus two large ones
+//!     (200 and 300 videos) to stress sudden demand spikes;
+//!   * 7 OpenCV BRISK feature extraction;
+//!   * 7 Matlab-compiled SIFT (long deadband).
+//!
+//! Counts are random per workload but deterministic in the suite seed, so
+//! `repro fig5` regenerates the same bar chart every run.
+
+use crate::util::rng::Rng;
+use crate::workload::apps::App;
+use crate::workload::spec::{Mode, WorkloadSpec};
+
+/// Interval between workload arrivals (§V-A: "once every five minutes").
+pub const ARRIVAL_INTERVAL_S: u64 = 300;
+
+/// Generate the 30-workload suite of Fig. 5.
+pub fn paper_suite(seed: u64) -> Vec<WorkloadSpec> {
+    let rng = Rng::new(seed ^ 0xF16_5);
+    let mut counts = Vec::new();
+
+    // 8 face detection: 1..=1000 images
+    let mut crng = rng.substream(1);
+    for _ in 0..8 {
+        counts.push((App::FaceDetection, crng.int(1, 1000) as usize));
+    }
+    // 8 transcoding: 6 small (1..=20) + the 200- and 300-video spikes
+    for _ in 0..6 {
+        counts.push((App::Transcode, crng.int(1, 20) as usize));
+    }
+    counts.push((App::Transcode, 200));
+    counts.push((App::Transcode, 300));
+    // 7 BRISK
+    for _ in 0..7 {
+        counts.push((App::Brisk, crng.int(50, 800) as usize));
+    }
+    // 7 SIFT
+    for _ in 0..7 {
+        counts.push((App::SiftMatlab, crng.int(50, 800) as usize));
+    }
+
+    // interleave the classes (the paper submits mixed types over time);
+    // deterministic shuffle, but keep the two transcode spikes around the
+    // middle of the arrival order so they hit a warm platform (§V-A uses
+    // them to test responsiveness under sudden load).
+    let mut order: Vec<usize> = (0..counts.len()).collect();
+    let mut srng = rng.substream(2);
+    srng.shuffle(&mut order);
+    // move spike workloads (indices 14, 15 in `counts`) to arrival slots 12 and 18
+    let spike_a = order.iter().position(|&i| i == 14).unwrap();
+    let spike_b = order.iter().position(|&i| i == 15).unwrap();
+    order.swap(spike_a, 12);
+    let spike_b = if spike_b == 12 { spike_a } else { spike_b };
+    order.swap(spike_b, 18);
+
+    order
+        .iter()
+        .enumerate()
+        .map(|(slot, &ci)| {
+            let (app, n) = counts[ci];
+            WorkloadSpec::generate(slot, app, n, None, &rng)
+        })
+        .collect()
+}
+
+/// §V-D: one 25 000-image ImageMagick workload per function.
+pub fn lambda_suite(seed: u64, n_images: usize) -> Vec<WorkloadSpec> {
+    let rng = Rng::new(seed ^ 0x1A3B_DA);
+    vec![
+        WorkloadSpec::generate(0, App::ImBlur, n_images, None, &rng),
+        WorkloadSpec::generate(1, App::ImConvolve, n_images, None, &rng),
+        WorkloadSpec::generate(2, App::ImRotate, n_images, None, &rng),
+    ]
+}
+
+/// §V-E example 1: deep-CNN ensemble classification as Split–Merge.
+/// Holidays dataset (1491 images) + 50 000 ImageNet images.
+pub fn cnn_splitmerge(seed: u64) -> WorkloadSpec {
+    let rng = Rng::new(seed ^ 0xC44);
+    WorkloadSpec::generate_mode(
+        0,
+        App::CnnClassify,
+        1491 + 5000, // scaled 10x down from 50k to keep sim runtime sane;
+        // scaling is uniform so cost *shape* (Fig. 10) is preserved
+        Mode::SplitMerge { merge_frac: 0.05 },
+        None,
+        &rng,
+    )
+}
+
+/// §V-E example 2: word-histogram over ~14 000 Gutenberg texts (5.5 GB).
+pub fn wordcount_splitmerge(seed: u64) -> WorkloadSpec {
+    let rng = Rng::new(seed ^ 0x90D);
+    WorkloadSpec::generate_mode(
+        0,
+        App::WordHistogram,
+        14_000,
+        Mode::SplitMerge { merge_frac: 0.03 },
+        None,
+        &rng,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_paper_composition() {
+        let suite = paper_suite(1);
+        assert_eq!(suite.len(), 30);
+        let count = |app: App| suite.iter().filter(|w| w.app == app).count();
+        assert_eq!(count(App::FaceDetection), 8);
+        assert_eq!(count(App::Transcode), 8);
+        assert_eq!(count(App::Brisk), 7);
+        assert_eq!(count(App::SiftMatlab), 7);
+    }
+
+    #[test]
+    fn spikes_present_and_positioned() {
+        let suite = paper_suite(1);
+        let sizes: Vec<usize> = suite
+            .iter()
+            .filter(|w| w.app == App::Transcode)
+            .map(|w| w.n_tasks())
+            .collect();
+        assert!(sizes.contains(&200) && sizes.contains(&300));
+        // the spike workloads arrive mid-experiment
+        let spike_slots: Vec<usize> = suite
+            .iter()
+            .filter(|w| w.n_tasks() >= 200 && w.app == App::Transcode)
+            .map(|w| w.id)
+            .collect();
+        assert_eq!(spike_slots, vec![12, 18]);
+    }
+
+    #[test]
+    fn face_detection_counts_in_range() {
+        let suite = paper_suite(2);
+        for w in suite.iter().filter(|w| w.app == App::FaceDetection) {
+            assert!((1..=1000).contains(&w.n_tasks()));
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = paper_suite(7);
+        let b = paper_suite(7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.app, y.app);
+            assert_eq!(x.n_tasks(), y.n_tasks());
+        }
+        let c = paper_suite(8);
+        let same = a.iter().zip(&c).all(|(x, y)| x.n_tasks() == y.n_tasks());
+        assert!(!same);
+    }
+
+    #[test]
+    fn ids_are_arrival_slots() {
+        let suite = paper_suite(3);
+        for (i, w) in suite.iter().enumerate() {
+            assert_eq!(w.id, i);
+        }
+    }
+
+    #[test]
+    fn lambda_suite_is_three_functions() {
+        let s = lambda_suite(1, 1000);
+        assert_eq!(s.len(), 3);
+        assert!(s.iter().all(|w| w.n_tasks() == 1000));
+    }
+
+    #[test]
+    fn splitmerge_specs_are_splitmerge() {
+        assert!(matches!(cnn_splitmerge(1).mode, Mode::SplitMerge { .. }));
+        assert!(matches!(wordcount_splitmerge(1).mode, Mode::SplitMerge { .. }));
+        assert_eq!(wordcount_splitmerge(1).n_tasks(), 14_000);
+    }
+
+    #[test]
+    fn total_cus_budget_plausible_for_paper_scale() {
+        // The whole suite should land in the tens of thousands of CUSs —
+        // the scale a ~dozen m3.medium instances chew through in ~2 h.
+        let suite = paper_suite(1);
+        let total: f64 = suite.iter().map(|w| w.total_true_cus()).sum();
+        assert!(
+            (20_000.0..200_000.0).contains(&total),
+            "total CUS {total} out of plausible band"
+        );
+    }
+}

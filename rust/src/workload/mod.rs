@@ -1,0 +1,12 @@
+//! Workload substrate: application duration models, workload specs, the
+//! paper's experimental suites, and Split–Merge structure.
+
+pub mod apps;
+pub mod generator;
+pub mod spec;
+
+pub use apps::{model as app_model, App, AppModel, APP_MODELS};
+pub use generator::{
+    cnn_splitmerge, lambda_suite, paper_suite, wordcount_splitmerge, ARRIVAL_INTERVAL_S,
+};
+pub use spec::{Mode, TaskSpec, WorkloadSpec};

@@ -1,0 +1,192 @@
+//! Workload specifications (Fig. 2's structure, §II-B's processing modes).
+//!
+//! A workload = application code + N independently-processable media
+//! inputs (basic mode), optionally with a Merge step (advanced
+//! Split–Merge mode). Tasks carry pre-drawn true durations and sizes so
+//! every run is deterministic in the master seed; the platform only ever
+//! *observes* durations through task execution, never reads them
+//! directly.
+
+use crate::util::rng::Rng;
+use crate::workload::apps::{model, App, AppModel};
+
+/// Processing mode (§II-B-1 / §II-B-2).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Mode {
+    /// Every input processed independently; results to storage.
+    Basic,
+    /// Split step over inputs + Merge step aggregating the results on a
+    /// designated instance (main_split.sh / main_merge.sh).
+    SplitMerge {
+        /// Merge compute time as a fraction of total split CUS.
+        merge_frac: f64,
+    },
+}
+
+/// One media-processing task (one input item).
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    /// True full-core seconds this item needs (hidden from the platform).
+    pub true_cus: f64,
+    /// Input size in bytes.
+    pub bytes: u64,
+    /// Media-type index within the workload.
+    pub media_type: usize,
+}
+
+/// A complete workload specification.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub id: usize,
+    pub app: App,
+    pub name: String,
+    pub mode: Mode,
+    /// Number of media types (paper workloads: 1).
+    pub n_types: usize,
+    pub tasks: Vec<TaskSpec>,
+    /// True mean CUS per item per media type (ground truth for MAE).
+    pub true_mean_cus: Vec<f64>,
+    /// Requested TTC in seconds (None = platform allocates).
+    pub requested_ttc: Option<u64>,
+}
+
+impl WorkloadSpec {
+    /// Generate a single-type workload of `n_items` for `app`.
+    /// Deterministic in (seed-derived rng, id).
+    pub fn generate(
+        id: usize,
+        app: App,
+        n_items: usize,
+        requested_ttc: Option<u64>,
+        rng: &Rng,
+    ) -> WorkloadSpec {
+        Self::generate_mode(id, app, n_items, Mode::Basic, requested_ttc, rng)
+    }
+
+    pub fn generate_mode(
+        id: usize,
+        app: App,
+        n_items: usize,
+        mode: Mode,
+        requested_ttc: Option<u64>,
+        rng: &Rng,
+    ) -> WorkloadSpec {
+        let m: &AppModel = model(app);
+        let mut wrng = rng.substream(0x60D0 + id as u64);
+        let wmean = m.workload_mean(&mut wrng);
+        let tasks: Vec<TaskSpec> = (0..n_items)
+            .map(|t| {
+                let mut trng = wrng.substream(t as u64);
+                TaskSpec {
+                    true_cus: m.task_cus(wmean, &mut trng),
+                    bytes: m.item_bytes(&mut trng),
+                    media_type: 0,
+                }
+            })
+            .collect();
+        WorkloadSpec {
+            id,
+            app,
+            name: format!("w{id:02}-{}", m.name),
+            mode,
+            n_types: 1,
+            tasks,
+            true_mean_cus: vec![wmean],
+            requested_ttc,
+        }
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Total input bytes (the Fig. 5 y-axis).
+    pub fn total_bytes(&self) -> u64 {
+        self.tasks.iter().map(|t| t.bytes).sum()
+    }
+
+    /// Total true CUSs (used by the lower-bound cost).
+    pub fn total_true_cus(&self) -> f64 {
+        let base: f64 = self.tasks.iter().map(|t| t.true_cus).sum();
+        match self.mode {
+            Mode::Basic => base,
+            Mode::SplitMerge { merge_frac } => base * (1.0 + merge_frac),
+        }
+    }
+
+    /// Empirical mean item duration per media type — the "final measured
+    /// value" the paper's Table II MAE is computed against.
+    pub fn empirical_mean_cus(&self, media_type: usize) -> f64 {
+        let xs: Vec<f64> = self
+            .tasks
+            .iter()
+            .filter(|t| t.media_type == media_type)
+            .map(|t| t.true_cus)
+            .collect();
+        crate::util::stats::mean(&xs)
+    }
+
+    /// The application model behind this workload.
+    pub fn app_model(&self) -> &'static AppModel {
+        model(self.app)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let rng = Rng::new(11);
+        let a = WorkloadSpec::generate(3, App::FaceDetection, 100, None, &rng);
+        let b = WorkloadSpec::generate(3, App::FaceDetection, 100, None, &rng);
+        assert_eq!(a.tasks.len(), b.tasks.len());
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.true_cus, y.true_cus);
+            assert_eq!(x.bytes, y.bytes);
+        }
+    }
+
+    #[test]
+    fn different_ids_differ() {
+        let rng = Rng::new(11);
+        let a = WorkloadSpec::generate(1, App::Brisk, 50, None, &rng);
+        let b = WorkloadSpec::generate(2, App::Brisk, 50, None, &rng);
+        assert_ne!(a.tasks[0].true_cus, b.tasks[0].true_cus);
+    }
+
+    #[test]
+    fn empirical_mean_tracks_workload_mean() {
+        let rng = Rng::new(4);
+        let w = WorkloadSpec::generate(0, App::Transcode, 2000, None, &rng);
+        let emp = w.empirical_mean_cus(0);
+        let true_mean = w.true_mean_cus[0];
+        assert!((emp / true_mean - 1.0).abs() < 0.1, "emp={emp} true={true_mean}");
+    }
+
+    #[test]
+    fn split_merge_adds_merge_cost() {
+        let rng = Rng::new(5);
+        let basic = WorkloadSpec::generate(0, App::CnnClassify, 100, None, &rng);
+        let sm = WorkloadSpec::generate_mode(
+            0,
+            App::CnnClassify,
+            100,
+            Mode::SplitMerge { merge_frac: 0.1 },
+            None,
+            &rng,
+        );
+        assert!((sm.total_true_cus() / basic.total_true_cus() - 1.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn totals_are_positive() {
+        let rng = Rng::new(6);
+        let w = WorkloadSpec::generate(7, App::SiftMatlab, 10, Some(3600), &rng);
+        assert!(w.total_bytes() > 0);
+        assert!(w.total_true_cus() > 0.0);
+        assert_eq!(w.requested_ttc, Some(3600));
+        assert_eq!(w.n_tasks(), 10);
+    }
+}
