@@ -4,12 +4,10 @@
 
 mod common;
 
-use std::collections::BTreeMap;
-
 use dithen::cloud::Market;
 use dithen::config::{MarketCfg, StorageCfg};
 use dithen::coordinator::Tracker;
-use dithen::db::TaskDb;
+use dithen::db::{legacy::LegacyTaskDb, TaskDb};
 use dithen::lci::execute_chunk;
 use dithen::sim::{Engine, Event};
 use dithen::storage::ObjectStore;
@@ -22,9 +20,22 @@ fn main() {
         Market::new(MarketCfg::default(), 7, 24 * 91)
     });
 
-    // task DB: insert + claim + complete cycle for 10k tasks
-    common::bench("db/10k_task_lifecycle", 1, 30, || {
+    // task DB: insert + claim + complete cycle for 10k tasks —
+    // flat arena (current) vs the seed's BTreeMap store (baseline)
+    common::bench("db/10k_task_lifecycle/arena", 1, 30, || {
         let mut db = TaskDb::new();
+        for t in 0..10_000 {
+            db.insert(0, 0, t);
+        }
+        db.reserve_measurements(0);
+        for t in 0..10_000 {
+            db.claim((0, t), 1);
+            db.complete((0, t), 1.0, t as u64, 0);
+        }
+        db.workload_complete(0)
+    });
+    common::bench("db/10k_task_lifecycle/legacy", 1, 30, || {
+        let mut db = LegacyTaskDb::new();
         for t in 0..10_000 {
             db.insert(0, 0, t);
         }
@@ -35,10 +46,32 @@ fn main() {
         db.workload_complete(0)
     });
 
+    // the GCI-tick measurement query on a 50k-row workload: windowed
+    // log slice (arena) vs full-table scan (legacy)
+    let mut adb = TaskDb::new();
+    let mut ldb = LegacyTaskDb::new();
+    for t in 0..50_000 {
+        adb.insert(0, t % 2, t);
+        ldb.insert(0, t % 2, t);
+    }
+    adb.reserve_measurements(0);
+    for t in 0..50_000 {
+        adb.claim((0, t), 1);
+        adb.complete((0, t), 1.0, t as u64, 0);
+        ldb.claim((0, t), 1);
+        ldb.complete((0, t), 1.0, t as u64, 0);
+    }
+    common::bench("db/50k_meas_window/arena", 10, 2000, || {
+        adb.measurements_window(0, 0, 40_000, 40_060).len()
+    });
+    common::bench("db/50k_meas_window/legacy", 2, 50, || {
+        ldb.measurements_between(0, 0, 40_000, 40_060).len()
+    });
+
     // tracker: 64 workloads, 1000 tick+assign cycles
     common::bench("tracker/64wl_1k_cycles", 2, 50, || {
         let mut tr = Tracker::new(10.0);
-        let rates: BTreeMap<usize, f64> = (0..64).map(|w| (w, 0.7)).collect();
+        let rates: Vec<f64> = vec![0.7; 64];
         for w in 0..64usize {
             tr.register(w);
             tr.set_pending(w, true);

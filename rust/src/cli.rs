@@ -4,6 +4,8 @@
 //! ```text
 //! dithen repro <exp|all>      regenerate a paper table/figure (see list)
 //! dithen run [options]        run the platform on the paper suite
+//! dithen sweep <grid>         parallel experiment grid (cost|estimators|seeds)
+//! dithen bench-report         measure tasks/s, write BENCH json
 //! dithen list                 list experiment ids
 //! dithen market               print current simulated spot prices
 //! dithen --help
@@ -11,7 +13,8 @@
 //!
 //! Common options: `--config <file>`, `--set k=v` (repeatable),
 //! `--policy <aimd|reactive|mwa|lr|as1|as10>`, `--estimator
-//! <kalman|adhoc|arma>`, `--ttc <seconds>`, `--seed <n>`, `--native`.
+//! <kalman|adhoc|arma>`, `--ttc <seconds>`, `--seed <n>`, `--native`,
+//! `--threads <n>`, `--out <file>`.
 
 use crate::config::Config;
 use crate::coordinator::PolicyKind;
@@ -28,6 +31,8 @@ USAGE:
 COMMANDS:
     repro <exp|all>   regenerate a paper table/figure (fig5..fig12, table2..table5)
     run               run the platform on the 30-workload paper suite
+    sweep <grid>      run an experiment grid across cores: cost | estimators | seeds
+    bench-report      measure end-to-end tasks/s + DB ops/s, write a JSON report
     list              list experiment ids
     market            print the simulated spot-price snapshot
 
@@ -39,6 +44,9 @@ OPTIONS:
     --ttc <seconds>        fixed per-workload TTC (0 = best effort)
     --seed <n>             master seed
     --native               force the native estimator bank (skip XLA)
+    --threads <n>          worker threads for sweep/bench-report (default: cores)
+    --out <file>           bench-report output path (default: BENCH_PR1.json)
+    --smoke                bench-report: tiny CI-sized grid instead of the full one
     -h, --help             show this help
 ";
 
@@ -54,6 +62,9 @@ pub struct Cli {
     pub ttc: Option<u64>,
     pub seed: Option<u64>,
     pub native: bool,
+    pub threads: Option<usize>,
+    pub out: Option<String>,
+    pub smoke: bool,
     pub help: bool,
 }
 
@@ -94,6 +105,13 @@ pub fn parse(args: &[String]) -> Result<Cli, CliError> {
                 cli.seed = Some(v.parse().map_err(|_| CliError(format!("bad --seed '{v}'")))?);
             }
             "--native" => cli.native = true,
+            "--threads" => {
+                let v = need_value(&mut it, "--threads")?;
+                cli.threads =
+                    Some(v.parse().map_err(|_| CliError(format!("bad --threads '{v}'")))?);
+            }
+            "--out" => cli.out = Some(need_value(&mut it, "--out")?),
+            "--smoke" => cli.smoke = true,
             flag if flag.starts_with('-') => {
                 return Err(CliError(format!("unknown flag '{flag}'")));
             }
@@ -217,6 +235,20 @@ pub fn main_with(args: &[String]) -> anyhow::Result<i32> {
                 m.mean_tick_ns() / 1000.0
             );
         }
+        "sweep" => {
+            let grid = cli.arg.as_deref().unwrap_or("cost");
+            let threads = cli
+                .threads
+                .unwrap_or_else(crate::experiments::parallel::default_threads);
+            crate::experiments::parallel::run_sweep(grid, &cfg, threads)?;
+        }
+        "bench-report" => {
+            let threads = cli
+                .threads
+                .unwrap_or_else(crate::experiments::parallel::default_threads);
+            let out = cli.out.as_deref().unwrap_or("BENCH_PR1.json");
+            crate::experiments::bench_report::run(&cfg, threads, out, cli.smoke)?;
+        }
         "market" => {
             crate::experiments::market::run_table5(&cfg)?;
         }
@@ -251,6 +283,19 @@ mod tests {
         assert_eq!(c.policy.as_deref(), Some("mwa"));
         assert_eq!(c.estimator.as_deref(), Some("arma"));
         assert_eq!(c.ttc, Some(5820));
+    }
+
+    #[test]
+    fn parses_sweep_and_bench_flags() {
+        let c = parse(&argv("sweep cost --threads 8")).unwrap();
+        assert_eq!(c.command, "sweep");
+        assert_eq!(c.arg.as_deref(), Some("cost"));
+        assert_eq!(c.threads, Some(8));
+        let c = parse(&argv("bench-report --out out/bench.json --threads 2 --smoke")).unwrap();
+        assert_eq!(c.command, "bench-report");
+        assert_eq!(c.out.as_deref(), Some("out/bench.json"));
+        assert!(c.smoke);
+        assert!(parse(&argv("bench-report --threads two")).is_err());
     }
 
     #[test]

@@ -13,6 +13,6 @@ pub mod ttc;
 
 pub use chunking::{chunk_size, footprint_count};
 pub use policy::{Aimd, AmazonAs, Lr, Mwa, PolicyCtx, PolicyKind, Reactive, ScalingPolicy};
-pub use service_rate::service_rates;
+pub use service_rate::{service_rates, service_rates_into};
 pub use tracker::Tracker;
 pub use ttc::{confirm, Confirmation};

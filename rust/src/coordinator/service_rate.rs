@@ -19,16 +19,38 @@ pub fn service_rates(
     beta: f64,
     n_w_max: f64,
 ) -> (Vec<f64>, f64) {
+    let mut out = vec![0.0; r.len()];
+    let n_star = service_rates_into(r, d, active, n_tot, alpha, beta, n_w_max, &mut out);
+    (out, n_star)
+}
+
+/// Allocation-free variant of [`service_rates`]: writes the adjusted
+/// rates into `out` (same length as `r`) and returns n_star. Used by
+/// the GCI tick, which reuses its scratch buffers across ticks.
+#[allow(clippy::too_many_arguments)]
+pub fn service_rates_into(
+    r: &[f64],
+    d: &[f64],
+    active: &[bool],
+    n_tot: f64,
+    alpha: f64,
+    beta: f64,
+    n_w_max: f64,
+    out: &mut [f64],
+) -> f64 {
     assert_eq!(r.len(), d.len());
     assert_eq!(r.len(), active.len());
-    let mut s_star = vec![0.0; r.len()];
+    assert_eq!(r.len(), out.len());
     let mut n_star = 0.0;
     for w in 0..r.len() {
-        if active[w] {
+        out[w] = if active[w] {
             let safe_d = if d[w] > 0.0 { d[w] } else { 1.0 };
-            s_star[w] = (r[w] / safe_d).min(n_w_max); // eq. (11) + N_{w,max} cap
-            n_star += s_star[w];
-        }
+            let s = (r[w] / safe_d).min(n_w_max); // eq. (11) + N_{w,max} cap
+            n_star += s;
+            s
+        } else {
+            0.0
+        };
     }
     let hi = n_tot + alpha;
     let lo = beta * n_tot;
@@ -39,10 +61,10 @@ pub fn service_rates(
     } else {
         1.0
     };
-    for s in s_star.iter_mut() {
+    for s in out.iter_mut() {
         *s *= scale;
     }
-    (s_star, n_star)
+    n_star
 }
 
 #[cfg(test)]

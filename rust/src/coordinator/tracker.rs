@@ -9,8 +9,10 @@
 //! pending tasks) get instances first, which realizes fractional rates
 //! over time — e.g. s_w = 0.5 holds an instance every other interval —
 //! and keeps long-run allocation proportional to s_w.
-
-use std::collections::BTreeMap;
+//!
+//! State is a flat `Vec` indexed by workload id (ids are dense arrival
+//! slots), so the per-tick credit pass and the per-assignment argmax
+//! scan are linear array walks with zero allocation (perf pass, §Perf).
 
 /// Per-workload scheduling state.
 #[derive(Debug, Clone, Default)]
@@ -21,84 +23,105 @@ pub struct WlSched {
     pub allocated: usize,
     /// Whether the workload has pending tasks to hand out.
     pub has_pending: bool,
+    /// Whether the slot is registered (arrival seen, not yet removed).
+    pub active: bool,
 }
 
 /// The tracker: deficit-round-robin allocator over workloads.
 #[derive(Debug, Default)]
 pub struct Tracker {
-    state: BTreeMap<usize, WlSched>,
+    state: Vec<WlSched>,
     /// Per-workload cap on concurrent instances (N_{w,max}).
     cap: f64,
 }
 
 impl Tracker {
     pub fn new(n_w_max: f64) -> Self {
-        Tracker { state: BTreeMap::new(), cap: n_w_max }
+        Tracker { state: Vec::new(), cap: n_w_max }
     }
 
     pub fn register(&mut self, workload: usize) {
-        self.state.entry(workload).or_default();
+        if self.state.len() <= workload {
+            self.state.resize_with(workload + 1, WlSched::default);
+        }
+        let st = &mut self.state[workload];
+        if !st.active {
+            *st = WlSched { active: true, ..WlSched::default() };
+        }
     }
 
     pub fn remove(&mut self, workload: usize) {
-        self.state.remove(&workload);
+        if let Some(st) = self.state.get_mut(workload) {
+            *st = WlSched::default();
+        }
     }
 
-    /// Credit each workload with its service rate for one interval.
-    /// Credits are capped so a starved workload cannot build an unbounded
-    /// backlog and then monopolize the fleet (cap = N_{w,max}).
-    pub fn tick(&mut self, rates: &BTreeMap<usize, f64>) {
-        for (w, st) in self.state.iter_mut() {
+    /// Credit each registered workload with its service rate for one
+    /// interval (`rates[w]` is workload w's rate; missing entries are
+    /// 0). Credits are capped so a starved workload cannot build an
+    /// unbounded backlog and then monopolize the fleet (cap = N_{w,max}).
+    pub fn tick(&mut self, rates: &[f64]) {
+        let cap = self.cap.max(1.0);
+        for (w, st) in self.state.iter_mut().enumerate() {
+            if !st.active {
+                continue;
+            }
             let s = rates.get(w).copied().unwrap_or(0.0);
-            st.credit = (st.credit + s).min(self.cap.max(1.0));
+            st.credit = (st.credit + s).min(cap);
         }
     }
 
     pub fn set_pending(&mut self, workload: usize, pending: bool) {
-        if let Some(st) = self.state.get_mut(&workload) {
-            st.has_pending = pending;
+        if let Some(st) = self.state.get_mut(workload) {
+            if st.active {
+                st.has_pending = pending;
+            }
         }
     }
 
     pub fn on_assign(&mut self, workload: usize) {
-        if let Some(st) = self.state.get_mut(&workload) {
-            st.allocated += 1;
-            st.credit -= 1.0;
+        if let Some(st) = self.state.get_mut(workload) {
+            if st.active {
+                st.allocated += 1;
+                st.credit -= 1.0;
+            }
         }
     }
 
     pub fn on_release(&mut self, workload: usize) {
-        if let Some(st) = self.state.get_mut(&workload) {
-            st.allocated = st.allocated.saturating_sub(1);
+        if let Some(st) = self.state.get_mut(workload) {
+            if st.active {
+                st.allocated = st.allocated.saturating_sub(1);
+            }
         }
     }
 
     pub fn allocated(&self, workload: usize) -> usize {
-        self.state.get(&workload).map(|s| s.allocated).unwrap_or(0)
+        self.state.get(workload).map(|s| s.allocated).unwrap_or(0)
     }
 
     pub fn credit(&self, workload: usize) -> f64 {
-        self.state.get(&workload).map(|s| s.credit).unwrap_or(0.0)
+        self.state.get(workload).map(|s| s.credit).unwrap_or(0.0)
     }
 
     /// Pick the workload the next idle instance should serve: the one
     /// with pending tasks, below its cap, and the highest credit; ties
     /// break toward the lowest workload id (arrival order). Returns None
     /// when no workload can use an instance (credit must be positive —
-    /// a workload only runs at its earned rate).
+    /// a workload only runs at its earned rate). Zero allocation.
     pub fn next_assignment(&self) -> Option<usize> {
-        self.state
-            .iter()
-            .filter(|(_, st)| {
-                st.has_pending && (st.allocated as f64) < self.cap && st.credit >= 1.0
-            })
-            .max_by(|(wa, a), (wb, b)| {
-                a.credit
-                    .partial_cmp(&b.credit)
-                    .unwrap()
-                    .then(wb.cmp(wa)) // lower id wins ties
-            })
-            .map(|(w, _)| *w)
+        let mut best: Option<(usize, f64)> = None;
+        for (w, st) in self.state.iter().enumerate() {
+            if !(st.active && st.has_pending && (st.allocated as f64) < self.cap && st.credit >= 1.0)
+            {
+                continue;
+            }
+            // strict '>' keeps the lowest id on credit ties
+            if best.map_or(true, |(_, c)| st.credit > c) {
+                best = Some((w, st.credit));
+            }
+        }
+        best.map(|(w, _)| w)
     }
 
     /// Greedy FIFO assignment, ignoring rates (Amazon-AS mode): earliest
@@ -106,12 +129,15 @@ impl Tracker {
     pub fn next_fifo(&self) -> Option<usize> {
         self.state
             .iter()
-            .find(|(_, st)| st.has_pending)
-            .map(|(w, _)| *w)
+            .position(|st| st.active && st.has_pending)
     }
 
     pub fn workloads(&self) -> impl Iterator<Item = usize> + '_ {
-        self.state.keys().copied()
+        self.state
+            .iter()
+            .enumerate()
+            .filter(|(_, st)| st.active)
+            .map(|(w, _)| w)
     }
 }
 
@@ -120,8 +146,13 @@ mod tests {
     use super::*;
     use crate::util::proptest::forall;
 
-    fn rates(pairs: &[(usize, f64)]) -> BTreeMap<usize, f64> {
-        pairs.iter().copied().collect()
+    fn rates(pairs: &[(usize, f64)]) -> Vec<f64> {
+        let n = pairs.iter().map(|&(w, _)| w + 1).max().unwrap_or(0);
+        let mut v = vec![0.0; n];
+        for &(w, s) in pairs {
+            v[w] = s;
+        }
+        v
     }
 
     #[test]
@@ -217,6 +248,19 @@ mod tests {
         t.register(0);
         t.on_release(0); // no-op at zero
         assert_eq!(t.allocated(0), 0);
+    }
+
+    #[test]
+    fn removed_workload_is_inert_and_reregisterable() {
+        let mut t = Tracker::new(10.0);
+        t.register(0);
+        t.set_pending(0, true);
+        t.tick(&rates(&[(0, 5.0)]));
+        t.remove(0);
+        assert_eq!(t.next_assignment(), None);
+        assert_eq!(t.workloads().count(), 0);
+        t.register(0); // slot reuse starts from a clean state
+        assert_eq!(t.credit(0), 0.0);
     }
 
     #[test]

@@ -1,0 +1,192 @@
+//! The pre-arena task store: `BTreeMap` rows + per-status `BTreeSet`
+//! indexes (the seed implementation, verbatim semantics).
+//!
+//! Kept for two purposes:
+//!  * the measured **baseline** of the flat-arena refactor —
+//!    `dithen bench-report` and `benches/bench_substrates.rs` time the
+//!    same task lifecycle against both stores;
+//!  * a semantic **oracle** — the parity test in [`super`] drives both
+//!    stores through random operation sequences and asserts identical
+//!    observable state.
+//!
+//! Not used on any platform code path.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::sim::SimTime;
+
+use super::{TaskKey, TaskRow, TaskStatus};
+
+fn status_tag(s: TaskStatus) -> u8 {
+    match s {
+        TaskStatus::Pending => 0,
+        TaskStatus::Processing => 1,
+        TaskStatus::Completed => 2,
+        TaskStatus::Failed => 3,
+    }
+}
+
+/// The seed `TaskDb`: O(log n) ops, sorted-set status indexes, and
+/// allocating, whole-table-scan measurement queries.
+#[derive(Debug, Default)]
+pub struct LegacyTaskDb {
+    rows: BTreeMap<TaskKey, TaskRow>,
+    by_status: BTreeMap<(usize, u8), BTreeSet<usize>>, // (workload, status) -> task ids
+    remaining: BTreeMap<(usize, usize), u64>,
+}
+
+impl LegacyTaskDb {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, workload: usize, media_type: usize, task: usize) {
+        let row = TaskRow {
+            workload,
+            media_type,
+            task,
+            status: TaskStatus::Pending,
+            instance: None,
+            measured_cus: None,
+            completed_at: None,
+            exit_code: 0,
+        };
+        let prev = self.rows.insert((workload, task), row);
+        assert!(prev.is_none(), "task ({workload},{task}) inserted twice");
+        self.by_status
+            .entry((workload, status_tag(TaskStatus::Pending)))
+            .or_default()
+            .insert(task);
+        *self.remaining.entry((workload, media_type)).or_default() += 1;
+    }
+
+    fn move_status(&mut self, key: TaskKey, to: TaskStatus) {
+        let row = self.rows.get_mut(&key).expect("unknown task");
+        let from = row.status;
+        row.status = to;
+        if let Some(s) = self.by_status.get_mut(&(key.0, status_tag(from))) {
+            s.remove(&key.1);
+        }
+        self.by_status
+            .entry((key.0, status_tag(to)))
+            .or_default()
+            .insert(key.1);
+    }
+
+    pub fn claim(&mut self, key: TaskKey, instance: u64) {
+        {
+            let row = self.rows.get(&key).expect("unknown task");
+            assert_eq!(row.status, TaskStatus::Pending, "claiming non-pending task {key:?}");
+        }
+        self.move_status(key, TaskStatus::Processing);
+        self.rows.get_mut(&key).unwrap().instance = Some(instance);
+    }
+
+    pub fn complete(&mut self, key: TaskKey, cus: f64, at: SimTime, exit_code: i32) {
+        {
+            let row = self.rows.get(&key).expect("unknown task");
+            assert_eq!(row.status, TaskStatus::Processing, "completing unclaimed task {key:?}");
+        }
+        let to = if exit_code == 0 { TaskStatus::Completed } else { TaskStatus::Failed };
+        self.move_status(key, to);
+        let row = self.rows.get_mut(&key).unwrap();
+        row.measured_cus = Some(cus);
+        row.completed_at = Some(at);
+        row.exit_code = exit_code;
+        if to == TaskStatus::Completed {
+            let media_type = row.media_type;
+            let c = self
+                .remaining
+                .get_mut(&(key.0, media_type))
+                .expect("remaining counter missing");
+            *c -= 1;
+        }
+    }
+
+    pub fn requeue(&mut self, key: TaskKey) {
+        {
+            let row = self.rows.get(&key).expect("unknown task");
+            assert_eq!(row.status, TaskStatus::Processing);
+        }
+        self.move_status(key, TaskStatus::Pending);
+        self.rows.get_mut(&key).unwrap().instance = None;
+    }
+
+    pub fn get(&self, key: TaskKey) -> Option<&TaskRow> {
+        self.rows.get(&key)
+    }
+
+    pub fn tasks_with_status(&self, workload: usize, status: TaskStatus) -> Vec<usize> {
+        self.by_status
+            .get(&(workload, status_tag(status)))
+            .map(|s| s.iter().copied().collect())
+            .unwrap_or_default()
+    }
+
+    pub fn first_with_status(&self, workload: usize, status: TaskStatus, n: usize) -> Vec<usize> {
+        self.by_status
+            .get(&(workload, status_tag(status)))
+            .map(|s| s.iter().take(n).copied().collect())
+            .unwrap_or_default()
+    }
+
+    pub fn count_status(&self, workload: usize, status: TaskStatus) -> usize {
+        self.by_status
+            .get(&(workload, status_tag(status)))
+            .map(|s| s.len())
+            .unwrap_or(0)
+    }
+
+    pub fn remaining_by_type(&self, workload: usize, n_types: usize) -> Vec<f64> {
+        (0..n_types)
+            .map(|k| self.remaining.get(&(workload, k)).copied().unwrap_or(0) as f64)
+            .collect()
+    }
+
+    pub fn measurements_between(
+        &self,
+        workload: usize,
+        media_type: usize,
+        since: SimTime,
+        until: SimTime,
+    ) -> Vec<f64> {
+        self.rows
+            .values()
+            .filter(|r| {
+                r.workload == workload
+                    && r.media_type == media_type
+                    && r.status == TaskStatus::Completed
+                    && r.completed_at.map(|t| t > since && t <= until).unwrap_or(false)
+            })
+            .map(|r| r.measured_cus.unwrap())
+            .collect()
+    }
+
+    pub fn all_measurements(&self, workload: usize, media_type: usize) -> Vec<f64> {
+        self.rows
+            .values()
+            .filter(|r| {
+                r.workload == workload
+                    && r.media_type == media_type
+                    && r.status == TaskStatus::Completed
+            })
+            .map(|r| r.measured_cus.unwrap())
+            .collect()
+    }
+
+    pub fn workload_complete(&self, workload: usize) -> bool {
+        self.count_status(workload, TaskStatus::Pending) == 0
+            && self.count_status(workload, TaskStatus::Processing) == 0
+            && (self.count_status(workload, TaskStatus::Completed)
+                + self.count_status(workload, TaskStatus::Failed))
+                > 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}

@@ -3,10 +3,31 @@
 //! The GCI allocates chunks "in a manner analogous to a BitTorrent
 //! tracker": LCIs *write* task status + duration measurements, the GCI
 //! *reads* pending/processing/completed sets. This store keeps exactly
-//! those semantics (indexed by workload and status, insertion-ordered
-//! within a status) so tracker behaviour is deterministic.
+//! those semantics, but on a flat-arena layout built for the monitoring
+//! tick (perf pass, §Perf):
+//!
+//! * one `Vec<TaskRow>` arena per workload, indexed directly by task id
+//!   (task ids are dense 0..n — the front end numbers them at upload);
+//! * intrusive doubly-linked lists thread the rows of each status, so
+//!   `claim` / `complete` / `requeue` are O(1) pointer splices and
+//!   status scans are in-order list walks with no allocation;
+//! * per-(workload, media-type) completion logs, appended in simulation
+//!   time order, make the ME's measurement queries (`measurements`,
+//!   `measurements_window`) binary-search slices instead of full-table
+//!   scans;
+//! * incremental `remaining` counters keep m_{w,k}[t] O(1).
+//!
+//! Ordering semantics: within a status, tasks appear in *insertion*
+//! order (FIFO). For freshly inserted work this equals ascending task
+//! id, matching the seed's sorted-set behaviour; a requeued task
+//! (spot reclamation) re-enters Pending at the **tail**, i.e. behind
+//! work that never ran — a deliberate fairness choice documented here
+//! because it differs from the seed's sorted re-entry.
+//!
+//! The seed implementation is preserved in [`legacy`] as the perf
+//! baseline and the semantic oracle for the parity property test.
 
-use std::collections::{BTreeMap, BTreeSet};
+pub mod legacy;
 
 use crate::sim::SimTime;
 
@@ -18,8 +39,20 @@ pub enum TaskStatus {
     Failed,
 }
 
+const N_STATUS: usize = 4;
+
+#[inline]
+fn status_tag(s: TaskStatus) -> usize {
+    match s {
+        TaskStatus::Pending => 0,
+        TaskStatus::Processing => 1,
+        TaskStatus::Completed => 2,
+        TaskStatus::Failed => 3,
+    }
+}
+
 /// One media-processing task row.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TaskRow {
     pub workload: usize,
     pub media_type: usize,
@@ -38,23 +71,120 @@ pub struct TaskRow {
 /// Composite key: (workload, task index).
 pub type TaskKey = (usize, usize);
 
-#[derive(Debug, Default)]
-pub struct TaskDb {
-    rows: BTreeMap<TaskKey, TaskRow>,
-    by_status: BTreeMap<(usize, u8), BTreeSet<usize>>, // (workload, status) -> task ids
-    /// Incremental not-completed counters per (workload, media type):
-    /// the GCI reads m_{w,k}[t] every tick, so this must be O(1), not a
-    /// table scan (perf pass, §Perf).
-    remaining: BTreeMap<(usize, usize), u64>,
+/// Intrusive-list null.
+const NIL: u32 = u32::MAX;
+
+#[derive(Debug, Clone, Copy)]
+struct StatusList {
+    head: u32,
+    tail: u32,
+    len: usize,
 }
 
-fn status_tag(s: TaskStatus) -> u8 {
-    match s {
-        TaskStatus::Pending => 0,
-        TaskStatus::Processing => 1,
-        TaskStatus::Completed => 2,
-        TaskStatus::Failed => 3,
+impl Default for StatusList {
+    fn default() -> Self {
+        StatusList { head: NIL, tail: NIL, len: 0 }
     }
+}
+
+/// Per-workload flat arena: rows indexed by task id plus intrusive
+/// per-status links and the per-media-type aggregates.
+#[derive(Debug, Default)]
+struct WlArena {
+    rows: Vec<TaskRow>,
+    /// Intrusive links; `next[id]`/`prev[id]` position `id` within the
+    /// list of its current status.
+    next: Vec<u32>,
+    prev: Vec<u32>,
+    lists: [StatusList; N_STATUS],
+    /// Not-completed counter per media type: m_{w,k}[t].
+    remaining: Vec<u64>,
+    /// Total inserted per media type (sizes the measurement reserve).
+    n_by_type: Vec<usize>,
+    /// Completed (time, measured CUS) per media type, appended in
+    /// nondecreasing simulation time.
+    meas: Vec<Vec<(SimTime, f64)>>,
+}
+
+impl WlArena {
+    fn push_back(&mut self, s: TaskStatus, id: usize) {
+        let si = status_tag(s);
+        let mut l = self.lists[si];
+        let id32 = id as u32;
+        self.prev[id] = l.tail;
+        self.next[id] = NIL;
+        if l.tail == NIL {
+            l.head = id32;
+        } else {
+            self.next[l.tail as usize] = id32;
+        }
+        l.tail = id32;
+        l.len += 1;
+        self.lists[si] = l;
+    }
+
+    fn unlink(&mut self, s: TaskStatus, id: usize) {
+        let si = status_tag(s);
+        let mut l = self.lists[si];
+        let (p, n) = (self.prev[id], self.next[id]);
+        if p == NIL {
+            l.head = n;
+        } else {
+            self.next[p as usize] = n;
+        }
+        if n == NIL {
+            l.tail = p;
+        } else {
+            self.prev[n as usize] = p;
+        }
+        l.len -= 1;
+        self.prev[id] = NIL;
+        self.next[id] = NIL;
+        self.lists[si] = l;
+    }
+
+    fn grow_types(&mut self, media_type: usize) {
+        if self.remaining.len() <= media_type {
+            self.remaining.resize(media_type + 1, 0);
+            self.n_by_type.resize(media_type + 1, 0);
+            self.meas.resize_with(media_type + 1, Vec::new);
+        }
+    }
+}
+
+/// In-order walk of one workload's status list. Zero allocation.
+#[derive(Debug, Clone)]
+pub struct StatusIter<'a> {
+    cur: u32,
+    remaining: usize,
+    next: &'a [u32],
+}
+
+impl Iterator for StatusIter<'_> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        if self.cur == NIL {
+            return None;
+        }
+        let id = self.cur as usize;
+        self.cur = self.next[id];
+        self.remaining -= 1;
+        Some(id)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl ExactSizeIterator for StatusIter<'_> {}
+
+#[derive(Debug, Default)]
+pub struct TaskDb {
+    wls: Vec<WlArena>,
+    total: usize,
 }
 
 impl TaskDb {
@@ -62,9 +192,24 @@ impl TaskDb {
         Self::default()
     }
 
-    /// Register a new pending task.
+    /// Register a new pending task. Task ids must be inserted densely
+    /// in order (0, 1, 2, ...) per workload — the arena index *is* the
+    /// task id.
     pub fn insert(&mut self, workload: usize, media_type: usize, task: usize) {
-        let row = TaskRow {
+        if self.wls.len() <= workload {
+            self.wls.resize_with(workload + 1, WlArena::default);
+        }
+        let arena = &mut self.wls[workload];
+        assert!(
+            task >= arena.rows.len(),
+            "task ({workload},{task}) inserted twice"
+        );
+        assert_eq!(
+            task,
+            arena.rows.len(),
+            "task ids must be dense and in order (workload {workload})"
+        );
+        arena.rows.push(TaskRow {
             workload,
             media_type,
             task,
@@ -73,109 +218,167 @@ impl TaskDb {
             measured_cus: None,
             completed_at: None,
             exit_code: 0,
-        };
-        let prev = self.rows.insert((workload, task), row);
-        assert!(prev.is_none(), "task ({workload},{task}) inserted twice");
-        self.by_status
-            .entry((workload, status_tag(TaskStatus::Pending)))
-            .or_default()
-            .insert(task);
-        *self.remaining.entry((workload, media_type)).or_default() += 1;
+        });
+        arena.next.push(NIL);
+        arena.prev.push(NIL);
+        arena.push_back(TaskStatus::Pending, task);
+        arena.grow_types(media_type);
+        arena.remaining[media_type] += 1;
+        arena.n_by_type[media_type] += 1;
+        self.total += 1;
     }
 
-    fn move_status(&mut self, key: TaskKey, to: TaskStatus) {
-        let row = self.rows.get_mut(&key).expect("unknown task");
-        let from = row.status;
-        row.status = to;
-        self.by_status
-            .get_mut(&(key.0, status_tag(from)))
-            .map(|s| s.remove(&key.1));
-        self.by_status
-            .entry((key.0, status_tag(to)))
-            .or_default()
-            .insert(key.1);
+    /// Pre-size the measurement logs to the workload's final task
+    /// counts so steady-state `complete` calls never reallocate. Call
+    /// once after a workload's inserts (the platform does this at
+    /// arrival).
+    pub fn reserve_measurements(&mut self, workload: usize) {
+        if let Some(arena) = self.wls.get_mut(workload) {
+            for k in 0..arena.meas.len() {
+                let need = arena.n_by_type[k].saturating_sub(arena.meas[k].len());
+                arena.meas[k].reserve(need);
+            }
+        }
     }
 
-    /// LCI claims a task for an instance (Pending -> Processing).
+    /// LCI claims a task for an instance (Pending -> Processing). O(1).
     pub fn claim(&mut self, key: TaskKey, instance: u64) {
+        let arena = self.wls.get_mut(key.0).expect("unknown task");
         {
-            let row = self.rows.get(&key).expect("unknown task");
+            let row = arena.rows.get(key.1).expect("unknown task");
             assert_eq!(row.status, TaskStatus::Pending, "claiming non-pending task {key:?}");
         }
-        self.move_status(key, TaskStatus::Processing);
-        self.rows.get_mut(&key).unwrap().instance = Some(instance);
+        arena.unlink(TaskStatus::Pending, key.1);
+        arena.push_back(TaskStatus::Processing, key.1);
+        let row = &mut arena.rows[key.1];
+        row.status = TaskStatus::Processing;
+        row.instance = Some(instance);
     }
 
-    /// LCI reports completion with the measured CUS.
+    /// LCI reports completion with the measured CUS. O(1).
     pub fn complete(&mut self, key: TaskKey, cus: f64, at: SimTime, exit_code: i32) {
+        let arena = self.wls.get_mut(key.0).expect("unknown task");
         {
-            let row = self.rows.get(&key).expect("unknown task");
+            let row = arena.rows.get(key.1).expect("unknown task");
             assert_eq!(row.status, TaskStatus::Processing, "completing unclaimed task {key:?}");
         }
         let to = if exit_code == 0 { TaskStatus::Completed } else { TaskStatus::Failed };
-        self.move_status(key, to);
-        let row = self.rows.get_mut(&key).unwrap();
+        arena.unlink(TaskStatus::Processing, key.1);
+        arena.push_back(to, key.1);
+        let row = &mut arena.rows[key.1];
+        row.status = to;
         row.measured_cus = Some(cus);
         row.completed_at = Some(at);
         row.exit_code = exit_code;
+        let media_type = row.media_type;
         if to == TaskStatus::Completed {
-            let media_type = row.media_type;
-            let c = self
-                .remaining
-                .get_mut(&(key.0, media_type))
-                .expect("remaining counter missing");
-            *c -= 1;
+            arena.remaining[media_type] -= 1;
+            debug_assert!(
+                arena.meas[media_type].last().map_or(true, |&(t, _)| t <= at),
+                "completions must arrive in nondecreasing sim time"
+            );
+            arena.meas[media_type].push((at, cus));
         }
     }
 
-    /// Requeue a processing task (instance lost / spot reclaimed).
+    /// Requeue a processing task (instance lost / spot reclaimed):
+    /// Processing -> Pending, at the **tail** of the pending list (see
+    /// module docs). O(1).
     pub fn requeue(&mut self, key: TaskKey) {
+        let arena = self.wls.get_mut(key.0).expect("unknown task");
         {
-            let row = self.rows.get(&key).expect("unknown task");
+            let row = arena.rows.get(key.1).expect("unknown task");
             assert_eq!(row.status, TaskStatus::Processing);
         }
-        self.move_status(key, TaskStatus::Pending);
-        self.rows.get_mut(&key).unwrap().instance = None;
+        arena.unlink(TaskStatus::Processing, key.1);
+        arena.push_back(TaskStatus::Pending, key.1);
+        let row = &mut arena.rows[key.1];
+        row.status = TaskStatus::Pending;
+        row.instance = None;
     }
 
     pub fn get(&self, key: TaskKey) -> Option<&TaskRow> {
-        self.rows.get(&key)
+        self.wls.get(key.0).and_then(|a| a.rows.get(key.1))
     }
 
-    /// Task ids in a given status for a workload (sorted).
+    /// Walk a status list in order without allocating — the GCI-tick
+    /// query primitive (`build_chunk` takes the first n via `.take(n)`).
+    pub fn status_iter(&self, workload: usize, status: TaskStatus) -> StatusIter<'_> {
+        match self.wls.get(workload) {
+            Some(a) => {
+                let l = a.lists[status_tag(status)];
+                StatusIter { cur: l.head, remaining: l.len, next: &a.next }
+            }
+            None => StatusIter { cur: NIL, remaining: 0, next: &[] },
+        }
+    }
+
+    /// Task ids in a given status for a workload (allocating
+    /// convenience over [`Self::status_iter`]; tests/debug).
     pub fn tasks_with_status(&self, workload: usize, status: TaskStatus) -> Vec<usize> {
-        self.by_status
-            .get(&(workload, status_tag(status)))
-            .map(|s| s.iter().copied().collect())
-            .unwrap_or_default()
+        self.status_iter(workload, status).collect()
     }
 
-    /// First `n` task ids of a status (ascending) without materializing
-    /// the full id set — build_chunk calls this on every assignment.
+    /// First `n` task ids of a status (allocating convenience over
+    /// `status_iter(..).take(n)`).
     pub fn first_with_status(&self, workload: usize, status: TaskStatus, n: usize) -> Vec<usize> {
-        self.by_status
-            .get(&(workload, status_tag(status)))
-            .map(|s| s.iter().take(n).copied().collect())
-            .unwrap_or_default()
+        self.status_iter(workload, status).take(n).collect()
     }
 
+    /// O(1) status cardinality.
     pub fn count_status(&self, workload: usize, status: TaskStatus) -> usize {
-        self.by_status
-            .get(&(workload, status_tag(status)))
-            .map(|s| s.len())
+        self.wls
+            .get(workload)
+            .map(|a| a.lists[status_tag(status)].len)
             .unwrap_or(0)
     }
 
-    /// Remaining (not completed) items per media type: m_{w,k}[t]. O(K)
-    /// via incremental counters.
-    pub fn remaining_by_type(&self, workload: usize, n_types: usize) -> Vec<f64> {
-        (0..n_types)
-            .map(|k| self.remaining.get(&(workload, k)).copied().unwrap_or(0) as f64)
-            .collect()
+    /// Remaining (not completed) count for one (workload, media type).
+    pub fn remaining(&self, workload: usize, media_type: usize) -> u64 {
+        self.remaining_slice(workload).get(media_type).copied().unwrap_or(0)
     }
 
-    /// Completed-task CUS measurements for (workload, media type) within
-    /// (since, until] — the ME's per-interval measurement feed (eq. 4).
+    /// Remaining counters per media type as a borrowed slice — the
+    /// zero-allocation m_{w,k}[t] read on the GCI tick.
+    pub fn remaining_slice(&self, workload: usize) -> &[u64] {
+        self.wls.get(workload).map(|a| a.remaining.as_slice()).unwrap_or(&[])
+    }
+
+    /// Remaining (not completed) items per media type: m_{w,k}[t]
+    /// (allocating convenience over [`Self::remaining_slice`]).
+    pub fn remaining_by_type(&self, workload: usize, n_types: usize) -> Vec<f64> {
+        let s = self.remaining_slice(workload);
+        (0..n_types).map(|k| s.get(k).copied().unwrap_or(0) as f64).collect()
+    }
+
+    /// All completed (time, CUS) measurements for (workload, media
+    /// type), in nondecreasing completion time. Zero allocation.
+    pub fn measurements(&self, workload: usize, media_type: usize) -> &[(SimTime, f64)] {
+        self.wls
+            .get(workload)
+            .and_then(|a| a.meas.get(media_type))
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// The (since, until] window of the completion log as a borrowed
+    /// slice (binary search on the time-ordered log; eq. 4's
+    /// per-interval measurement feed). Zero allocation.
+    pub fn measurements_window(
+        &self,
+        workload: usize,
+        media_type: usize,
+        since: SimTime,
+        until: SimTime,
+    ) -> &[(SimTime, f64)] {
+        let log = self.measurements(workload, media_type);
+        let start = log.partition_point(|&(t, _)| t <= since);
+        let end = log.partition_point(|&(t, _)| t <= until);
+        &log[start..end.max(start)]
+    }
+
+    /// Completed-task CUS measurements within (since, until]
+    /// (allocating convenience over [`Self::measurements_window`]).
     pub fn measurements_between(
         &self,
         workload: usize,
@@ -183,29 +386,16 @@ impl TaskDb {
         since: SimTime,
         until: SimTime,
     ) -> Vec<f64> {
-        self.rows
-            .values()
-            .filter(|r| {
-                r.workload == workload
-                    && r.media_type == media_type
-                    && r.status == TaskStatus::Completed
-                    && r.completed_at.map(|t| t > since && t <= until).unwrap_or(false)
-            })
-            .map(|r| r.measured_cus.unwrap())
+        self.measurements_window(workload, media_type, since, until)
+            .iter()
+            .map(|&(_, c)| c)
             .collect()
     }
 
-    /// All completed CUS measurements for a workload/type (any time).
+    /// All completed CUS measurements for a workload/type (allocating
+    /// convenience over [`Self::measurements`]).
     pub fn all_measurements(&self, workload: usize, media_type: usize) -> Vec<f64> {
-        self.rows
-            .values()
-            .filter(|r| {
-                r.workload == workload
-                    && r.media_type == media_type
-                    && r.status == TaskStatus::Completed
-            })
-            .map(|r| r.measured_cus.unwrap())
-            .collect()
+        self.measurements(workload, media_type).iter().map(|&(_, c)| c).collect()
     }
 
     /// A workload is complete when nothing is pending or processing.
@@ -218,17 +408,19 @@ impl TaskDb {
     }
 
     pub fn len(&self) -> usize {
-        self.rows.len()
+        self.total
     }
 
     pub fn is_empty(&self) -> bool {
-        self.rows.is_empty()
+        self.total == 0
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::legacy::LegacyTaskDb;
     use super::*;
+    use crate::util::proptest::forall;
 
     fn db_with(n: usize) -> TaskDb {
         let mut db = TaskDb::new();
@@ -273,6 +465,8 @@ mod tests {
         db.complete((0, 0), 1.0, 10, -1);
         assert_eq!(db.count_status(0, TaskStatus::Failed), 1);
         assert_eq!(db.count_status(0, TaskStatus::Completed), 0);
+        // failed measurements do not enter the completion log
+        assert!(db.measurements(0, 0).is_empty());
     }
 
     #[test]
@@ -285,6 +479,17 @@ mod tests {
     }
 
     #[test]
+    fn requeue_enters_pending_at_tail() {
+        // documented FIFO semantics: a reclaimed task waits behind
+        // work that never ran
+        let mut db = db_with(3);
+        db.claim((0, 0), 1);
+        db.requeue((0, 0));
+        assert_eq!(db.tasks_with_status(0, TaskStatus::Pending), vec![1, 2, 0]);
+        assert_eq!(db.first_with_status(0, TaskStatus::Pending, 2), vec![1, 2]);
+    }
+
+    #[test]
     fn remaining_by_type_counts_non_completed() {
         let mut db = TaskDb::new();
         db.insert(3, 0, 0);
@@ -293,6 +498,8 @@ mod tests {
         db.claim((3, 1), 9);
         db.complete((3, 1), 2.0, 5, 0);
         assert_eq!(db.remaining_by_type(3, 2), vec![1.0, 1.0]);
+        assert_eq!(db.remaining_slice(3), &[1, 1]);
+        assert_eq!(db.remaining(3, 1), 1);
     }
 
     #[test]
@@ -304,6 +511,8 @@ mod tests {
         }
         assert_eq!(db.measurements_between(0, 0, 10, 30), vec![1.0, 2.0]);
         assert_eq!(db.all_measurements(0, 0).len(), 3);
+        assert_eq!(db.measurements_window(0, 0, 0, 10), &[(10, 0.0)]);
+        assert!(db.measurements_window(0, 0, 30, 99).is_empty());
     }
 
     #[test]
@@ -315,5 +524,119 @@ mod tests {
         db.claim((0, 1), 1);
         db.complete((0, 1), 1.0, 2, -1); // failure still terminal
         assert!(db.workload_complete(0));
+    }
+
+    #[test]
+    fn status_iter_matches_collected_and_is_exact_size() {
+        let mut db = db_with(5);
+        db.claim((0, 2), 1);
+        db.claim((0, 4), 1);
+        let it = db.status_iter(0, TaskStatus::Pending);
+        assert_eq!(it.len(), 3);
+        assert_eq!(it.collect::<Vec<_>>(), db.tasks_with_status(0, TaskStatus::Pending));
+        assert_eq!(db.status_iter(7, TaskStatus::Pending).count(), 0);
+    }
+
+    #[test]
+    fn out_of_range_queries_are_empty() {
+        let db = db_with(1);
+        assert_eq!(db.count_status(9, TaskStatus::Pending), 0);
+        assert!(db.remaining_slice(9).is_empty());
+        assert!(db.measurements(0, 9).is_empty());
+        assert!(db.get((9, 0)).is_none());
+    }
+
+    /// Drive the arena and the seed (legacy) store through the same
+    /// random operation sequence and require identical observable
+    /// state. Pending-list *order* is compared as a sorted set because
+    /// requeue re-entry order is the one documented divergence.
+    #[test]
+    fn parity_with_legacy_store_under_random_ops() {
+        forall(
+            "arena-vs-legacy-parity",
+            0xDB01,
+            25,
+            |r| {
+                let n = r.int(1, 60) as usize;
+                let ops: Vec<u64> = (0..200).map(|_| r.next_u64()).collect();
+                (n, ops)
+            },
+            |(n, ops)| {
+                let mut a = TaskDb::new();
+                let mut b = LegacyTaskDb::new();
+                for t in 0..*n {
+                    let mt = t % 3;
+                    a.insert(0, mt, t);
+                    b.insert(0, mt, t);
+                }
+                let mut clock = 0u64;
+                for op in ops {
+                    clock += 1;
+                    match op % 3 {
+                        0 => {
+                            // claim the first pending task
+                            if let Some(t) = a.status_iter(0, TaskStatus::Pending).next() {
+                                a.claim((0, t), op % 7);
+                                b.claim((0, t), op % 7);
+                            }
+                        }
+                        1 => {
+                            // complete the first processing task
+                            if let Some(t) = a.status_iter(0, TaskStatus::Processing).next() {
+                                let cus = (op % 100) as f64;
+                                let code = if op % 11 == 0 { -1 } else { 0 };
+                                a.complete((0, t), cus, clock, code);
+                                b.complete((0, t), cus, clock, code);
+                            }
+                        }
+                        _ => {
+                            // requeue the first processing task
+                            if let Some(t) = a.status_iter(0, TaskStatus::Processing).next() {
+                                a.requeue((0, t));
+                                b.requeue((0, t));
+                            }
+                        }
+                    }
+                }
+                for s in [
+                    TaskStatus::Pending,
+                    TaskStatus::Processing,
+                    TaskStatus::Completed,
+                    TaskStatus::Failed,
+                ] {
+                    if a.count_status(0, s) != b.count_status(0, s) {
+                        return Err(format!("count mismatch for {s:?}"));
+                    }
+                    let mut ta = a.tasks_with_status(0, s);
+                    ta.sort_unstable();
+                    let tb = b.tasks_with_status(0, s); // BTreeSet: already sorted
+                    if ta != tb {
+                        return Err(format!("id set mismatch for {s:?}: {ta:?} vs {tb:?}"));
+                    }
+                }
+                for t in 0..*n {
+                    let (ra, rb) = (a.get((0, t)).unwrap(), b.get((0, t)).unwrap());
+                    if ra != rb {
+                        return Err(format!("row {t} mismatch: {ra:?} vs {rb:?}"));
+                    }
+                }
+                if a.remaining_by_type(0, 3) != b.remaining_by_type(0, 3) {
+                    return Err("remaining mismatch".into());
+                }
+                for k in 0..3 {
+                    let mut ma = a.all_measurements(0, k);
+                    let mut mb = b.all_measurements(0, k);
+                    ma.sort_by(|x, y| x.partial_cmp(y).unwrap());
+                    mb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+                    if ma != mb {
+                        return Err(format!("measurement mismatch for type {k}"));
+                    }
+                }
+                if a.workload_complete(0) != b.workload_complete(0) || a.len() != b.len() {
+                    return Err("completion/len mismatch".into());
+                }
+                Ok(())
+            },
+        );
     }
 }

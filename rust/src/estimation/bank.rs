@@ -134,18 +134,30 @@ impl Bank {
     }
 
     /// One monitoring-instant update; persists b_hat/pi internally and
-    /// returns the derived quantities.
+    /// returns the derived quantities. Allocating convenience over
+    /// [`Self::step_into`].
     pub fn step(&mut self, inp: &TickInputs) -> Result<StepOutputs> {
+        let mut out = StepOutputs::default();
+        self.step_into(inp, &mut out)?;
+        Ok(out)
+    }
+
+    /// One monitoring-instant update writing into caller-owned output
+    /// buffers. On the native backend this performs **zero heap
+    /// allocation** once `out` has been through one step (buffers are
+    /// resized on first use, then refilled in place) — the GCI reuses
+    /// one `StepOutputs` across all ticks.
+    pub fn step_into(&mut self, inp: &TickInputs, out: &mut StepOutputs) -> Result<()> {
         let wk = self.w * self.k;
         anyhow::ensure!(inp.b_tilde.len() == wk, "b_tilde size");
         anyhow::ensure!(inp.meas_mask.len() == wk, "meas_mask size");
         anyhow::ensure!(inp.m_rem.len() == wk, "m_rem size");
         anyhow::ensure!(inp.slot_mask.len() == wk, "slot_mask size");
         anyhow::ensure!(inp.d.len() == self.w, "d size");
-        let out = match &mut self.backend {
-            Backend::Native => native_step(
-                self.w, self.k, &self.b_hat, &self.pi, inp, &self.params,
-            ),
+        match &mut self.backend {
+            Backend::Native => {
+                native_step_into(self.w, self.k, &self.b_hat, &self.pi, inp, &self.params, out);
+            }
             Backend::Xla(engine) => {
                 let exe = engine.executable(self.w, self.k)?;
                 let params = [
@@ -160,7 +172,7 @@ impl Bank {
                     self.params.n_w_max,
                 ];
                 debug_assert_eq!(params.len(), N_PARAMS);
-                exe.run(&StepInputs {
+                *out = exe.run(&StepInputs {
                     b_hat: &self.b_hat,
                     pi: &self.pi,
                     b_tilde: inp.b_tilde,
@@ -169,17 +181,18 @@ impl Bank {
                     slot_mask: inp.slot_mask,
                     d: inp.d,
                     params,
-                })?
+                })?;
             }
-        };
+        }
         self.b_hat.copy_from_slice(&out.b_hat);
         self.pi.copy_from_slice(&out.pi);
-        Ok(out)
+        Ok(())
     }
 }
 
 /// The native (rust, f32) implementation of the monitor_step graph —
-/// mirrors python/compile/model.py operation for operation.
+/// mirrors python/compile/model.py operation for operation. Allocating
+/// convenience over [`native_step_into`].
 pub fn native_step(
     w: usize,
     k: usize,
@@ -188,9 +201,27 @@ pub fn native_step(
     inp: &TickInputs,
     p: &BankParams,
 ) -> StepOutputs {
+    let mut out = StepOutputs::default();
+    native_step_into(w, k, b_hat, pi, inp, p, &mut out);
+    out
+}
+
+/// [`native_step`] writing into reused output buffers: allocation-free
+/// once `out` holds (w*k)/(w)-sized vectors.
+pub fn native_step_into(
+    w: usize,
+    k: usize,
+    b_hat: &[f32],
+    pi: &[f32],
+    inp: &TickInputs,
+    p: &BankParams,
+    out: &mut StepOutputs,
+) {
     let wk = w * k;
-    let mut b_new = vec![0.0f32; wk];
-    let mut pi_new = vec![0.0f32; wk];
+    out.b_hat.resize(wk, 0.0);
+    out.pi.resize(wk, 0.0);
+    out.r.resize(w, 0.0);
+    out.s.resize(w, 0.0);
     // 1. masked Kalman update (eqs. 6-9), inert outside slot_mask
     for i in 0..wk {
         let pi_minus = pi[i] + p.sigma_z2;
@@ -203,28 +234,26 @@ pub fn native_step(
         let s = inp.slot_mask[i];
         b = s * b + (1.0 - s) * b_hat[i];
         pv = s * pv + (1.0 - s) * pi[i];
-        b_new[i] = b;
-        pi_new[i] = pv;
+        out.b_hat[i] = b;
+        out.pi[i] = pv;
     }
     // 2. r_w = sum_k m*mask*b (eq. 1)
-    let mut r = vec![0.0f32; w];
     for wi in 0..w {
         let mut acc = 0.0f32;
         for ki in 0..k {
             let i = wi * k + ki;
-            acc += inp.m_rem[i] * inp.slot_mask[i] * b_new[i];
+            acc += inp.m_rem[i] * inp.slot_mask[i] * out.b_hat[i];
         }
-        r[wi] = acc;
+        out.r[wi] = acc;
     }
     // 3. proportional-fair service rates (eqs. 11-14)
-    let mut s_star = vec![0.0f32; w];
     let mut n_star = 0.0f32;
     for wi in 0..w {
         let active = (0..k).any(|ki| inp.slot_mask[wi * k + ki] > 0.0);
         let safe_d = if inp.d[wi] > 0.0 { inp.d[wi] } else { 1.0 };
         // eq. (11) with the per-workload cap N_{w,max}
-        s_star[wi] = if active { (r[wi] / safe_d).min(p.n_w_max) } else { 0.0 };
-        n_star += s_star[wi];
+        out.s[wi] = if active { (out.r[wi] / safe_d).min(p.n_w_max) } else { 0.0 };
+        n_star += out.s[wi];
     }
     let hi = inp.n_tot + p.alpha;
     let lo = p.beta * inp.n_tot;
@@ -239,14 +268,16 @@ pub fn native_step(
     if n_star <= 0.0 {
         scale = 1.0;
     }
-    let s: Vec<f32> = s_star.iter().map(|x| x * scale).collect();
+    for s in out.s.iter_mut() {
+        *s *= scale;
+    }
     // 4. AIMD (Fig. 4)
-    let n_next = if inp.n_tot <= n_star {
+    out.n_star = n_star;
+    out.n_next = if inp.n_tot <= n_star {
         (inp.n_tot + p.alpha).min(p.n_max)
     } else {
         (p.beta * inp.n_tot).max(p.n_min)
     };
-    StepOutputs { b_hat: b_new, pi: pi_new, r, s, n_star, n_next }
 }
 
 #[cfg(test)]

@@ -1,0 +1,326 @@
+//! `dithen bench-report`: measure end-to-end simulated-tasks/second on
+//! the default cost-experiment grid and write a machine-readable JSON
+//! report (`BENCH_PR1.json` seeds the perf trajectory; later PRs append
+//! `BENCH_PR<n>.json` against the same schema and the same grid).
+//!
+//! Two comparisons, both measured in the same process and recorded in
+//! the same file:
+//!
+//! 1. **end-to-end**: the grid run sequentially (1 thread — the only
+//!    mode the pre-refactor harness had) vs. on the parallel runner at
+//!    the requested width. Tasks/second counts every simulated task of
+//!    every run.
+//! 2. **task-DB microbench**: the identical insert→claim→complete
+//!    lifecycle plus per-tick query mix on the flat-arena [`TaskDb`]
+//!    vs. the seed's BTreeMap store ([`legacy::LegacyTaskDb`]), which
+//!    is kept in-tree precisely to keep this baseline measurable.
+//!
+//! The parallel results are asserted equal to the sequential ones
+//! before anything is written — a bench run doubles as a determinism
+//! check.
+
+use std::time::Instant;
+
+use crate::config::Config;
+use crate::coordinator::PolicyKind;
+use crate::db::{legacy::LegacyTaskDb, TaskDb, TaskStatus};
+use crate::platform::RunOpts;
+use crate::util::rng::Rng;
+use crate::workload::{App, WorkloadSpec};
+
+use super::parallel::{cost_grid, run_specs, RunSpec};
+
+/// Everything the report records.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub grid: &'static str,
+    pub threads: usize,
+    pub runs: usize,
+    pub tasks_total: usize,
+    pub seq_wall_s: f64,
+    pub par_wall_s: f64,
+    pub db_tasks: usize,
+    pub db_legacy_ops_per_s: f64,
+    pub db_arena_ops_per_s: f64,
+}
+
+impl BenchReport {
+    pub fn seq_tasks_per_s(&self) -> f64 {
+        self.tasks_total as f64 / self.seq_wall_s.max(1e-9)
+    }
+    pub fn par_tasks_per_s(&self) -> f64 {
+        self.tasks_total as f64 / self.par_wall_s.max(1e-9)
+    }
+    pub fn parallel_speedup(&self) -> f64 {
+        self.par_tasks_per_s() / self.seq_tasks_per_s().max(1e-9)
+    }
+    pub fn db_speedup(&self) -> f64 {
+        self.db_arena_ops_per_s / self.db_legacy_ops_per_s.max(1e-9)
+    }
+
+    /// Serialize (no serde in the vendor set; the schema is flat).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n\
+             \x20 \"schema\": \"dithen-bench-report/v1\",\n\
+             \x20 \"grid\": \"{grid}\",\n\
+             \x20 \"runs\": {runs},\n\
+             \x20 \"threads\": {threads},\n\
+             \x20 \"tasks_simulated_total\": {tasks},\n\
+             \x20 \"baseline\": {{\n\
+             \x20   \"mode\": \"sequential-1-thread (pre-refactor harness had no parallel runner)\",\n\
+             \x20   \"wall_s\": {sw:.3},\n\
+             \x20   \"tasks_per_s\": {stp:.1},\n\
+             \x20   \"db_impl\": \"legacy-btreemap (seed TaskDb, kept at src/db/legacy.rs)\",\n\
+             \x20   \"db_tasks\": {dbt},\n\
+             \x20   \"db_lifecycle_ops_per_s\": {dl:.0}\n\
+             \x20 }},\n\
+             \x20 \"current\": {{\n\
+             \x20   \"mode\": \"parallel runner\",\n\
+             \x20   \"wall_s\": {pw:.3},\n\
+             \x20   \"tasks_per_s\": {ptp:.1},\n\
+             \x20   \"speedup_vs_baseline\": {spd:.2},\n\
+             \x20   \"db_impl\": \"flat-arena + intrusive status lists\",\n\
+             \x20   \"db_tasks\": {dbt},\n\
+             \x20   \"db_lifecycle_ops_per_s\": {da:.0},\n\
+             \x20   \"db_speedup_vs_legacy\": {dspd:.2}\n\
+             \x20 }}\n\
+             }}\n",
+            grid = self.grid,
+            runs = self.runs,
+            threads = self.threads,
+            dbt = self.db_tasks,
+            tasks = self.tasks_total,
+            sw = self.seq_wall_s,
+            stp = self.seq_tasks_per_s(),
+            dl = self.db_legacy_ops_per_s,
+            pw = self.par_wall_s,
+            ptp = self.par_tasks_per_s(),
+            spd = self.parallel_speedup(),
+            da = self.db_arena_ops_per_s,
+            dspd = self.db_speedup(),
+        )
+    }
+}
+
+/// One lifecycle + tick-query pass over `n` tasks (2 media types) —
+/// the op mix a GCI run puts through the store. Returns a checksum so
+/// the optimizer cannot elide the queries.
+fn drive_arena(n: usize, ticks: usize) -> f64 {
+    let mut db = TaskDb::new();
+    for t in 0..n {
+        db.insert(0, t % 2, t);
+    }
+    db.reserve_measurements(0);
+    let mut acc = 0.0f64;
+    let per_tick = (n / ticks.max(1)).max(1);
+    let mut t = 0usize;
+    for tick in 0..ticks {
+        let now = (tick as u64 + 1) * 60;
+        let hi = (t + per_tick).min(n);
+        while t < hi {
+            db.claim((0, t), 1);
+            db.complete((0, t), 1.5, now, 0);
+            t += 1;
+        }
+        for k in 0..2 {
+            acc += db.remaining_slice(0).get(k).copied().unwrap_or(0) as f64;
+            let win = db.measurements_window(0, k, now.saturating_sub(60), now);
+            acc += win.iter().map(|&(_, c)| c).sum::<f64>();
+        }
+        acc += db.count_status(0, TaskStatus::Pending) as f64;
+        acc += db.status_iter(0, TaskStatus::Pending).take(32).sum::<usize>() as f64;
+    }
+    acc
+}
+
+/// The same op mix on the seed store (its measurement window is the
+/// full-table scan the refactor removed).
+fn drive_legacy(n: usize, ticks: usize) -> f64 {
+    let mut db = LegacyTaskDb::new();
+    for t in 0..n {
+        db.insert(0, t % 2, t);
+    }
+    let mut acc = 0.0f64;
+    let per_tick = (n / ticks.max(1)).max(1);
+    let mut t = 0usize;
+    for tick in 0..ticks {
+        let now = (tick as u64 + 1) * 60;
+        let hi = (t + per_tick).min(n);
+        while t < hi {
+            db.claim((0, t), 1);
+            db.complete((0, t), 1.5, now, 0);
+            t += 1;
+        }
+        for k in 0..2 {
+            acc += db.remaining_by_type(0, 2)[k];
+            acc += db
+                .measurements_between(0, k, now.saturating_sub(60), now)
+                .iter()
+                .sum::<f64>();
+        }
+        acc += db.count_status(0, TaskStatus::Pending) as f64;
+        acc += db.first_with_status(0, TaskStatus::Pending, 32).iter().sum::<usize>() as f64;
+    }
+    acc
+}
+
+fn ops_per_s(mut f: impl FnMut() -> f64, ops: usize) -> f64 {
+    // one warm-up, then best-of-3 timed passes
+    std::hint::black_box(f());
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    ops as f64 / best.max(1e-9)
+}
+
+/// A reduced grid for CI smoke runs (`--smoke`): 4 policies over a
+/// tiny 3-workload suite with a short horizon — seconds, not minutes.
+/// Exercises the same code paths (grid fan-out, determinism assert,
+/// JSON write) without the full paper-suite cost.
+fn smoke_grid(cfg: &Config) -> Vec<RunSpec> {
+    let mut base = cfg.clone();
+    base.control.monitor_interval_s = 300;
+    base.control.n_min = 4.0;
+    let rng = Rng::new(base.seed);
+    let suite: Vec<WorkloadSpec> = (0..3)
+        .map(|i| WorkloadSpec::generate(i, App::FaceDetection, 40, None, &rng))
+        .collect();
+    [
+        ("aimd", PolicyKind::Aimd, Some(3600)),
+        ("reactive", PolicyKind::Reactive, Some(3600)),
+        ("mwa", PolicyKind::Mwa, Some(3600)),
+        ("amazon-as", PolicyKind::AmazonAs1, None),
+    ]
+    .into_iter()
+    .map(|(name, policy, fixed_ttc_s)| RunSpec {
+        label: format!("smoke/{name}"),
+        cfg: base.clone(),
+        suite: suite.clone(),
+        opts: RunOpts {
+            policy,
+            fixed_ttc_s,
+            arrival_interval_s: 60,
+            horizon_s: 6 * 3600,
+            ..Default::default()
+        },
+    })
+    .collect()
+}
+
+/// Run the bench and write the JSON report to `out_path`. `smoke`
+/// swaps the full cost grid for [`smoke_grid`] (CI-sized).
+pub fn run(cfg: &Config, threads: usize, out_path: &str, smoke: bool) -> anyhow::Result<String> {
+    let mut cfg = cfg.clone();
+    cfg.use_xla = false; // backend-independent numbers (see bench_bank)
+    let grid = if smoke { smoke_grid(&cfg) } else { cost_grid(&cfg) };
+    let runs = grid.len();
+    let tasks_total: usize = grid.iter().map(|s| s.n_tasks()).sum();
+
+    eprintln!("bench-report: {runs} runs / {tasks_total} tasks, sequential baseline...");
+    let t0 = Instant::now();
+    let seq = run_specs(&grid, 1)?;
+    let seq_wall_s = t0.elapsed().as_secs_f64();
+
+    eprintln!("bench-report: parallel x{threads}...");
+    let t0 = Instant::now();
+    let par = run_specs(&grid, threads)?;
+    let par_wall_s = t0.elapsed().as_secs_f64();
+
+    anyhow::ensure!(
+        seq == par,
+        "parallel runner diverged from sequential results — determinism violation"
+    );
+
+    eprintln!("bench-report: task-DB microbench (arena vs legacy)...");
+    let db_tasks = if smoke { 10_000 } else { 50_000 };
+    let ticks = 200;
+    // ops ≈ one insert + claim + complete per task, plus the tick queries
+    let db_ops = 3 * db_tasks + 6 * ticks;
+    let db_arena_ops_per_s = ops_per_s(|| drive_arena(db_tasks, ticks), db_ops);
+    let db_legacy_ops_per_s = ops_per_s(|| drive_legacy(db_tasks, ticks), db_ops);
+
+    let report = BenchReport {
+        grid: if smoke { "cost-smoke" } else { "cost-default" },
+        threads,
+        runs,
+        tasks_total,
+        seq_wall_s,
+        par_wall_s,
+        db_tasks,
+        db_legacy_ops_per_s,
+        db_arena_ops_per_s,
+    };
+    let json = report.to_json();
+    if let Some(dir) = std::path::Path::new(out_path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(out_path, &json)?;
+    let summary = format!(
+        "grid: {runs} runs / {tasks} tasks\n\
+         sequential baseline: {sw:.2}s ({stp:.0} tasks/s)\n\
+         parallel x{threads}:  {pw:.2}s ({ptp:.0} tasks/s, {spd:.2}x)\n\
+         task-DB: arena {da:.2e} ops/s vs legacy {dl:.2e} ops/s ({dspd:.2}x)\n\
+         wrote {out_path}\n",
+        tasks = report.tasks_total,
+        sw = report.seq_wall_s,
+        stp = report.seq_tasks_per_s(),
+        pw = report.par_wall_s,
+        ptp = report.par_tasks_per_s(),
+        spd = report.parallel_speedup(),
+        da = report.db_arena_ops_per_s,
+        dl = report.db_legacy_ops_per_s,
+        dspd = report.db_speedup(),
+        threads = report.threads,
+    );
+    println!("{summary}");
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drivers_agree_on_checksum() {
+        // the two stores must do the same logical work, or the ops/s
+        // comparison is meaningless
+        assert_eq!(drive_arena(500, 10), drive_legacy(500, 10));
+    }
+
+    #[test]
+    fn json_is_parseable_by_our_parser() {
+        let r = BenchReport {
+            grid: "cost-default",
+            threads: 8,
+            runs: 10,
+            tasks_total: 12345,
+            seq_wall_s: 10.0,
+            par_wall_s: 2.0,
+            db_tasks: 1000,
+            db_legacy_ops_per_s: 1.0e6,
+            db_arena_ops_per_s: 9.0e6,
+        };
+        let j = crate::util::json::parse(&r.to_json()).unwrap();
+        assert_eq!(
+            j.get("schema").unwrap().as_str(),
+            Some("dithen-bench-report/v1")
+        );
+        assert_eq!(j.get("tasks_simulated_total").unwrap().as_usize(), Some(12345));
+        let cur = j.get("current").unwrap();
+        // the DB workload size must travel with the ops/s numbers so
+        // cross-report comparisons know what was measured
+        assert_eq!(cur.get("db_tasks").unwrap().as_usize(), Some(1000));
+        assert_eq!(
+            j.get("baseline").unwrap().get("db_tasks").unwrap().as_usize(),
+            Some(1000)
+        );
+        assert!(cur.get("speedup_vs_baseline").unwrap().as_f64().unwrap() > 4.9);
+        assert!(cur.get("db_speedup_vs_legacy").unwrap().as_f64().unwrap() > 8.9);
+    }
+}

@@ -14,11 +14,13 @@
 //!   fig12,table5  spot-market traces and catalogue
 
 pub mod ablation;
+pub mod bench_report;
 pub mod cost;
 pub mod estimators;
 pub mod fig5;
 pub mod lambda;
 pub mod market;
+pub mod parallel;
 pub mod splitmerge;
 
 use crate::config::Config;

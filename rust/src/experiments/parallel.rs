@@ -1,0 +1,282 @@
+//! Parallel experiment runner: fan independent `Platform::run`
+//! configurations across cores.
+//!
+//! The companion paper (Doyle et al., arXiv:1604.04804) sweeps
+//! estimator × policy × workload grids; every cell is an independent
+//! deterministic simulation, so the whole sweep is embarrassingly
+//! parallel. [`run_many`] is a rayon-style scoped worker pool over a
+//! shared atomic work index (the offline vendor set has no rayon; the
+//! pool is `std::thread::scope` + `AtomicUsize`, and swapping the body
+//! of `run_many` for `rayon::par_iter` is a three-line change if the
+//! vendor set ever gains it).
+//!
+//! **Determinism**: each [`RunSpec`] carries its own `Config` (with its
+//! own seed) and workload suite, and every simulation is a pure
+//! function of those inputs. Results are returned in spec order
+//! regardless of which worker ran which spec or in what order they
+//! finished, so a sweep is bit-identical across thread counts —
+//! `tests/determinism.rs` pins sequential == 2 threads == 8 threads.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::config::Config;
+use crate::coordinator::PolicyKind;
+use crate::estimation::EstimatorKind;
+use crate::metrics::RunMetrics;
+use crate::platform::{run_experiment, RunOpts};
+use crate::workload::{paper_suite, WorkloadSpec};
+
+/// One cell of an experiment grid: a fully self-contained simulation
+/// configuration (own config/seed, own suite, own run options).
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub label: String,
+    pub cfg: Config,
+    pub suite: Vec<WorkloadSpec>,
+    pub opts: RunOpts,
+}
+
+impl RunSpec {
+    /// Execute this cell (pure in its inputs).
+    pub fn execute(&self) -> anyhow::Result<RunMetrics> {
+        run_experiment(self.cfg.clone(), self.suite.clone(), self.opts.clone())
+    }
+
+    /// Total tasks this cell simulates (throughput accounting).
+    pub fn n_tasks(&self) -> usize {
+        self.suite.iter().map(|s| s.n_tasks()).sum()
+    }
+}
+
+/// Default worker count: one per core, at least 1.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Evaluate `f(0..n)` on a pool of `threads` scoped workers pulling
+/// indices from a shared atomic counter (work-stealing-lite: the
+/// counter is the one queue). Results come back **in index order**, so
+/// parallelism never changes observable output. `threads <= 1` runs
+/// inline with no pool.
+pub fn run_many<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                done.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut v = done.into_inner().unwrap();
+    v.sort_by_key(|&(i, _)| i);
+    v.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Run every spec of a grid, `threads`-wide; results in spec order.
+pub fn run_specs(specs: &[RunSpec], threads: usize) -> anyhow::Result<Vec<RunMetrics>> {
+    run_many(specs.len(), threads, |i| specs[i].execute())
+        .into_iter()
+        .collect()
+}
+
+/// The default cost-experiment grid (§V-C / Table III): the 5 scaling
+/// methods × 2 fixed TTCs over the paper suite, 5-minute monitoring.
+pub fn cost_grid(cfg: &Config) -> Vec<RunSpec> {
+    let mut base = cfg.clone();
+    base.control.monitor_interval_s = 300;
+    let suite = paper_suite(base.seed);
+    let mut specs = vec![];
+    for &ttc in &[super::cost::TTC_LONG_S, super::cost::TTC_SHORT_S] {
+        let as_kind = if ttc == super::cost::TTC_LONG_S {
+            PolicyKind::AmazonAs1
+        } else {
+            PolicyKind::AmazonAs10
+        };
+        for (name, policy, fixed_ttc) in [
+            ("aimd", PolicyKind::Aimd, Some(ttc)),
+            ("reactive", PolicyKind::Reactive, Some(ttc)),
+            ("mwa", PolicyKind::Mwa, Some(ttc)),
+            ("lr", PolicyKind::Lr, Some(ttc)),
+            ("amazon-as", as_kind, None),
+        ] {
+            specs.push(RunSpec {
+                label: format!("cost/{name}/ttc{ttc}"),
+                cfg: base.clone(),
+                suite: suite.clone(),
+                opts: RunOpts {
+                    policy,
+                    estimator: EstimatorKind::Kalman,
+                    fixed_ttc_s: fixed_ttc,
+                    horizon_s: 16 * 3600,
+                    ..Default::default()
+                },
+            });
+        }
+    }
+    specs
+}
+
+/// Estimator-shootout grid (Table II axis): each estimator drives the
+/// same suite.
+pub fn estimator_grid(cfg: &Config) -> Vec<RunSpec> {
+    let mut base = cfg.clone();
+    base.control.monitor_interval_s = 300;
+    let suite = paper_suite(base.seed);
+    EstimatorKind::ALL
+        .iter()
+        .map(|&estimator| RunSpec {
+            label: format!("estimator/{}", estimator.name()),
+            cfg: base.clone(),
+            suite: suite.clone(),
+            opts: RunOpts {
+                estimator,
+                fixed_ttc_s: Some(super::cost::TTC_LONG_S),
+                horizon_s: 16 * 3600,
+                ..Default::default()
+            },
+        })
+        .collect()
+}
+
+/// Seed-sweep / ablation grid: `n` independent replicas with
+/// deterministic per-run seeds derived from the master seed, each with
+/// its own suite realization.
+pub fn seed_grid(cfg: &Config, n: usize) -> Vec<RunSpec> {
+    (0..n)
+        .map(|i| {
+            let mut c = cfg.clone();
+            c.control.monitor_interval_s = 300;
+            c.seed = cfg.seed.wrapping_add(i as u64);
+            RunSpec {
+                label: format!("seed/{}", c.seed),
+                suite: paper_suite(c.seed),
+                cfg: c,
+                opts: RunOpts {
+                    fixed_ttc_s: Some(super::cost::TTC_LONG_S),
+                    horizon_s: 16 * 3600,
+                    ..Default::default()
+                },
+            }
+        })
+        .collect()
+}
+
+/// Run a named grid and render a summary table (the `dithen sweep`
+/// subcommand).
+pub fn run_sweep(name: &str, cfg: &Config, threads: usize) -> anyhow::Result<String> {
+    let specs = match name {
+        "cost" => cost_grid(cfg),
+        "estimators" => estimator_grid(cfg),
+        "seeds" => seed_grid(cfg, 8),
+        other => anyhow::bail!("unknown sweep '{other}' (use cost | estimators | seeds)"),
+    };
+    let t0 = std::time::Instant::now();
+    let results = run_specs(&specs, threads)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut table = crate::util::table::Table::new(vec![
+        "run",
+        "cost ($)",
+        "max inst",
+        "TTC (%)",
+        "finished",
+    ]);
+    let mut tasks = 0usize;
+    for (spec, m) in specs.iter().zip(&results) {
+        tasks += spec.n_tasks();
+        table.row(vec![
+            spec.label.clone(),
+            format!("{:.3}", m.total_cost),
+            format!("{}", m.max_instances),
+            format!("{:.0}", 100.0 * m.ttc_compliance()),
+            crate::util::table::fmt_hm(m.finished_at as f64),
+        ]);
+    }
+    let summary = format!(
+        "{} runs / {tasks} simulated tasks in {wall:.2}s on {threads} threads ({:.0} tasks/s)\n",
+        specs.len(),
+        tasks as f64 / wall.max(1e-9),
+    );
+    let out = format!("{}{summary}", table.render());
+    println!("{out}");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workload::App;
+
+    fn tiny_specs(n: usize) -> Vec<RunSpec> {
+        let rng = Rng::new(5);
+        (0..n)
+            .map(|i| {
+                let mut cfg = Config::paper_defaults();
+                cfg.use_xla = false;
+                cfg.control.n_min = 4.0;
+                cfg.seed = 100 + i as u64;
+                RunSpec {
+                    label: format!("tiny/{i}"),
+                    cfg,
+                    suite: vec![WorkloadSpec::generate(0, App::FaceDetection, 15, None, &rng)],
+                    opts: RunOpts {
+                        fixed_ttc_s: Some(3600),
+                        arrival_interval_s: 60,
+                        horizon_s: 4 * 3600,
+                        ..Default::default()
+                    },
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn run_many_preserves_index_order() {
+        let out = run_many(64, 8, |i| i * 3);
+        assert_eq!(out, (0..64).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_many_handles_edge_sizes() {
+        assert!(run_many(0, 4, |i| i).is_empty());
+        assert_eq!(run_many(1, 16, |i| i + 7), vec![7]);
+        assert_eq!(run_many(5, 1, |i| i), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_equals_sequential() {
+        let specs = tiny_specs(4);
+        let seq = run_specs(&specs, 1).unwrap();
+        let par = run_specs(&specs, 4).unwrap();
+        assert_eq!(seq, par, "thread count changed simulation results");
+    }
+
+    #[test]
+    fn grids_are_well_formed() {
+        let cfg = Config::paper_defaults();
+        let g = cost_grid(&cfg);
+        assert_eq!(g.len(), 10); // 5 policies x 2 TTCs
+        assert!(g.iter().all(|s| s.n_tasks() > 0));
+        assert_eq!(estimator_grid(&cfg).len(), 3);
+        let seeds = seed_grid(&cfg, 4);
+        assert_eq!(seeds.len(), 4);
+        // per-run seeds are distinct and deterministic
+        let s: Vec<u64> = seeds.iter().map(|r| r.cfg.seed).collect();
+        assert_eq!(s, vec![cfg.seed, cfg.seed + 1, cfg.seed + 2, cfg.seed + 3]);
+    }
+}

@@ -4,7 +4,7 @@
 use crate::sim::SimTime;
 
 /// Per-(workload, media-type) estimator trace (Fig. 6/7, Table II).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct EstimatorTrace {
     /// (time, estimate) at each monitoring instant, per estimator.
     pub kalman: Vec<(SimTime, f64)>,
@@ -56,7 +56,7 @@ impl EstimatorTrace {
 }
 
 /// Per-workload outcome.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct WorkloadOutcome {
     pub arrived_at: SimTime,
     pub completed_at: Option<SimTime>,
@@ -73,6 +73,13 @@ impl WorkloadOutcome {
 }
 
 /// Everything recorded during one platform run.
+/// `PartialEq` (manual, below) supports the determinism property
+/// tests: two runs with the same seed must be *bit-identical* in
+/// every simulation output — curves, traces, outcomes, costs. The
+/// one exclusion is `tick_wall_ns`: it sums host wall-clock time
+/// (`Instant::elapsed` in the GCI tick) and so differs between
+/// equally-deterministic runs; comparing it would make every
+/// determinism assertion fail on real hardware.
 #[derive(Debug, Clone, Default)]
 pub struct RunMetrics {
     /// (time, cumulative $) — the Fig. 8/9/10/11 curves.
@@ -95,6 +102,23 @@ pub struct RunMetrics {
     /// Monitoring ticks executed and total tick wall-time (perf metric).
     pub ticks: u64,
     pub tick_wall_ns: u128,
+}
+
+impl PartialEq for RunMetrics {
+    fn eq(&self, other: &Self) -> bool {
+        // every simulation output, but NOT tick_wall_ns (host wall
+        // clock — see the struct docs)
+        self.cost_curve == other.cost_curve
+            && self.instances_curve == other.instances_curve
+            && self.n_star_curve == other.n_star_curve
+            && self.max_instances == other.max_instances
+            && self.total_cost == other.total_cost
+            && self.traces == other.traces
+            && self.outcomes == other.outcomes
+            && self.total_busy_cus == other.total_busy_cus
+            && self.finished_at == other.finished_at
+            && self.ticks == other.ticks
+    }
 }
 
 impl RunMetrics {
@@ -176,5 +200,18 @@ mod tests {
         let m = RunMetrics::default();
         assert_eq!(m.ttc_compliance(), 1.0);
         assert_eq!(m.mean_tick_ns(), 0.0);
+    }
+
+    #[test]
+    fn equality_ignores_wall_clock_but_not_outputs() {
+        let a = RunMetrics { total_cost: 1.5, ticks: 9, tick_wall_ns: 111, ..Default::default() };
+        let mut b = a.clone();
+        b.tick_wall_ns = 99_999; // host timing noise must not break determinism checks
+        assert_eq!(a, b);
+        b.total_cost = 2.0;
+        assert_ne!(a, b);
+        let mut c = a.clone();
+        c.ticks = 10; // tick *count* is a simulation output and must compare
+        assert_ne!(a, c);
     }
 }

@@ -7,6 +7,15 @@
 //! through the tracker, while the scaling policy (AIMD or a baseline)
 //! grows/shrinks the spot fleet. Everything is deterministic in
 //! `Config::seed`.
+//!
+//! Perf (§Perf): the monitoring tick is allocation-free in steady state.
+//! All per-tick working sets — the bank's input matrices, its outputs,
+//! the service-rate scratch, estimator slots, last-measurement cache and
+//! measurement-log cursors — are dense `w*K+k`-indexed arrays owned by
+//! the platform and reused across ticks; the task DB serves every tick
+//! query (status counts, m_{w,k}, measurement windows) from borrowed
+//! slices of its flat arenas. `tests/alloc_steady_state.rs` pins this
+//! with a counting global allocator.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -16,13 +25,16 @@ use anyhow::Result;
 use crate::cloud::Provider;
 use crate::config::Config;
 use crate::coordinator::policy::{PolicyCtx, PolicyKind, ScalingPolicy};
-use crate::coordinator::{chunk_size, confirm, footprint_count, service_rates, Tracker};
+use crate::coordinator::{
+    chunk_size, confirm, footprint_count, service_rates_into, Tracker,
+};
 use crate::db::{TaskDb, TaskStatus};
 use crate::estimation::{
     AdHoc, Arma, Bank, BankParams, DeviationDetector, EstimatorKind, SlopeDetector,
 };
 use crate::lci::{execute_chunk, Chunk};
 use crate::metrics::{EstimatorTrace, RunMetrics, WorkloadOutcome};
+use crate::runtime::StepOutputs;
 use crate::sim::{Engine as SimEngine, Event, SimTime};
 use crate::storage::ObjectStore;
 use crate::workload::{Mode, WorkloadSpec};
@@ -68,7 +80,8 @@ enum WlPhase {
     Done,
 }
 
-/// Per-(workload, media-type) estimation state.
+/// Per-(workload, media-type) estimation state. Stored densely at
+/// `w * k_max + k`; slots outside a workload's `n_types` are inert.
 #[derive(Debug)]
 struct SlotEst {
     adhoc: AdHoc,
@@ -101,6 +114,26 @@ struct WlState {
     merge_instance: Option<u64>,
 }
 
+/// Per-tick scratch buffers, `mem::take`n at tick entry and returned at
+/// exit so the borrow checker sees them as locals. Sized once (bank
+/// dims / workload count), then only `fill`ed.
+#[derive(Debug, Default)]
+struct TickScratch {
+    // bank inputs, [bank.w * bank.k] / [bank.w]
+    b_tilde: Vec<f32>,
+    meas_mask: Vec<f32>,
+    m_rem: Vec<f32>,
+    slot_mask: Vec<f32>,
+    d: Vec<f32>,
+    // workloads whose driving estimator converged this tick
+    converged: Vec<usize>,
+    // non-Kalman service-rate scratch, [n_w]
+    r: Vec<f64>,
+    dd: Vec<f64>,
+    active: Vec<bool>,
+    rates_tmp: Vec<f64>,
+}
+
 /// The assembled platform.
 pub struct Platform {
     cfg: Config,
@@ -114,19 +147,27 @@ pub struct Platform {
     policy: Box<dyn ScalingPolicy>,
     specs: Vec<WorkloadSpec>,
     wl: Vec<WlState>,
-    est: BTreeMap<(usize, usize), SlotEst>,
-    /// Measurements accumulated since the last tick per (w, k).
-    meas_buf: BTreeMap<(usize, usize), Vec<f64>>,
-    /// Last interval-mean measurement per (w, k) — reused when an
-    /// interval produces no completions (eq. 8 uses b̃[t-1]).
-    last_meas: BTreeMap<(usize, usize), f32>,
+    /// Dense estimator slots, `w * k_max + k`.
+    est: Vec<SlotEst>,
+    /// Per-slot count of DB measurements already consumed by a tick —
+    /// the ME reads `db.measurements(w, k)[cursor..]` as "completed
+    /// since the last monitoring instant".
+    meas_cursor: Vec<usize>,
+    /// Last interval-mean measurement per slot (NaN = none yet) —
+    /// reused when an interval produces no completions (eq. 8 uses
+    /// b̃[t-1]).
+    last_meas: Vec<f32>,
     chunks: BTreeMap<u64, Chunk>,
     next_chunk_id: u64,
-    /// Latest service rates (per workload id).
-    rates: BTreeMap<usize, f64>,
+    /// Latest service rates, indexed by workload id.
+    rates: Vec<f64>,
     n_star_history: Vec<f64>,
     last_policy_eval: SimTime,
     k_max: usize,
+    scratch: TickScratch,
+    outs: StepOutputs,
+    /// Reused idle-instance id buffer for `assign_idle`.
+    idle_buf: Vec<u64>,
     metrics: RunMetrics,
     arrived: usize,
     all_done_at: Option<SimTime>,
@@ -137,7 +178,7 @@ impl Platform {
     /// arrival slots: 0, 1, 2, ...).
     pub fn new(cfg: Config, specs: Vec<WorkloadSpec>, opts: RunOpts) -> Platform {
         let n_w = specs.len().max(1);
-        let k_max = specs.iter().map(|s| s.n_types).max().unwrap_or(1);
+        let k_max = specs.iter().map(|s| s.n_types).max().unwrap_or(1).max(1);
         let params = BankParams::from_config(&cfg.control);
         let (bank, _backend) = Bank::with_best_backend(
             n_w,
@@ -151,7 +192,7 @@ impl Platform {
         let storage = ObjectStore::new(cfg.storage.clone());
         let tracker = Tracker::new(cfg.control.n_w_max);
         let policy = opts.policy.build(&cfg.control);
-        let wl = specs
+        let wl: Vec<WlState> = specs
             .iter()
             .map(|_| WlState {
                 phase: WlPhase::Footprinting,
@@ -169,6 +210,20 @@ impl Platform {
                 merge_instance: None,
             })
             .collect();
+        let n_slots = specs.len() * k_max;
+        let est: Vec<SlotEst> = (0..n_slots)
+            .map(|_| SlotEst {
+                adhoc: AdHoc::paper(),
+                arma: Arma::paper(),
+                kalman_det: SlopeDetector::new(),
+                adhoc_det: SlopeDetector::new(),
+                arma_det: DeviationDetector::paper(cfg.control.monitor_interval_s),
+                cum_cus: 0.0,
+                cum_done: 0,
+                seeded: false,
+            })
+            .collect();
+        let n_real = specs.len();
         Platform {
             cfg,
             opts,
@@ -181,15 +236,18 @@ impl Platform {
             policy,
             specs,
             wl,
-            est: BTreeMap::new(),
-            meas_buf: BTreeMap::new(),
-            last_meas: BTreeMap::new(),
+            est,
+            meas_cursor: vec![0; n_slots],
+            last_meas: vec![f32::NAN; n_slots],
             chunks: BTreeMap::new(),
             next_chunk_id: 0,
-            rates: BTreeMap::new(),
+            rates: vec![0.0; n_real],
             n_star_history: vec![],
             last_policy_eval: 0,
             k_max,
+            scratch: TickScratch::default(),
+            outs: StepOutputs::default(),
+            idle_buf: vec![],
             metrics: RunMetrics::default(),
             arrived: 0,
             all_done_at: None,
@@ -261,9 +319,10 @@ impl Platform {
             .collect();
         // finalize estimator traces with ground truth
         for ((w, k), trace) in self.metrics.traces.iter_mut() {
-            let done = self.db.all_measurements(*w, *k);
-            if !done.is_empty() {
-                trace.final_measured = Some(crate::util::stats::mean(&done));
+            let log = self.db.measurements(*w, *k);
+            if !log.is_empty() {
+                let sum: f64 = log.iter().map(|&(_, c)| c).sum();
+                trace.final_measured = Some(sum / log.len() as f64);
             }
         }
         Ok(self.metrics)
@@ -281,6 +340,9 @@ impl Platform {
                 .put(&format!("w{w:02}/input/item{t:06}"), task.bytes);
             self.db.insert(w, task.media_type, t);
         }
+        // pre-size the measurement logs: steady-state completions must
+        // not reallocate (§Perf)
+        self.db.reserve_measurements(w);
         let st = &mut self.wl[w];
         st.arrived_at = now;
         st.deadline = self.opts.fixed_ttc_s.map(|d| now + d);
@@ -296,16 +358,6 @@ impl Platform {
         st.phase = WlPhase::Footprinting;
         self.tracker.register(w);
         for k in 0..spec.n_types {
-            self.est.entry((w, k)).or_insert_with(|| SlotEst {
-                adhoc: AdHoc::paper(),
-                arma: Arma::paper(),
-                kalman_det: SlopeDetector::new(),
-                adhoc_det: SlopeDetector::new(),
-                arma_det: DeviationDetector::paper(self.cfg.control.monitor_interval_s),
-                cum_cus: 0.0,
-                cum_done: 0,
-                seeded: false,
-            });
             self.metrics
                 .traces
                 .entry((w, k))
@@ -336,10 +388,15 @@ impl Platform {
             let cus = result.per_task_cus[i];
             let k = spec.tasks[t].media_type;
             self.db.complete((w, t), cus, now, result.exit_code);
-            self.meas_buf.entry((w, k)).or_default().push(cus);
-            let est = self.est.get_mut(&(w, k)).unwrap();
-            est.cum_cus += cus;
-            est.cum_done += 1;
+            // abnormal exits (§II-A) feed neither estimator: the DB
+            // measurement log (the Kalman b_tilde source) only records
+            // completed tasks, and the ARMA cumulative feed must stay
+            // consistent with it
+            if result.exit_code == 0 {
+                let est = &mut self.est[w * self.k_max + k];
+                est.cum_cus += cus;
+                est.cum_done += 1;
+            }
             self.storage
                 .put(&format!("w{w:02}/output/item{t:06}"), (spec.tasks[t].bytes as f64 * 0.3) as u64);
         }
@@ -373,11 +430,12 @@ impl Platform {
         let seed = crate::util::stats::mean(&st.footprint_meas);
         let spec = &self.specs[w];
         for k in 0..spec.n_types {
-            let est = self.est.get_mut(&(w, k)).unwrap();
+            let est = &mut self.est[w * self.k_max + k];
             est.adhoc.seed(seed);
             est.seeded = true;
             // the bank's slot sees the seed as its first measurement at
-            // the next tick through meas_buf (already recorded above)
+            // the next tick through the measurement-log cursor (the
+            // footprint completions are already in the DB log)
         }
         let _ = now;
         self.update_pending_flag(w);
@@ -407,46 +465,62 @@ impl Platform {
         let tick_start = Instant::now();
         self.provider.bill_through(now);
 
+        // take the scratch + output buffers so field borrows stay
+        // disjoint; returned at the end of the tick
+        let mut sc = std::mem::take(&mut self.scratch);
+        let mut outs = std::mem::take(&mut self.outs);
+
         // ----- ME: assemble bank inputs (eqs. 1-3 bookkeeping) ----------
         let n_w = self.specs.len();
-        let k = self.k_max.max(1);
+        let k = self.k_max;
         let (bw, bk) = (self.bank.w, self.bank.k);
         let wk = bw * bk;
-        let mut b_tilde = vec![0.0f32; wk];
-        let mut meas_mask = vec![0.0f32; wk];
-        let mut m_rem = vec![0.0f32; wk];
-        let mut slot_mask = vec![0.0f32; wk];
-        let mut d = vec![0.0f32; bw];
+        sc.b_tilde.resize(wk, 0.0);
+        sc.meas_mask.resize(wk, 0.0);
+        sc.m_rem.resize(wk, 0.0);
+        sc.slot_mask.resize(wk, 0.0);
+        sc.d.resize(bw, 0.0);
+        sc.b_tilde.fill(0.0);
+        sc.meas_mask.fill(0.0);
+        sc.m_rem.fill(0.0);
+        sc.slot_mask.fill(0.0);
+        sc.d.fill(0.0);
         for w in 0..n_w {
             let st = &self.wl[w];
             if st.arrived_at > now || matches!(st.phase, WlPhase::Done) || self.arrived <= w {
                 continue;
             }
-            let remaining = self.db.remaining_by_type(w, self.specs[w].n_types);
+            let remaining = self.db.remaining_slice(w);
             let dl = st.deadline.unwrap_or(now + 3600);
             // safety margin of one monitoring interval: allocation is
             // interval-quantized, so pacing against the raw deadline
             // systematically finishes up to one interval late
             let margin = self.cfg.control.monitor_interval_s;
-            d[w] = dl.saturating_sub(now).saturating_sub(margin).max(1) as f32;
+            sc.d[w] = dl.saturating_sub(now).saturating_sub(margin).max(1) as f32;
             for ki in 0..self.specs[w].n_types.min(k) {
                 let idx = w * bk + ki;
-                slot_mask[idx] = 1.0;
-                m_rem[idx] = remaining[ki] as f32;
-                if let Some(buf) = self.meas_buf.get_mut(&(w, ki)) {
-                    if !buf.is_empty() {
-                        let m = crate::util::stats::mean(buf) as f32;
-                        b_tilde[idx] = m;
-                        meas_mask[idx] = 1.0;
-                        buf.clear();
-                        self.last_meas.insert((w, ki), m);
-                    } else if let Some(&last) = self.last_meas.get(&(w, ki)) {
+                let slot = w * self.k_max + ki;
+                sc.slot_mask[idx] = 1.0;
+                sc.m_rem[idx] = remaining.get(ki).copied().unwrap_or(0) as f32;
+                let log = self.db.measurements(w, ki);
+                let cursor = self.meas_cursor[slot];
+                if log.len() > cursor {
+                    let fresh = &log[cursor..];
+                    let sum: f64 = fresh.iter().map(|&(_, c)| c).sum();
+                    let m = (sum / fresh.len() as f64) as f32;
+                    sc.b_tilde[idx] = m;
+                    sc.meas_mask[idx] = 1.0;
+                    self.meas_cursor[slot] = log.len();
+                    self.last_meas[slot] = m;
+                } else {
+                    let last = self.last_meas[slot];
+                    if !last.is_nan() {
                         // eq. (8) uses b̃[t-1]: when no tasks of this type
                         // completed in the interval, the previous
                         // measurement is reused (the paper's estimator
                         // keeps pulling toward the last observation)
-                        b_tilde[idx] = last;
-                        meas_mask[idx] = 1.0;
+                        sc.b_tilde[idx] = last;
+                        sc.meas_mask[idx] = 1.0;
                     }
                 }
             }
@@ -455,17 +529,20 @@ impl Platform {
         let n_tot = fleet.active_cus as f32;
 
         // ----- the L1/L2 hot path: estimator-bank step -------------------
-        let out = self.bank.step(&crate::estimation::TickInputs {
-            b_tilde: &b_tilde,
-            meas_mask: &meas_mask,
-            m_rem: &m_rem,
-            slot_mask: &slot_mask,
-            d: &d,
-            n_tot,
-        })?;
+        self.bank.step_into(
+            &crate::estimation::TickInputs {
+                b_tilde: &sc.b_tilde,
+                meas_mask: &sc.meas_mask,
+                m_rem: &sc.m_rem,
+                slot_mask: &sc.slot_mask,
+                d: &sc.d,
+                n_tot,
+            },
+            &mut outs,
+        )?;
 
         // ----- passive estimators + convergence + traces ----------------
-        let mut converged_now: Vec<usize> = vec![];
+        sc.converged.clear();
         for w in 0..n_w {
             if self.arrived <= w || matches!(self.wl[w].phase, WlPhase::Done) {
                 continue;
@@ -473,16 +550,16 @@ impl Platform {
             let spec = &self.specs[w];
             for ki in 0..spec.n_types {
                 let idx = w * bk + ki;
-                if slot_mask[idx] == 0.0 {
+                if sc.slot_mask[idx] == 0.0 {
                     continue;
                 }
-                let had_meas = meas_mask[idx] > 0.0;
-                let est = self.est.get_mut(&(w, ki)).unwrap();
+                let had_meas = sc.meas_mask[idx] > 0.0;
+                let est = &mut self.est[w * self.k_max + ki];
                 if !est.seeded {
                     continue;
                 }
-                let kalman_b = out.b_hat[idx] as f64;
-                let m = if had_meas { Some(b_tilde[idx] as f64) } else { None };
+                let kalman_b = outs.b_hat[idx] as f64;
+                let m = if had_meas { Some(sc.b_tilde[idx] as f64) } else { None };
                 let adhoc_b = est.adhoc.update(m);
                 let arma_b = match crate::estimation::arma::normalize_per_item(est.cum_cus, est.cum_done)
                 {
@@ -497,44 +574,42 @@ impl Platform {
                     trace.kalman_t_init = Some(now);
                     trace.kalman_at_init = Some(kalman_b);
                     if self.opts.estimator == EstimatorKind::Kalman {
-                        converged_now.push(w);
+                        sc.converged.push(w);
                     }
                 }
                 if est.adhoc_det.push(adhoc_b).is_some() {
                     trace.adhoc_t_init = Some(now);
                     trace.adhoc_at_init = Some(adhoc_b);
                     if self.opts.estimator == EstimatorKind::AdHoc {
-                        converged_now.push(w);
+                        sc.converged.push(w);
                     }
                 }
                 if est.arma_det.push(arma_b).is_some() {
                     trace.arma_t_init = Some(now);
                     trace.arma_at_init = Some(arma_b);
                     if self.opts.estimator == EstimatorKind::Arma {
-                        converged_now.push(w);
+                        sc.converged.push(w);
                     }
                 }
             }
         }
 
         // ----- service rates from the *driving* estimator ----------------
-        let (rates_vec, n_star) = self.driving_rates(&out, &slot_mask, &m_rem, &d, n_tot as f64);
-        self.rates = rates_vec
-            .iter()
-            .enumerate()
-            .map(|(w, &s)| (w, s.min(self.cfg.control.n_w_max)))
-            .collect();
+        let n_star = self.driving_rates_into(&outs, &mut sc, n_tot as f64);
+        for w in 0..n_w {
+            self.rates[w] = sc.rates_tmp[w].min(self.cfg.control.n_w_max);
+        }
         self.n_star_history.push(n_star);
         self.metrics.n_star_curve.push((now, n_star));
 
         // ----- TTC confirmation at t_init (§II-E-4) ----------------------
-        for w in converged_now {
+        for &w in &sc.converged {
             if self.wl[w].confirmed {
                 continue;
             }
             self.wl[w].confirmed = true;
             if let Some(dl) = self.wl[w].deadline {
-                let r_w = self.driving_r(&out, w);
+                let r_w = self.driving_r(&outs, w);
                 let c = confirm(r_w, dl, now, self.cfg.control.n_w_max);
                 let st = &mut self.wl[w];
                 st.deadline = Some(c.deadline);
@@ -580,77 +655,80 @@ impl Platform {
             self.sim
                 .schedule(self.cfg.control.monitor_interval_s, Event::MonitorTick);
         }
+
+        self.scratch = sc;
+        self.outs = outs;
         Ok(())
     }
 
     // ----- helpers ---------------------------------------------------------
 
     /// r_w under the driving estimator.
-    fn driving_r(&self, out: &crate::runtime::StepOutputs, w: usize) -> f64 {
+    fn driving_r(&self, out: &StepOutputs, w: usize) -> f64 {
         match self.opts.estimator {
             EstimatorKind::Kalman => out.r[w] as f64,
             other => {
                 let spec = &self.specs[w];
-                let remaining = self.db.remaining_by_type(w, spec.n_types);
+                let remaining = self.db.remaining_slice(w);
                 let mut r = 0.0;
                 for ki in 0..spec.n_types {
-                    let est = &self.est[&(w, ki)];
+                    let est = &self.est[w * self.k_max + ki];
                     let b = match other {
                         EstimatorKind::AdHoc => est.adhoc.b_hat,
                         EstimatorKind::Arma => est.arma.b_hat,
                         EstimatorKind::Kalman => unreachable!(),
                     };
-                    r += remaining[ki] * b;
+                    r += remaining.get(ki).copied().unwrap_or(0) as f64 * b;
                 }
                 r
             }
         }
     }
 
-    /// Service rates under the driving estimator.
-    fn driving_rates(
-        &self,
-        out: &crate::runtime::StepOutputs,
-        slot_mask: &[f32],
-        m_rem: &[f32],
-        d: &[f32],
-        n_tot: f64,
-    ) -> (Vec<f64>, f64) {
+    /// Service rates under the driving estimator, written into
+    /// `sc.rates_tmp` (reused across ticks); returns n_star.
+    fn driving_rates_into(&self, out: &StepOutputs, sc: &mut TickScratch, n_tot: f64) -> f64 {
         let n_w = self.specs.len();
         let bk = self.bank.k;
+        sc.rates_tmp.resize(n_w, 0.0);
         match self.opts.estimator {
             EstimatorKind::Kalman => {
-                let rates: Vec<f64> = (0..n_w).map(|w| out.s[w] as f64).collect();
-                (rates, out.n_star as f64)
+                for w in 0..n_w {
+                    sc.rates_tmp[w] = out.s[w] as f64;
+                }
+                out.n_star as f64
             }
             other => {
-                let mut r = vec![0.0; n_w];
-                let mut dd = vec![0.0; n_w];
-                let mut active = vec![false; n_w];
+                sc.r.resize(n_w, 0.0);
+                sc.dd.resize(n_w, 0.0);
+                sc.active.resize(n_w, false);
+                sc.r.fill(0.0);
+                sc.active.fill(false);
                 for w in 0..n_w {
-                    dd[w] = d[w] as f64;
+                    sc.dd[w] = sc.d[w] as f64;
                     for ki in 0..self.specs[w].n_types {
                         let idx = w * bk + ki;
-                        if slot_mask[idx] > 0.0 {
-                            active[w] = true;
-                            let est = &self.est[&(w, ki)];
+                        if sc.slot_mask[idx] > 0.0 {
+                            sc.active[w] = true;
+                            let est = &self.est[w * self.k_max + ki];
                             let b = match other {
                                 EstimatorKind::AdHoc => est.adhoc.b_hat,
                                 EstimatorKind::Arma => est.arma.b_hat,
                                 EstimatorKind::Kalman => unreachable!(),
                             };
-                            r[w] += m_rem[idx] as f64 * b;
+                            sc.r[w] += sc.m_rem[idx] as f64 * b;
                         }
                     }
                 }
-                service_rates(
-                    &r,
-                    &dd,
-                    &active,
+                service_rates_into(
+                    &sc.r,
+                    &sc.dd,
+                    &sc.active,
                     n_tot,
                     self.cfg.control.alpha,
                     self.cfg.control.beta,
                     self.cfg.control.n_w_max,
+                    &mut sc.rates_tmp,
                 )
             }
         }
@@ -736,18 +814,20 @@ impl Platform {
     /// (single-task chunks), then tracker-allocated chunks.
     fn assign_idle(&mut self) {
         let now = self.sim.now();
+        let mut idle = std::mem::take(&mut self.idle_buf);
         loop {
-            let idle: Vec<u64> = self
-                .provider
-                .instances()
-                .filter(|i| i.is_idle())
-                .map(|i| i.id)
-                .collect();
+            idle.clear();
+            idle.extend(
+                self.provider
+                    .instances()
+                    .filter(|i| i.is_idle())
+                    .map(|i| i.id),
+            );
             if idle.is_empty() {
                 break;
             }
             let mut assigned_any = false;
-            for inst_id in idle {
+            for &inst_id in &idle {
                 // 1. footprinting chunks take priority (small, unblock TTC)
                 if let Some((w, tasks)) = self.next_footprint_chunk() {
                     self.dispatch_chunk(inst_id, w, tasks, true, now);
@@ -779,6 +859,7 @@ impl Platform {
                 break;
             }
         }
+        self.idle_buf = idle;
         self.dispatch_merges();
     }
 
@@ -816,24 +897,22 @@ impl Platform {
         let model = spec.app_model();
         // per-item estimate from the driving estimator (fallback:
         // footprint seed; last resort: app deadband + 1s)
-        let est = self
-            .est
-            .get(&(w, 0))
-            .map(|e| match self.opts.estimator {
-                EstimatorKind::Kalman => self.bank.estimate(w, 0) as f64,
-                EstimatorKind::AdHoc => e.adhoc.b_hat,
-                EstimatorKind::Arma => e.arma.b_hat,
-            })
-            .filter(|&b| b > 0.0)
-            .or_else(|| {
-                let st = &self.wl[w];
-                if st.footprint_meas.is_empty() {
-                    None
-                } else {
-                    Some(crate::util::stats::mean(&st.footprint_meas))
-                }
-            })
-            .unwrap_or(model.mean_cus + 1.0);
+        let slot = &self.est[w * self.k_max];
+        let est = Some(match self.opts.estimator {
+            EstimatorKind::Kalman => self.bank.estimate(w, 0) as f64,
+            EstimatorKind::AdHoc => slot.adhoc.b_hat,
+            EstimatorKind::Arma => slot.arma.b_hat,
+        })
+        .filter(|&b| b > 0.0)
+        .or_else(|| {
+            let st = &self.wl[w];
+            if st.footprint_meas.is_empty() {
+                None
+            } else {
+                Some(crate::util::stats::mean(&st.footprint_meas))
+            }
+        })
+        .unwrap_or(model.mean_cus + 1.0);
         let pending_n = self.db.count_status(w, TaskStatus::Pending);
         let n = chunk_size(
             est,
@@ -841,7 +920,7 @@ impl Platform {
             self.cfg.control.monitor_interval_s as f64,
             pending_n,
         );
-        self.db.first_with_status(w, TaskStatus::Pending, n)
+        self.db.status_iter(w, TaskStatus::Pending).take(n).collect()
     }
 
     fn dispatch_chunk(&mut self, inst_id: u64, w: usize, tasks: Vec<usize>, footprint: bool, now: SimTime) {

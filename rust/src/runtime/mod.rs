@@ -91,8 +91,10 @@ pub struct StepInputs<'a> {
     pub params: [f32; N_PARAMS],
 }
 
-/// Outputs of one monitor_step execution.
-#[derive(Debug, Clone, PartialEq)]
+/// Outputs of one monitor_step execution. `Default` gives empty
+/// buffers that [`crate::estimation::Bank::step_into`] sizes on first
+/// use and then refills in place, tick after tick.
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct StepOutputs {
     pub b_hat: Vec<f32>,
     pub pi: Vec<f32>,

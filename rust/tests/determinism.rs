@@ -1,0 +1,91 @@
+//! Determinism property tests: the same `Config::seed` must produce
+//! **byte-identical** `RunMetrics` — across repeated sequential runs,
+//! and across the parallel experiment runner at any thread count.
+//! (`RunMetrics` derives `PartialEq` over every curve, trace and
+//! outcome, so equality here is exhaustive, not a spot check.)
+
+use dithen::config::Config;
+use dithen::experiments::parallel::{run_specs, RunSpec};
+use dithen::platform::{run_experiment, RunOpts};
+use dithen::util::rng::Rng;
+use dithen::workload::{App, WorkloadSpec};
+
+fn cfg(seed: u64) -> Config {
+    let mut c = Config::paper_defaults();
+    c.use_xla = false;
+    c.control.n_min = 4.0;
+    c.seed = seed;
+    c
+}
+
+fn opts() -> RunOpts {
+    RunOpts {
+        fixed_ttc_s: Some(3600),
+        arrival_interval_s: 60,
+        horizon_s: 6 * 3600,
+        ..Default::default()
+    }
+}
+
+fn suite(seed: u64, n_wl: usize, tasks_each: usize) -> Vec<WorkloadSpec> {
+    let rng = Rng::new(seed);
+    (0..n_wl)
+        .map(|i| WorkloadSpec::generate(i, App::FaceDetection, tasks_each, None, &rng))
+        .collect()
+}
+
+#[test]
+fn same_seed_same_metrics_sequentially() {
+    for seed in [1u64, 42, 20161021] {
+        let a = run_experiment(cfg(seed), suite(seed, 2, 30), opts()).unwrap();
+        let b = run_experiment(cfg(seed), suite(seed, 2, 30), opts()).unwrap();
+        assert_eq!(a, b, "seed {seed}: two sequential runs diverged");
+    }
+}
+
+#[test]
+fn different_seeds_differ() {
+    let a = run_experiment(cfg(1), suite(1, 2, 30), opts()).unwrap();
+    let b = run_experiment(cfg(2), suite(2, 2, 30), opts()).unwrap();
+    assert_ne!(a.total_cost, b.total_cost);
+}
+
+#[test]
+fn parallel_runner_is_thread_count_invariant() {
+    // a mixed grid: different seeds, estimators and policies
+    let mut specs: Vec<RunSpec> = vec![];
+    for (i, est) in dithen::estimation::EstimatorKind::ALL.iter().enumerate() {
+        let seed = 7 + i as u64;
+        specs.push(RunSpec {
+            label: format!("det/{i}"),
+            cfg: cfg(seed),
+            suite: suite(seed, 2, 25),
+            opts: RunOpts { estimator: *est, ..opts() },
+        });
+    }
+    for (i, policy) in [
+        dithen::coordinator::PolicyKind::Aimd,
+        dithen::coordinator::PolicyKind::Reactive,
+        dithen::coordinator::PolicyKind::Mwa,
+    ]
+    .iter()
+    .enumerate()
+    {
+        let seed = 100 + i as u64;
+        specs.push(RunSpec {
+            label: format!("det/p{i}"),
+            cfg: cfg(seed),
+            suite: suite(seed, 1, 30),
+            opts: RunOpts { policy: *policy, ..opts() },
+        });
+    }
+
+    let sequential = run_specs(&specs, 1).unwrap();
+    for threads in [2usize, 4, 8] {
+        let parallel = run_specs(&specs, threads).unwrap();
+        assert_eq!(
+            sequential, parallel,
+            "{threads}-thread sweep diverged from the sequential reference"
+        );
+    }
+}

@@ -1,0 +1,204 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! Implements exactly the surface the `dithen` crate uses — see
+//! `vendor/README.md`. The error value is a flattened message chain
+//! (outermost context first); `{e}` prints the outermost message,
+//! `{e:#}` prints the whole chain separated by `: ` like upstream
+//! anyhow's alternate formatting.
+
+use std::fmt;
+
+/// A dynamic error: an ordered chain of messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Prepend a context message (becomes the new outermost entry).
+    pub fn context<C: fmt::Display>(mut self, ctx: C) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The outermost → innermost message chain.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+
+    fn from_std<E: std::error::Error + ?Sized>(e: &E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{e:#}`: full cause chain, anyhow-style
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            Some((top, rest)) if !rest.is_empty() => {
+                writeln!(f, "{top}")?;
+                writeln!(f, "\nCaused by:")?;
+                for (i, c) in rest.iter().enumerate() {
+                    writeln!(f, "    {i}: {c}")?;
+                }
+                Ok(())
+            }
+            _ => write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or("")),
+        }
+    }
+}
+
+// The blanket `?` conversion. Error itself deliberately does NOT
+// implement std::error::Error, which is what keeps this impl coherent
+// (same trick as upstream anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::from_std(&e)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(e).context(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)+))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($rest:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($rest)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing file");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.root_cause(), "missing file");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 3;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(format!("{e}"), "bad value 3");
+
+        fn f(v: usize) -> Result<usize> {
+            ensure!(v < 10, "v too big: {v}");
+            if v == 7 {
+                bail!("unlucky");
+            }
+            Ok(v)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "v too big: 12");
+        assert_eq!(format!("{}", f(7).unwrap_err()), "unlucky");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("empty").unwrap_err();
+        assert_eq!(format!("{e}"), "empty");
+    }
+}

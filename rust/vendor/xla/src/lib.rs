@@ -1,0 +1,142 @@
+//! API-compatible stub of the `xla` PJRT bindings.
+//!
+//! The offline vendor set has no `xla_extension` shared library, so
+//! this crate mirrors the handful of types `dithen::runtime` touches
+//! and reports the backend as unavailable from every entry point
+//! (`PjRtClient::cpu()` errors, so callers fall back to the native
+//! estimator bank before any other stubbed method can be reached).
+//! Replacing the path dependency in `rust/Cargo.toml` with the real
+//! bindings re-enables the AOT/PJRT hot path without source changes.
+
+use std::fmt;
+
+/// Error type matching the call sites' `?`-into-anyhow conversions.
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(XlaError(
+        "XLA/PJRT backend unavailable: built against the vendored stub (see rust/vendor/README.md)"
+            .into(),
+    ))
+}
+
+/// Element dtypes; only F32 is named by callers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+}
+
+/// A host-side tensor literal.
+#[derive(Debug)]
+pub struct Literal;
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+/// A device buffer returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// The PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Always errors in the stub; `Bank::with_best_backend` treats the
+    /// failure as "no XLA" and picks the native backend.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// A computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_ops_report_unavailable() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0; 8])
+            .is_err());
+        assert!(Literal.to_tuple().is_err());
+        assert!(Literal.to_vec::<f32>().is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+        assert!(PjRtLoadedExecutable.execute::<Literal>(&[]).is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}
