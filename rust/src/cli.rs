@@ -4,6 +4,7 @@
 //! ```text
 //! dithen repro <exp|all>      regenerate a paper table/figure (see list)
 //! dithen run [options]        run the platform on the paper suite
+//! dithen scenario [options]   run a composed scenario (backend/fault/arrivals)
 //! dithen sweep <grid>         parallel experiment grid (cost|estimators|seeds)
 //! dithen bench-report         measure tasks/s, write BENCH json
 //! dithen list                 list experiment ids
@@ -14,13 +15,18 @@
 //! Common options: `--config <file>`, `--set k=v` (repeatable),
 //! `--policy <aimd|reactive|mwa|lr|as1|as10>`, `--estimator
 //! <kalman|adhoc|arma>`, `--ttc <seconds>`, `--seed <n>`, `--native`,
-//! `--threads <n>`, `--out <file>`.
+//! `--threads <n>`, `--out <file>`. Scenario options: `--backend
+//! <spot|ondemand|lambda>`, `--fault <none|reclaim:BID|reclaim-at:T,..>`,
+//! `--arrivals <fixed:S|burst:NxGAP|poisson:MEAN>`, `--workloads <n>`,
+//! `--tasks <n>`, `--horizon <s>`, `--no-traces`.
 
+use crate::cloud::BackendKind;
 use crate::config::Config;
 use crate::coordinator::PolicyKind;
 use crate::estimation::EstimatorKind;
-use crate::platform::{Platform, RunOpts};
-use crate::workload::paper_suite;
+use crate::platform::{ArrivalProcess, FaultSpec, Platform, RunOpts, ScenarioBuilder};
+use crate::util::rng::Rng;
+use crate::workload::{paper_suite, App, WorkloadSpec};
 
 pub const USAGE: &str = "\
 dithen — Computation-as-a-Service control plane (TCC 2016 reproduction)
@@ -31,6 +37,7 @@ USAGE:
 COMMANDS:
     repro <exp|all>   regenerate a paper table/figure (fig5..fig12, table2..table5)
     run               run the platform on the 30-workload paper suite
+    scenario          run a composed scenario: pluggable backend, arrivals, faults
     sweep <grid>      run an experiment grid across cores: cost | estimators | seeds
     bench-report      measure end-to-end tasks/s + DB ops/s, write a JSON report
     list              list experiment ids
@@ -46,7 +53,16 @@ OPTIONS:
     --native               force the native estimator bank (skip XLA)
     --threads <n>          worker threads for sweep/bench-report (default: cores)
     --out <file>           bench-report output path (default: BENCH_PR1.json)
-    --smoke                bench-report: tiny CI-sized grid instead of the full one
+    --smoke                bench-report/scenario: tiny CI-sized run
+
+SCENARIO OPTIONS:
+    --backend <b>          spot (default) | ondemand | lambda
+    --fault <f>            none (default) | reclaim:<bid $/hr> | reclaim-at:<t1,t2,...>
+    --arrivals <a>         fixed:<gap_s> | burst:<n>x<gap_s> | poisson:<mean_gap_s>
+    --workloads <n>        generated workload count (default 6; smoke 3)
+    --tasks <n>            tasks per generated workload (default 120; smoke 40)
+    --horizon <s>          hard stop in sim seconds
+    --no-traces            skip estimator-trace recording (sweep-style)
     -h, --help             show this help
 ";
 
@@ -65,6 +81,13 @@ pub struct Cli {
     pub threads: Option<usize>,
     pub out: Option<String>,
     pub smoke: bool,
+    pub backend: Option<String>,
+    pub fault: Option<String>,
+    pub arrivals: Option<String>,
+    pub workloads: Option<usize>,
+    pub tasks: Option<usize>,
+    pub horizon: Option<u64>,
+    pub no_traces: bool,
     pub help: bool,
 }
 
@@ -112,6 +135,24 @@ pub fn parse(args: &[String]) -> Result<Cli, CliError> {
             }
             "--out" => cli.out = Some(need_value(&mut it, "--out")?),
             "--smoke" => cli.smoke = true,
+            "--backend" => cli.backend = Some(need_value(&mut it, "--backend")?),
+            "--fault" => cli.fault = Some(need_value(&mut it, "--fault")?),
+            "--arrivals" => cli.arrivals = Some(need_value(&mut it, "--arrivals")?),
+            "--workloads" => {
+                let v = need_value(&mut it, "--workloads")?;
+                cli.workloads =
+                    Some(v.parse().map_err(|_| CliError(format!("bad --workloads '{v}'")))?);
+            }
+            "--tasks" => {
+                let v = need_value(&mut it, "--tasks")?;
+                cli.tasks = Some(v.parse().map_err(|_| CliError(format!("bad --tasks '{v}'")))?);
+            }
+            "--horizon" => {
+                let v = need_value(&mut it, "--horizon")?;
+                cli.horizon =
+                    Some(v.parse().map_err(|_| CliError(format!("bad --horizon '{v}'")))?);
+            }
+            "--no-traces" => cli.no_traces = true,
             flag if flag.starts_with('-') => {
                 return Err(CliError(format!("unknown flag '{flag}'")));
             }
@@ -144,6 +185,75 @@ pub fn parse_estimator(s: &str) -> Result<EstimatorKind, CliError> {
     })
 }
 
+pub fn parse_backend(s: &str) -> Result<BackendKind, CliError> {
+    Ok(match s {
+        "spot" => BackendKind::Spot,
+        "ondemand" | "on-demand" => BackendKind::OnDemand,
+        "lambda" => BackendKind::Lambda,
+        other => return Err(CliError(format!("unknown backend '{other}'"))),
+    })
+}
+
+pub fn parse_fault(s: &str) -> Result<FaultSpec, CliError> {
+    if s == "none" {
+        return Ok(FaultSpec::None);
+    }
+    if let Some(bid) = s.strip_prefix("reclaim:") {
+        let bid: f64 = bid
+            .parse()
+            .map_err(|_| CliError(format!("bad reclaim bid '{bid}'")))?;
+        if bid.is_nan() || bid < 0.0 {
+            return Err(CliError("reclaim bid must be a non-negative $/hr price".into()));
+        }
+        return Ok(FaultSpec::SpotReclamation { bid });
+    }
+    if let Some(times) = s.strip_prefix("reclaim-at:") {
+        let times: Result<Vec<u64>, _> = times.split(',').map(|t| t.trim().parse()).collect();
+        let times = times.map_err(|_| CliError(format!("bad reclaim-at times in '{s}'")))?;
+        if times.is_empty() {
+            return Err(CliError("reclaim-at needs at least one instant".into()));
+        }
+        return Ok(FaultSpec::ReclamationAt { times });
+    }
+    Err(CliError(format!(
+        "unknown fault '{s}' (use none | reclaim:<bid> | reclaim-at:<t1,t2,...>)"
+    )))
+}
+
+pub fn parse_arrivals(s: &str) -> Result<ArrivalProcess, CliError> {
+    if let Some(gap) = s.strip_prefix("fixed:") {
+        let interval_s: u64 = gap
+            .parse()
+            .map_err(|_| CliError(format!("bad fixed arrival gap '{gap}'")))?;
+        return Ok(ArrivalProcess::FixedInterval { interval_s });
+    }
+    if let Some(spec) = s.strip_prefix("burst:") {
+        let (n, gap) = spec
+            .split_once('x')
+            .ok_or_else(|| CliError(format!("burst arrivals need '<n>x<gap_s>', got '{spec}'")))?;
+        let burst: usize =
+            n.parse().map_err(|_| CliError(format!("bad burst size '{n}'")))?;
+        let gap_s: u64 =
+            gap.parse().map_err(|_| CliError(format!("bad burst gap '{gap}'")))?;
+        if burst == 0 {
+            return Err(CliError("burst size must be >= 1".into()));
+        }
+        return Ok(ArrivalProcess::Bursty { burst, gap_s });
+    }
+    if let Some(mean) = s.strip_prefix("poisson:") {
+        let mean_gap_s: f64 = mean
+            .parse()
+            .map_err(|_| CliError(format!("bad poisson mean gap '{mean}'")))?;
+        if mean_gap_s.is_nan() || mean_gap_s <= 0.0 {
+            return Err(CliError("poisson mean gap must be > 0".into()));
+        }
+        return Ok(ArrivalProcess::Poisson { mean_gap_s });
+    }
+    Err(CliError(format!(
+        "unknown arrivals '{s}' (use fixed:<gap_s> | burst:<n>x<gap_s> | poisson:<mean_gap_s>)"
+    )))
+}
+
 /// Build the effective config from CLI flags.
 pub fn build_config(cli: &Cli) -> anyhow::Result<Config> {
     let mut cfg = match &cli.config_file {
@@ -160,6 +270,85 @@ pub fn build_config(cli: &Cli) -> anyhow::Result<Config> {
         cfg.use_xla = false;
     }
     Ok(cfg)
+}
+
+/// `dithen scenario`: assemble + run one scenario from flags. Returns
+/// the process exit code (non-zero when a smoke run leaves workloads
+/// incomplete, so CI can gate on it).
+fn run_scenario(cli: &Cli, mut cfg: Config) -> anyhow::Result<i32> {
+    let smoke = cli.smoke;
+    if smoke {
+        // CI-sized determinstic run: small suite, native bank, a
+        // scripted mid-run reclamation so the requeue path is exercised
+        cfg.use_xla = false;
+        cfg.control.n_min = 4.0;
+    }
+    let n_wl = cli.workloads.unwrap_or(if smoke { 3 } else { 6 });
+    let tasks = cli.tasks.unwrap_or(if smoke { 40 } else { 120 });
+    if n_wl == 0 || tasks == 0 {
+        // a zero-task workload can never leave footprinting; reject the
+        // input instead of ticking to the horizon
+        anyhow::bail!("--workloads and --tasks must be >= 1");
+    }
+    let rng = Rng::new(cfg.seed);
+    let suite: Vec<WorkloadSpec> = (0..n_wl)
+        .map(|i| WorkloadSpec::generate(i, App::FaceDetection, tasks, None, &rng))
+        .collect();
+    let arrivals = match &cli.arrivals {
+        Some(s) => parse_arrivals(s)?,
+        None => ArrivalProcess::FixedInterval { interval_s: if smoke { 60 } else { 300 } },
+    };
+    let fault = match &cli.fault {
+        Some(s) => parse_fault(s)?,
+        None if smoke => FaultSpec::ReclamationAt { times: vec![900, 1800] },
+        None => FaultSpec::None,
+    };
+    let backend = match &cli.backend {
+        Some(s) => parse_backend(s)?,
+        None => BackendKind::Spot,
+    };
+    let scn = ScenarioBuilder::new(cfg.clone())
+        .workloads(suite)
+        .policy(cli.policy.as_deref().map(parse_policy).transpose()?.unwrap_or(PolicyKind::Aimd))
+        .estimator(
+            cli.estimator
+                .as_deref()
+                .map(parse_estimator)
+                .transpose()?
+                .unwrap_or(EstimatorKind::Kalman),
+        )
+        .fixed_ttc(match cli.ttc {
+            Some(0) => None,
+            Some(t) => Some(t),
+            None => Some(3600),
+        })
+        .horizon(cli.horizon.unwrap_or(if smoke { 6 * 3600 } else { 24 * 3600 }))
+        .arrivals(arrivals)
+        .backend(backend)
+        .fault(fault)
+        .record_traces(!cli.no_traces)
+        .build();
+    println!("scenario: {}", scn.describe());
+    let m = scn.run()?;
+    let done = m.outcomes.iter().filter(|o| o.completed_at.is_some()).count();
+    println!(
+        "done at {} | cost ${:.3} | max instances {} | TTC compliance {:.0}% | \
+         completed {done}/{} workloads ({} tasks) | reclamations {} | requeued tasks {}",
+        crate::util::table::fmt_hm(m.finished_at as f64),
+        m.total_cost,
+        m.max_instances,
+        100.0 * m.ttc_compliance(),
+        m.outcomes.len(),
+        m.tasks_completed,
+        m.reclamations,
+        m.requeued_tasks,
+    );
+    if smoke && done != m.outcomes.len() {
+        let n = m.outcomes.len();
+        eprintln!("error: smoke scenario left {}/{n} workloads incomplete", n - done);
+        return Ok(1);
+    }
+    Ok(0)
 }
 
 /// Entry point used by main().
@@ -210,6 +399,7 @@ pub fn main_with(args: &[String]) -> anyhow::Result<i32> {
                     None => Some(crate::experiments::cost::TTC_LONG_S),
                 },
                 horizon_s: 24 * 3600,
+                record_traces: !cli.no_traces,
                 ..Default::default()
             };
             let suite = paper_suite(cfg.seed);
@@ -234,6 +424,9 @@ pub fn main_with(args: &[String]) -> anyhow::Result<i32> {
                 m.ticks,
                 m.mean_tick_ns() / 1000.0
             );
+        }
+        "scenario" => {
+            return run_scenario(&cli, cfg);
         }
         "sweep" => {
             let grid = cli.arg.as_deref().unwrap_or("cost");
@@ -299,6 +492,24 @@ mod tests {
     }
 
     #[test]
+    fn parses_scenario_flags() {
+        let c = parse(&argv(
+            "scenario --backend lambda --fault reclaim:0.009 --arrivals burst:3x600 \
+             --workloads 4 --tasks 50 --horizon 7200 --no-traces",
+        ))
+        .unwrap();
+        assert_eq!(c.command, "scenario");
+        assert_eq!(c.backend.as_deref(), Some("lambda"));
+        assert_eq!(c.fault.as_deref(), Some("reclaim:0.009"));
+        assert_eq!(c.arrivals.as_deref(), Some("burst:3x600"));
+        assert_eq!(c.workloads, Some(4));
+        assert_eq!(c.tasks, Some(50));
+        assert_eq!(c.horizon, Some(7200));
+        assert!(c.no_traces);
+        assert!(parse(&argv("scenario --workloads four")).is_err());
+    }
+
+    #[test]
     fn rejects_unknown_flag() {
         assert!(parse(&argv("run --bogus")).is_err());
         assert!(parse(&argv("run --ttc notanumber")).is_err());
@@ -312,6 +523,53 @@ mod tests {
         assert!(parse_policy("nope").is_err());
         assert_eq!(parse_estimator("arma").unwrap(), EstimatorKind::Arma);
         assert!(parse_estimator("nope").is_err());
+    }
+
+    #[test]
+    fn backend_names() {
+        assert_eq!(parse_backend("spot").unwrap(), BackendKind::Spot);
+        assert_eq!(parse_backend("ondemand").unwrap(), BackendKind::OnDemand);
+        assert_eq!(parse_backend("on-demand").unwrap(), BackendKind::OnDemand);
+        assert_eq!(parse_backend("lambda").unwrap(), BackendKind::Lambda);
+        assert!(parse_backend("gce").is_err());
+    }
+
+    #[test]
+    fn fault_specs() {
+        assert_eq!(parse_fault("none").unwrap(), FaultSpec::None);
+        assert_eq!(
+            parse_fault("reclaim:0.0085").unwrap(),
+            FaultSpec::SpotReclamation { bid: 0.0085 }
+        );
+        assert_eq!(
+            parse_fault("reclaim-at:600,1200").unwrap(),
+            FaultSpec::ReclamationAt { times: vec![600, 1200] }
+        );
+        assert!(parse_fault("reclaim:abc").is_err());
+        assert!(parse_fault("reclaim:nan").is_err());
+        assert!(parse_fault("reclaim:-1").is_err());
+        assert!(parse_fault("reclaim-at:").is_err());
+        assert!(parse_fault("meteor").is_err());
+    }
+
+    #[test]
+    fn arrival_specs() {
+        assert_eq!(
+            parse_arrivals("fixed:300").unwrap(),
+            ArrivalProcess::FixedInterval { interval_s: 300 }
+        );
+        assert_eq!(
+            parse_arrivals("burst:5x900").unwrap(),
+            ArrivalProcess::Bursty { burst: 5, gap_s: 900 }
+        );
+        assert_eq!(
+            parse_arrivals("poisson:120").unwrap(),
+            ArrivalProcess::Poisson { mean_gap_s: 120.0 }
+        );
+        assert!(parse_arrivals("burst:0x900").is_err());
+        assert!(parse_arrivals("burst:5").is_err());
+        assert!(parse_arrivals("poisson:-1").is_err());
+        assert!(parse_arrivals("sometimes").is_err());
     }
 
     #[test]

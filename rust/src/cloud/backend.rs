@@ -1,0 +1,489 @@
+//! Pluggable cloud backends behind one trait.
+//!
+//! [`CloudBackend`] abstracts everything the platform loop needs from an
+//! IaaS/FaaS substrate: instance lifecycle (request / ready / terminate /
+//! revoke), billing, fleet description and the usage hooks fired when
+//! work finishes. Three implementations ship:
+//!
+//! * **spot** — the paper's substrate: [`crate::cloud::Provider`] over the
+//!   simulated spot market, hourly pre-billing, boot delay, and forced
+//!   revocation when a fault model reclaims instances;
+//! * **on-demand** — the same `Provider` mechanics at the flat Table V
+//!   on-demand rate (never reclaimable): the §V-C "what if we didn't use
+//!   spot" baseline through the identical scheduling loop;
+//! * **lambda** — [`LambdaBackend`]: §V-D FaaS semantics — near-instant
+//!   cold start, *fractional* cores (tasks run `1/core_fraction` slower),
+//!   and usage billing per 100 ms GB-second quantum plus a per-request
+//!   fee, charged as chunks finish instead of by the wall-clock hour.
+//!
+//! The trait is object-safe (the platform owns a `Box<dyn CloudBackend>`)
+//! and its iteration surface is callback-based (`for_each_instance`) so
+//! the steady-state monitoring tick stays allocation-free.
+
+use std::collections::BTreeMap;
+
+use crate::cloud::instance::{Instance, InstanceState};
+use crate::cloud::lambda::core_fraction;
+use crate::cloud::provider::{FleetView, Provider};
+use crate::config::{Config, LambdaCfg};
+use crate::sim::SimTime;
+
+/// Chunk-id marker for a merge step occupying an instance.
+pub const MERGE_CHUNK: u64 = u64::MAX;
+
+/// Lambda cold-start latency (container spin-up), seconds.
+pub const LAMBDA_COLD_START_S: u64 = 2;
+
+/// Which backend a scenario runs on. Plain descriptor (Clone/PartialEq)
+/// so scenarios stay cheap to copy across sweep workers; the trait
+/// object is built per run by [`BackendKind::build`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// EC2 spot market (the paper's substrate). Reclaimable.
+    Spot,
+    /// EC2 on-demand: flat hourly rate, never reclaimed.
+    OnDemand,
+    /// AWS-Lambda-style FaaS: fractional cores, usage billing.
+    Lambda,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Spot => "spot",
+            BackendKind::OnDemand => "on-demand",
+            BackendKind::Lambda => "lambda",
+        }
+    }
+
+    /// Instantiate the backend for one run.
+    pub fn build(&self, cfg: &Config, seed: u64, horizon_hours: usize) -> Box<dyn CloudBackend> {
+        match self {
+            BackendKind::Spot => Box::new(Provider::new(cfg.market.clone(), seed, horizon_hours)),
+            BackendKind::OnDemand => {
+                Box::new(Provider::new_on_demand(cfg.market.clone(), seed, horizon_hours))
+            }
+            BackendKind::Lambda => Box::new(LambdaBackend::new(cfg.lambda.clone())),
+        }
+    }
+}
+
+/// The cloud substrate seen by the platform loop.
+pub trait CloudBackend {
+    /// Human-readable backend name ("spot" / "on-demand" / "lambda").
+    fn name(&self) -> &'static str;
+
+    /// Whether a spot-reclamation fault model applies to this backend.
+    fn reclaimable(&self) -> bool {
+        false
+    }
+
+    /// Request one unit of capacity; returns (id, ready_at).
+    fn request_instance(&mut self, now: SimTime) -> (u64, SimTime);
+
+    /// Boot/cold-start completion for `id`.
+    fn instance_ready(&mut self, id: u64, now: SimTime);
+
+    /// Graceful termination (drains if busy).
+    fn terminate_instance(&mut self, id: u64, now: SimTime);
+
+    /// Forced revocation (spot reclamation): immediate termination even
+    /// mid-chunk. The already-billed increment is sunk — the simulator
+    /// deliberately skips the partial-hour refund real EC2 grants so the
+    /// cost curve stays monotone (documented simplification).
+    fn revoke_instance(&mut self, id: u64, now: SimTime) {
+        if let Some(inst) = self.instance_mut(id) {
+            if inst.state != InstanceState::Terminated {
+                inst.state = InstanceState::Terminated;
+                inst.terminated_at = Some(now);
+                inst.current_chunk = None;
+            }
+        }
+    }
+
+    /// Advance time-based billing through `now` (no-op for usage-billed
+    /// backends).
+    fn bill_through(&mut self, now: SimTime);
+
+    /// `describeInstances()` fleet summary.
+    fn describe(&self, now: SimTime) -> FleetView;
+
+    fn instance(&self, id: u64) -> Option<&Instance>;
+    fn instance_mut(&mut self, id: u64) -> Option<&mut Instance>;
+
+    /// Visit every instance (allocation-free iteration surface).
+    fn for_each_instance(&self, f: &mut dyn FnMut(&Instance));
+
+    /// First idle running instance in id order, if any.
+    fn first_idle(&self) -> Option<u64>;
+
+    /// Idle running instances ordered by ascending remaining pre-billed
+    /// time (the AIMD termination preference).
+    fn idle_instances_by_remaining(&self, now: SimTime) -> Vec<u64>;
+
+    /// Mean CPU utilization over active instances (Amazon AS input).
+    fn mean_utilization(&self, now: SimTime) -> f64;
+
+    fn total_cost(&self) -> f64;
+    fn cost_curve(&self) -> &[(SimTime, f64)];
+
+    /// Current $/hr unit price (spot market price, flat rate, or the
+    /// GB-second-equivalent hourly rate for Lambda). Fault models compare
+    /// this against the scenario bid.
+    fn unit_price(&self, now: SimTime) -> f64;
+
+    /// Wall-clock multiplier on task execution: 1.0 for whole-core
+    /// instances, `1 / core_fraction` for Lambda's fractional cores.
+    fn execution_multiplier(&self) -> f64 {
+        1.0
+    }
+
+    /// A chunk of `tasks` tasks finished on `id` after `busy_s` occupied
+    /// wall seconds: release the instance and do any usage billing.
+    fn on_chunk_finished(&mut self, id: u64, now: SimTime, busy_s: f64, tasks: usize) {
+        let _ = tasks;
+        if let Some(inst) = self.instance_mut(id) {
+            inst.finish_chunk(now, busy_s.ceil() as SimTime);
+        }
+    }
+
+    /// A merge step of `merge_s` seconds was dispatched onto `id`: mark
+    /// it busy. (Usage billing happens at completion — a reclaimed merge
+    /// is re-dispatched and must not be charged twice.)
+    fn on_merge_dispatched(&mut self, id: u64, now: SimTime, merge_s: f64) {
+        let _ = now;
+        if let Some(inst) = self.instance_mut(id) {
+            inst.current_chunk = Some(MERGE_CHUNK);
+            inst.busy_s += merge_s.ceil() as SimTime;
+        }
+    }
+
+    /// The merge step on `id` completed after `merge_s` seconds: release
+    /// the instance and do any usage billing (the busy time was already
+    /// accounted at dispatch).
+    fn on_merge_finished(&mut self, id: u64, now: SimTime, merge_s: f64) {
+        let _ = merge_s;
+        if let Some(inst) = self.instance_mut(id) {
+            inst.finish_chunk(now, 0);
+        }
+    }
+}
+
+// ----- shared fleet helpers (spot/on-demand/lambda all keep a dense
+// id-ordered instance map) --------------------------------------------
+
+pub(crate) fn fleet_view(instances: &BTreeMap<u64, Instance>, now: SimTime) -> FleetView {
+    let mut v = FleetView::default();
+    for inst in instances.values() {
+        match inst.state {
+            InstanceState::Booting => {
+                v.booting += 1;
+                v.committed_cus += inst.cus as f64;
+            }
+            InstanceState::Running => {
+                v.running += 1;
+                v.active_cus += inst.cus as f64;
+                v.committed_cus += inst.cus as f64;
+                v.c_tot += (inst.cus as u64 * inst.remaining_billed(now)) as f64;
+            }
+            InstanceState::Draining => {
+                v.draining += 1;
+                v.active_cus += inst.cus as f64;
+                v.committed_cus += inst.cus as f64;
+                v.c_tot += (inst.cus as u64 * inst.remaining_billed(now)) as f64;
+            }
+            InstanceState::Terminated => v.terminated += 1,
+        }
+    }
+    v
+}
+
+pub(crate) fn fleet_first_idle(instances: &BTreeMap<u64, Instance>) -> Option<u64> {
+    instances.values().find(|i| i.is_idle()).map(|i| i.id)
+}
+
+pub(crate) fn fleet_idle_by_remaining(
+    instances: &BTreeMap<u64, Instance>,
+    now: SimTime,
+) -> Vec<u64> {
+    let mut v: Vec<(u64, SimTime)> = instances
+        .values()
+        .filter(|i| i.is_idle())
+        .map(|i| (i.id, i.remaining_billed(now)))
+        .collect();
+    v.sort_by_key(|&(id, rem)| (rem, id));
+    v.into_iter().map(|(id, _)| id).collect()
+}
+
+pub(crate) fn fleet_mean_utilization(instances: &BTreeMap<u64, Instance>, now: SimTime) -> f64 {
+    let us: Vec<f64> = instances
+        .values()
+        .filter(|i| i.is_active(now))
+        .map(|i| i.utilization(now))
+        .collect();
+    crate::util::stats::mean(&us)
+}
+
+// ----- Lambda backend --------------------------------------------------
+
+/// FaaS execution substrate (§V-D): each "instance" is a warm function
+/// slot. No pre-billing — cost accrues per finished chunk as
+/// `ceil(busy / quantum) * quantum * memory_gb * $/GB-s` plus one
+/// request fee per task, and tasks run on a fractional core so their
+/// wall time is `1 / core_fraction` times the whole-core duration.
+#[derive(Debug)]
+pub struct LambdaBackend {
+    cfg: LambdaCfg,
+    instances: BTreeMap<u64, Instance>,
+    next_id: u64,
+    total_cost: f64,
+    cost_curve: Vec<(SimTime, f64)>,
+}
+
+impl LambdaBackend {
+    pub fn new(cfg: LambdaCfg) -> Self {
+        LambdaBackend {
+            cfg,
+            instances: BTreeMap::new(),
+            next_id: 0,
+            total_cost: 0.0,
+            cost_curve: vec![(0, 0.0)],
+        }
+    }
+
+    /// Charge GB-seconds for `busy_s` of wall time (+ per-request fees).
+    fn charge(&mut self, now: SimTime, busy_s: f64, requests: usize) {
+        let quanta = (busy_s / self.cfg.billing_quantum_s).ceil().max(1.0);
+        let gb_s = quanta * self.cfg.billing_quantum_s * self.cfg.memory_gb;
+        let charge = gb_s * self.cfg.price_per_gb_s + requests as f64 * self.cfg.price_per_request;
+        self.total_cost += charge;
+        self.cost_curve.push((now, self.total_cost));
+    }
+}
+
+impl CloudBackend for LambdaBackend {
+    fn name(&self) -> &'static str {
+        "lambda"
+    }
+
+    fn request_instance(&mut self, now: SimTime) -> (u64, SimTime) {
+        self.next_id += 1;
+        let id = self.next_id;
+        self.instances.insert(id, Instance::new(id, 0, 1, now));
+        (id, now + LAMBDA_COLD_START_S)
+    }
+
+    fn instance_ready(&mut self, id: u64, now: SimTime) {
+        if let Some(inst) = self.instances.get_mut(&id) {
+            if inst.state == InstanceState::Booting {
+                inst.boot_complete(now);
+                inst.billed_until = now; // no pre-billed increment
+            }
+        }
+    }
+
+    fn terminate_instance(&mut self, id: u64, now: SimTime) {
+        if let Some(inst) = self.instances.get_mut(&id) {
+            if inst.state == InstanceState::Booting {
+                inst.state = InstanceState::Terminated;
+                inst.terminated_at = Some(now);
+            } else {
+                inst.terminate(now);
+            }
+        }
+    }
+
+    fn bill_through(&mut self, _now: SimTime) {
+        // usage-billed: all cost accrues in on_chunk_finished
+    }
+
+    fn describe(&self, now: SimTime) -> FleetView {
+        fleet_view(&self.instances, now)
+    }
+
+    fn instance(&self, id: u64) -> Option<&Instance> {
+        self.instances.get(&id)
+    }
+
+    fn instance_mut(&mut self, id: u64) -> Option<&mut Instance> {
+        self.instances.get_mut(&id)
+    }
+
+    fn for_each_instance(&self, f: &mut dyn FnMut(&Instance)) {
+        for inst in self.instances.values() {
+            f(inst);
+        }
+    }
+
+    fn first_idle(&self) -> Option<u64> {
+        fleet_first_idle(&self.instances)
+    }
+
+    fn idle_instances_by_remaining(&self, now: SimTime) -> Vec<u64> {
+        fleet_idle_by_remaining(&self.instances, now)
+    }
+
+    fn mean_utilization(&self, now: SimTime) -> f64 {
+        fleet_mean_utilization(&self.instances, now)
+    }
+
+    fn total_cost(&self) -> f64 {
+        self.total_cost
+    }
+
+    fn cost_curve(&self) -> &[(SimTime, f64)] {
+        &self.cost_curve
+    }
+
+    fn unit_price(&self, _now: SimTime) -> f64 {
+        // GB-second-equivalent hourly rate for one slot
+        self.cfg.memory_gb * self.cfg.price_per_gb_s * 3600.0
+    }
+
+    fn execution_multiplier(&self) -> f64 {
+        1.0 / core_fraction(&self.cfg).max(1e-9)
+    }
+
+    fn on_chunk_finished(&mut self, id: u64, now: SimTime, busy_s: f64, tasks: usize) {
+        if let Some(inst) = self.instances.get_mut(&id) {
+            inst.finish_chunk(now, busy_s.ceil() as SimTime);
+        }
+        self.charge(now, busy_s, tasks);
+    }
+
+    fn on_merge_finished(&mut self, id: u64, now: SimTime, merge_s: f64) {
+        if let Some(inst) = self.instances.get_mut(&id) {
+            inst.finish_chunk(now, 0);
+        }
+        // one aggregation invocation, charged on completion only — a
+        // reclaimed merge re-dispatches without double billing
+        self.charge(now, merge_s, 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MarketCfg;
+
+    fn lambda() -> LambdaBackend {
+        LambdaBackend::new(LambdaCfg::default())
+    }
+
+    #[test]
+    fn backend_kind_builds_all_three() {
+        let cfg = Config::paper_defaults();
+        for (kind, name, reclaimable) in [
+            (BackendKind::Spot, "spot", true),
+            (BackendKind::OnDemand, "on-demand", false),
+            (BackendKind::Lambda, "lambda", false),
+        ] {
+            let b = kind.build(&cfg, 7, 24);
+            assert_eq!(b.name(), name);
+            assert_eq!(b.reclaimable(), reclaimable);
+            assert_eq!(kind.name(), name);
+        }
+    }
+
+    #[test]
+    fn lambda_cold_start_and_no_prebilling() {
+        let mut b = lambda();
+        let (id, ready) = b.request_instance(100);
+        assert_eq!(ready, 100 + LAMBDA_COLD_START_S);
+        b.instance_ready(id, ready);
+        assert_eq!(b.describe(ready).running, 1);
+        // no hourly pre-billing: readiness is free
+        assert_eq!(b.total_cost(), 0.0);
+        b.bill_through(ready + 50_000);
+        assert_eq!(b.total_cost(), 0.0);
+        assert_eq!(b.describe(ready).c_tot, 0.0);
+    }
+
+    #[test]
+    fn lambda_charges_per_chunk_with_quantum_roundup() {
+        let mut b = lambda();
+        let (id, ready) = b.request_instance(0);
+        b.instance_ready(id, ready);
+        b.instance_mut(id).unwrap().current_chunk = Some(1);
+        // 10.03 s busy -> 10.1 billed seconds at 1 GB + 4 request fees
+        b.on_chunk_finished(id, ready + 11, 10.03, 4);
+        let cfg = LambdaCfg::default();
+        let want = 10.1 * cfg.memory_gb * cfg.price_per_gb_s + 4.0 * cfg.price_per_request;
+        assert!((b.total_cost() - want).abs() < 1e-12, "{} vs {want}", b.total_cost());
+        assert!(b.instance(id).unwrap().is_idle());
+    }
+
+    #[test]
+    fn lambda_execution_multiplier_is_inverse_core_fraction() {
+        // default config: 1 GB on a 4 GB / 2-core host -> 0.5 core -> 2x
+        assert!((lambda().execution_multiplier() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn whole_core_backends_do_not_stretch_execution() {
+        let cfg = Config::paper_defaults();
+        for kind in [BackendKind::Spot, BackendKind::OnDemand] {
+            assert_eq!(kind.build(&cfg, 1, 4).execution_multiplier(), 1.0);
+        }
+    }
+
+    #[test]
+    fn revoke_kills_busy_instance_immediately() {
+        let mut p = Provider::new(MarketCfg::default(), 1, 4);
+        let (id, ready) = CloudBackend::request_instance(&mut p, 0);
+        CloudBackend::instance_ready(&mut p, id, ready);
+        p.instance_mut(id).unwrap().current_chunk = Some(9);
+        // graceful terminate would only drain; revoke must kill now
+        p.revoke_instance(id, ready + 10);
+        let inst = CloudBackend::instance(&p, id).unwrap();
+        assert_eq!(inst.state, InstanceState::Terminated);
+        assert_eq!(inst.terminated_at, Some(ready + 10));
+        assert_eq!(inst.current_chunk, None);
+        // idempotent: the original termination instant is preserved
+        p.revoke_instance(id, ready + 99);
+        assert_eq!(CloudBackend::instance(&p, id).unwrap().terminated_at, Some(ready + 10));
+    }
+
+    #[test]
+    fn on_demand_prices_flat_and_above_spot() {
+        let mcfg = MarketCfg::default();
+        let mut od = Provider::new_on_demand(mcfg.clone(), 3, 24);
+        let mut sp = Provider::new(mcfg.clone(), 3, 24);
+        assert_eq!(CloudBackend::name(&od), "on-demand");
+        assert_eq!(CloudBackend::name(&sp), "spot");
+        for (p, _) in [(&mut od, 0), (&mut sp, 1)] {
+            let (id, ready) = CloudBackend::request_instance(p, 0);
+            CloudBackend::instance_ready(p, id, ready);
+        }
+        // first-hour charge: flat on-demand rate vs the (much cheaper) spot price
+        assert!((od.total_cost() - mcfg.on_demand_price).abs() < 1e-12);
+        assert!(sp.total_cost() < od.total_cost() / 3.0);
+        assert_eq!(od.unit_price(0), mcfg.on_demand_price);
+        assert_eq!(od.unit_price(500_000), mcfg.on_demand_price);
+    }
+
+    #[test]
+    fn lambda_merge_bills_on_completion_only() {
+        let mut b = lambda();
+        let (id, ready) = b.request_instance(0);
+        b.instance_ready(id, ready);
+        b.on_merge_dispatched(id, ready, 30.0);
+        assert_eq!(b.total_cost(), 0.0, "a dispatched merge must not be charged yet");
+        b.on_merge_finished(id, ready + 30, 30.0);
+        let cfg = LambdaCfg::default();
+        let want = 30.0 * cfg.memory_gb * cfg.price_per_gb_s + cfg.price_per_request;
+        assert!((b.total_cost() - want).abs() < 1e-12, "{} vs {want}", b.total_cost());
+        assert!(b.instance(id).unwrap().is_idle());
+    }
+
+    #[test]
+    fn default_merge_hook_marks_instance_busy() {
+        let mut p = Provider::new(MarketCfg::default(), 1, 4);
+        let (id, ready) = CloudBackend::request_instance(&mut p, 0);
+        CloudBackend::instance_ready(&mut p, id, ready);
+        p.on_merge_dispatched(id, ready, 40.2);
+        let inst = CloudBackend::instance(&p, id).unwrap();
+        assert_eq!(inst.current_chunk, Some(MERGE_CHUNK));
+        assert_eq!(inst.busy_s, 41);
+    }
+}

@@ -1,12 +1,16 @@
-//! Cloud substrate: EC2 spot-market + instance + billing simulator, and
-//! the Lambda pricing model. See DESIGN.md §2 for the substitution
+//! Cloud substrate: EC2 spot-market + instance + billing simulator, the
+//! Lambda pricing model, and the [`CloudBackend`] trait that lets the
+//! platform run the same scheduling loop over spot, on-demand, or
+//! Lambda-style substrates. See DESIGN.md §2 for the substitution
 //! rationale (paper ran on live AWS; repro band 0 ⇒ simulate).
 
+pub mod backend;
 pub mod instance;
 pub mod lambda;
 pub mod market;
 pub mod provider;
 
+pub use backend::{BackendKind, CloudBackend, LambdaBackend, MERGE_CHUNK};
 pub use instance::{Instance, InstanceState};
 pub use market::{instance_type, InstanceType, Market, CATALOG};
 pub use provider::{FleetView, Provider};

@@ -35,6 +35,10 @@ pub struct FleetView {
 pub struct Provider {
     market: Market,
     cfg: MarketCfg,
+    /// `Some(rate)` = flat hourly pricing (on-demand); `None` = spot
+    /// market pricing. Everything else (boot delay, hourly increments,
+    /// instance lifecycle) is shared between the two modes.
+    flat_rate: Option<f64>,
     instances: BTreeMap<u64, Instance>,
     next_id: u64,
     /// Cumulative $ billed across all instances.
@@ -48,6 +52,7 @@ impl Provider {
         Provider {
             market: Market::new(cfg.clone(), seed, horizon_hours),
             cfg,
+            flat_rate: None,
             instances: BTreeMap::new(),
             next_id: 0,
             total_cost: 0.0,
@@ -55,8 +60,23 @@ impl Provider {
         }
     }
 
+    /// On-demand variant: identical lifecycle and hourly billing, but at
+    /// the flat Table V on-demand rate and never subject to reclamation.
+    pub fn new_on_demand(cfg: MarketCfg, seed: u64, horizon_hours: usize) -> Self {
+        let rate = cfg.on_demand_price;
+        Provider { flat_rate: Some(rate), ..Provider::new(cfg, seed, horizon_hours) }
+    }
+
     pub fn market(&self) -> &Market {
         &self.market
+    }
+
+    /// $/hr for `type_idx` at `t` under this provider's pricing mode.
+    fn price_at(&self, type_idx: usize, t: SimTime) -> f64 {
+        match self.flat_rate {
+            Some(rate) => rate,
+            None => self.market.spot_price(type_idx, t),
+        }
     }
 
     /// requestSpotInstances(): place a spot request for one instance of
@@ -82,7 +102,7 @@ impl Provider {
         if state != InstanceState::Booting {
             return; // terminated while booting
         }
-        let price = self.market.spot_price(type_idx, now);
+        let price = self.price_at(type_idx, now);
         let inst = self.instances.get_mut(&id).unwrap();
         inst.boot_complete(now);
         inst.billed_until = now; // first increment starts at readiness
@@ -113,12 +133,20 @@ impl Provider {
         let ids: Vec<u64> = self.instances.keys().copied().collect();
         for id in ids {
             let type_idx = self.instances[&id].type_idx;
+            let flat = self.flat_rate;
             let market = &self.market;
             let inst = self.instances.get_mut(&id).unwrap();
             if inst.state == InstanceState::Booting || inst.state == InstanceState::Terminated {
                 continue;
             }
-            newly += inst.bill_through(now, |t| market.spot_price(type_idx, t), increment);
+            newly += inst.bill_through(
+                now,
+                |t| match flat {
+                    Some(rate) => rate,
+                    None => market.spot_price(type_idx, t),
+                },
+                increment,
+            );
         }
         if newly > 0.0 {
             self.total_cost += newly;
@@ -128,29 +156,7 @@ impl Provider {
 
     /// describeInstances(): fleet summary at `now`.
     pub fn describe(&self, now: SimTime) -> FleetView {
-        let mut v = FleetView::default();
-        for inst in self.instances.values() {
-            match inst.state {
-                InstanceState::Booting => {
-                    v.booting += 1;
-                    v.committed_cus += inst.cus as f64;
-                }
-                InstanceState::Running => {
-                    v.running += 1;
-                    v.active_cus += inst.cus as f64;
-                    v.committed_cus += inst.cus as f64;
-                    v.c_tot += (inst.cus as u64 * inst.remaining_billed(now)) as f64;
-                }
-                InstanceState::Draining => {
-                    v.draining += 1;
-                    v.active_cus += inst.cus as f64;
-                    v.committed_cus += inst.cus as f64;
-                    v.c_tot += (inst.cus as u64 * inst.remaining_billed(now)) as f64;
-                }
-                InstanceState::Terminated => v.terminated += 1,
-            }
-        }
-        v
+        crate::cloud::backend::fleet_view(&self.instances, now)
     }
 
     pub fn instance(&self, id: u64) -> Option<&Instance> {
@@ -168,14 +174,7 @@ impl Provider {
     /// Idle running instances, cheapest-to-keep last: ordered by ascending
     /// remaining billed time (the AIMD termination preference).
     pub fn idle_instances_by_remaining(&self, now: SimTime) -> Vec<u64> {
-        let mut v: Vec<(u64, SimTime)> = self
-            .instances
-            .values()
-            .filter(|i| i.is_idle())
-            .map(|i| (i.id, i.remaining_billed(now)))
-            .collect();
-        v.sort_by_key(|&(id, rem)| (rem, id));
-        v.into_iter().map(|(id, _)| id).collect()
+        crate::cloud::backend::fleet_idle_by_remaining(&self.instances, now)
     }
 
     /// All running (not draining) instance ids, idle first.
@@ -197,19 +196,89 @@ impl Provider {
 
     /// Average CPU utilization over running instances (Amazon AS input).
     pub fn mean_utilization(&self, now: SimTime) -> f64 {
-        let us: Vec<f64> = self
-            .instances
-            .values()
-            .filter(|i| i.is_active(now))
-            .map(|i| i.utilization(now))
-            .collect();
-        crate::util::stats::mean(&us)
+        crate::cloud::backend::fleet_mean_utilization(&self.instances, now)
     }
 
     /// Maximum concurrently active instance count seen across the cost
     /// curve — recomputed live by the platform; provided here for tests.
     pub fn active_count(&self, now: SimTime) -> usize {
         self.instances.values().filter(|i| i.is_active(now)).count()
+    }
+}
+
+/// The spot/on-demand [`crate::cloud::CloudBackend`]: platform-facing
+/// surface over the inherent `Provider` API. Single-CU m3.medium units
+/// (catalogue type 0), exactly what the pre-refactor loop requested.
+impl crate::cloud::CloudBackend for Provider {
+    fn name(&self) -> &'static str {
+        if self.flat_rate.is_some() {
+            "on-demand"
+        } else {
+            "spot"
+        }
+    }
+
+    fn reclaimable(&self) -> bool {
+        // only spot instances can be reclaimed by the market
+        self.flat_rate.is_none()
+    }
+
+    fn request_instance(&mut self, now: SimTime) -> (u64, SimTime) {
+        self.request_spot_instance(0, now)
+    }
+
+    fn instance_ready(&mut self, id: u64, now: SimTime) {
+        Provider::instance_ready(self, id, now)
+    }
+
+    fn terminate_instance(&mut self, id: u64, now: SimTime) {
+        Provider::terminate_instance(self, id, now)
+    }
+
+    fn bill_through(&mut self, now: SimTime) {
+        Provider::bill_through(self, now)
+    }
+
+    fn describe(&self, now: SimTime) -> FleetView {
+        Provider::describe(self, now)
+    }
+
+    fn instance(&self, id: u64) -> Option<&Instance> {
+        Provider::instance(self, id)
+    }
+
+    fn instance_mut(&mut self, id: u64) -> Option<&mut Instance> {
+        Provider::instance_mut(self, id)
+    }
+
+    fn for_each_instance(&self, f: &mut dyn FnMut(&Instance)) {
+        for inst in self.instances.values() {
+            f(inst);
+        }
+    }
+
+    fn first_idle(&self) -> Option<u64> {
+        crate::cloud::backend::fleet_first_idle(&self.instances)
+    }
+
+    fn idle_instances_by_remaining(&self, now: SimTime) -> Vec<u64> {
+        Provider::idle_instances_by_remaining(self, now)
+    }
+
+    fn mean_utilization(&self, now: SimTime) -> f64 {
+        Provider::mean_utilization(self, now)
+    }
+
+    fn total_cost(&self) -> f64 {
+        Provider::total_cost(self)
+    }
+
+    fn cost_curve(&self) -> &[(SimTime, f64)] {
+        Provider::cost_curve(self)
+    }
+
+    fn unit_price(&self, now: SimTime) -> f64 {
+        self.price_at(0, now)
     }
 }
 

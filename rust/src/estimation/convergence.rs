@@ -53,11 +53,19 @@ impl SlopeDetector {
 }
 
 /// Windowed-deviation detector for ARMA.
+///
+/// Storage is a fixed-size ring over the trailing `window` estimates,
+/// allocated once at construction: `push` is allocation-free, so the
+/// passive-estimator tick path stays heap-quiet when trace recording is
+/// disabled (pinned by `tests/alloc_steady_state.rs`).
 #[derive(Debug, Clone)]
 pub struct DeviationDetector {
     window: usize,
     threshold: f64,
-    history: Vec<f64>,
+    /// Ring buffer of the last `window` estimates.
+    ring: Vec<f64>,
+    /// Total estimates seen (monitoring instants).
+    count: usize,
     converged_at: Option<usize>,
 }
 
@@ -65,7 +73,13 @@ impl DeviationDetector {
     /// `window`: number of trailing estimates compared; `threshold`:
     /// maximum allowed |x - mean| / mean (paper: 0.20).
     pub fn new(window: usize, threshold: f64) -> Self {
-        DeviationDetector { window, threshold, history: Vec::new(), converged_at: None }
+        DeviationDetector {
+            window,
+            threshold,
+            ring: vec![0.0; window.max(1)],
+            count: 0,
+            converged_at: None,
+        }
     }
 
     /// Paper settings per monitoring interval: 3 samples for 5-min
@@ -76,17 +90,20 @@ impl DeviationDetector {
     }
 
     pub fn push(&mut self, b_hat: f64) -> Option<usize> {
-        let t = self.history.len();
-        self.history.push(b_hat);
-        if self.converged_at.is_some() || self.history.len() < self.window {
+        let t = self.count;
+        let slot = self.count % self.ring.len();
+        self.ring[slot] = b_hat;
+        self.count += 1;
+        if self.converged_at.is_some() || self.count < self.window {
             return None;
         }
-        let tail = &self.history[self.history.len() - self.window..];
-        let mean = crate::util::stats::mean(tail);
+        // ring order does not matter: the criterion is over the
+        // unordered trailing window (mean + max deviation)
+        let mean = crate::util::stats::mean(&self.ring);
         if mean <= 0.0 {
             return None;
         }
-        let ok = tail.iter().all(|x| (x - mean).abs() / mean <= self.threshold);
+        let ok = self.ring.iter().all(|x| (x - mean).abs() / mean <= self.threshold);
         if ok {
             self.converged_at = Some(t);
             return Some(t);

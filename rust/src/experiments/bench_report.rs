@@ -196,17 +196,20 @@ fn smoke_grid(cfg: &Config) -> Vec<RunSpec> {
         ("amazon-as", PolicyKind::AmazonAs1, None),
     ]
     .into_iter()
-    .map(|(name, policy, fixed_ttc_s)| RunSpec {
-        label: format!("smoke/{name}"),
-        cfg: base.clone(),
-        suite: suite.clone(),
-        opts: RunOpts {
-            policy,
-            fixed_ttc_s,
-            arrival_interval_s: 60,
-            horizon_s: 6 * 3600,
-            ..Default::default()
-        },
+    .map(|(name, policy, fixed_ttc_s)| {
+        RunSpec::from_opts(
+            format!("smoke/{name}"),
+            base.clone(),
+            suite.clone(),
+            RunOpts {
+                policy,
+                fixed_ttc_s,
+                arrival_interval_s: 60,
+                horizon_s: 6 * 3600,
+                record_traces: false, // sweep-style: traces are never read
+                ..Default::default()
+            },
+        )
     })
     .collect()
 }

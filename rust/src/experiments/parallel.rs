@@ -1,5 +1,5 @@
-//! Parallel experiment runner: fan independent `Platform::run`
-//! configurations across cores.
+//! Parallel experiment runner: fan independent scenario runs across
+//! cores.
 //!
 //! The companion paper (Doyle et al., arXiv:1604.04804) sweeps
 //! estimator × policy × workload grids; every cell is an independent
@@ -10,12 +10,17 @@
 //! of `run_many` for `rayon::par_iter` is a three-line change if the
 //! vendor set ever gains it).
 //!
-//! **Determinism**: each [`RunSpec`] carries its own `Config` (with its
-//! own seed) and workload suite, and every simulation is a pure
-//! function of those inputs. Results are returned in spec order
-//! regardless of which worker ran which spec or in what order they
-//! finished, so a sweep is bit-identical across thread counts —
-//! `tests/determinism.rs` pins sequential == 2 threads == 8 threads.
+//! **Determinism**: each [`RunSpec`] carries a self-contained
+//! [`Scenario`] (own config/seed, own suite), and every simulation is a
+//! pure function of it. Results are returned in spec order regardless of
+//! which worker ran which spec or in what order they finished, so a
+//! sweep is bit-identical across thread counts — `tests/determinism.rs`
+//! pins sequential == 2 threads == 8 threads, including a
+//! spot-reclamation scenario (revocations come from the seeded market).
+//!
+//! Grid cells run with estimator-trace recording **off**: the traces are
+//! never read by sweep reporting and are the largest per-tick allocation
+//! source (rust/BENCHMARKS.md).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -24,28 +29,41 @@ use crate::config::Config;
 use crate::coordinator::PolicyKind;
 use crate::estimation::EstimatorKind;
 use crate::metrics::RunMetrics;
-use crate::platform::{run_experiment, RunOpts};
+use crate::platform::{RunOpts, Scenario, ScenarioBuilder};
 use crate::workload::{paper_suite, WorkloadSpec};
 
-/// One cell of an experiment grid: a fully self-contained simulation
-/// configuration (own config/seed, own suite, own run options).
+/// One cell of an experiment grid: a fully self-contained scenario plus
+/// its display label.
 #[derive(Debug, Clone)]
 pub struct RunSpec {
     pub label: String,
-    pub cfg: Config,
-    pub suite: Vec<WorkloadSpec>,
-    pub opts: RunOpts,
+    pub scenario: Scenario,
 }
 
 impl RunSpec {
+    pub fn new(label: impl Into<String>, scenario: Scenario) -> Self {
+        RunSpec { label: label.into(), scenario }
+    }
+
+    /// Compatibility constructor over the `RunOpts` shim (fixed-interval
+    /// arrivals, fault-free spot fleet).
+    pub fn from_opts(
+        label: impl Into<String>,
+        cfg: Config,
+        suite: Vec<WorkloadSpec>,
+        opts: RunOpts,
+    ) -> Self {
+        RunSpec::new(label, Scenario::from_opts(cfg, suite, opts))
+    }
+
     /// Execute this cell (pure in its inputs).
     pub fn execute(&self) -> anyhow::Result<RunMetrics> {
-        run_experiment(self.cfg.clone(), self.suite.clone(), self.opts.clone())
+        self.scenario.run()
     }
 
     /// Total tasks this cell simulates (throughput accounting).
     pub fn n_tasks(&self) -> usize {
-        self.suite.iter().map(|s| s.n_tasks()).sum()
+        self.scenario.n_tasks()
     }
 }
 
@@ -94,6 +112,15 @@ pub fn run_specs(specs: &[RunSpec], threads: usize) -> anyhow::Result<Vec<RunMet
         .collect()
 }
 
+/// Shared base for the §V-C grids: 5-minute monitoring, paper suite,
+/// traces off (sweeps never read them).
+fn grid_cell(base: &Config, suite: &[WorkloadSpec]) -> ScenarioBuilder {
+    ScenarioBuilder::new(base.clone())
+        .workloads(suite.to_vec())
+        .horizon(16 * 3600)
+        .record_traces(false)
+}
+
 /// The default cost-experiment grid (§V-C / Table III): the 5 scaling
 /// methods × 2 fixed TTCs over the paper suite, 5-minute monitoring.
 pub fn cost_grid(cfg: &Config) -> Vec<RunSpec> {
@@ -114,18 +141,14 @@ pub fn cost_grid(cfg: &Config) -> Vec<RunSpec> {
             ("lr", PolicyKind::Lr, Some(ttc)),
             ("amazon-as", as_kind, None),
         ] {
-            specs.push(RunSpec {
-                label: format!("cost/{name}/ttc{ttc}"),
-                cfg: base.clone(),
-                suite: suite.clone(),
-                opts: RunOpts {
-                    policy,
-                    estimator: EstimatorKind::Kalman,
-                    fixed_ttc_s: fixed_ttc,
-                    horizon_s: 16 * 3600,
-                    ..Default::default()
-                },
-            });
+            specs.push(RunSpec::new(
+                format!("cost/{name}/ttc{ttc}"),
+                grid_cell(&base, &suite)
+                    .policy(policy)
+                    .estimator(EstimatorKind::Kalman)
+                    .fixed_ttc(fixed_ttc)
+                    .build(),
+            ));
         }
     }
     specs
@@ -139,16 +162,14 @@ pub fn estimator_grid(cfg: &Config) -> Vec<RunSpec> {
     let suite = paper_suite(base.seed);
     EstimatorKind::ALL
         .iter()
-        .map(|&estimator| RunSpec {
-            label: format!("estimator/{}", estimator.name()),
-            cfg: base.clone(),
-            suite: suite.clone(),
-            opts: RunOpts {
-                estimator,
-                fixed_ttc_s: Some(super::cost::TTC_LONG_S),
-                horizon_s: 16 * 3600,
-                ..Default::default()
-            },
+        .map(|&estimator| {
+            RunSpec::new(
+                format!("estimator/{}", estimator.name()),
+                grid_cell(&base, &suite)
+                    .estimator(estimator)
+                    .fixed_ttc(Some(super::cost::TTC_LONG_S))
+                    .build(),
+            )
         })
         .collect()
 }
@@ -162,16 +183,13 @@ pub fn seed_grid(cfg: &Config, n: usize) -> Vec<RunSpec> {
             let mut c = cfg.clone();
             c.control.monitor_interval_s = 300;
             c.seed = cfg.seed.wrapping_add(i as u64);
-            RunSpec {
-                label: format!("seed/{}", c.seed),
-                suite: paper_suite(c.seed),
-                cfg: c,
-                opts: RunOpts {
-                    fixed_ttc_s: Some(super::cost::TTC_LONG_S),
-                    horizon_s: 16 * 3600,
-                    ..Default::default()
-                },
-            }
+            let suite = paper_suite(c.seed);
+            RunSpec::new(
+                format!("seed/{}", c.seed),
+                grid_cell(&c, &suite)
+                    .fixed_ttc(Some(super::cost::TTC_LONG_S))
+                    .build(),
+            )
         })
         .collect()
 }
@@ -230,17 +248,17 @@ mod tests {
                 cfg.use_xla = false;
                 cfg.control.n_min = 4.0;
                 cfg.seed = 100 + i as u64;
-                RunSpec {
-                    label: format!("tiny/{i}"),
+                RunSpec::from_opts(
+                    format!("tiny/{i}"),
                     cfg,
-                    suite: vec![WorkloadSpec::generate(0, App::FaceDetection, 15, None, &rng)],
-                    opts: RunOpts {
+                    vec![WorkloadSpec::generate(0, App::FaceDetection, 15, None, &rng)],
+                    RunOpts {
                         fixed_ttc_s: Some(3600),
                         arrival_interval_s: 60,
                         horizon_s: 4 * 3600,
                         ..Default::default()
                     },
-                }
+                )
             })
             .collect()
     }
@@ -272,11 +290,13 @@ mod tests {
         let g = cost_grid(&cfg);
         assert_eq!(g.len(), 10); // 5 policies x 2 TTCs
         assert!(g.iter().all(|s| s.n_tasks() > 0));
+        // sweeps never read traces; recording stays off (perf)
+        assert!(g.iter().all(|s| !s.scenario.record_traces));
         assert_eq!(estimator_grid(&cfg).len(), 3);
         let seeds = seed_grid(&cfg, 4);
         assert_eq!(seeds.len(), 4);
         // per-run seeds are distinct and deterministic
-        let s: Vec<u64> = seeds.iter().map(|r| r.cfg.seed).collect();
+        let s: Vec<u64> = seeds.iter().map(|r| r.scenario.cfg.seed).collect();
         assert_eq!(s, vec![cfg.seed, cfg.seed + 1, cfg.seed + 2, cfg.seed + 3]);
     }
 }

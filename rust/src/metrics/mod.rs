@@ -102,6 +102,15 @@ pub struct RunMetrics {
     /// Monitoring ticks executed and total tick wall-time (perf metric).
     pub ticks: u64,
     pub tick_wall_ns: u128,
+    /// Instances revoked by the fault model (spot reclamation).
+    pub reclamations: u64,
+    /// In-flight tasks re-queued through `TaskDb::requeue` after their
+    /// instance was reclaimed (each later completes exactly once; the
+    /// DB state machine panics on double completion).
+    pub requeued_tasks: u64,
+    /// Tasks that reached Completed/Failed across all workloads — must
+    /// balance the suite's task count even under reclamation churn.
+    pub tasks_completed: usize,
 }
 
 impl PartialEq for RunMetrics {
@@ -118,6 +127,9 @@ impl PartialEq for RunMetrics {
             && self.total_busy_cus == other.total_busy_cus
             && self.finished_at == other.finished_at
             && self.ticks == other.ticks
+            && self.reclamations == other.reclamations
+            && self.requeued_tasks == other.requeued_tasks
+            && self.tasks_completed == other.tasks_completed
     }
 }
 

@@ -1,0 +1,126 @@
+//! Front-end arrival processes.
+//!
+//! The paper's evaluation feeds the front end a fixed drip (one workload
+//! every 5 minutes, §V-A); the companion work (arXiv:1604.04804,
+//! arXiv:1711.02150) stresses that reactive control earns its keep under
+//! *bursty* and *random* demand. An [`ArrivalProcess`] maps each arrival
+//! slot `w` to a deterministic arrival instant; randomness (Poisson)
+//! comes from the scenario seed, never from wall clock, so every arrival
+//! schedule is bit-reproducible.
+//!
+//! Invariant: arrival times are nondecreasing in the slot index — the
+//! platform's per-tick bookkeeping (`arrived <= w` guards) relies on
+//! arrival order matching workload-id order.
+
+use crate::sim::SimTime;
+use crate::util::rng::Rng;
+
+/// Stream tag for the arrival-process RNG substream (disjoint from the
+/// market / workload-generator streams).
+const ARRIVAL_STREAM: u64 = 0xA221_7A1F_0F1C_E55D;
+
+/// When each workload reaches the front end.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Workload `w` arrives at `w * interval_s` (the paper's schedule).
+    FixedInterval { interval_s: u64 },
+    /// Back-to-back groups of `burst` workloads, one group every
+    /// `gap_s` seconds: all members of a group arrive at the same
+    /// instant (flash-crowd shape).
+    Bursty { burst: usize, gap_s: u64 },
+    /// Poisson process: exponential inter-arrival gaps with the given
+    /// mean, drawn from the seeded RNG (first arrival at t = 0).
+    Poisson { mean_gap_s: f64 },
+}
+
+impl ArrivalProcess {
+    /// Arrival instant per slot, for `n` workloads under `seed`.
+    /// Deterministic, nondecreasing.
+    pub fn times(&self, n: usize, seed: u64) -> Vec<SimTime> {
+        match *self {
+            ArrivalProcess::FixedInterval { interval_s } => {
+                (0..n as u64).map(|w| w * interval_s).collect()
+            }
+            ArrivalProcess::Bursty { burst, gap_s } => {
+                let burst = burst.max(1);
+                (0..n).map(|w| (w / burst) as u64 * gap_s).collect()
+            }
+            ArrivalProcess::Poisson { mean_gap_s } => {
+                let mut rng = Rng::new(seed).substream(ARRIVAL_STREAM);
+                let mut t = 0u64;
+                (0..n)
+                    .map(|w| {
+                        if w > 0 {
+                            t += rng.exponential(mean_gap_s.max(0.0)).round() as u64;
+                        }
+                        t
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Compact human label (CLI headers).
+    pub fn describe(&self) -> String {
+        match *self {
+            ArrivalProcess::FixedInterval { interval_s } => format!("fixed:{interval_s}"),
+            ArrivalProcess::Bursty { burst, gap_s } => format!("burst:{burst}x{gap_s}"),
+            ArrivalProcess::Poisson { mean_gap_s } => format!("poisson:{mean_gap_s}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_interval_matches_legacy_schedule() {
+        let t = ArrivalProcess::FixedInterval { interval_s: 300 }.times(4, 99);
+        assert_eq!(t, vec![0, 300, 600, 900]);
+        // seed-independent
+        assert_eq!(t, ArrivalProcess::FixedInterval { interval_s: 300 }.times(4, 1));
+    }
+
+    #[test]
+    fn bursty_groups_share_an_instant() {
+        let t = ArrivalProcess::Bursty { burst: 3, gap_s: 600 }.times(7, 0);
+        assert_eq!(t, vec![0, 0, 0, 600, 600, 600, 1200]);
+        // degenerate burst size is clamped to 1
+        let t = ArrivalProcess::Bursty { burst: 0, gap_s: 60 }.times(3, 0);
+        assert_eq!(t, vec![0, 60, 120]);
+    }
+
+    #[test]
+    fn poisson_is_seeded_and_nondecreasing() {
+        let p = ArrivalProcess::Poisson { mean_gap_s: 300.0 };
+        let a = p.times(20, 7);
+        let b = p.times(20, 7);
+        assert_eq!(a, b, "same seed must give the same schedule");
+        assert_eq!(a[0], 0, "first arrival opens the experiment");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "times must be nondecreasing");
+        let c = p.times(20, 8);
+        assert_ne!(a, c, "different seeds must differ");
+        // mean gap lands near the configured mean
+        let mean = *a.last().unwrap() as f64 / (a.len() - 1) as f64;
+        assert!((100.0..900.0).contains(&mean), "mean gap {mean}");
+    }
+
+    #[test]
+    fn empty_suite_has_no_arrivals() {
+        for p in [
+            ArrivalProcess::FixedInterval { interval_s: 60 },
+            ArrivalProcess::Bursty { burst: 2, gap_s: 60 },
+            ArrivalProcess::Poisson { mean_gap_s: 60.0 },
+        ] {
+            assert!(p.times(0, 3).is_empty());
+        }
+    }
+
+    #[test]
+    fn describe_labels_are_compact() {
+        assert_eq!(ArrivalProcess::FixedInterval { interval_s: 60 }.describe(), "fixed:60");
+        assert_eq!(ArrivalProcess::Bursty { burst: 3, gap_s: 900 }.describe(), "burst:3x900");
+        assert_eq!(ArrivalProcess::Poisson { mean_gap_s: 120.0 }.describe(), "poisson:120");
+    }
+}

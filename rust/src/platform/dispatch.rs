@@ -1,0 +1,187 @@
+//! Chunk dispatch: map idle instances to work.
+//!
+//! Footprint chunks first (they unblock TTC confirmation), then
+//! tracker-allocated regular chunks (deficit-round-robin over the
+//! proportional-fair service rates; FIFO for Amazon AS), then pending
+//! merge steps. The idle-scan buffer is platform-owned and reused so the
+//! steady-state pass is allocation-free.
+
+use crate::coordinator::chunk_size;
+use crate::db::TaskStatus;
+use crate::estimation::EstimatorKind;
+use crate::lci::{execute_chunk, Chunk};
+use crate::platform::{Platform, WlPhase};
+use crate::sim::{Event, SimTime};
+
+impl Platform {
+    pub(crate) fn update_pending_flag(&mut self, w: usize) {
+        let runnable = matches!(self.wl[w].phase, WlPhase::Running)
+            && self.db.count_status(w, TaskStatus::Pending) > 0;
+        self.tracker.set_pending(w, runnable);
+    }
+
+    /// Dispatch work to every idle instance: footprint tasks first
+    /// (single-task chunks), then tracker-allocated chunks.
+    pub(crate) fn assign_idle(&mut self) {
+        let now = self.sim.now();
+        let mut idle = std::mem::take(&mut self.idle_buf);
+        loop {
+            idle.clear();
+            self.backend.for_each_instance(&mut |i| {
+                if i.is_idle() {
+                    idle.push(i.id);
+                }
+            });
+            if idle.is_empty() {
+                break;
+            }
+            let mut assigned_any = false;
+            for &inst_id in &idle {
+                // 1. footprinting chunks take priority (small, unblock TTC)
+                if let Some((w, tasks)) = self.next_footprint_chunk() {
+                    self.dispatch_chunk(inst_id, w, tasks, true, now);
+                    assigned_any = true;
+                    continue;
+                }
+                // 2. regular chunk via tracker (or FIFO for Amazon AS)
+                let pick = if self.policy.uses_estimation() {
+                    self.tracker.next_assignment()
+                } else {
+                    self.tracker.next_fifo()
+                };
+                let w = match pick {
+                    Some(w) => w,
+                    None => continue,
+                };
+                let tasks = self.build_chunk(w, now);
+                if tasks.is_empty() {
+                    self.update_pending_flag(w);
+                    continue;
+                }
+                self.tracker.on_assign(w);
+                self.dispatch_chunk(inst_id, w, tasks, false, now);
+                assigned_any = true;
+            }
+            // 3. pending merge steps can use an idle instance
+            self.dispatch_merges();
+            if !assigned_any {
+                break;
+            }
+        }
+        self.idle_buf = idle;
+        self.dispatch_merges();
+    }
+
+    /// Next footprinting chunk: footprint tasks are grouped into (up to)
+    /// three chunks rather than singles so per-chunk setup time
+    /// ("deadband") is partially amortized even in the sampling stage —
+    /// otherwise a Matlab-style 30 s setup would make every footprint
+    /// measurement ~deadband-dominated (§II-E-1).
+    pub(crate) fn next_footprint_chunk(&mut self) -> Option<(usize, Vec<usize>)> {
+        for w in 0..self.wl.len() {
+            if self.arrived <= w {
+                continue;
+            }
+            let st = &mut self.wl[w];
+            if st.phase == WlPhase::Footprinting && !st.footprint_pending.is_empty() {
+                // group only when the app's setup time actually needs
+                // amortizing; cheap-setup apps footprint with parallel
+                // singles for the fastest possible seeding
+                let deadband = self.specs[w].app_model().deadband_s;
+                let total = st.footprint_pending.len() + st.footprint_outstanding;
+                let per_chunk = if deadband > 5.0 { total.div_ceil(3).max(1) } else { 1 };
+                let n = per_chunk.min(st.footprint_pending.len());
+                let tasks: Vec<usize> =
+                    st.footprint_pending.drain(..n).collect();
+                st.footprint_outstanding += tasks.len();
+                return Some((w, tasks));
+            }
+        }
+        None
+    }
+
+    /// Claim up to chunk_size pending tasks of workload w.
+    pub(crate) fn build_chunk(&mut self, w: usize, _now: SimTime) -> Vec<usize> {
+        let spec = &self.specs[w];
+        let model = spec.app_model();
+        // per-item estimate from the driving estimator (fallback:
+        // footprint seed; last resort: app deadband + 1s)
+        let slot = &self.est[w * self.k_max];
+        let est = Some(match self.estimator {
+            EstimatorKind::Kalman => self.bank.estimate(w, 0) as f64,
+            EstimatorKind::AdHoc => slot.adhoc.b_hat,
+            EstimatorKind::Arma => slot.arma.b_hat,
+        })
+        .filter(|&b| b > 0.0)
+        .or_else(|| {
+            let st = &self.wl[w];
+            if st.footprint_meas.is_empty() {
+                None
+            } else {
+                Some(crate::util::stats::mean(&st.footprint_meas))
+            }
+        })
+        .unwrap_or(model.mean_cus + 1.0);
+        let pending_n = self.db.count_status(w, TaskStatus::Pending);
+        let n = chunk_size(
+            est,
+            model.deadband_s,
+            self.cfg.control.monitor_interval_s as f64,
+            pending_n,
+        );
+        self.db.status_iter(w, TaskStatus::Pending).take(n).collect()
+    }
+
+    pub(crate) fn dispatch_chunk(
+        &mut self,
+        inst_id: u64,
+        w: usize,
+        tasks: Vec<usize>,
+        footprint: bool,
+        now: SimTime,
+    ) {
+        for &t in &tasks {
+            self.db.claim((w, t), inst_id);
+        }
+        self.next_chunk_id += 1;
+        let id = self.next_chunk_id;
+        let spec = &self.specs[w];
+        let result = execute_chunk(spec, &tasks, footprint, &self.storage);
+        let chunk = Chunk { id, workload: w, instance: inst_id, tasks, footprint, started_at: now };
+        self.chunks.insert(id, chunk);
+        if let Some(inst) = self.backend.instance_mut(inst_id) {
+            inst.current_chunk = Some(id);
+        }
+        self.sim.schedule(
+            (result.busy_s * self.exec_mult).ceil().max(1.0) as SimTime,
+            Event::ChunkDone { instance: inst_id, chunk: id },
+        );
+        self.update_pending_flag(w);
+    }
+
+    pub(crate) fn dispatch_merges(&mut self) {
+        let _now = self.sim.now();
+        for w in 0..self.wl.len() {
+            let needs_merge = {
+                let st = &self.wl[w];
+                st.phase == WlPhase::Merging && !st.merge_dispatched
+            };
+            if !needs_merge {
+                continue;
+            }
+            let idle = self.backend.first_idle();
+            if let Some(inst_id) = idle {
+                let merge_s = self.merge_duration(w);
+                self.metrics.total_busy_cus += merge_s;
+                // marks the instance busy; usage-billed backends charge
+                // the aggregation invocation here
+                self.backend.on_merge_dispatched(inst_id, _now, merge_s);
+                let epoch = self.wl[w].merge_epoch;
+                self.wl[w].merge_dispatched = true;
+                self.wl[w].merge_instance = Some(inst_id);
+                self.sim
+                    .schedule(merge_s.ceil() as SimTime, Event::MergeDone { workload: w, epoch });
+            }
+        }
+    }
+}

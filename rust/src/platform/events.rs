@@ -1,0 +1,287 @@
+//! Discrete-event handlers: workload arrival, instance readiness, chunk
+//! and merge completion, and cloud-event (reclamation) absorption.
+//!
+//! All handlers are `impl Platform` methods over the struct in
+//! [`super`]; they mutate the task DB, tracker and fleet, then funnel
+//! back through `assign_idle` so freed/booted capacity is used
+//! immediately.
+//!
+//! Reclamation semantics: a revoked instance dies *now* (no drain). Its
+//! in-flight chunk — the engine cannot cancel the already-scheduled
+//! `ChunkDone` — is removed from the live-chunk map so the stale event
+//! is ignored, and every claimed task re-enters Pending at the tail via
+//! `TaskDb::requeue` (FIFO re-entry, re-executed from scratch later; the
+//! DB state machine guarantees each task still completes exactly once).
+//! Footprint chunks return their task ids to the workload's footprint
+//! queue; a revoked merge bumps the workload's merge epoch so the stale
+//! `MergeDone` is discarded and the merge is re-dispatched.
+
+use crate::cloud::MERGE_CHUNK;
+use crate::coordinator::footprint_count;
+use crate::lci::execute_chunk;
+use crate::metrics::EstimatorTrace;
+use crate::platform::{CloudEvent, Platform, WlPhase};
+use crate::sim::SimTime;
+use crate::workload::Mode;
+
+use anyhow::Result;
+
+impl Platform {
+    pub(crate) fn on_arrival(&mut self, w: usize) -> Result<()> {
+        let now = self.sim.now();
+        self.arrived += 1;
+        let spec = &self.specs[w];
+        // upload inputs to storage (bookkeeping; transfer happens per chunk)
+        for (t, task) in spec.tasks.iter().enumerate() {
+            self.storage
+                .put(&format!("w{w:02}/input/item{t:06}"), task.bytes);
+            self.db.insert(w, task.media_type, t);
+        }
+        // pre-size the measurement logs: steady-state completions must
+        // not reallocate (§Perf)
+        self.db.reserve_measurements(w);
+        let st = &mut self.wl[w];
+        st.arrived_at = now;
+        st.deadline = self.fixed_ttc_s.map(|d| now + d);
+        // footprinting: first F tasks (the paper samples a small
+        // percentage of the inputs)
+        let f = footprint_count(
+            spec.n_tasks(),
+            self.cfg.control.footprint_frac,
+            self.cfg.control.footprint_min,
+            self.cfg.control.footprint_max,
+        );
+        st.footprint_pending = (0..f).collect();
+        st.phase = WlPhase::Footprinting;
+        self.tracker.register(w);
+        if self.record_traces {
+            for k in 0..spec.n_types {
+                self.metrics
+                    .traces
+                    .entry((w, k))
+                    .or_insert_with(EstimatorTrace::default);
+            }
+        }
+        self.assign_idle();
+        Ok(())
+    }
+
+    pub(crate) fn on_instance_ready(&mut self, id: u64) {
+        let now = self.sim.now();
+        self.backend.instance_ready(id, now);
+        self.sample_instances(now);
+        self.assign_idle();
+    }
+
+    pub(crate) fn on_chunk_done(&mut self, instance: u64, chunk_id: u64) {
+        let now = self.sim.now();
+        let chunk = match self.chunks.remove(&chunk_id) {
+            // a missing chunk is a stale event: the instance was
+            // reclaimed mid-flight and the tasks already requeued
+            Some(c) => c,
+            None => return,
+        };
+        let w = chunk.workload;
+        let spec = &self.specs[w];
+        let mult = self.exec_mult;
+        // re-derive the result (deterministic) to record measurements
+        let result = execute_chunk(spec, &chunk.tasks, chunk.footprint, &self.storage);
+        for (i, &t) in chunk.tasks.iter().enumerate() {
+            let cus = result.per_task_cus[i] * mult;
+            let k = spec.tasks[t].media_type;
+            self.db.complete((w, t), cus, now, result.exit_code);
+            // abnormal exits (§II-A) feed neither estimator: the DB
+            // measurement log (the Kalman b_tilde source) only records
+            // completed tasks, and the ARMA cumulative feed must stay
+            // consistent with it
+            if result.exit_code == 0 {
+                let est = &mut self.est[w * self.k_max + k];
+                est.cum_cus += cus;
+                est.cum_done += 1;
+            }
+            let out_bytes = (spec.tasks[t].bytes as f64 * 0.3) as u64;
+            self.storage.put(&format!("w{w:02}/output/item{t:06}"), out_bytes);
+        }
+        self.metrics.total_busy_cus += result.busy_s * mult;
+        let st = &mut self.wl[w];
+        st.completed_tasks += chunk.tasks.len();
+        st.split_busy += result.busy_s * mult;
+        if chunk.footprint {
+            st.footprint_outstanding -= chunk.tasks.len();
+            st.footprint_meas
+                .extend(chunk.tasks.iter().enumerate().map(|(i, _)| result.per_task_cus[i] * mult));
+            if st.footprint_outstanding == 0 && st.footprint_pending.is_empty() {
+                self.finish_footprinting(w);
+            }
+        }
+        // instance becomes free (or dies if draining); usage-billed
+        // backends charge for the chunk here
+        self.backend
+            .on_chunk_finished(instance, now, result.busy_s * mult, chunk.tasks.len());
+        self.tracker.on_release(w);
+        self.update_pending_flag(w);
+        self.check_workload_done(w);
+        self.assign_idle();
+    }
+
+    pub(crate) fn finish_footprinting(&mut self, w: usize) {
+        let now = self.sim.now();
+        let st = &mut self.wl[w];
+        st.phase = WlPhase::Running;
+        // seed estimators with the footprinting mean (b̃[0], §II-E-3)
+        let seed = crate::util::stats::mean(&st.footprint_meas);
+        let spec = &self.specs[w];
+        for k in 0..spec.n_types {
+            let est = &mut self.est[w * self.k_max + k];
+            est.adhoc.seed(seed);
+            est.seeded = true;
+            // the bank's slot sees the seed as its first measurement at
+            // the next tick through the measurement-log cursor (the
+            // footprint completions are already in the DB log)
+        }
+        let _ = now;
+        self.update_pending_flag(w);
+    }
+
+    pub(crate) fn on_merge_done(&mut self, w: usize, epoch: u32) {
+        if self.wl[w].merge_epoch != epoch {
+            return; // stale: this merge's instance was reclaimed
+        }
+        let now = self.sim.now();
+        let merge_s = self.merge_duration(w);
+        let merge_inst = self.wl[w].merge_instance.take();
+        {
+            let st = &mut self.wl[w];
+            st.phase = WlPhase::Done;
+            st.completed_at = Some(now);
+        }
+        // release the aggregation instance; usage-billed backends charge
+        // the aggregation invocation here (not at dispatch, so a
+        // reclaimed-and-redispatched merge bills once)
+        if let Some(id) = merge_inst {
+            self.backend.on_merge_finished(id, now, merge_s);
+        }
+        self.tracker.remove(w);
+        self.check_all_done();
+        self.assign_idle();
+    }
+
+    // ----- fault absorption -----------------------------------------------
+
+    /// Apply one injected cloud event at the current instant.
+    pub(crate) fn apply_cloud_event(&mut self, ev: &CloudEvent, now: SimTime) {
+        match ev {
+            CloudEvent::Reclamation { instances } => {
+                for &id in instances {
+                    self.reclaim_instance(id, now);
+                }
+                // the surviving fleet (if any) picks up requeued work
+                self.assign_idle();
+            }
+        }
+    }
+
+    /// Revoke one instance: tear down its in-flight work, requeue the
+    /// claimed tasks (FIFO tail re-entry), kill the instance. The
+    /// already-billed increment is sunk (no partial-hour refund; keeps
+    /// the cost curve monotone).
+    pub(crate) fn reclaim_instance(&mut self, id: u64, now: SimTime) {
+        let in_flight = match self.backend.instance(id) {
+            Some(i) if i.state != crate::cloud::InstanceState::Terminated => i.current_chunk,
+            _ => return,
+        };
+        self.metrics.reclamations += 1;
+        match in_flight {
+            Some(chunk_id) if chunk_id == MERGE_CHUNK => {
+                // a merge was running here: forget it, bump the epoch so
+                // the stale MergeDone is ignored, and let dispatch_merges
+                // re-run it on a surviving/future instance
+                if let Some(w) =
+                    (0..self.wl.len()).find(|&w| self.wl[w].merge_instance == Some(id))
+                {
+                    let merge_s = self.merge_duration(w);
+                    let st = &mut self.wl[w];
+                    st.merge_dispatched = false;
+                    st.merge_instance = None;
+                    st.merge_epoch += 1;
+                    // the revoked merge's busy time was accounted at
+                    // dispatch; it will be re-added on re-dispatch
+                    self.metrics.total_busy_cus -= merge_s;
+                }
+            }
+            Some(chunk_id) => {
+                if let Some(chunk) = self.chunks.remove(&chunk_id) {
+                    let w = chunk.workload;
+                    for &t in &chunk.tasks {
+                        self.db.requeue((w, t));
+                    }
+                    self.metrics.requeued_tasks += chunk.tasks.len() as u64;
+                    if chunk.footprint {
+                        let st = &mut self.wl[w];
+                        st.footprint_outstanding -= chunk.tasks.len();
+                        st.footprint_pending.extend(chunk.tasks.iter().copied());
+                    } else {
+                        self.tracker.on_release(w);
+                    }
+                    self.update_pending_flag(w);
+                }
+            }
+            None => {}
+        }
+        self.backend.revoke_instance(id, now);
+    }
+
+    /// Merge-step duration for workload `w` (deterministic in the
+    /// accumulated split busy time; shared by dispatch and reclamation).
+    pub(crate) fn merge_duration(&self, w: usize) -> f64 {
+        let merge_frac = match self.specs[w].mode {
+            Mode::SplitMerge { merge_frac } => merge_frac,
+            Mode::Basic => 0.0,
+        };
+        (self.wl[w].split_busy * merge_frac).max(1.0)
+    }
+
+    // ----- completion bookkeeping ----------------------------------------
+
+    pub(crate) fn check_workload_done(&mut self, w: usize) {
+        let now = self.sim.now();
+        let spec = &self.specs[w];
+        if self.wl[w].completed_tasks < spec.n_tasks() {
+            return;
+        }
+        match spec.mode {
+            Mode::Basic => {
+                let st = &mut self.wl[w];
+                if st.phase != WlPhase::Done {
+                    st.phase = WlPhase::Done;
+                    st.completed_at = Some(now);
+                    self.tracker.remove(w);
+                    self.check_all_done();
+                }
+            }
+            Mode::SplitMerge { .. } => {
+                let st = &mut self.wl[w];
+                if st.phase == WlPhase::Running || st.phase == WlPhase::Footprinting {
+                    st.phase = WlPhase::Merging;
+                    self.tracker.set_pending(w, false);
+                    self.dispatch_merges();
+                }
+            }
+        }
+    }
+
+    pub(crate) fn check_all_done(&mut self) {
+        if self.arrived == self.specs.len()
+            && self.wl.iter().all(|st| st.phase == WlPhase::Done)
+        {
+            self.all_done_at = Some(self.sim.now());
+        }
+    }
+
+    pub(crate) fn sample_instances(&mut self, now: SimTime) {
+        let fleet = self.backend.describe(now);
+        let active = fleet.booting + fleet.running + fleet.draining;
+        self.metrics.instances_curve.push((now, active));
+        self.metrics.max_instances = self.metrics.max_instances.max(active);
+    }
+}

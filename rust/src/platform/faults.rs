@@ -1,0 +1,240 @@
+//! Cloud-event / fault injection.
+//!
+//! The platform polls its [`FaultModel`] at every monitoring instant;
+//! the model inspects the backend (prices, fleet) and emits
+//! [`CloudEvent`]s for the loop to absorb. The first fault family is
+//! **spot reclamation** (§IV's core risk): when the simulated market
+//! price crosses the scenario's bid, every active spot instance is
+//! revoked at once — exactly EC2's behaviour for a single-bid launch
+//! group. In-flight chunks are torn down and their tasks re-enter the
+//! task DB's Pending list at the tail through
+//! [`crate::db::TaskDb::requeue`] (the documented FIFO re-entry).
+//!
+//! Determinism: price traces are seeded and polling happens at
+//! deterministic tick instants, so revocation schedules are bit-identical
+//! across runs and thread counts. [`ReclamationAt`] additionally offers a
+//! scripted revocation schedule for tests and chaos-style experiments
+//! where the *timing* must be controlled exactly.
+
+use crate::cloud::{CloudBackend, InstanceState};
+use crate::sim::SimTime;
+
+/// An injected cloud event, applied by the platform loop at a
+/// monitoring instant.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CloudEvent {
+    /// These instances are revoked *now* (forced immediate termination;
+    /// in-flight chunks must be requeued).
+    Reclamation { instances: Vec<u64> },
+}
+
+/// A fault model: polled once per monitoring tick, reads the backend,
+/// pushes events for the platform to absorb.
+pub trait FaultModel: std::fmt::Debug {
+    fn poll(&mut self, backend: &dyn CloudBackend, now: SimTime, out: &mut Vec<CloudEvent>);
+}
+
+/// Plain-data fault descriptor carried by a `Scenario` (the trait object
+/// is built per run so scenarios stay `Clone`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultSpec {
+    /// No injected events (the pre-scenario behaviour).
+    None,
+    /// Market-driven spot reclamation: whenever the backend's unit price
+    /// exceeds `bid` $/hr at a monitoring instant, the whole fleet is
+    /// revoked. Only applies to reclaimable (spot) backends.
+    SpotReclamation { bid: f64 },
+    /// Scripted reclamation: the whole fleet is revoked at each listed
+    /// instant (evaluated at the first monitoring tick at/after it).
+    /// Like [`FaultSpec::SpotReclamation`], only applies to reclaimable
+    /// (spot) backends.
+    ReclamationAt { times: Vec<SimTime> },
+}
+
+impl FaultSpec {
+    pub fn build(&self) -> Box<dyn FaultModel> {
+        match self {
+            FaultSpec::None => Box::new(NoFaults),
+            FaultSpec::SpotReclamation { bid } => Box::new(SpotReclamation { bid: *bid }),
+            FaultSpec::ReclamationAt { times } => Box::new(ReclamationAt::new(times.clone())),
+        }
+    }
+
+    /// Compact human label (CLI headers).
+    pub fn describe(&self) -> String {
+        match self {
+            FaultSpec::None => "none".into(),
+            FaultSpec::SpotReclamation { bid } => format!("reclaim:{bid}"),
+            FaultSpec::ReclamationAt { times } => format!("reclaim-at:{times:?}"),
+        }
+    }
+}
+
+fn collect_active(backend: &dyn CloudBackend, out: &mut Vec<u64>) {
+    backend.for_each_instance(&mut |i| {
+        if i.state != InstanceState::Terminated {
+            out.push(i.id);
+        }
+    });
+}
+
+/// The fault-free model.
+#[derive(Debug, Default)]
+pub struct NoFaults;
+
+impl FaultModel for NoFaults {
+    fn poll(&mut self, _backend: &dyn CloudBackend, _now: SimTime, _out: &mut Vec<CloudEvent>) {}
+}
+
+/// Market-driven spot reclamation (see [`FaultSpec::SpotReclamation`]).
+///
+/// Modeling note: the bid gates *revocation* only. The scaling policy's
+/// replacement requests are always fulfilled at the market price, so
+/// during a sustained above-bid stretch the controller re-buys capacity
+/// each interval and loses it again at the next poll — a bid-chasing
+/// controller paying churn cost, which is exactly the stress regime the
+/// reclamation experiments want. Real EC2 would instead leave below-bid
+/// requests unfulfilled; an unfulfillable-request mode is listed in
+/// ROADMAP's open items.
+#[derive(Debug, Clone)]
+pub struct SpotReclamation {
+    /// The launch group's bid, $/hr.
+    pub bid: f64,
+}
+
+impl FaultModel for SpotReclamation {
+    fn poll(&mut self, backend: &dyn CloudBackend, now: SimTime, out: &mut Vec<CloudEvent>) {
+        if !backend.reclaimable() || backend.unit_price(now) <= self.bid {
+            return;
+        }
+        let mut ids = vec![];
+        collect_active(backend, &mut ids);
+        if !ids.is_empty() {
+            out.push(CloudEvent::Reclamation { instances: ids });
+        }
+    }
+}
+
+/// Scripted reclamation schedule (see [`FaultSpec::ReclamationAt`]).
+#[derive(Debug, Clone)]
+pub struct ReclamationAt {
+    /// Sorted revocation instants; each fires once.
+    pub times: Vec<SimTime>,
+    next: usize,
+}
+
+impl ReclamationAt {
+    pub fn new(mut times: Vec<SimTime>) -> Self {
+        times.sort_unstable();
+        ReclamationAt { times, next: 0 }
+    }
+}
+
+impl FaultModel for ReclamationAt {
+    fn poll(&mut self, backend: &dyn CloudBackend, now: SimTime, out: &mut Vec<CloudEvent>) {
+        let mut due = false;
+        while self.next < self.times.len() && self.times[self.next] <= now {
+            self.next += 1;
+            due = true;
+        }
+        if !due || !backend.reclaimable() {
+            return;
+        }
+        let mut ids = vec![];
+        collect_active(backend, &mut ids);
+        if !ids.is_empty() {
+            out.push(CloudEvent::Reclamation { instances: ids });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::Provider;
+    use crate::config::MarketCfg;
+
+    fn fleet_of(n: usize) -> Provider {
+        let mut p = Provider::new(MarketCfg::default(), 11, 8);
+        for _ in 0..n {
+            let (id, ready) = CloudBackend::request_instance(&mut p, 0);
+            CloudBackend::instance_ready(&mut p, id, ready);
+        }
+        p
+    }
+
+    #[test]
+    fn no_faults_emits_nothing() {
+        let p = fleet_of(2);
+        let mut out = vec![];
+        NoFaults.poll(&p, 1000, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn reclamation_fires_when_price_crosses_bid() {
+        let p = fleet_of(3);
+        let mut out = vec![];
+        // bid below the m3.medium price floor: always crossed
+        SpotReclamation { bid: 0.0 }.poll(&p, 500, &mut out);
+        assert_eq!(out.len(), 1);
+        match &out[0] {
+            CloudEvent::Reclamation { instances } => assert_eq!(instances.len(), 3),
+        }
+        // bid above any possible price: never crossed
+        out.clear();
+        SpotReclamation { bid: 100.0 }.poll(&p, 500, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn reclamation_skips_non_reclaimable_backends() {
+        let mut od = Provider::new_on_demand(MarketCfg::default(), 1, 8);
+        let (id, ready) = CloudBackend::request_instance(&mut od, 0);
+        CloudBackend::instance_ready(&mut od, id, ready);
+        let mut out = vec![];
+        SpotReclamation { bid: 0.0 }.poll(&od, 500, &mut out);
+        assert!(out.is_empty(), "on-demand instances must never be reclaimed");
+    }
+
+    #[test]
+    fn scripted_schedule_skips_non_reclaimable_backends() {
+        let mut od = Provider::new_on_demand(MarketCfg::default(), 1, 8);
+        let (id, ready) = CloudBackend::request_instance(&mut od, 0);
+        CloudBackend::instance_ready(&mut od, id, ready);
+        let mut out = vec![];
+        ReclamationAt::new(vec![100]).poll(&od, 500, &mut out);
+        assert!(out.is_empty(), "scripted reclamation must not touch on-demand fleets");
+    }
+
+    #[test]
+    fn scripted_schedule_fires_each_instant_once() {
+        let p = fleet_of(1);
+        let mut f = ReclamationAt::new(vec![900, 300]);
+        let mut out = vec![];
+        f.poll(&p, 100, &mut out);
+        assert!(out.is_empty(), "nothing due yet");
+        f.poll(&p, 300, &mut out);
+        assert_eq!(out.len(), 1, "t=300 fires (sorted schedule)");
+        f.poll(&p, 600, &mut out);
+        assert_eq!(out.len(), 1, "no double fire between instants");
+        f.poll(&p, 2000, &mut out);
+        assert_eq!(out.len(), 2, "t=900 fires at the next poll after it");
+        f.poll(&p, 3000, &mut out);
+        assert_eq!(out.len(), 2, "schedule exhausted");
+    }
+
+    #[test]
+    fn fault_spec_builds_and_describes() {
+        assert!(FaultSpec::None.describe().contains("none"));
+        assert!(FaultSpec::SpotReclamation { bid: 0.01 }.describe().contains("0.01"));
+        let spec = FaultSpec::ReclamationAt { times: vec![5, 2] };
+        assert!(spec.describe().contains("reclaim-at"));
+        // building sorts the scripted schedule
+        let p = fleet_of(1);
+        let mut m = spec.build();
+        let mut out = vec![];
+        m.poll(&p, 2, &mut out);
+        assert_eq!(out.len(), 1);
+    }
+}

@@ -1,0 +1,700 @@
+//! The integrated Dithen platform: GCI monitoring loop over the simulated
+//! substrates (Fig. 1's architecture, end to end), assembled from a
+//! [`Scenario`].
+//!
+//! One [`Platform::run`] call executes a complete experiment: workloads
+//! arrive at the front end (per the scenario's [`ArrivalProcess`]), are
+//! footprinted, estimated (Kalman bank on the XLA/PJRT hot path),
+//! scheduled with proportional-fair service rates through the tracker,
+//! while the scaling policy (AIMD or a baseline) grows/shrinks the fleet
+//! on the scenario's [`crate::cloud::CloudBackend`] and the scenario's
+//! [`FaultModel`] injects cloud events (spot reclamation) that the loop
+//! must absorb — revoked chunks re-enter the task DB through
+//! [`crate::db::TaskDb::requeue`]. Everything is deterministic in
+//! `Config::seed`.
+//!
+//! Module layout (one concern per file, all `impl Platform` on the one
+//! struct below):
+//!
+//! * [`scenario`] — [`Scenario`] / [`ScenarioBuilder`]: the experiment
+//!   description (workloads, arrivals, backend, faults, knobs) and the
+//!   [`RunOpts`] compatibility shim;
+//! * [`arrivals`] — front-end arrival processes (fixed-interval, bursty,
+//!   seeded Poisson);
+//! * [`faults`] — the [`CloudEvent`] stream and [`FaultModel`]
+//!   implementations (spot reclamation);
+//! * [`events`] — discrete-event handlers: arrivals, instance readiness,
+//!   chunk/merge completion, reclamation absorption;
+//! * [`tick`] — the GCI monitoring tick (ME assembly, estimator bank,
+//!   convergence, TTC confirmation, policy evaluation);
+//! * [`dispatch`] — the tracker-driven chunk allocator (footprint chunks,
+//!   regular chunks, merge steps);
+//! * [`scaling`] — fleet adjustment toward the policy target.
+//!
+//! Perf (§Perf): the monitoring tick is allocation-free in steady state.
+//! All per-tick working sets — the bank's input matrices, its outputs,
+//! the service-rate scratch, estimator slots, last-measurement cache and
+//! measurement-log cursors — are dense `w*K+k`-indexed arrays owned by
+//! the platform and reused across ticks; the task DB serves every tick
+//! query (status counts, m_{w,k}, measurement windows) from borrowed
+//! slices of its flat arenas. `tests/alloc_steady_state.rs` pins this
+//! with a counting global allocator. Estimator *trace* recording (three
+//! Vec pushes per active slot per tick) is the one remaining per-tick
+//! allocator and is therefore gated behind `record_traces` (on for
+//! figure-generating runs, off in sweeps).
+
+pub mod arrivals;
+pub mod dispatch;
+pub mod events;
+pub mod faults;
+pub mod scaling;
+pub mod scenario;
+pub mod tick;
+
+pub use arrivals::ArrivalProcess;
+pub use faults::{CloudEvent, FaultModel, FaultSpec, NoFaults, ReclamationAt, SpotReclamation};
+pub use scenario::{Scenario, ScenarioBuilder};
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::cloud::CloudBackend;
+use crate::config::Config;
+use crate::coordinator::policy::{PolicyKind, ScalingPolicy};
+use crate::coordinator::Tracker;
+use crate::db::TaskDb;
+use crate::estimation::{
+    AdHoc, Arma, Bank, BankParams, DeviationDetector, EstimatorKind, SlopeDetector,
+};
+use crate::lci::Chunk;
+use crate::metrics::{RunMetrics, WorkloadOutcome};
+use crate::runtime::StepOutputs;
+use crate::sim::{Engine as SimEngine, Event, SimTime};
+use crate::storage::ObjectStore;
+use crate::workload::WorkloadSpec;
+
+/// Run options for one experiment — the pre-scenario API, kept as a thin
+/// compatibility shim: [`run_experiment`] and [`Platform::new`] translate
+/// a `RunOpts` into a [`Scenario`] (fixed-interval arrivals, spot
+/// backend, no faults), so every pre-existing experiment compiles and
+/// produces identical metrics. New code should use [`ScenarioBuilder`].
+#[derive(Debug, Clone)]
+pub struct RunOpts {
+    pub policy: PolicyKind,
+    /// Which estimator drives service rates (Table II comparisons). The
+    /// Kalman bank always runs (it is the platform hot path); ad-hoc and
+    /// ARMA estimators additionally run passively on the same
+    /// measurement stream so Fig. 6/7 can overlay all three.
+    pub estimator: EstimatorKind,
+    /// Fixed TTC applied to every workload (the §V-C experiments), or
+    /// None for best-effort (Amazon AS runs).
+    pub fixed_ttc_s: Option<u64>,
+    /// Seconds between workload arrivals.
+    pub arrival_interval_s: u64,
+    /// Hard stop (safety bound for tests).
+    pub horizon_s: u64,
+    /// Record per-slot estimator traces in `RunMetrics::traces`. On by
+    /// default (the Fig. 6/7 / Table II pipelines need them); sweeps
+    /// turn it off — it is the largest per-tick allocation source.
+    pub record_traces: bool,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts {
+            policy: PolicyKind::Aimd,
+            estimator: EstimatorKind::Kalman,
+            fixed_ttc_s: Some(7620), // 2 hr 07 min (§V-C experiment 1)
+            arrival_interval_s: crate::workload::ARRIVAL_INTERVAL_S,
+            horizon_s: 24 * 3600,
+            record_traces: true,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum WlPhase {
+    /// Waiting for / executing footprinting tasks.
+    Footprinting,
+    /// Normal task execution with estimation.
+    Running,
+    /// Split done, merge step pending or executing (Split–Merge mode).
+    Merging,
+    Done,
+}
+
+/// Per-(workload, media-type) estimation state. Stored densely at
+/// `w * k_max + k`; slots outside a workload's `n_types` are inert.
+#[derive(Debug)]
+pub(crate) struct SlotEst {
+    pub(crate) adhoc: AdHoc,
+    pub(crate) arma: Arma,
+    pub(crate) kalman_det: SlopeDetector,
+    pub(crate) adhoc_det: SlopeDetector,
+    pub(crate) arma_det: DeviationDetector,
+    /// Cumulative measured CUS and completed count (ARMA normalization).
+    pub(crate) cum_cus: f64,
+    pub(crate) cum_done: usize,
+    pub(crate) seeded: bool,
+}
+
+#[derive(Debug)]
+pub(crate) struct WlState {
+    pub(crate) phase: WlPhase,
+    pub(crate) arrived_at: SimTime,
+    pub(crate) deadline: Option<SimTime>,
+    pub(crate) ttc_extended: bool,
+    pub(crate) confirmed: bool,
+    /// Footprint task ids not yet dispatched / completed.
+    pub(crate) footprint_pending: Vec<usize>,
+    pub(crate) footprint_outstanding: usize,
+    pub(crate) footprint_meas: Vec<f64>,
+    pub(crate) completed_tasks: usize,
+    pub(crate) completed_at: Option<SimTime>,
+    /// Busy seconds of all executed split chunks (merge time derivation).
+    pub(crate) split_busy: f64,
+    pub(crate) merge_dispatched: bool,
+    pub(crate) merge_instance: Option<u64>,
+    /// Bumped when a dispatched merge is revoked; stale `MergeDone`
+    /// events (no engine-side cancellation) carry the old epoch and are
+    /// ignored.
+    pub(crate) merge_epoch: u32,
+}
+
+/// Per-tick scratch buffers, `mem::take`n at tick entry and returned at
+/// exit so the borrow checker sees them as locals. Sized once (bank
+/// dims / workload count), then only `fill`ed.
+#[derive(Debug, Default)]
+pub(crate) struct TickScratch {
+    // bank inputs, [bank.w * bank.k] / [bank.w]
+    pub(crate) b_tilde: Vec<f32>,
+    pub(crate) meas_mask: Vec<f32>,
+    pub(crate) m_rem: Vec<f32>,
+    pub(crate) slot_mask: Vec<f32>,
+    pub(crate) d: Vec<f32>,
+    // workloads whose driving estimator converged this tick
+    pub(crate) converged: Vec<usize>,
+    // non-Kalman service-rate scratch, [n_w]
+    pub(crate) r: Vec<f64>,
+    pub(crate) dd: Vec<f64>,
+    pub(crate) active: Vec<bool>,
+    pub(crate) rates_tmp: Vec<f64>,
+}
+
+/// The assembled platform. Construct through [`Scenario::run`],
+/// [`Platform::from_scenario`], or the [`Platform::new`] shim.
+pub struct Platform {
+    pub(crate) cfg: Config,
+    // scenario knobs (broken out of the Scenario so the hot loop reads
+    // plain fields)
+    pub(crate) policy_kind: PolicyKind,
+    pub(crate) estimator: EstimatorKind,
+    pub(crate) fixed_ttc_s: Option<u64>,
+    pub(crate) horizon_s: u64,
+    pub(crate) arrivals: ArrivalProcess,
+    pub(crate) record_traces: bool,
+    pub(crate) sim: SimEngine,
+    pub(crate) backend: Box<dyn CloudBackend>,
+    /// Cached `backend.execution_multiplier()` (1.0 for whole-core
+    /// backends; Lambda stretches wall time by 1/core_fraction).
+    pub(crate) exec_mult: f64,
+    pub(crate) fault: Box<dyn FaultModel>,
+    /// Reused buffer for fault-model event polling.
+    pub(crate) fault_events: Vec<CloudEvent>,
+    pub(crate) storage: ObjectStore,
+    pub(crate) db: TaskDb,
+    pub(crate) bank: Bank,
+    pub(crate) tracker: Tracker,
+    pub(crate) policy: Box<dyn ScalingPolicy>,
+    pub(crate) specs: Vec<WorkloadSpec>,
+    pub(crate) wl: Vec<WlState>,
+    /// Dense estimator slots, `w * k_max + k`.
+    pub(crate) est: Vec<SlotEst>,
+    /// Per-slot count of DB measurements already consumed by a tick —
+    /// the ME reads `db.measurements(w, k)[cursor..]` as "completed
+    /// since the last monitoring instant".
+    pub(crate) meas_cursor: Vec<usize>,
+    /// Last interval-mean measurement per slot (NaN = none yet) —
+    /// reused when an interval produces no completions (eq. 8 uses
+    /// b̃[t-1]).
+    pub(crate) last_meas: Vec<f32>,
+    pub(crate) chunks: BTreeMap<u64, Chunk>,
+    pub(crate) next_chunk_id: u64,
+    /// Latest service rates, indexed by workload id.
+    pub(crate) rates: Vec<f64>,
+    pub(crate) n_star_history: Vec<f64>,
+    pub(crate) last_policy_eval: SimTime,
+    pub(crate) k_max: usize,
+    pub(crate) scratch: TickScratch,
+    pub(crate) outs: StepOutputs,
+    /// Reused idle-instance id buffer for `assign_idle`.
+    pub(crate) idle_buf: Vec<u64>,
+    /// Reused (id, remaining-billed) buffer for busy-drain scans.
+    pub(crate) busy_buf: Vec<(u64, SimTime)>,
+    pub(crate) metrics: RunMetrics,
+    pub(crate) arrived: usize,
+    pub(crate) all_done_at: Option<SimTime>,
+}
+
+impl Platform {
+    /// Compatibility shim over [`Platform::from_scenario`]: build a
+    /// platform over `specs` (workload `id`s must be their arrival
+    /// slots: 0, 1, 2, ...) with fixed-interval arrivals on a
+    /// fault-free spot fleet — exactly the pre-scenario behaviour.
+    pub fn new(cfg: Config, specs: Vec<WorkloadSpec>, opts: RunOpts) -> Platform {
+        Platform::from_scenario(Scenario::from_opts(cfg, specs, opts))
+    }
+
+    /// Assemble the platform a scenario describes.
+    pub fn from_scenario(scn: Scenario) -> Platform {
+        let Scenario {
+            cfg,
+            specs,
+            policy: policy_kind,
+            estimator,
+            fixed_ttc_s,
+            horizon_s,
+            arrivals,
+            backend: backend_kind,
+            fault,
+            record_traces,
+        } = scn;
+        let n_w = specs.len().max(1);
+        let k_max = specs.iter().map(|s| s.n_types).max().unwrap_or(1).max(1);
+        let params = BankParams::from_config(&cfg.control);
+        let (bank, _backend) = Bank::with_best_backend(
+            n_w,
+            k_max,
+            params,
+            std::path::Path::new(&cfg.artifacts_dir),
+            cfg.use_xla,
+        );
+        let horizon_h = (horizon_s / 3600 + 2) as usize;
+        let backend = backend_kind.build(&cfg, cfg.seed, horizon_h);
+        let exec_mult = backend.execution_multiplier();
+        let fault = fault.build();
+        let storage = ObjectStore::new(cfg.storage.clone());
+        let tracker = Tracker::new(cfg.control.n_w_max);
+        let policy = policy_kind.build(&cfg.control);
+        let wl: Vec<WlState> = specs
+            .iter()
+            .map(|_| WlState {
+                phase: WlPhase::Footprinting,
+                arrived_at: 0,
+                deadline: None,
+                ttc_extended: false,
+                confirmed: false,
+                footprint_pending: vec![],
+                footprint_outstanding: 0,
+                footprint_meas: vec![],
+                completed_tasks: 0,
+                completed_at: None,
+                split_busy: 0.0,
+                merge_dispatched: false,
+                merge_instance: None,
+                merge_epoch: 0,
+            })
+            .collect();
+        let n_slots = specs.len() * k_max;
+        let est: Vec<SlotEst> = (0..n_slots)
+            .map(|_| SlotEst {
+                adhoc: AdHoc::paper(),
+                arma: Arma::paper(),
+                kalman_det: SlopeDetector::new(),
+                adhoc_det: SlopeDetector::new(),
+                arma_det: DeviationDetector::paper(cfg.control.monitor_interval_s),
+                cum_cus: 0.0,
+                cum_done: 0,
+                seeded: false,
+            })
+            .collect();
+        let n_real = specs.len();
+        Platform {
+            cfg,
+            policy_kind,
+            estimator,
+            fixed_ttc_s,
+            horizon_s,
+            arrivals,
+            record_traces,
+            sim: SimEngine::new(),
+            backend,
+            exec_mult,
+            fault,
+            fault_events: vec![],
+            storage,
+            db: TaskDb::new(),
+            bank,
+            tracker,
+            policy,
+            specs,
+            wl,
+            est,
+            meas_cursor: vec![0; n_slots],
+            last_meas: vec![f32::NAN; n_slots],
+            chunks: BTreeMap::new(),
+            next_chunk_id: 0,
+            rates: vec![0.0; n_real],
+            n_star_history: vec![],
+            last_policy_eval: 0,
+            k_max,
+            scratch: TickScratch::default(),
+            outs: StepOutputs::default(),
+            idle_buf: vec![],
+            busy_buf: vec![],
+            metrics: RunMetrics::default(),
+            arrived: 0,
+            all_done_at: None,
+        }
+    }
+
+    /// Name of the estimator-bank backend in use ("xla" or "native").
+    pub fn backend_name(&self) -> &'static str {
+        self.bank.backend_name()
+    }
+
+    /// Name of the cloud backend in use ("spot", "on-demand", "lambda").
+    pub fn cloud_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Execute the experiment to completion; returns the metrics.
+    pub fn run(mut self) -> Result<RunMetrics> {
+        // bootstrap fleet at N_min (AS starts from the same launch group)
+        let initial = self.cfg.control.n_min as usize;
+        for _ in 0..initial {
+            self.request_instance();
+        }
+        // workload arrivals per the scenario's arrival process
+        let times = self.arrivals.times(self.specs.len(), self.cfg.seed);
+        for (w, &at) in times.iter().enumerate() {
+            self.sim.schedule_at(at, Event::WorkloadArrival { workload: w });
+        }
+        // first monitoring tick
+        self.sim
+            .schedule(self.cfg.control.monitor_interval_s, Event::MonitorTick);
+
+        while let Some((now, event)) = self.sim.next() {
+            if now > self.horizon_s {
+                break;
+            }
+            match event {
+                Event::WorkloadArrival { workload } => self.on_arrival(workload)?,
+                Event::InstanceReady { instance } => self.on_instance_ready(instance),
+                Event::ChunkDone { instance, chunk } => self.on_chunk_done(instance, chunk),
+                Event::MergeDone { workload, epoch } => self.on_merge_done(workload, epoch),
+                Event::MonitorTick => self.on_tick()?,
+                Event::FootprintDone { .. } => {} // handled inline
+            }
+            if self.all_done_at.is_some() {
+                break;
+            }
+        }
+
+        // wind down: terminate everything, settle billing
+        let now = self.sim.now();
+        let mut ids: Vec<u64> = vec![];
+        self.backend.for_each_instance(&mut |i| ids.push(i.id));
+        for id in ids {
+            self.backend.terminate_instance(id, now);
+        }
+        self.backend.bill_through(now);
+        self.metrics.total_cost = self.backend.total_cost();
+        self.metrics.cost_curve = self.backend.cost_curve().to_vec();
+        self.metrics.finished_at = self.all_done_at.unwrap_or(now);
+        self.metrics.tasks_completed = self.wl.iter().map(|st| st.completed_tasks).sum();
+        self.metrics.outcomes = self
+            .wl
+            .iter()
+            .enumerate()
+            .map(|(w, st)| WorkloadOutcome {
+                arrived_at: st.arrived_at,
+                completed_at: st.completed_at,
+                deadline: st.deadline,
+                ttc_extended: st.ttc_extended,
+                n_tasks: self.specs[w].n_tasks(),
+                total_bytes: self.specs[w].total_bytes(),
+            })
+            .collect();
+        // finalize estimator traces with ground truth
+        for ((w, k), trace) in self.metrics.traces.iter_mut() {
+            let log = self.db.measurements(*w, *k);
+            if !log.is_empty() {
+                let sum: f64 = log.iter().map(|&(_, c)| c).sum();
+                trace.final_measured = Some(sum / log.len() as f64);
+            }
+        }
+        Ok(self.metrics)
+    }
+}
+
+/// Convenience shim: run one experiment with the pre-scenario options
+/// (fixed-interval arrivals, fault-free spot fleet).
+pub fn run_experiment(cfg: Config, specs: Vec<WorkloadSpec>, opts: RunOpts) -> Result<RunMetrics> {
+    Platform::new(cfg, specs, opts).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::BackendKind;
+    use crate::util::rng::Rng;
+    use crate::workload::{App, Mode, WorkloadSpec};
+
+    fn small_cfg() -> Config {
+        let mut cfg = Config::paper_defaults();
+        cfg.use_xla = false; // unit tests use the native bank (fast)
+        cfg.control.n_min = 4.0;
+        cfg
+    }
+
+    fn small_suite(n_wl: usize, tasks_each: usize) -> Vec<WorkloadSpec> {
+        let rng = Rng::new(42);
+        (0..n_wl)
+            .map(|i| WorkloadSpec::generate(i, App::FaceDetection, tasks_each, None, &rng))
+            .collect()
+    }
+
+    fn fast_opts() -> RunOpts {
+        RunOpts {
+            fixed_ttc_s: Some(3600),
+            arrival_interval_s: 60,
+            horizon_s: 6 * 3600,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn completes_all_workloads() {
+        let m = run_experiment(small_cfg(), small_suite(3, 40), fast_opts()).unwrap();
+        assert_eq!(m.outcomes.len(), 3);
+        for o in &m.outcomes {
+            assert!(o.completed_at.is_some(), "workload never completed");
+        }
+        assert!(m.total_cost > 0.0);
+        assert!(m.max_instances >= 4);
+        // fault-free run: no reclamation bookkeeping, balanced counts
+        assert_eq!(m.reclamations, 0);
+        assert_eq!(m.requeued_tasks, 0);
+        assert_eq!(m.tasks_completed, 3 * 40);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = run_experiment(small_cfg(), small_suite(2, 30), fast_opts()).unwrap();
+        let b = run_experiment(small_cfg(), small_suite(2, 30), fast_opts()).unwrap();
+        assert_eq!(a.total_cost, b.total_cost);
+        assert_eq!(a.finished_at, b.finished_at);
+        assert_eq!(a.max_instances, b.max_instances);
+    }
+
+    #[test]
+    fn cost_is_monotone_and_above_lower_bound() {
+        let m = run_experiment(small_cfg(), small_suite(3, 60), fast_opts()).unwrap();
+        for wpair in m.cost_curve.windows(2) {
+            assert!(wpair[1].1 >= wpair[0].1);
+        }
+        let lb = m.lower_bound_cost(0.0081);
+        assert!(m.total_cost >= lb, "cost {} below LB {lb}", m.total_cost);
+    }
+
+    #[test]
+    fn estimator_traces_recorded_and_converge() {
+        // workload must span several monitoring intervals to converge
+        let m = run_experiment(small_cfg(), small_suite(2, 800), fast_opts()).unwrap();
+        let tr = &m.traces[&(0, 0)];
+        assert!(!tr.kalman.is_empty());
+        assert!(tr.final_measured.is_some());
+        assert!(tr.kalman_t_init.is_some(), "kalman never converged");
+    }
+
+    #[test]
+    fn all_policies_complete_the_suite() {
+        for policy in [
+            PolicyKind::Aimd,
+            PolicyKind::Reactive,
+            PolicyKind::Mwa,
+            PolicyKind::Lr,
+            PolicyKind::AmazonAs1,
+        ] {
+            let mut opts = fast_opts();
+            opts.policy = policy;
+            if policy == PolicyKind::AmazonAs1 {
+                opts.fixed_ttc_s = None;
+            }
+            let m = run_experiment(small_cfg(), small_suite(2, 25), opts).unwrap();
+            assert!(
+                m.outcomes.iter().all(|o| o.completed_at.is_some()),
+                "{policy:?} left workloads incomplete"
+            );
+        }
+    }
+
+    #[test]
+    fn all_estimators_drive_completion() {
+        for est in EstimatorKind::ALL {
+            let mut opts = fast_opts();
+            opts.estimator = est;
+            let m = run_experiment(small_cfg(), small_suite(2, 25), opts).unwrap();
+            assert!(m.outcomes.iter().all(|o| o.completed_at.is_some()));
+        }
+    }
+
+    #[test]
+    fn splitmerge_workload_runs_merge() {
+        let rng = Rng::new(9);
+        let spec = WorkloadSpec::generate_mode(
+            0,
+            App::CnnClassify,
+            30,
+            Mode::SplitMerge { merge_frac: 0.1 },
+            None,
+            &rng,
+        );
+        let m = run_experiment(small_cfg(), vec![spec], fast_opts()).unwrap();
+        assert!(m.outcomes[0].completed_at.is_some());
+    }
+
+    #[test]
+    fn ttc_honored_under_aimd() {
+        let mut opts = fast_opts();
+        opts.fixed_ttc_s = Some(2 * 3600);
+        let m = run_experiment(small_cfg(), small_suite(3, 40), opts).unwrap();
+        assert!(
+            m.ttc_compliance() >= 0.99,
+            "TTC compliance {}",
+            m.ttc_compliance()
+        );
+    }
+
+    #[test]
+    fn single_task_workload_degenerates_cleanly() {
+        let m = run_experiment(small_cfg(), small_suite(1, 1), fast_opts()).unwrap();
+        assert!(m.outcomes[0].completed_at.is_some());
+        assert_eq!(m.outcomes[0].n_tasks, 1);
+    }
+
+    // ----- scenario API ---------------------------------------------------
+
+    /// The acceptance-criterion parity guard: the `RunOpts` shim and an
+    /// explicitly-built default scenario (fixed-interval arrivals, spot
+    /// backend, no faults) must be the *same* experiment — bit-identical
+    /// `RunMetrics`.
+    #[test]
+    fn shim_and_builder_are_bit_identical() {
+        let shim = run_experiment(small_cfg(), small_suite(2, 30), fast_opts()).unwrap();
+        let built = ScenarioBuilder::new(small_cfg())
+            .workloads(small_suite(2, 30))
+            .policy(PolicyKind::Aimd)
+            .estimator(EstimatorKind::Kalman)
+            .fixed_ttc(Some(3600))
+            .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+            .horizon(6 * 3600)
+            .backend(BackendKind::Spot)
+            .fault(FaultSpec::None)
+            .build()
+            .run()
+            .unwrap();
+        assert_eq!(shim, built, "builder diverged from the RunOpts shim");
+    }
+
+    /// Gating trace recording must not perturb the control loop: same
+    /// costs/curves/outcomes, just no recorded traces.
+    #[test]
+    fn trace_gating_does_not_perturb_control() {
+        let on = run_experiment(small_cfg(), small_suite(2, 30), fast_opts()).unwrap();
+        let mut opts = fast_opts();
+        opts.record_traces = false;
+        let off = run_experiment(small_cfg(), small_suite(2, 30), opts).unwrap();
+        assert!(off.traces.is_empty(), "record_traces=false still recorded traces");
+        assert!(!on.traces.is_empty());
+        assert_eq!(on.total_cost, off.total_cost);
+        assert_eq!(on.finished_at, off.finished_at);
+        assert_eq!(on.cost_curve, off.cost_curve);
+        assert_eq!(on.n_star_curve, off.n_star_curve);
+        assert_eq!(on.outcomes, off.outcomes);
+        assert_eq!(on.ticks, off.ticks);
+    }
+
+    #[test]
+    fn on_demand_backend_completes_and_costs_more_than_spot() {
+        let build = |backend| {
+            ScenarioBuilder::new(small_cfg())
+                .workloads(small_suite(2, 40))
+                .fixed_ttc(Some(3600))
+                .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+                .horizon(6 * 3600)
+                .backend(backend)
+                .build()
+                .run()
+                .unwrap()
+        };
+        let spot = build(BackendKind::Spot);
+        let od = build(BackendKind::OnDemand);
+        assert!(od.outcomes.iter().all(|o| o.completed_at.is_some()));
+        // Table V: spot is ~78-89 % below on-demand; same schedule, same
+        // hourly increments, so the total must be several times cheaper
+        assert!(
+            spot.total_cost < od.total_cost / 2.0,
+            "spot {} vs on-demand {}",
+            spot.total_cost,
+            od.total_cost
+        );
+    }
+
+    #[test]
+    fn lambda_backend_runs_the_same_loop() {
+        let m = ScenarioBuilder::new(small_cfg())
+            .workloads(small_suite(1, 30))
+            .fixed_ttc(Some(2 * 3600))
+            .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+            .horizon(8 * 3600)
+            .backend(BackendKind::Lambda)
+            .build()
+            .run()
+            .unwrap();
+        assert!(m.outcomes[0].completed_at.is_some(), "lambda run incomplete");
+        assert!(m.total_cost > 0.0);
+        assert_eq!(m.tasks_completed, 30);
+    }
+
+    #[test]
+    fn bursty_and_poisson_arrivals_complete() {
+        for arrivals in [
+            ArrivalProcess::Bursty { burst: 3, gap_s: 900 },
+            ArrivalProcess::Poisson { mean_gap_s: 120.0 },
+        ] {
+            let m = ScenarioBuilder::new(small_cfg())
+                .workloads(small_suite(3, 25))
+                .fixed_ttc(Some(3600))
+                .arrivals(arrivals.clone())
+                .horizon(8 * 3600)
+                .build()
+                .run()
+                .unwrap();
+            assert!(
+                m.outcomes.iter().all(|o| o.completed_at.is_some()),
+                "{arrivals:?} left workloads incomplete"
+            );
+        }
+    }
+
+    #[test]
+    fn scripted_reclamation_requeues_and_still_completes() {
+        let m = ScenarioBuilder::new(small_cfg())
+            .workloads(small_suite(2, 40))
+            .fixed_ttc(Some(1500))
+            .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+            .horizon(4 * 3600)
+            .fault(FaultSpec::ReclamationAt {
+                times: vec![420, 540, 660, 780, 900, 1020],
+            })
+            .build()
+            .run()
+            .unwrap();
+        assert!(m.reclamations > 0, "no instances were revoked");
+        assert!(m.outcomes.iter().all(|o| o.completed_at.is_some()));
+        assert_eq!(m.tasks_completed, 2 * 40, "task counts must balance");
+    }
+}

@@ -1,0 +1,83 @@
+//! Fleet adjustment toward the scaling-policy target.
+//!
+//! Down-scaling is *lazy* for the estimation-based methods: an excess
+//! instance is only terminated when its pre-billed hour is nearly
+//! exhausted (§IV: "the prudent action is always to terminate spot
+//! instances with the smallest remaining time before renewal" — an
+//! instance with 50 paid minutes left is free capacity; killing it
+//! early and re-requesting later would double-bill the hour). Amazon
+//! AS terminates immediately, as the real service does. The busy-drain
+//! scan reuses a platform-owned buffer so policy evaluation stays
+//! allocation-light.
+
+use crate::cloud::InstanceState;
+use crate::coordinator::policy::PolicyKind;
+use crate::platform::Platform;
+use crate::sim::Event;
+
+impl Platform {
+    pub(crate) fn request_instance(&mut self) {
+        let now = self.sim.now();
+        let (id, ready) = self.backend.request_instance(now);
+        self.sim.schedule_at(ready, Event::InstanceReady { instance: id });
+    }
+
+    /// Scale the fleet toward `target` CUs (see module docs for the
+    /// billing-aware termination policy).
+    pub(crate) fn adjust_fleet(&mut self, target: f64) {
+        let now = self.sim.now();
+        let fleet = self.backend.describe(now);
+        let committed = fleet.committed_cus;
+        // §IV's billing-aware termination prudence is part of the
+        // *proposed* controller; the baselines set N_tot[t+1] directly
+        // (Gandhi et al. semantics) and Amazon AS terminates eagerly.
+        let lazy = self.policy_kind == PolicyKind::Aimd;
+        // renewal window: terminate before the next billing increment hits
+        let window = (self.cfg.control.monitor_interval_s * 3 / 2 + 1).max(120);
+        if target > committed {
+            let need = (target - committed).round() as usize;
+            for _ in 0..need {
+                self.request_instance();
+            }
+        } else if target < committed {
+            let mut excess = (committed - target).round() as usize;
+            // idle first, least remaining pre-billed time first (§IV)
+            for id in self.backend.idle_instances_by_remaining(now) {
+                if excess == 0 {
+                    break;
+                }
+                let rem = self
+                    .backend
+                    .instance(id)
+                    .map(|i| i.remaining_billed(now))
+                    .unwrap_or(0);
+                if !lazy || rem <= window {
+                    self.backend.terminate_instance(id, now);
+                    excess -= 1;
+                }
+            }
+            // then drain busy ones if still above target (same laziness)
+            if excess > 0 {
+                let mut busy = std::mem::take(&mut self.busy_buf);
+                busy.clear();
+                self.backend.for_each_instance(&mut |i| {
+                    if i.state == InstanceState::Running && !i.is_idle() {
+                        busy.push((i.id, i.remaining_billed(now)));
+                    }
+                });
+                busy.sort_by_key(|&(id, rem)| (rem, id));
+                for &(id, rem) in &busy {
+                    if excess == 0 {
+                        break;
+                    }
+                    if !lazy || rem <= window {
+                        self.backend.terminate_instance(id, now);
+                        excess -= 1;
+                    }
+                }
+                self.busy_buf = busy;
+            }
+        }
+        self.sample_instances(now);
+    }
+}

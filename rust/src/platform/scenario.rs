@@ -1,0 +1,229 @@
+//! Scenario description + builder: the experiment-facing API.
+//!
+//! A [`Scenario`] is a *plain-data* description of one platform run —
+//! workload suite, arrival process, cloud backend, fault model, control
+//! knobs — cheap to clone across sweep workers and deterministic in
+//! `Config::seed`. Trait objects (the backend, the fault model) are only
+//! instantiated when the scenario is run, so scenarios stay `Clone` and
+//! grids of them stay thread-safe.
+//!
+//! [`ScenarioBuilder`] is the ergonomic front end:
+//!
+//! ```no_run
+//! use dithen::cloud::BackendKind;
+//! use dithen::config::Config;
+//! use dithen::platform::{ArrivalProcess, FaultSpec, ScenarioBuilder};
+//! use dithen::workload::paper_suite;
+//!
+//! let cfg = Config::paper_defaults();
+//! let metrics = ScenarioBuilder::new(cfg.clone())
+//!     .workloads(paper_suite(cfg.seed))
+//!     .arrivals(ArrivalProcess::Poisson { mean_gap_s: 300.0 })
+//!     .backend(BackendKind::Spot)
+//!     .fault(FaultSpec::SpotReclamation { bid: 0.0085 })
+//!     .build()
+//!     .run()
+//!     .unwrap();
+//! # let _ = metrics;
+//! ```
+//!
+//! The defaults mirror `RunOpts::default()` exactly (AIMD, Kalman, the
+//! §V-C 2 hr 07 min TTC, fixed-interval arrivals, spot backend, no
+//! faults, traces on), so `Scenario::from_opts` is a lossless embedding
+//! of the legacy API.
+
+use anyhow::Result;
+
+use crate::cloud::BackendKind;
+use crate::config::Config;
+use crate::coordinator::PolicyKind;
+use crate::estimation::EstimatorKind;
+use crate::metrics::RunMetrics;
+use crate::platform::{ArrivalProcess, FaultSpec, Platform, RunOpts};
+use crate::workload::WorkloadSpec;
+
+/// A complete, self-contained experiment description.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub cfg: Config,
+    /// Workload suite; `specs[w].id` must equal its arrival slot `w`.
+    pub specs: Vec<WorkloadSpec>,
+    pub policy: PolicyKind,
+    pub estimator: EstimatorKind,
+    /// Fixed TTC per workload, or None for best-effort.
+    pub fixed_ttc_s: Option<u64>,
+    /// Hard stop (safety bound).
+    pub horizon_s: u64,
+    /// Front-end arrival process.
+    pub arrivals: ArrivalProcess,
+    /// Cloud substrate the fleet runs on.
+    pub backend: BackendKind,
+    /// Cloud-event injection stream.
+    pub fault: FaultSpec,
+    /// Record estimator traces (off in sweeps: per-tick allocations).
+    pub record_traces: bool,
+}
+
+impl Scenario {
+    /// Embed the legacy `RunOpts` API: fixed-interval arrivals on a
+    /// fault-free spot fleet.
+    pub fn from_opts(cfg: Config, specs: Vec<WorkloadSpec>, opts: RunOpts) -> Scenario {
+        Scenario {
+            cfg,
+            specs,
+            policy: opts.policy,
+            estimator: opts.estimator,
+            fixed_ttc_s: opts.fixed_ttc_s,
+            horizon_s: opts.horizon_s,
+            arrivals: ArrivalProcess::FixedInterval { interval_s: opts.arrival_interval_s },
+            backend: BackendKind::Spot,
+            fault: FaultSpec::None,
+            record_traces: opts.record_traces,
+        }
+    }
+
+    /// Execute the scenario (pure in its inputs; the scenario itself is
+    /// reusable — sweep cells call this from worker threads).
+    pub fn run(&self) -> Result<RunMetrics> {
+        Platform::from_scenario(self.clone()).run()
+    }
+
+    /// Total tasks across the suite (throughput accounting).
+    pub fn n_tasks(&self) -> usize {
+        self.specs.iter().map(|s| s.n_tasks()).sum()
+    }
+
+    /// One-line human description (CLI headers, sweep labels).
+    pub fn describe(&self) -> String {
+        format!(
+            "{} workloads / {} tasks | backend={} fault={} arrivals={} policy={:?} estimator={:?} ttc={:?}",
+            self.specs.len(),
+            self.n_tasks(),
+            self.backend.name(),
+            self.fault.describe(),
+            self.arrivals.describe(),
+            self.policy,
+            self.estimator,
+            self.fixed_ttc_s,
+        )
+    }
+}
+
+/// Fluent builder over [`Scenario`]. Defaults mirror `RunOpts::default`.
+#[derive(Debug, Clone)]
+pub struct ScenarioBuilder {
+    scn: Scenario,
+}
+
+impl ScenarioBuilder {
+    pub fn new(cfg: Config) -> Self {
+        ScenarioBuilder { scn: Scenario::from_opts(cfg, vec![], RunOpts::default()) }
+    }
+
+    /// Set the workload suite (`specs[w].id` must be its arrival slot).
+    pub fn workloads(mut self, specs: Vec<WorkloadSpec>) -> Self {
+        self.scn.specs = specs;
+        self
+    }
+
+    pub fn policy(mut self, policy: PolicyKind) -> Self {
+        self.scn.policy = policy;
+        self
+    }
+
+    pub fn estimator(mut self, estimator: EstimatorKind) -> Self {
+        self.scn.estimator = estimator;
+        self
+    }
+
+    /// Fixed TTC per workload; `None` = best effort.
+    pub fn fixed_ttc(mut self, ttc_s: Option<u64>) -> Self {
+        self.scn.fixed_ttc_s = ttc_s;
+        self
+    }
+
+    pub fn horizon(mut self, horizon_s: u64) -> Self {
+        self.scn.horizon_s = horizon_s;
+        self
+    }
+
+    pub fn arrivals(mut self, arrivals: ArrivalProcess) -> Self {
+        self.scn.arrivals = arrivals;
+        self
+    }
+
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.scn.backend = backend;
+        self
+    }
+
+    pub fn fault(mut self, fault: FaultSpec) -> Self {
+        self.scn.fault = fault;
+        self
+    }
+
+    pub fn record_traces(mut self, on: bool) -> Self {
+        self.scn.record_traces = on;
+        self
+    }
+
+    pub fn build(self) -> Scenario {
+        self.scn
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_mirror_run_opts() {
+        let cfg = Config::paper_defaults();
+        let built = ScenarioBuilder::new(cfg.clone()).build();
+        let opts = RunOpts::default();
+        assert_eq!(built.policy, opts.policy);
+        assert_eq!(built.estimator, opts.estimator);
+        assert_eq!(built.fixed_ttc_s, opts.fixed_ttc_s);
+        assert_eq!(built.horizon_s, opts.horizon_s);
+        assert_eq!(
+            built.arrivals,
+            ArrivalProcess::FixedInterval { interval_s: opts.arrival_interval_s }
+        );
+        assert_eq!(built.backend, BackendKind::Spot);
+        assert_eq!(built.fault, FaultSpec::None);
+        assert!(built.record_traces);
+    }
+
+    #[test]
+    fn builder_setters_apply() {
+        let scn = ScenarioBuilder::new(Config::paper_defaults())
+            .policy(PolicyKind::Mwa)
+            .estimator(EstimatorKind::Arma)
+            .fixed_ttc(None)
+            .horizon(99)
+            .arrivals(ArrivalProcess::Bursty { burst: 4, gap_s: 10 })
+            .backend(BackendKind::Lambda)
+            .fault(FaultSpec::SpotReclamation { bid: 0.01 })
+            .record_traces(false)
+            .build();
+        assert_eq!(scn.policy, PolicyKind::Mwa);
+        assert_eq!(scn.estimator, EstimatorKind::Arma);
+        assert_eq!(scn.fixed_ttc_s, None);
+        assert_eq!(scn.horizon_s, 99);
+        assert_eq!(scn.backend, BackendKind::Lambda);
+        assert_eq!(scn.fault, FaultSpec::SpotReclamation { bid: 0.01 });
+        assert!(!scn.record_traces);
+        assert!(scn.describe().contains("lambda"));
+    }
+
+    #[test]
+    fn n_tasks_sums_suite() {
+        let rng = crate::util::rng::Rng::new(1);
+        let specs = vec![
+            WorkloadSpec::generate(0, crate::workload::App::FaceDetection, 7, None, &rng),
+            WorkloadSpec::generate(1, crate::workload::App::FaceDetection, 5, None, &rng),
+        ];
+        let scn = ScenarioBuilder::new(Config::paper_defaults()).workloads(specs).build();
+        assert_eq!(scn.n_tasks(), 12);
+    }
+}

@@ -1,0 +1,333 @@
+//! The GCI monitoring tick: billing, fault polling, measurement-engine
+//! assembly, the estimator-bank step (L1/L2 hot path), passive
+//! estimators + convergence, TTC confirmation, service rates and the
+//! scaling-policy evaluation.
+//!
+//! Order within a tick (deliberate): billing settles first; then the
+//! fault model fires (so a reclamation at this instant is *visible* to
+//! the same tick's fleet description and the policy reacts immediately —
+//! the reactive-control story of §V); then estimation/scheduling run on
+//! the post-fault fleet. With the `NoFaults` model this is byte-for-byte
+//! the pre-scenario tick.
+//!
+//! §Perf: allocation-free in steady state with traces off — every
+//! working set lives in [`super::TickScratch`] or a platform-owned
+//! buffer and is reused across ticks. Trace recording (three Vec pushes
+//! per active slot per tick) is gated behind `record_traces`.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::policy::PolicyCtx;
+use crate::coordinator::service_rates_into;
+use crate::coordinator::ttc::confirm;
+use crate::estimation::EstimatorKind;
+use crate::platform::{Platform, TickScratch, WlPhase};
+use crate::runtime::StepOutputs;
+use crate::sim::Event;
+
+impl Platform {
+    pub(crate) fn on_tick(&mut self) -> Result<()> {
+        let now = self.sim.now();
+        let tick_start = Instant::now();
+        self.backend.bill_through(now);
+
+        // ----- fault injection (spot reclamation) -----------------------
+        let mut evs = std::mem::take(&mut self.fault_events);
+        evs.clear();
+        self.fault.poll(&*self.backend, now, &mut evs);
+        for ev in &evs {
+            self.apply_cloud_event(ev, now);
+        }
+        self.fault_events = evs;
+
+        // take the scratch + output buffers so field borrows stay
+        // disjoint; returned at the end of the tick
+        let mut sc = std::mem::take(&mut self.scratch);
+        let mut outs = std::mem::take(&mut self.outs);
+
+        // ----- ME: assemble bank inputs (eqs. 1-3 bookkeeping) ----------
+        let n_w = self.specs.len();
+        let k = self.k_max;
+        let (bw, bk) = (self.bank.w, self.bank.k);
+        let wk = bw * bk;
+        sc.b_tilde.resize(wk, 0.0);
+        sc.meas_mask.resize(wk, 0.0);
+        sc.m_rem.resize(wk, 0.0);
+        sc.slot_mask.resize(wk, 0.0);
+        sc.d.resize(bw, 0.0);
+        sc.b_tilde.fill(0.0);
+        sc.meas_mask.fill(0.0);
+        sc.m_rem.fill(0.0);
+        sc.slot_mask.fill(0.0);
+        sc.d.fill(0.0);
+        for w in 0..n_w {
+            let st = &self.wl[w];
+            if st.arrived_at > now || matches!(st.phase, WlPhase::Done) || self.arrived <= w {
+                continue;
+            }
+            let remaining = self.db.remaining_slice(w);
+            let dl = st.deadline.unwrap_or(now + 3600);
+            // safety margin of one monitoring interval: allocation is
+            // interval-quantized, so pacing against the raw deadline
+            // systematically finishes up to one interval late
+            let margin = self.cfg.control.monitor_interval_s;
+            sc.d[w] = dl.saturating_sub(now).saturating_sub(margin).max(1) as f32;
+            for ki in 0..self.specs[w].n_types.min(k) {
+                let idx = w * bk + ki;
+                let slot = w * self.k_max + ki;
+                sc.slot_mask[idx] = 1.0;
+                sc.m_rem[idx] = remaining.get(ki).copied().unwrap_or(0) as f32;
+                let log = self.db.measurements(w, ki);
+                let cursor = self.meas_cursor[slot];
+                if log.len() > cursor {
+                    let fresh = &log[cursor..];
+                    let sum: f64 = fresh.iter().map(|&(_, c)| c).sum();
+                    let m = (sum / fresh.len() as f64) as f32;
+                    sc.b_tilde[idx] = m;
+                    sc.meas_mask[idx] = 1.0;
+                    self.meas_cursor[slot] = log.len();
+                    self.last_meas[slot] = m;
+                } else {
+                    let last = self.last_meas[slot];
+                    if !last.is_nan() {
+                        // eq. (8) uses b̃[t-1]: when no tasks of this type
+                        // completed in the interval, the previous
+                        // measurement is reused (the paper's estimator
+                        // keeps pulling toward the last observation)
+                        sc.b_tilde[idx] = last;
+                        sc.meas_mask[idx] = 1.0;
+                    }
+                }
+            }
+        }
+        let fleet = self.backend.describe(now);
+        let n_tot = fleet.active_cus as f32;
+
+        // ----- the L1/L2 hot path: estimator-bank step -------------------
+        self.bank.step_into(
+            &crate::estimation::TickInputs {
+                b_tilde: &sc.b_tilde,
+                meas_mask: &sc.meas_mask,
+                m_rem: &sc.m_rem,
+                slot_mask: &sc.slot_mask,
+                d: &sc.d,
+                n_tot,
+            },
+            &mut outs,
+        )?;
+
+        // ----- passive estimators + convergence + traces ----------------
+        sc.converged.clear();
+        for w in 0..n_w {
+            if self.arrived <= w || matches!(self.wl[w].phase, WlPhase::Done) {
+                continue;
+            }
+            let spec = &self.specs[w];
+            for ki in 0..spec.n_types {
+                let idx = w * bk + ki;
+                if sc.slot_mask[idx] == 0.0 {
+                    continue;
+                }
+                let had_meas = sc.meas_mask[idx] > 0.0;
+                let kalman_b = outs.b_hat[idx] as f64;
+                // update the passive estimators + detectors (borrow of
+                // the slot ends before any trace recording below)
+                let (adhoc_b, arma_b, kalman_conv, adhoc_conv, arma_conv) = {
+                    let est = &mut self.est[w * self.k_max + ki];
+                    if !est.seeded {
+                        continue;
+                    }
+                    let m = if had_meas { Some(sc.b_tilde[idx] as f64) } else { None };
+                    let adhoc_b = est.adhoc.update(m);
+                    let arma_b = match crate::estimation::arma::normalize_per_item(
+                        est.cum_cus,
+                        est.cum_done,
+                    ) {
+                        Some(bn) if had_meas => est.arma.update(bn),
+                        _ => est.arma.b_hat,
+                    };
+                    (
+                        adhoc_b,
+                        arma_b,
+                        est.kalman_det.push(kalman_b).is_some(),
+                        est.adhoc_det.push(adhoc_b).is_some(),
+                        est.arma_det.push(arma_b).is_some(),
+                    )
+                };
+                if self.record_traces {
+                    let trace = self.metrics.traces.get_mut(&(w, ki)).unwrap();
+                    trace.kalman.push((now, kalman_b));
+                    trace.adhoc.push((now, adhoc_b));
+                    trace.arma.push((now, arma_b));
+                    if kalman_conv {
+                        trace.kalman_t_init = Some(now);
+                        trace.kalman_at_init = Some(kalman_b);
+                    }
+                    if adhoc_conv {
+                        trace.adhoc_t_init = Some(now);
+                        trace.adhoc_at_init = Some(adhoc_b);
+                    }
+                    if arma_conv {
+                        trace.arma_t_init = Some(now);
+                        trace.arma_at_init = Some(arma_b);
+                    }
+                }
+                if kalman_conv && self.estimator == EstimatorKind::Kalman {
+                    sc.converged.push(w);
+                }
+                if adhoc_conv && self.estimator == EstimatorKind::AdHoc {
+                    sc.converged.push(w);
+                }
+                if arma_conv && self.estimator == EstimatorKind::Arma {
+                    sc.converged.push(w);
+                }
+            }
+        }
+
+        // ----- service rates from the *driving* estimator ----------------
+        let n_star = self.driving_rates_into(&outs, &mut sc, n_tot as f64);
+        for w in 0..n_w {
+            self.rates[w] = sc.rates_tmp[w].min(self.cfg.control.n_w_max);
+        }
+        self.n_star_history.push(n_star);
+        self.metrics.n_star_curve.push((now, n_star));
+
+        // ----- TTC confirmation at t_init (§II-E-4) ----------------------
+        for &w in &sc.converged {
+            if self.wl[w].confirmed {
+                continue;
+            }
+            self.wl[w].confirmed = true;
+            if let Some(dl) = self.wl[w].deadline {
+                let r_w = self.driving_r(&outs, w);
+                let c = confirm(r_w, dl, now, self.cfg.control.n_w_max);
+                let st = &mut self.wl[w];
+                st.deadline = Some(c.deadline);
+                st.ttc_extended = c.extended;
+            }
+        }
+
+        // ----- scaling policy ---------------------------------------------
+        let eval_due = match self.policy.eval_interval_s() {
+            Some(iv) => now.saturating_sub(self.last_policy_eval) >= iv,
+            None => true,
+        };
+        if eval_due {
+            self.last_policy_eval = now;
+            let work_pending = (0..n_w).any(|w| {
+                self.arrived > w && !matches!(self.wl[w].phase, WlPhase::Done)
+            });
+            let ctx = PolicyCtx {
+                now,
+                n_tot: fleet.committed_cus,
+                n_star,
+                n_star_history: &self.n_star_history,
+                mean_utilization: self.backend.mean_utilization(now),
+                work_pending,
+            };
+            let target = self.policy.target(&ctx).round().max(0.0);
+            self.adjust_fleet(target);
+        }
+
+        // ----- tracker credits + assignment -------------------------------
+        self.tracker.tick(&self.rates);
+        self.assign_idle();
+
+        self.metrics.ticks += 1;
+        self.metrics.tick_wall_ns += tick_start.elapsed().as_nanos();
+        self.sample_instances(now);
+
+        // continue while work remains or arrivals are still scheduled
+        let more_arrivals = self.arrived < self.specs.len();
+        let work_left = (0..n_w)
+            .any(|w| self.arrived > w && !matches!(self.wl[w].phase, WlPhase::Done));
+        if more_arrivals || work_left {
+            self.sim
+                .schedule(self.cfg.control.monitor_interval_s, Event::MonitorTick);
+        }
+
+        self.scratch = sc;
+        self.outs = outs;
+        Ok(())
+    }
+
+    // ----- helpers ---------------------------------------------------------
+
+    /// r_w under the driving estimator.
+    pub(crate) fn driving_r(&self, out: &StepOutputs, w: usize) -> f64 {
+        match self.estimator {
+            EstimatorKind::Kalman => out.r[w] as f64,
+            other => {
+                let spec = &self.specs[w];
+                let remaining = self.db.remaining_slice(w);
+                let mut r = 0.0;
+                for ki in 0..spec.n_types {
+                    let est = &self.est[w * self.k_max + ki];
+                    let b = match other {
+                        EstimatorKind::AdHoc => est.adhoc.b_hat,
+                        EstimatorKind::Arma => est.arma.b_hat,
+                        EstimatorKind::Kalman => unreachable!(),
+                    };
+                    r += remaining.get(ki).copied().unwrap_or(0) as f64 * b;
+                }
+                r
+            }
+        }
+    }
+
+    /// Service rates under the driving estimator, written into
+    /// `sc.rates_tmp` (reused across ticks); returns n_star.
+    pub(crate) fn driving_rates_into(
+        &self,
+        out: &StepOutputs,
+        sc: &mut TickScratch,
+        n_tot: f64,
+    ) -> f64 {
+        let n_w = self.specs.len();
+        let bk = self.bank.k;
+        sc.rates_tmp.resize(n_w, 0.0);
+        match self.estimator {
+            EstimatorKind::Kalman => {
+                for w in 0..n_w {
+                    sc.rates_tmp[w] = out.s[w] as f64;
+                }
+                out.n_star as f64
+            }
+            other => {
+                sc.r.resize(n_w, 0.0);
+                sc.dd.resize(n_w, 0.0);
+                sc.active.resize(n_w, false);
+                sc.r.fill(0.0);
+                sc.active.fill(false);
+                for w in 0..n_w {
+                    sc.dd[w] = sc.d[w] as f64;
+                    for ki in 0..self.specs[w].n_types {
+                        let idx = w * bk + ki;
+                        if sc.slot_mask[idx] > 0.0 {
+                            sc.active[w] = true;
+                            let est = &self.est[w * self.k_max + ki];
+                            let b = match other {
+                                EstimatorKind::AdHoc => est.adhoc.b_hat,
+                                EstimatorKind::Arma => est.arma.b_hat,
+                                EstimatorKind::Kalman => unreachable!(),
+                            };
+                            sc.r[w] += sc.m_rem[idx] as f64 * b;
+                        }
+                    }
+                }
+                service_rates_into(
+                    &sc.r,
+                    &sc.dd,
+                    &sc.active,
+                    n_tot,
+                    self.cfg.control.alpha,
+                    self.cfg.control.beta,
+                    self.cfg.control.n_w_max,
+                    &mut sc.rates_tmp,
+                )
+            }
+        }
+    }
+}

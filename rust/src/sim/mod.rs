@@ -26,8 +26,12 @@ pub enum Event {
     InstanceReady { instance: u64 },
     /// Footprinting stage of a workload completed.
     FootprintDone { workload: usize },
-    /// A Split–Merge workload's merge step completed.
-    MergeDone { workload: usize },
+    /// A Split–Merge workload's merge step completed. `epoch` guards
+    /// against stale completions: a spot reclamation can revoke the
+    /// instance running the merge, and the engine has no event
+    /// cancellation, so the re-dispatched merge bumps the workload's
+    /// merge epoch and the platform ignores events from older epochs.
+    MergeDone { workload: usize, epoch: u32 },
 }
 
 #[derive(Debug, Clone, Eq, PartialEq)]

@@ -1,12 +1,17 @@
 //! Determinism property tests: the same `Config::seed` must produce
 //! **byte-identical** `RunMetrics` — across repeated sequential runs,
 //! and across the parallel experiment runner at any thread count.
-//! (`RunMetrics` derives `PartialEq` over every curve, trace and
-//! outcome, so equality here is exhaustive, not a spot check.)
+//! (`RunMetrics` implements `PartialEq` over every curve, trace,
+//! outcome and reclamation counter, so equality here is exhaustive, not
+//! a spot check.) Reclamation scenarios are included: revocation events
+//! come from the seeded market (or a scripted schedule), never from
+//! wall clock, so fault-injected runs must be just as reproducible.
 
 use dithen::config::Config;
 use dithen::experiments::parallel::{run_specs, RunSpec};
-use dithen::platform::{run_experiment, RunOpts};
+use dithen::platform::{
+    run_experiment, ArrivalProcess, FaultSpec, RunOpts, Scenario, ScenarioBuilder,
+};
 use dithen::util::rng::Rng;
 use dithen::workload::{App, WorkloadSpec};
 
@@ -34,6 +39,19 @@ fn suite(seed: u64, n_wl: usize, tasks_each: usize) -> Vec<WorkloadSpec> {
         .collect()
 }
 
+/// A spot scenario with market-driven reclamation: the bid sits just
+/// above the m3.medium base price, so whether (and when) the seeded
+/// price trace crosses it is itself part of the seed's determinism.
+fn reclamation_scenario(seed: u64) -> Scenario {
+    ScenarioBuilder::new(cfg(seed))
+        .workloads(suite(seed, 2, 30))
+        .fixed_ttc(Some(3600))
+        .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+        .horizon(6 * 3600)
+        .fault(FaultSpec::SpotReclamation { bid: 0.0082 })
+        .build()
+}
+
 #[test]
 fn same_seed_same_metrics_sequentially() {
     for seed in [1u64, 42, 20161021] {
@@ -51,17 +69,46 @@ fn different_seeds_differ() {
 }
 
 #[test]
+fn reclamation_scenario_is_bit_identical_across_runs() {
+    for seed in [3u64, 77, 20161021] {
+        let scn = reclamation_scenario(seed);
+        let a = scn.run().unwrap();
+        let b = scn.run().unwrap();
+        assert_eq!(a, b, "seed {seed}: reclamation scenario diverged between runs");
+        // the fault stream itself must be seed-deterministic too
+        assert_eq!(a.reclamations, b.reclamations);
+        assert_eq!(a.requeued_tasks, b.requeued_tasks);
+    }
+}
+
+#[test]
+fn scripted_reclamation_is_bit_identical_across_runs() {
+    let scn = ScenarioBuilder::new(cfg(5))
+        .workloads(suite(5, 2, 40))
+        .fixed_ttc(Some(1800))
+        .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+        .horizon(6 * 3600)
+        .fault(FaultSpec::ReclamationAt { times: vec![600, 900, 1200] })
+        .build();
+    let a = scn.run().unwrap();
+    let b = scn.run().unwrap();
+    assert_eq!(a, b);
+    assert!(a.reclamations > 0, "scripted schedule must revoke something");
+}
+
+#[test]
 fn parallel_runner_is_thread_count_invariant() {
-    // a mixed grid: different seeds, estimators and policies
+    // a mixed grid: different seeds, estimators, policies, and a
+    // reclamation scenario (the fault path must also be thread-invariant)
     let mut specs: Vec<RunSpec> = vec![];
     for (i, est) in dithen::estimation::EstimatorKind::ALL.iter().enumerate() {
         let seed = 7 + i as u64;
-        specs.push(RunSpec {
-            label: format!("det/{i}"),
-            cfg: cfg(seed),
-            suite: suite(seed, 2, 25),
-            opts: RunOpts { estimator: *est, ..opts() },
-        });
+        specs.push(RunSpec::from_opts(
+            format!("det/{i}"),
+            cfg(seed),
+            suite(seed, 2, 25),
+            RunOpts { estimator: *est, ..opts() },
+        ));
     }
     for (i, policy) in [
         dithen::coordinator::PolicyKind::Aimd,
@@ -72,13 +119,14 @@ fn parallel_runner_is_thread_count_invariant() {
     .enumerate()
     {
         let seed = 100 + i as u64;
-        specs.push(RunSpec {
-            label: format!("det/p{i}"),
-            cfg: cfg(seed),
-            suite: suite(seed, 1, 30),
-            opts: RunOpts { policy: *policy, ..opts() },
-        });
+        specs.push(RunSpec::from_opts(
+            format!("det/p{i}"),
+            cfg(seed),
+            suite(seed, 1, 30),
+            RunOpts { policy: *policy, ..opts() },
+        ));
     }
+    specs.push(RunSpec::new("det/reclaim", reclamation_scenario(55)));
 
     let sequential = run_specs(&specs, 1).unwrap();
     for threads in [2usize, 4, 8] {
