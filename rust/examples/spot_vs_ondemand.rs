@@ -1,12 +1,18 @@
-//! Scenario API tour — spot + reclamation vs on-demand.
+//! Scenario API tour — spot + reclamation vs on-demand vs mixed fleet.
 //!
-//! Builds the same bursty workload suite twice through the
-//! `ScenarioBuilder` and runs it on two cloud backends:
+//! Builds the same bursty workload suite three times through the
+//! `ScenarioBuilder` and runs it on three cloud configurations:
 //!
 //! 1. the spot market with market-driven reclamation (instances revoked
-//!    whenever the seeded spot price crosses the bid; in-flight chunks
-//!    re-enter the task DB FIFO through `TaskDb::requeue`), and
-//! 2. a flat-rate on-demand fleet that can never be reclaimed.
+//!    whenever the seeded spot price crosses the bid; replacement
+//!    requests placed while the market is still above the bid stay
+//!    *pending* — real-EC2 unfulfilled semantics — and in-flight chunks
+//!    re-enter the task DB FIFO through `TaskDb::requeue`),
+//! 2. a flat-rate on-demand fleet that can never be reclaimed, and
+//! 3. a heterogeneous two-pool fleet (m3.medium + 16-CU m4.4xlarge,
+//!    each with its own bid) under per-pool reclamation: a price spike
+//!    on the volatile big type revokes only that pool while the small
+//!    pool keeps working — a *partial* revocation.
 //!
 //! The comparison prints the paper's core §IV trade: spot is several
 //! times cheaper per billed hour, but the controller has to absorb
@@ -15,7 +21,9 @@
 //!
 //! Run:  cargo run --release --example spot_vs_ondemand
 
-use dithen::cloud::BackendKind;
+use anyhow::Error;
+
+use dithen::cloud::{BackendKind, FleetSpec};
 use dithen::config::Config;
 use dithen::platform::{ArrivalProcess, FaultSpec, ScenarioBuilder};
 use dithen::util::rng::Rng;
@@ -33,66 +41,88 @@ fn main() -> anyhow::Result<()> {
     // flash-crowd arrivals: two bursts of three workloads
     let arrivals = ArrivalProcess::Bursty { burst: 3, gap_s: 1800 };
 
-    let spot = ScenarioBuilder::new(cfg.clone())
-        .workloads(suite.clone())
-        .arrivals(arrivals.clone())
-        .fixed_ttc(Some(3600))
-        .horizon(12 * 3600)
+    let base = |cfg: &Config| {
+        ScenarioBuilder::new(cfg.clone())
+            .workloads(suite.clone())
+            .arrivals(arrivals.clone())
+            .fixed_ttc(Some(3600))
+            .horizon(12 * 3600)
+    };
+
+    let spot = base(&cfg)
         .backend(BackendKind::Spot)
         // bid barely above the m3.medium base price: the seeded market
         // occasionally crosses it and wipes the fleet
         .fault(FaultSpec::SpotReclamation { bid: 0.0083 })
         .build();
-    let on_demand = ScenarioBuilder::new(cfg.clone())
-        .workloads(suite)
-        .arrivals(arrivals)
-        .fixed_ttc(Some(3600))
-        .horizon(12 * 3600)
-        .backend(BackendKind::OnDemand)
+    let on_demand = base(&cfg).backend(BackendKind::OnDemand).build();
+    let mut mixed_cfg = cfg.clone();
+    mixed_cfg.control.n_min = 20.0; // bootstrap fits one 16-CU instance
+    let fleet = FleetSpec::parse("m3.medium:bid=0.1,m4.4xlarge:bid=0.115").map_err(Error::msg)?;
+    let mixed = base(&mixed_cfg)
+        .backend(BackendKind::Spot)
+        .fleet(fleet)
+        .fault(FaultSpec::PoolReclamation)
         .build();
 
     println!("spot scenario:      {}", spot.describe());
     println!("on-demand scenario: {}", on_demand.describe());
+    println!("mixed scenario:     {}", mixed.describe());
     let ms = spot.run()?;
     let mo = on_demand.run()?;
+    let mx = mixed.run()?;
 
-    let mut t = Table::new(vec!["metric", "spot + reclamation", "on-demand"]);
+    let mut t = Table::new(vec!["metric", "spot + reclamation", "on-demand", "mixed fleet"]);
     t.row(vec![
         "total cost".into(),
         format!("${:.3}", ms.total_cost),
         format!("${:.3}", mo.total_cost),
+        format!("${:.3}", mx.total_cost),
     ])
     .row(vec![
         "finished at".into(),
         fmt_hm(ms.finished_at as f64),
         fmt_hm(mo.finished_at as f64),
+        fmt_hm(mx.finished_at as f64),
     ])
     .row(vec![
         "TTC compliance".into(),
         format!("{:.0}%", 100.0 * ms.ttc_compliance()),
         format!("{:.0}%", 100.0 * mo.ttc_compliance()),
+        format!("{:.0}%", 100.0 * mx.ttc_compliance()),
     ])
     .row(vec![
         "reclamations".into(),
         format!("{}", ms.reclamations),
         format!("{}", mo.reclamations),
+        format!("{:?}", mx.reclamations_by_pool),
     ])
     .row(vec![
         "requeued tasks".into(),
         format!("{}", ms.requeued_tasks),
         format!("{}", mo.requeued_tasks),
+        format!("{}", mx.requeued_tasks),
+    ])
+    .row(vec![
+        "unfulfilled requests".into(),
+        format!("{}", ms.unfulfilled_requests),
+        format!("{}", mo.unfulfilled_requests),
+        format!("{}", mx.unfulfilled_requests),
     ])
     .row(vec![
         "max instances".into(),
         format!("{}", ms.max_instances),
         format!("{}", mo.max_instances),
+        format!("{}", mx.max_instances),
     ]);
     t.print();
 
     println!(
-        "spot is {:.1}x cheaper despite {} revocations",
+        "spot is {:.1}x cheaper despite {} revocations; the mixed fleet's \
+         per-pool revocations were {:?} (small pool keeps working)",
         mo.total_cost / ms.total_cost.max(1e-12),
-        ms.reclamations
+        ms.reclamations,
+        mx.reclamations_by_pool
     );
     Ok(())
 }

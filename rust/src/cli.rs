@@ -5,7 +5,7 @@
 //! dithen repro <exp|all>      regenerate a paper table/figure (see list)
 //! dithen run [options]        run the platform on the paper suite
 //! dithen scenario [options]   run a composed scenario (backend/fault/arrivals)
-//! dithen sweep <grid>         parallel experiment grid (cost|estimators|seeds)
+//! dithen sweep <grid>         parallel experiment grid (cost|estimators|seeds|fleet)
 //! dithen bench-report         measure tasks/s, write BENCH json
 //! dithen list                 list experiment ids
 //! dithen market               print current simulated spot prices
@@ -16,11 +16,12 @@
 //! `--policy <aimd|reactive|mwa|lr|as1|as10>`, `--estimator
 //! <kalman|adhoc|arma>`, `--ttc <seconds>`, `--seed <n>`, `--native`,
 //! `--threads <n>`, `--out <file>`. Scenario options: `--backend
-//! <spot|ondemand|lambda>`, `--fault <none|reclaim:BID|reclaim-at:T,..>`,
+//! <spot|ondemand|lambda>`, `--fleet <type[:bid=P],..>`, `--fault
+//! <none|reclaim:BID|reclaim-pools|reclaim-at:T,..>`,
 //! `--arrivals <fixed:S|burst:NxGAP|poisson:MEAN>`, `--workloads <n>`,
 //! `--tasks <n>`, `--horizon <s>`, `--no-traces`.
 
-use crate::cloud::BackendKind;
+use crate::cloud::{BackendKind, FleetSpec};
 use crate::config::Config;
 use crate::coordinator::PolicyKind;
 use crate::estimation::EstimatorKind;
@@ -38,7 +39,7 @@ COMMANDS:
     repro <exp|all>   regenerate a paper table/figure (fig5..fig12, table2..table5)
     run               run the platform on the 30-workload paper suite
     scenario          run a composed scenario: pluggable backend, arrivals, faults
-    sweep <grid>      run an experiment grid across cores: cost | estimators | seeds
+    sweep <grid>      run an experiment grid across cores: cost | estimators | seeds | fleet
     bench-report      measure end-to-end tasks/s + DB ops/s, write a JSON report
     list              list experiment ids
     market            print the simulated spot-price snapshot
@@ -57,7 +58,11 @@ OPTIONS:
 
 SCENARIO OPTIONS:
     --backend <b>          spot (default) | ondemand | lambda
-    --fault <f>            none (default) | reclaim:<bid $/hr> | reclaim-at:<t1,t2,...>
+    --fleet <spec>         per-type pools: <type[:bid=$/hr]>,... over the Table V
+                           names (default m3.medium), e.g.
+                           m3.medium:bid=0.0085,m4.10xlarge:bid=0.6
+    --fault <f>            none (default) | reclaim:<bid $/hr> | reclaim-pools
+                           (each pool revoked on its own bid) | reclaim-at:<t1,t2,...>
     --arrivals <a>         fixed:<gap_s> | burst:<n>x<gap_s> | poisson:<mean_gap_s>
     --workloads <n>        generated workload count (default 6; smoke 3)
     --tasks <n>            tasks per generated workload (default 120; smoke 40)
@@ -82,6 +87,7 @@ pub struct Cli {
     pub out: Option<String>,
     pub smoke: bool,
     pub backend: Option<String>,
+    pub fleet: Option<String>,
     pub fault: Option<String>,
     pub arrivals: Option<String>,
     pub workloads: Option<usize>,
@@ -136,6 +142,7 @@ pub fn parse(args: &[String]) -> Result<Cli, CliError> {
             "--out" => cli.out = Some(need_value(&mut it, "--out")?),
             "--smoke" => cli.smoke = true,
             "--backend" => cli.backend = Some(need_value(&mut it, "--backend")?),
+            "--fleet" => cli.fleet = Some(need_value(&mut it, "--fleet")?),
             "--fault" => cli.fault = Some(need_value(&mut it, "--fault")?),
             "--arrivals" => cli.arrivals = Some(need_value(&mut it, "--arrivals")?),
             "--workloads" => {
@@ -194,9 +201,16 @@ pub fn parse_backend(s: &str) -> Result<BackendKind, CliError> {
     })
 }
 
+pub fn parse_fleet(s: &str) -> Result<FleetSpec, CliError> {
+    FleetSpec::parse(s).map_err(CliError)
+}
+
 pub fn parse_fault(s: &str) -> Result<FaultSpec, CliError> {
     if s == "none" {
         return Ok(FaultSpec::None);
+    }
+    if s == "reclaim-pools" {
+        return Ok(FaultSpec::PoolReclamation);
     }
     if let Some(bid) = s.strip_prefix("reclaim:") {
         let bid: f64 = bid
@@ -216,7 +230,7 @@ pub fn parse_fault(s: &str) -> Result<FaultSpec, CliError> {
         return Ok(FaultSpec::ReclamationAt { times });
     }
     Err(CliError(format!(
-        "unknown fault '{s}' (use none | reclaim:<bid> | reclaim-at:<t1,t2,...>)"
+        "unknown fault '{s}' (use none | reclaim:<bid> | reclaim-pools | reclaim-at:<t1,t2,...>)"
     )))
 }
 
@@ -307,8 +321,13 @@ fn run_scenario(cli: &Cli, mut cfg: Config) -> anyhow::Result<i32> {
         Some(s) => parse_backend(s)?,
         None => BackendKind::Spot,
     };
+    let fleet = match &cli.fleet {
+        Some(s) => parse_fleet(s)?,
+        None => FleetSpec::default(),
+    };
     let scn = ScenarioBuilder::new(cfg.clone())
         .workloads(suite)
+        .fleet(fleet)
         .policy(cli.policy.as_deref().map(parse_policy).transpose()?.unwrap_or(PolicyKind::Aimd))
         .estimator(
             cli.estimator
@@ -329,11 +348,13 @@ fn run_scenario(cli: &Cli, mut cfg: Config) -> anyhow::Result<i32> {
         .record_traces(!cli.no_traces)
         .build();
     println!("scenario: {}", scn.describe());
+    let pool_names: Vec<&'static str> = scn.fleet.pools.iter().map(|p| p.name()).collect();
     let m = scn.run()?;
     let done = m.outcomes.iter().filter(|o| o.completed_at.is_some()).count();
     println!(
         "done at {} | cost ${:.3} | max instances {} | TTC compliance {:.0}% | \
-         completed {done}/{} workloads ({} tasks) | reclamations {} | requeued tasks {}",
+         completed {done}/{} workloads ({} tasks) | reclamations {} | requeued tasks {} | \
+         unfulfilled requests {}",
         crate::util::table::fmt_hm(m.finished_at as f64),
         m.total_cost,
         m.max_instances,
@@ -342,7 +363,16 @@ fn run_scenario(cli: &Cli, mut cfg: Config) -> anyhow::Result<i32> {
         m.tasks_completed,
         m.reclamations,
         m.requeued_tasks,
+        m.unfulfilled_requests,
     );
+    if m.reclamations_by_pool.len() > 1 {
+        let per_pool: Vec<String> = pool_names
+            .iter()
+            .zip(&m.reclamations_by_pool)
+            .map(|(name, n)| format!("{name}={n}"))
+            .collect();
+        println!("reclamations by pool: {}", per_pool.join(" "));
+    }
     if smoke && done != m.outcomes.len() {
         let n = m.outcomes.len();
         eprintln!("error: smoke scenario left {}/{n} workloads incomplete", n - done);
@@ -510,6 +540,20 @@ mod tests {
     }
 
     #[test]
+    fn parses_fleet_flag() {
+        let c = parse(&argv(
+            "scenario --fleet m3.medium:bid=0.0085,m4.10xlarge:bid=0.6 --fault reclaim-pools",
+        ))
+        .unwrap();
+        let fleet = parse_fleet(c.fleet.as_deref().unwrap()).unwrap();
+        assert_eq!(fleet.pools.len(), 2);
+        assert_eq!(fleet.pools[1].name(), "m4.10xlarge");
+        assert_eq!(fleet.pools[1].bid, Some(0.6));
+        assert!(parse_fleet("warp9.huge").is_err());
+        assert!(parse(&argv("scenario --fleet")).is_err(), "--fleet needs a value");
+    }
+
+    #[test]
     fn rejects_unknown_flag() {
         assert!(parse(&argv("run --bogus")).is_err());
         assert!(parse(&argv("run --ttc notanumber")).is_err());
@@ -537,6 +581,7 @@ mod tests {
     #[test]
     fn fault_specs() {
         assert_eq!(parse_fault("none").unwrap(), FaultSpec::None);
+        assert_eq!(parse_fault("reclaim-pools").unwrap(), FaultSpec::PoolReclamation);
         assert_eq!(
             parse_fault("reclaim:0.0085").unwrap(),
             FaultSpec::SpotReclamation { bid: 0.0085 }

@@ -16,19 +16,29 @@
 //!   and usage billing per 100 ms GB-second quantum plus a per-request
 //!   fee, charged as chunks finish instead of by the wall-clock hour.
 //!
+//! The trait is **pool-aware**: a backend exposes one or more per-type
+//! instance *pools* (see [`crate::cloud::FleetSpec`]) — capacity is
+//! requested by pool ([`CloudBackend::request_instance_in`], which may
+//! leave an above-bid spot request *unfulfilled*), and described either
+//! per pool ([`CloudBackend::describe_pool`], the per-type CU vector) or
+//! in aggregate ([`CloudBackend::describe`], what the controller's
+//! scaling law reads). Single-pool backends (Lambda, the default trait
+//! impls) behave exactly like the pre-fleet platform.
+//!
 //! The trait is object-safe (the platform owns a `Box<dyn CloudBackend>`)
 //! and its iteration surface is callback-based (`for_each_instance`) so
 //! the steady-state monitoring tick stays allocation-free.
 
 use std::collections::BTreeMap;
 
+use crate::cloud::fleet::FleetSpec;
 use crate::cloud::instance::{Instance, InstanceState};
 use crate::cloud::lambda::core_fraction;
 use crate::cloud::provider::{FleetView, Provider};
 use crate::config::{Config, LambdaCfg};
 use crate::sim::SimTime;
 
-/// Chunk-id marker for a merge step occupying an instance.
+/// Chunk-id marker for a merge step occupying an instance slot.
 pub const MERGE_CHUNK: u64 = u64::MAX;
 
 /// Lambda cold-start latency (container spin-up), seconds.
@@ -56,13 +66,26 @@ impl BackendKind {
         }
     }
 
-    /// Instantiate the backend for one run.
-    pub fn build(&self, cfg: &Config, seed: u64, horizon_hours: usize) -> Box<dyn CloudBackend> {
+    /// Instantiate the backend for one run. `fleet` selects the per-type
+    /// pools for the IaaS backends (Lambda has no instance types and
+    /// ignores it).
+    pub fn build(
+        &self,
+        cfg: &Config,
+        seed: u64,
+        horizon_hours: usize,
+        fleet: &FleetSpec,
+    ) -> Box<dyn CloudBackend> {
         match self {
-            BackendKind::Spot => Box::new(Provider::new(cfg.market.clone(), seed, horizon_hours)),
-            BackendKind::OnDemand => {
-                Box::new(Provider::new_on_demand(cfg.market.clone(), seed, horizon_hours))
+            BackendKind::Spot => {
+                Box::new(Provider::with_fleet(cfg.market.clone(), seed, horizon_hours, fleet))
             }
+            BackendKind::OnDemand => Box::new(Provider::with_fleet_on_demand(
+                cfg.market.clone(),
+                seed,
+                horizon_hours,
+                fleet,
+            )),
             BackendKind::Lambda => Box::new(LambdaBackend::new(cfg.lambda.clone())),
         }
     }
@@ -78,8 +101,67 @@ pub trait CloudBackend {
         false
     }
 
-    /// Request one unit of capacity; returns (id, ready_at).
-    fn request_instance(&mut self, now: SimTime) -> (u64, SimTime);
+    // ----- pools -------------------------------------------------------
+
+    /// Number of per-type instance pools (1 for single-type backends).
+    fn pool_count(&self) -> usize {
+        1
+    }
+
+    /// Catalogue type index of pool `pool`.
+    fn pool_type_idx(&self, _pool: usize) -> usize {
+        0
+    }
+
+    /// CUs per instance of pool `pool`.
+    fn pool_cus(&self, pool: usize) -> u32 {
+        crate::cloud::market::CATALOG[self.pool_type_idx(pool)].cus
+    }
+
+    /// The pool owning catalogue type `type_idx`, if any.
+    fn pool_of_type(&self, type_idx: usize) -> Option<usize> {
+        (type_idx == 0).then_some(0)
+    }
+
+    /// The pool's spot bid, if it has one (fulfilment + revocation gate).
+    fn pool_bid(&self, _pool: usize) -> Option<f64> {
+        None
+    }
+
+    /// Current $/hr unit price of pool `pool` (its type's spot price /
+    /// flat rate). Market-driven fault models compare this against the
+    /// pool's bid.
+    fn pool_unit_price(&self, _pool: usize, now: SimTime) -> f64 {
+        self.unit_price(now)
+    }
+
+    /// `describeInstances()` restricted to one pool: the per-type CU
+    /// vector entry.
+    fn describe_pool(&self, _pool: usize, now: SimTime) -> FleetView {
+        self.describe(now)
+    }
+
+    // ----- lifecycle ---------------------------------------------------
+
+    /// Request one instance from pool `pool`; returns `Some((id,
+    /// ready_at))` when the request is fulfilled. A spot request placed
+    /// while the pool's market price exceeds its bid returns `None` —
+    /// real-EC2 semantics: the request stays *pending* and the caller
+    /// retries at a later instant (nothing is booked or billed).
+    fn request_instance_in(&mut self, pool: usize, now: SimTime) -> Option<(u64, SimTime)>;
+
+    /// Request one unit of capacity from the first pool — a
+    /// compatibility surface for *bid-less* single-pool backends
+    /// (tests, direct `Provider` drivers). Panics if the request is
+    /// left unfulfilled, which can happen on platform-built spot
+    /// backends whose pool 0 carries a bid (scenario assembly copies a
+    /// `SpotReclamation` fault bid onto it): platform code must use
+    /// [`CloudBackend::request_instance_in`], which reports an
+    /// unfulfilled request instead of panicking.
+    fn request_instance(&mut self, now: SimTime) -> (u64, SimTime) {
+        self.request_instance_in(0, now)
+            .expect("pool 0 spot request unfulfilled (market above bid)")
+    }
 
     /// Boot/cold-start completion for `id`.
     fn instance_ready(&mut self, id: u64, now: SimTime);
@@ -96,7 +178,7 @@ pub trait CloudBackend {
             if inst.state != InstanceState::Terminated {
                 inst.state = InstanceState::Terminated;
                 inst.terminated_at = Some(now);
-                inst.current_chunk = None;
+                inst.chunks.clear();
             }
         }
     }
@@ -105,7 +187,8 @@ pub trait CloudBackend {
     /// backends).
     fn bill_through(&mut self, now: SimTime);
 
-    /// `describeInstances()` fleet summary.
+    /// `describeInstances()` fleet summary — the aggregate over every
+    /// pool (what the scaling controller reads).
     fn describe(&self, now: SimTime) -> FleetView;
 
     fn instance(&self, id: u64) -> Option<&Instance>;
@@ -114,11 +197,12 @@ pub trait CloudBackend {
     /// Visit every instance (allocation-free iteration surface).
     fn for_each_instance(&self, f: &mut dyn FnMut(&Instance));
 
-    /// First idle running instance in id order, if any.
-    fn first_idle(&self) -> Option<u64>;
+    /// First running instance with a free compute-unit slot, in id
+    /// order, if any (merge-step placement).
+    fn first_free_slot(&self) -> Option<u64>;
 
-    /// Idle running instances ordered by ascending remaining pre-billed
-    /// time (the AIMD termination preference).
+    /// Fully idle running instances ordered by ascending remaining
+    /// pre-billed time (the AIMD termination preference).
     fn idle_instances_by_remaining(&self, now: SimTime) -> Vec<u64>;
 
     /// Mean CPU utilization over active instances (Amazon AS input).
@@ -127,9 +211,8 @@ pub trait CloudBackend {
     fn total_cost(&self) -> f64;
     fn cost_curve(&self) -> &[(SimTime, f64)];
 
-    /// Current $/hr unit price (spot market price, flat rate, or the
-    /// GB-second-equivalent hourly rate for Lambda). Fault models compare
-    /// this against the scenario bid.
+    /// Current $/hr unit price of the first pool (spot market price,
+    /// flat rate, or the GB-second-equivalent hourly rate for Lambda).
     fn unit_price(&self, now: SimTime) -> f64;
 
     /// Wall-clock multiplier on task execution: 1.0 for whole-core
@@ -138,33 +221,33 @@ pub trait CloudBackend {
         1.0
     }
 
-    /// A chunk of `tasks` tasks finished on `id` after `busy_s` occupied
-    /// wall seconds: release the instance and do any usage billing.
-    fn on_chunk_finished(&mut self, id: u64, now: SimTime, busy_s: f64, tasks: usize) {
+    /// Chunk `chunk` of `tasks` tasks finished on `id` after `busy_s`
+    /// occupied core-seconds: release its slot and do any usage billing.
+    fn on_chunk_finished(&mut self, id: u64, chunk: u64, now: SimTime, busy_s: f64, tasks: usize) {
         let _ = tasks;
         if let Some(inst) = self.instance_mut(id) {
-            inst.finish_chunk(now, busy_s.ceil() as SimTime);
+            inst.finish_chunk(chunk, now, busy_s.ceil() as SimTime);
         }
     }
 
     /// A merge step of `merge_s` seconds was dispatched onto `id`: mark
-    /// it busy. (Usage billing happens at completion — a reclaimed merge
-    /// is re-dispatched and must not be charged twice.)
+    /// one slot busy. (Usage billing happens at completion — a reclaimed
+    /// merge is re-dispatched and must not be charged twice.)
     fn on_merge_dispatched(&mut self, id: u64, now: SimTime, merge_s: f64) {
         let _ = now;
         if let Some(inst) = self.instance_mut(id) {
-            inst.current_chunk = Some(MERGE_CHUNK);
+            inst.begin_chunk(MERGE_CHUNK);
             inst.busy_s += merge_s.ceil() as SimTime;
         }
     }
 
     /// The merge step on `id` completed after `merge_s` seconds: release
-    /// the instance and do any usage billing (the busy time was already
+    /// its slot and do any usage billing (the busy time was already
     /// accounted at dispatch).
     fn on_merge_finished(&mut self, id: u64, now: SimTime, merge_s: f64) {
         let _ = merge_s;
         if let Some(inst) = self.instance_mut(id) {
-            inst.finish_chunk(now, 0);
+            inst.finish_chunk(MERGE_CHUNK, now, 0);
         }
     }
 }
@@ -175,31 +258,37 @@ pub trait CloudBackend {
 pub(crate) fn fleet_view(instances: &BTreeMap<u64, Instance>, now: SimTime) -> FleetView {
     let mut v = FleetView::default();
     for inst in instances.values() {
-        match inst.state {
-            InstanceState::Booting => {
-                v.booting += 1;
-                v.committed_cus += inst.cus as f64;
-            }
-            InstanceState::Running => {
-                v.running += 1;
-                v.active_cus += inst.cus as f64;
-                v.committed_cus += inst.cus as f64;
-                v.c_tot += (inst.cus as u64 * inst.remaining_billed(now)) as f64;
-            }
-            InstanceState::Draining => {
-                v.draining += 1;
-                v.active_cus += inst.cus as f64;
-                v.committed_cus += inst.cus as f64;
-                v.c_tot += (inst.cus as u64 * inst.remaining_billed(now)) as f64;
-            }
-            InstanceState::Terminated => v.terminated += 1,
-        }
+        fleet_view_add(&mut v, inst, now);
     }
     v
 }
 
-pub(crate) fn fleet_first_idle(instances: &BTreeMap<u64, Instance>) -> Option<u64> {
-    instances.values().find(|i| i.is_idle()).map(|i| i.id)
+/// Accumulate one instance into a [`FleetView`] (shared by the
+/// aggregate and the per-pool describes).
+pub(crate) fn fleet_view_add(v: &mut FleetView, inst: &Instance, now: SimTime) {
+    match inst.state {
+        InstanceState::Booting => {
+            v.booting += 1;
+            v.committed_cus += inst.cus as f64;
+        }
+        InstanceState::Running => {
+            v.running += 1;
+            v.active_cus += inst.cus as f64;
+            v.committed_cus += inst.cus as f64;
+            v.c_tot += (inst.cus as u64 * inst.remaining_billed(now)) as f64;
+        }
+        InstanceState::Draining => {
+            v.draining += 1;
+            v.active_cus += inst.cus as f64;
+            v.committed_cus += inst.cus as f64;
+            v.c_tot += (inst.cus as u64 * inst.remaining_billed(now)) as f64;
+        }
+        InstanceState::Terminated => v.terminated += 1,
+    }
+}
+
+pub(crate) fn fleet_first_free(instances: &BTreeMap<u64, Instance>) -> Option<u64> {
+    instances.values().find(|i| i.has_free_slot()).map(|i| i.id)
 }
 
 pub(crate) fn fleet_idle_by_remaining(
@@ -266,11 +355,11 @@ impl CloudBackend for LambdaBackend {
         "lambda"
     }
 
-    fn request_instance(&mut self, now: SimTime) -> (u64, SimTime) {
+    fn request_instance_in(&mut self, _pool: usize, now: SimTime) -> Option<(u64, SimTime)> {
         self.next_id += 1;
         let id = self.next_id;
         self.instances.insert(id, Instance::new(id, 0, 1, now));
-        (id, now + LAMBDA_COLD_START_S)
+        Some((id, now + LAMBDA_COLD_START_S))
     }
 
     fn instance_ready(&mut self, id: u64, now: SimTime) {
@@ -315,8 +404,8 @@ impl CloudBackend for LambdaBackend {
         }
     }
 
-    fn first_idle(&self) -> Option<u64> {
-        fleet_first_idle(&self.instances)
+    fn first_free_slot(&self) -> Option<u64> {
+        fleet_first_free(&self.instances)
     }
 
     fn idle_instances_by_remaining(&self, now: SimTime) -> Vec<u64> {
@@ -344,16 +433,16 @@ impl CloudBackend for LambdaBackend {
         1.0 / core_fraction(&self.cfg).max(1e-9)
     }
 
-    fn on_chunk_finished(&mut self, id: u64, now: SimTime, busy_s: f64, tasks: usize) {
+    fn on_chunk_finished(&mut self, id: u64, chunk: u64, now: SimTime, busy_s: f64, tasks: usize) {
         if let Some(inst) = self.instances.get_mut(&id) {
-            inst.finish_chunk(now, busy_s.ceil() as SimTime);
+            inst.finish_chunk(chunk, now, busy_s.ceil() as SimTime);
         }
         self.charge(now, busy_s, tasks);
     }
 
     fn on_merge_finished(&mut self, id: u64, now: SimTime, merge_s: f64) {
         if let Some(inst) = self.instances.get_mut(&id) {
-            inst.finish_chunk(now, 0);
+            inst.finish_chunk(MERGE_CHUNK, now, 0);
         }
         // one aggregation invocation, charged on completion only — a
         // reclaimed merge re-dispatches without double billing
@@ -373,16 +462,37 @@ mod tests {
     #[test]
     fn backend_kind_builds_all_three() {
         let cfg = Config::paper_defaults();
+        let fleet = FleetSpec::default();
         for (kind, name, reclaimable) in [
             (BackendKind::Spot, "spot", true),
             (BackendKind::OnDemand, "on-demand", false),
             (BackendKind::Lambda, "lambda", false),
         ] {
-            let b = kind.build(&cfg, 7, 24);
+            let b = kind.build(&cfg, 7, 24, &fleet);
             assert_eq!(b.name(), name);
             assert_eq!(b.reclaimable(), reclaimable);
             assert_eq!(kind.name(), name);
+            assert_eq!(b.pool_count(), 1);
+            assert_eq!(b.pool_type_idx(0), 0);
+            assert_eq!(b.pool_cus(0), 1);
         }
+    }
+
+    #[test]
+    fn backend_kind_builds_mixed_fleets() {
+        let cfg = Config::paper_defaults();
+        let fleet = FleetSpec::parse("m3.medium,m4.4xlarge:bid=0.12").unwrap();
+        for kind in [BackendKind::Spot, BackendKind::OnDemand] {
+            let b = kind.build(&cfg, 7, 24, &fleet);
+            assert_eq!(b.pool_count(), 2);
+            assert_eq!(b.pool_cus(1), 16);
+            assert_eq!(b.pool_bid(1), Some(0.12));
+            assert_eq!(b.pool_of_type(4), Some(1));
+            assert_eq!(b.pool_of_type(5), None);
+        }
+        // Lambda has no instance types: the fleet is ignored
+        let b = BackendKind::Lambda.build(&cfg, 7, 24, &fleet);
+        assert_eq!(b.pool_count(), 1);
     }
 
     #[test]
@@ -404,9 +514,9 @@ mod tests {
         let mut b = lambda();
         let (id, ready) = b.request_instance(0);
         b.instance_ready(id, ready);
-        b.instance_mut(id).unwrap().current_chunk = Some(1);
+        b.instance_mut(id).unwrap().begin_chunk(1);
         // 10.03 s busy -> 10.1 billed seconds at 1 GB + 4 request fees
-        b.on_chunk_finished(id, ready + 11, 10.03, 4);
+        b.on_chunk_finished(id, 1, ready + 11, 10.03, 4);
         let cfg = LambdaCfg::default();
         let want = 10.1 * cfg.memory_gb * cfg.price_per_gb_s + 4.0 * cfg.price_per_request;
         assert!((b.total_cost() - want).abs() < 1e-12, "{} vs {want}", b.total_cost());
@@ -423,7 +533,7 @@ mod tests {
     fn whole_core_backends_do_not_stretch_execution() {
         let cfg = Config::paper_defaults();
         for kind in [BackendKind::Spot, BackendKind::OnDemand] {
-            assert_eq!(kind.build(&cfg, 1, 4).execution_multiplier(), 1.0);
+            assert_eq!(kind.build(&cfg, 1, 4, &FleetSpec::default()).execution_multiplier(), 1.0);
         }
     }
 
@@ -432,13 +542,13 @@ mod tests {
         let mut p = Provider::new(MarketCfg::default(), 1, 4);
         let (id, ready) = CloudBackend::request_instance(&mut p, 0);
         CloudBackend::instance_ready(&mut p, id, ready);
-        p.instance_mut(id).unwrap().current_chunk = Some(9);
+        p.instance_mut(id).unwrap().begin_chunk(9);
         // graceful terminate would only drain; revoke must kill now
         p.revoke_instance(id, ready + 10);
         let inst = CloudBackend::instance(&p, id).unwrap();
         assert_eq!(inst.state, InstanceState::Terminated);
         assert_eq!(inst.terminated_at, Some(ready + 10));
-        assert_eq!(inst.current_chunk, None);
+        assert!(inst.chunks.is_empty());
         // idempotent: the original termination instant is preserved
         p.revoke_instance(id, ready + 99);
         assert_eq!(CloudBackend::instance(&p, id).unwrap().terminated_at, Some(ready + 10));
@@ -483,7 +593,7 @@ mod tests {
         CloudBackend::instance_ready(&mut p, id, ready);
         p.on_merge_dispatched(id, ready, 40.2);
         let inst = CloudBackend::instance(&p, id).unwrap();
-        assert_eq!(inst.current_chunk, Some(MERGE_CHUNK));
+        assert_eq!(inst.chunks, vec![MERGE_CHUNK]);
         assert_eq!(inst.busy_s, 41);
     }
 }

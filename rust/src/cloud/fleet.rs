@@ -1,0 +1,216 @@
+//! Heterogeneous fleet description: per-type instance pools.
+//!
+//! A [`FleetSpec`] names which Table V catalogue types a scenario may
+//! provision and, optionally, a per-pool spot **bid**. The pool-aware
+//! [`crate::cloud::CloudBackend`] surface turns each entry into one
+//! *pool*: the pool owns its catalogue type, its own price trace (the
+//! per-type trace the [`crate::cloud::Market`] already simulates), its
+//! own bid, and its own boot/billing bookkeeping, while the aggregate
+//! `describe()` view the controller reads stays unchanged.
+//!
+//! Bid semantics (real-EC2, §II-C):
+//!
+//! * **fulfilment** — a spot request placed while the pool's market
+//!   price exceeds its bid stays *pending* (the request is simply not
+//!   fulfilled; the scaling loop retries at later instants). Pools
+//!   without a bid are always fulfilled at market price.
+//! * **revocation** — a market-driven fault model revokes a pool when
+//!   its price crosses the pool's bid (see
+//!   [`crate::platform::FaultSpec::PoolReclamation`]); other pools keep
+//!   working — a *partial* revocation.
+//!
+//! The default fleet is the degenerate single pool — one `m3.medium`
+//! (1 CU) pool with no bid — which reproduces the pre-fleet platform
+//! bit for bit (`platform::tests` pins this).
+//!
+//! CLI grammar (`dithen scenario --fleet …`):
+//!
+//! ```text
+//! m3.medium,m4.4xlarge                 two pools, no bids
+//! m3.medium:bid=0.0085,m4.4xlarge:bid=0.12
+//! ```
+
+use crate::cloud::market::CATALOG;
+
+/// One per-type pool: a catalogue type plus an optional spot bid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolSpec {
+    /// Index into [`CATALOG`].
+    pub type_idx: usize,
+    /// Spot bid, $/hr. `None` = bid-less (always fulfilled, only
+    /// revocable by a scripted schedule or a global fault bid).
+    pub bid: Option<f64>,
+}
+
+impl PoolSpec {
+    pub fn name(&self) -> &'static str {
+        CATALOG[self.type_idx].name
+    }
+
+    pub fn cus(&self) -> u32 {
+        CATALOG[self.type_idx].cus
+    }
+}
+
+/// A scenario's fleet: one pool per catalogue type (types must be
+/// distinct — the pool *is* the type's launch group).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    pub pools: Vec<PoolSpec>,
+}
+
+impl Default for FleetSpec {
+    /// The degenerate single-pool fleet: one bid-less m3.medium pool —
+    /// exactly the pre-fleet platform.
+    fn default() -> Self {
+        FleetSpec { pools: vec![PoolSpec { type_idx: 0, bid: None }] }
+    }
+}
+
+impl FleetSpec {
+    /// A homogeneous single-type fleet.
+    pub fn homogeneous(type_idx: usize, bid: Option<f64>) -> Self {
+        FleetSpec { pools: vec![PoolSpec { type_idx, bid }] }
+    }
+
+    /// Parse the CLI grammar: comma-separated `type[:bid=$/hr]` entries
+    /// with Table V type names.
+    pub fn parse(s: &str) -> Result<FleetSpec, String> {
+        let mut pools = vec![];
+        for entry in s.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                return Err(format!("empty fleet entry in '{s}'"));
+            }
+            let (name, bid) = match entry.split_once(':') {
+                None => (entry, None),
+                Some((name, attr)) => {
+                    let raw = match attr.strip_prefix("bid=") {
+                        Some(raw) => raw,
+                        None => {
+                            return Err(format!("bad fleet attribute '{attr}' (want bid=<$/hr>)"))
+                        }
+                    };
+                    let bid: f64 = raw.parse().map_err(|_| format!("bad fleet bid '{raw}'"))?;
+                    if bid.is_nan() || bid <= 0.0 {
+                        return Err(format!("fleet bid '{raw}' must be a positive $/hr price"));
+                    }
+                    (name, Some(bid))
+                }
+            };
+            let type_idx = CATALOG
+                .iter()
+                .position(|t| t.name == name)
+                .ok_or_else(|| format!("unknown instance type '{name}' (Table V names)"))?;
+            pools.push(PoolSpec { type_idx, bid });
+        }
+        let fleet = FleetSpec { pools };
+        fleet.validate()?;
+        Ok(fleet)
+    }
+
+    /// Structural checks: non-empty, valid catalogue indices, distinct
+    /// types (a pool is its type's launch group).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.pools.is_empty() {
+            return Err("fleet needs at least one pool".into());
+        }
+        for (i, p) in self.pools.iter().enumerate() {
+            if p.type_idx >= CATALOG.len() {
+                return Err(format!("pool {i}: type index {} out of catalogue", p.type_idx));
+            }
+            if self.pools[..i].iter().any(|q| q.type_idx == p.type_idx) {
+                return Err(format!("duplicate pool type '{}'", p.name()));
+            }
+        }
+        Ok(())
+    }
+
+    /// Fill in missing bids from a global default (the scenario-level
+    /// `SpotReclamation { bid }` fallback): a pool's own bid always
+    /// wins. The default is quoted for the base type (m3.medium) and
+    /// scaled to each pool by the catalogue base-price ratio — a
+    /// sensible $0.0085 bid for a 1-CU type would otherwise sit below a
+    /// 40-CU type's price *floor* and permanently starve that pool.
+    /// The base type itself keeps the bid verbatim (single-pool parity).
+    pub fn with_default_bid(&self, default: Option<f64>) -> FleetSpec {
+        FleetSpec {
+            pools: self
+                .pools
+                .iter()
+                .map(|p| {
+                    let scale = CATALOG[p.type_idx].spot_base / CATALOG[0].spot_base;
+                    let scaled = default.map(|b| b * scale);
+                    PoolSpec { type_idx: p.type_idx, bid: p.bid.or(scaled) }
+                })
+                .collect(),
+        }
+    }
+
+    /// Compact human label (CLI headers, sweep labels).
+    pub fn describe(&self) -> String {
+        self.pools
+            .iter()
+            .map(|p| match p.bid {
+                Some(b) => format!("{}:bid={b}", p.name()),
+                None => p.name().to_string(),
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_single_bidless_m3_medium() {
+        let f = FleetSpec::default();
+        assert_eq!(f.pools.len(), 1);
+        assert_eq!(f.pools[0].type_idx, 0);
+        assert_eq!(f.pools[0].bid, None);
+        assert_eq!(f.pools[0].name(), "m3.medium");
+        assert_eq!(f.pools[0].cus(), 1);
+        f.validate().unwrap();
+    }
+
+    #[test]
+    fn parses_types_and_bids() {
+        let f = FleetSpec::parse("m3.medium:bid=0.0085, m4.4xlarge:bid=0.12,m4.10xlarge").unwrap();
+        assert_eq!(f.pools.len(), 3);
+        assert_eq!(f.pools[0].name(), "m3.medium");
+        assert_eq!(f.pools[0].bid, Some(0.0085));
+        assert_eq!(f.pools[1].name(), "m4.4xlarge");
+        assert_eq!(f.pools[1].cus(), 16);
+        assert_eq!(f.pools[2].bid, None);
+        assert_eq!(f.describe(), "m3.medium:bid=0.0085,m4.4xlarge:bid=0.12,m4.10xlarge");
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(FleetSpec::parse("").is_err());
+        assert!(FleetSpec::parse("c9.mega").is_err());
+        assert!(FleetSpec::parse("m3.medium,").is_err());
+        assert!(FleetSpec::parse("m3.medium:bid=").is_err());
+        assert!(FleetSpec::parse("m3.medium:bid=-1").is_err());
+        assert!(FleetSpec::parse("m3.medium:bid=nan").is_err());
+        assert!(FleetSpec::parse("m3.medium:price=1").is_err());
+        assert!(FleetSpec::parse("m3.medium,m3.medium").is_err(), "duplicate types rejected");
+    }
+
+    #[test]
+    fn default_bid_fills_only_missing_scaled_by_base_price() {
+        let f = FleetSpec::parse("m3.medium:bid=0.01,m3.xlarge").unwrap();
+        let g = f.with_default_bid(Some(0.5));
+        assert_eq!(g.pools[0].bid, Some(0.01), "explicit pool bid wins");
+        // the fallback is quoted for m3.medium and scaled per type
+        let want = 0.5 * CATALOG[2].spot_base / CATALOG[0].spot_base;
+        assert_eq!(g.pools[1].bid, Some(want));
+        let h = f.with_default_bid(None);
+        assert_eq!(h, f);
+        // the base type keeps the fallback verbatim (single-pool parity)
+        let base = FleetSpec::default().with_default_bid(Some(0.0085));
+        assert_eq!(base.pools[0].bid, Some(0.0085));
+    }
+}

@@ -7,6 +7,12 @@
 //!   * `a_{i,j}[t]` = seconds remaining in the already-billed increment —
 //!     AIMD terminates the instances with the *smallest* remaining time
 //!     (their sunk cost is nearly used up).
+//!
+//! Capacity model: an instance of a `cus`-CU catalogue type executes up
+//! to `cus` chunks *concurrently* (one per compute unit) — a 40-CU
+//! m4.10xlarge absorbs 40 single-core chunks at once, a 1-CU m3.medium
+//! exactly one. `chunks` holds the in-flight chunk ids; dispatch fills
+//! free slots, termination drains until every slot empties.
 
 use crate::sim::SimTime;
 
@@ -16,7 +22,7 @@ pub enum InstanceState {
     Booting,
     /// Running and available for task execution.
     Running,
-    /// Marked for termination once its current chunk finishes.
+    /// Marked for termination once its in-flight chunks finish.
     Draining,
     /// Terminated; no further billing.
     Terminated,
@@ -41,10 +47,12 @@ pub struct Instance {
     pub cost: f64,
     /// Number of billing increments paid.
     pub increments: u32,
-    /// Busy seconds accumulated (for utilization metrics / Amazon AS).
+    /// Busy core-seconds accumulated (for utilization metrics / Amazon
+    /// AS): each concurrent chunk contributes its own busy time.
     pub busy_s: u64,
-    /// Id of the chunk currently executing, if any.
-    pub current_chunk: Option<u64>,
+    /// Ids of the chunks currently executing, in dispatch order
+    /// (at most `cus`; merge steps appear as `MERGE_CHUNK` entries).
+    pub chunks: Vec<u64>,
 }
 
 impl Instance {
@@ -61,7 +69,7 @@ impl Instance {
             cost: 0.0,
             increments: 0,
             busy_s: 0,
-            current_chunk: None,
+            chunks: vec![],
         }
     }
 
@@ -78,14 +86,32 @@ impl Instance {
         matches!(self.state, InstanceState::Running | InstanceState::Draining)
     }
 
+    /// Fully idle: running with no chunk in flight (the termination
+    /// preference — only whole instances can be released).
     pub fn is_idle(&self) -> bool {
-        self.state == InstanceState::Running && self.current_chunk.is_none()
+        self.state == InstanceState::Running && self.chunks.is_empty()
+    }
+
+    /// Has a free compute unit to absorb one more concurrent chunk.
+    pub fn has_free_slot(&self) -> bool {
+        self.state == InstanceState::Running && (self.chunks.len() as u32) < self.cus
+    }
+
+    /// Occupy one compute unit with chunk `id`.
+    pub fn begin_chunk(&mut self, id: u64) {
+        debug_assert!((self.chunks.len() as u32) < self.cus, "instance over capacity");
+        self.chunks.push(id);
     }
 
     /// Charge billing increments so the instance is paid up through `now`.
     /// `price` is the $/hr spot price at the start of each new increment;
     /// `increment_s` the billing quantum. Returns $ newly billed.
-    pub fn bill_through(&mut self, now: SimTime, price_at: impl Fn(SimTime) -> f64, increment_s: SimTime) -> f64 {
+    pub fn bill_through(
+        &mut self,
+        now: SimTime,
+        price_at: impl Fn(SimTime) -> f64,
+        increment_s: SimTime,
+    ) -> f64 {
         if self.state == InstanceState::Terminated {
             return 0.0;
         }
@@ -108,11 +134,12 @@ impl Instance {
         self.ready_at = Some(now);
     }
 
-    /// Terminate now (or drain if busy: terminates after chunk completion).
+    /// Terminate now (or drain if busy: terminates once every in-flight
+    /// chunk completes).
     pub fn terminate(&mut self, now: SimTime) {
         match self.state {
             InstanceState::Terminated => {}
-            _ if self.current_chunk.is_some() => self.state = InstanceState::Draining,
+            _ if !self.chunks.is_empty() => self.state = InstanceState::Draining,
             _ => {
                 self.state = InstanceState::Terminated;
                 self.terminated_at = Some(now);
@@ -120,12 +147,15 @@ impl Instance {
         }
     }
 
-    /// Finish the current chunk; returns true if the instance terminated
-    /// because it was draining.
-    pub fn finish_chunk(&mut self, now: SimTime, busy: SimTime) -> bool {
+    /// Finish chunk `chunk`, releasing its compute unit; returns true if
+    /// the instance terminated because it was draining and this was the
+    /// last in-flight chunk.
+    pub fn finish_chunk(&mut self, chunk: u64, now: SimTime, busy: SimTime) -> bool {
         self.busy_s += busy;
-        self.current_chunk = None;
-        if self.state == InstanceState::Draining {
+        if let Some(i) = self.chunks.iter().position(|&c| c == chunk) {
+            self.chunks.remove(i);
+        }
+        if self.state == InstanceState::Draining && self.chunks.is_empty() {
             self.state = InstanceState::Terminated;
             self.terminated_at = Some(now);
             true
@@ -135,8 +165,9 @@ impl Instance {
     }
 
     /// CPU utilization over the instance's active lifetime so far, in
-    /// [0, 1]. This is what the Amazon-AS baseline's 20 % rule reads
-    /// (mpstat / wmic in the paper).
+    /// [0, 1], normalized by its CU count (a 16-CU instance running one
+    /// chunk is 1/16 utilized). This is what the Amazon-AS baseline's
+    /// 20 % rule reads (mpstat / wmic in the paper).
     pub fn utilization(&self, now: SimTime) -> f64 {
         let start = match self.ready_at {
             Some(t) => t,
@@ -146,7 +177,7 @@ impl Instance {
         if end <= start {
             return 0.0;
         }
-        (self.busy_s as f64 / (end - start) as f64).min(1.0)
+        (self.busy_s as f64 / ((end - start) as f64 * self.cus as f64)).min(1.0)
     }
 }
 
@@ -188,10 +219,10 @@ mod tests {
     fn terminate_busy_instance_drains() {
         let mut i = inst();
         i.boot_complete(100);
-        i.current_chunk = Some(9);
+        i.begin_chunk(9);
         i.terminate(200);
         assert_eq!(i.state, InstanceState::Draining);
-        let died = i.finish_chunk(500, 300);
+        let died = i.finish_chunk(9, 500, 300);
         assert!(died);
         assert_eq!(i.state, InstanceState::Terminated);
         assert_eq!(i.terminated_at, Some(500));
@@ -222,8 +253,8 @@ mod tests {
     fn utilization_tracks_busy_fraction() {
         let mut i = inst();
         i.boot_complete(100);
-        i.current_chunk = Some(1);
-        i.finish_chunk(600, 250);
+        i.begin_chunk(1);
+        i.finish_chunk(1, 600, 250);
         // 250 busy out of 500 elapsed
         assert!((i.utilization(600) - 0.5).abs() < 1e-9);
         assert_eq!(i.utilization(100), 0.0); // degenerate window guarded
@@ -234,5 +265,47 @@ mod tests {
         let i = inst();
         assert_eq!(i.utilization(1000), 0.0);
         assert!(!i.is_idle());
+        assert!(!i.has_free_slot());
+    }
+
+    #[test]
+    fn multi_cu_instance_runs_concurrent_chunks() {
+        let mut i = Instance::new(7, 4, 16, 0);
+        i.boot_complete(90);
+        assert!(i.is_idle() && i.has_free_slot());
+        for c in 0..16 {
+            assert!(i.has_free_slot(), "slot {c} should be free");
+            i.begin_chunk(c);
+        }
+        assert!(!i.has_free_slot(), "all 16 slots occupied");
+        assert!(!i.is_idle());
+        // releasing one slot reopens capacity but the instance stays busy
+        assert!(!i.finish_chunk(3, 500, 100));
+        assert!(i.has_free_slot());
+        assert!(!i.is_idle());
+        assert_eq!(i.chunks.len(), 15);
+    }
+
+    #[test]
+    fn draining_multi_cu_instance_dies_with_last_chunk() {
+        let mut i = Instance::new(7, 2, 2, 0);
+        i.boot_complete(90);
+        i.begin_chunk(1);
+        i.begin_chunk(2);
+        i.terminate(100);
+        assert_eq!(i.state, InstanceState::Draining);
+        assert!(!i.finish_chunk(1, 200, 50), "first completion keeps draining");
+        assert!(i.finish_chunk(2, 300, 60), "last completion terminates");
+        assert_eq!(i.terminated_at, Some(300));
+    }
+
+    #[test]
+    fn utilization_is_normalized_by_cus() {
+        let mut i = Instance::new(9, 3, 8, 0);
+        i.boot_complete(0);
+        i.begin_chunk(1);
+        // one core busy for the full 400 s window on an 8-CU instance
+        i.finish_chunk(1, 400, 400);
+        assert!((i.utilization(400) - 1.0 / 8.0).abs() < 1e-9);
     }
 }

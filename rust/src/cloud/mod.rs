@@ -5,12 +5,14 @@
 //! rationale (paper ran on live AWS; repro band 0 ⇒ simulate).
 
 pub mod backend;
+pub mod fleet;
 pub mod instance;
 pub mod lambda;
 pub mod market;
 pub mod provider;
 
 pub use backend::{BackendKind, CloudBackend, LambdaBackend, MERGE_CHUNK};
+pub use fleet::{FleetSpec, PoolSpec};
 pub use instance::{Instance, InstanceState};
 pub use market::{instance_type, InstanceType, Market, CATALOG};
 pub use provider::{FleetView, Provider};

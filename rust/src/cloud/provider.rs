@@ -5,15 +5,27 @@
 //! The provider owns all instances and the market; the coordinator only
 //! talks to this API, so swapping in a real cloud backend would touch
 //! nothing above this layer.
+//!
+//! Since the heterogeneous-fleet refactor the provider is organized as
+//! **per-type pools** ([`crate::cloud::FleetSpec`]): each pool owns one
+//! Table V catalogue type, the market's per-type price trace, and an
+//! optional spot bid. Requests are placed *by pool*; a spot request
+//! whose pool price exceeds its bid is left **unfulfilled** (real EC2
+//! keeps it pending — the old simulator fulfilled every request at
+//! market price, producing the bid-chasing churn documented in earlier
+//! revisions). The degenerate single-pool fleet (bid-less m3.medium)
+//! reproduces the pre-fleet provider bit for bit.
 
 use std::collections::BTreeMap;
 
+use crate::cloud::fleet::{FleetSpec, PoolSpec};
 use crate::cloud::instance::{Instance, InstanceState};
-use crate::cloud::market::Market;
+use crate::cloud::market::{Market, CATALOG};
 use crate::config::MarketCfg;
 use crate::sim::SimTime;
 
-/// Summary of fleet state, as `describeInstances()` would return.
+/// Summary of fleet state, as `describeInstances()` would return — used
+/// both for the aggregate fleet and for one pool's slice of it.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct FleetView {
     pub booting: usize,
@@ -35,10 +47,13 @@ pub struct FleetView {
 pub struct Provider {
     market: Market,
     cfg: MarketCfg,
-    /// `Some(rate)` = flat hourly pricing (on-demand); `None` = spot
-    /// market pricing. Everything else (boot delay, hourly increments,
-    /// instance lifecycle) is shared between the two modes.
+    /// `Some(rate)` = flat hourly pricing (on-demand) for catalogue type
+    /// 0, with larger types at their Table V on-demand rate; `None` =
+    /// spot market pricing. Everything else (boot delay, hourly
+    /// increments, instance lifecycle) is shared between the two modes.
     flat_rate: Option<f64>,
+    /// Per-type pools (distinct catalogue types; see `FleetSpec`).
+    pools: Vec<PoolSpec>,
     instances: BTreeMap<u64, Instance>,
     next_id: u64,
     /// Cumulative $ billed across all instances.
@@ -49,10 +64,23 @@ pub struct Provider {
 
 impl Provider {
     pub fn new(cfg: MarketCfg, seed: u64, horizon_hours: usize) -> Self {
+        Provider::with_fleet(cfg, seed, horizon_hours, &FleetSpec::default())
+    }
+
+    /// On-demand variant: identical lifecycle and hourly billing, but at
+    /// the flat Table V on-demand rate and never subject to reclamation.
+    pub fn new_on_demand(cfg: MarketCfg, seed: u64, horizon_hours: usize) -> Self {
+        Provider::with_fleet_on_demand(cfg, seed, horizon_hours, &FleetSpec::default())
+    }
+
+    /// Spot provider over an explicit per-type pool set.
+    pub fn with_fleet(cfg: MarketCfg, seed: u64, horizon_hours: usize, fleet: &FleetSpec) -> Self {
+        fleet.validate().expect("invalid fleet spec");
         Provider {
             market: Market::new(cfg.clone(), seed, horizon_hours),
             cfg,
             flat_rate: None,
+            pools: fleet.pools.clone(),
             instances: BTreeMap::new(),
             next_id: 0,
             total_cost: 0.0,
@@ -60,11 +88,16 @@ impl Provider {
         }
     }
 
-    /// On-demand variant: identical lifecycle and hourly billing, but at
-    /// the flat Table V on-demand rate and never subject to reclamation.
-    pub fn new_on_demand(cfg: MarketCfg, seed: u64, horizon_hours: usize) -> Self {
+    /// On-demand provider over an explicit per-type pool set (bids are
+    /// meaningless at a flat rate and ignored).
+    pub fn with_fleet_on_demand(
+        cfg: MarketCfg,
+        seed: u64,
+        horizon_hours: usize,
+        fleet: &FleetSpec,
+    ) -> Self {
         let rate = cfg.on_demand_price;
-        Provider { flat_rate: Some(rate), ..Provider::new(cfg, seed, horizon_hours) }
+        Provider { flat_rate: Some(rate), ..Provider::with_fleet(cfg, seed, horizon_hours, fleet) }
     }
 
     pub fn market(&self) -> &Market {
@@ -73,17 +106,14 @@ impl Provider {
 
     /// $/hr for `type_idx` at `t` under this provider's pricing mode.
     fn price_at(&self, type_idx: usize, t: SimTime) -> f64 {
-        match self.flat_rate {
-            Some(rate) => rate,
-            None => self.market.spot_price(type_idx, t),
-        }
+        type_price(self.flat_rate, &self.market, type_idx, t)
     }
 
     /// requestSpotInstances(): place a spot request for one instance of
     /// catalogue type `type_idx`. Returns (id, ready_at) — the caller
     /// schedules an `InstanceReady` event at `ready_at`.
     pub fn request_spot_instance(&mut self, type_idx: usize, now: SimTime) -> (u64, SimTime) {
-        let cus = crate::cloud::market::CATALOG[type_idx].cus;
+        let cus = CATALOG[type_idx].cus;
         self.next_id += 1;
         let id = self.next_id;
         self.instances.insert(id, Instance::new(id, type_idx, cus, now));
@@ -139,14 +169,7 @@ impl Provider {
             if inst.state == InstanceState::Booting || inst.state == InstanceState::Terminated {
                 continue;
             }
-            newly += inst.bill_through(
-                now,
-                |t| match flat {
-                    Some(rate) => rate,
-                    None => market.spot_price(type_idx, t),
-                },
-                increment,
-            );
+            newly += inst.bill_through(now, |t| type_price(flat, market, type_idx, t), increment);
         }
         if newly > 0.0 {
             self.total_cost += newly;
@@ -206,9 +229,23 @@ impl Provider {
     }
 }
 
+/// $/hr for `type_idx` at `t`. Flat mode (`flat = Some(rate)`) charges
+/// the configurable rate for the base type and the Table V on-demand
+/// rate for larger ones; spot mode reads the per-type market trace.
+/// Free function (not a method) so `Provider::bill_through` can price
+/// while an instance is mutably borrowed.
+fn type_price(flat: Option<f64>, market: &Market, type_idx: usize, t: SimTime) -> f64 {
+    match flat {
+        Some(rate) if type_idx == 0 => rate,
+        Some(_) => CATALOG[type_idx].on_demand,
+        None => market.spot_price(type_idx, t),
+    }
+}
+
 /// The spot/on-demand [`crate::cloud::CloudBackend`]: platform-facing
-/// surface over the inherent `Provider` API. Single-CU m3.medium units
-/// (catalogue type 0), exactly what the pre-refactor loop requested.
+/// surface over the inherent `Provider` API, one pool per fleet entry.
+/// The default fleet is a single bid-less m3.medium pool — exactly what
+/// the pre-fleet loop requested.
 impl crate::cloud::CloudBackend for Provider {
     fn name(&self) -> &'static str {
         if self.flat_rate.is_some() {
@@ -223,8 +260,47 @@ impl crate::cloud::CloudBackend for Provider {
         self.flat_rate.is_none()
     }
 
-    fn request_instance(&mut self, now: SimTime) -> (u64, SimTime) {
-        self.request_spot_instance(0, now)
+    fn pool_count(&self) -> usize {
+        self.pools.len()
+    }
+
+    fn pool_type_idx(&self, pool: usize) -> usize {
+        self.pools[pool].type_idx
+    }
+
+    fn pool_of_type(&self, type_idx: usize) -> Option<usize> {
+        self.pools.iter().position(|p| p.type_idx == type_idx)
+    }
+
+    fn pool_bid(&self, pool: usize) -> Option<f64> {
+        self.pools[pool].bid
+    }
+
+    fn pool_unit_price(&self, pool: usize, now: SimTime) -> f64 {
+        self.price_at(self.pools[pool].type_idx, now)
+    }
+
+    fn describe_pool(&self, pool: usize, now: SimTime) -> FleetView {
+        let ty = self.pools[pool].type_idx;
+        let mut v = FleetView::default();
+        for inst in self.instances.values().filter(|i| i.type_idx == ty) {
+            crate::cloud::backend::fleet_view_add(&mut v, inst, now);
+        }
+        v
+    }
+
+    fn request_instance_in(&mut self, pool: usize, now: SimTime) -> Option<(u64, SimTime)> {
+        let spec = &self.pools[pool];
+        if self.flat_rate.is_none() {
+            if let Some(bid) = spec.bid {
+                if self.market.spot_price(spec.type_idx, now) > bid {
+                    // real-EC2 semantics: the request stays pending while
+                    // the market is above the bid — nothing is booked
+                    return None;
+                }
+            }
+        }
+        Some(self.request_spot_instance(spec.type_idx, now))
     }
 
     fn instance_ready(&mut self, id: u64, now: SimTime) {
@@ -257,8 +333,8 @@ impl crate::cloud::CloudBackend for Provider {
         }
     }
 
-    fn first_idle(&self) -> Option<u64> {
-        crate::cloud::backend::fleet_first_idle(&self.instances)
+    fn first_free_slot(&self) -> Option<u64> {
+        crate::cloud::backend::fleet_first_free(&self.instances)
     }
 
     fn idle_instances_by_remaining(&self, now: SimTime) -> Vec<u64> {
@@ -278,16 +354,23 @@ impl crate::cloud::CloudBackend for Provider {
     }
 
     fn unit_price(&self, now: SimTime) -> f64 {
-        self.price_at(0, now)
+        self.price_at(self.pools[0].type_idx, now)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cloud::CloudBackend;
 
     fn provider() -> Provider {
         Provider::new(MarketCfg::default(), 1, 24)
+    }
+
+    fn mixed() -> Provider {
+        // bid-less pools: fulfilment never depends on the seeded trace
+        let fleet = FleetSpec::parse("m3.medium,m4.4xlarge").unwrap();
+        Provider::with_fleet(MarketCfg::default(), 1, 24, &fleet)
     }
 
     #[test]
@@ -361,7 +444,7 @@ mod tests {
         let mut p = provider();
         let (id, ready) = p.request_spot_instance(0, 0);
         p.instance_ready(id, ready);
-        p.instance_mut(id).unwrap().current_chunk = Some(1);
+        p.instance_mut(id).unwrap().begin_chunk(1);
         p.terminate_instance(id, ready + 10);
         let v = p.describe(ready + 10);
         assert_eq!(v.draining, 1);
@@ -372,5 +455,64 @@ mod tests {
     fn mean_utilization_empty_fleet_is_zero() {
         let p = provider();
         assert_eq!(p.mean_utilization(100), 0.0);
+    }
+
+    #[test]
+    fn pools_describe_their_own_types_only() {
+        let mut p = mixed();
+        let (small, rs) = p.request_instance_in(0, 0).unwrap();
+        p.instance_ready(small, rs);
+        let (big, rb) = p.request_instance_in(1, 0).unwrap();
+        p.instance_ready(big, rb);
+
+        let all = p.describe(rb);
+        assert_eq!(all.running, 2);
+        assert_eq!(all.active_cus, 17.0, "1 + 16 CUs in aggregate");
+        let v0 = p.describe_pool(0, rb);
+        let v1 = p.describe_pool(1, rb);
+        assert_eq!((v0.running, v0.active_cus), (1, 1.0));
+        assert_eq!((v1.running, v1.active_cus), (1, 16.0));
+        assert_eq!(p.pool_of_type(4), Some(1));
+        assert_eq!(p.pool_of_type(2), None);
+        assert_eq!(p.pool_cus(1), 16);
+    }
+
+    #[test]
+    fn above_bid_spot_requests_stay_unfulfilled() {
+        let mcfg = MarketCfg::default();
+        // bid below the simulated price floor (0.5 x base): never fulfils
+        let fleet = FleetSpec::parse("m3.medium:bid=0.001").unwrap();
+        let mut p = Provider::with_fleet(mcfg.clone(), 1, 24, &fleet);
+        assert!(p.request_instance_in(0, 0).is_none());
+        assert_eq!(p.describe(0).booting, 0, "an unfulfilled request books nothing");
+        assert_eq!(p.total_cost(), 0.0);
+        // bid above the hard price cap (on-demand x 1.2): always fulfils
+        let fleet = FleetSpec::parse("m3.medium:bid=0.1").unwrap();
+        let mut p = Provider::with_fleet(mcfg.clone(), 1, 24, &fleet);
+        assert!(p.request_instance_in(0, 0).is_some());
+        // on-demand ignores bids entirely (flat rate, no spot market)
+        let fleet = FleetSpec::parse("m3.medium:bid=0.001").unwrap();
+        let mut p = Provider::with_fleet_on_demand(mcfg, 1, 24, &fleet);
+        assert!(p.request_instance_in(0, 0).is_some());
+    }
+
+    #[test]
+    fn flat_mode_prices_large_types_at_catalogue_rate() {
+        let fleet = FleetSpec::parse("m3.medium,m4.4xlarge").unwrap();
+        let mut p = Provider::with_fleet_on_demand(MarketCfg::default(), 1, 24, &fleet);
+        assert_eq!(p.pool_unit_price(0, 0), MarketCfg::default().on_demand_price);
+        assert_eq!(p.pool_unit_price(1, 0), CATALOG[4].on_demand);
+        let (big, rb) = p.request_instance_in(1, 0).unwrap();
+        p.instance_ready(big, rb);
+        assert!((p.total_cost() - CATALOG[4].on_demand).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pool_prices_follow_their_own_traces() {
+        let p = mixed();
+        assert_eq!(p.pool_unit_price(0, 4000), p.market().spot_price(0, 4000));
+        assert_eq!(p.pool_unit_price(1, 4000), p.market().spot_price(4, 4000));
+        // the aggregate unit price is pool 0's (the controller's view)
+        assert_eq!(p.unit_price(4000), p.pool_unit_price(0, 4000));
     }
 }

@@ -1,0 +1,183 @@
+//! Heterogeneous-fleet sweep: homogeneous per-type fleets vs mixed
+//! fleets, on cost and deadline violations.
+//!
+//! Not a paper figure — an extension experiment over the fleet layer:
+//! Li et al. (2018) show transcoding cost is dominated by the instance-
+//! type mix, and Soltanian et al. (ADS, 2017) scale mixed fleets; the
+//! paper's own Table V catalogue spans 1–40 CUs with price volatility
+//! growing in CU count (Appendix A). The sweep runs the same workload
+//! suite on
+//!
+//! * one **homogeneous** fleet per catalogue type (each scheduled by the
+//!   same AIMD controller, capacity-aware dispatch filling each
+//!   instance's CU slots), and
+//! * a **mixed** fleet of all those types (greedy cheapest-$/CU fill at
+//!   the current spot prices), plus a **mixed+bids** variant where every
+//!   pool carries a bid slightly above its Table V base price and the
+//!   per-pool market fault model revokes whichever pool spikes
+//!   (partial revocation; other pools absorb the requeued work).
+//!
+//! Reported per cell: total cost, $/task, max concurrent instances, TTC
+//! compliance, deadline violations, reclamations (by pool via the run
+//! summary), requeued tasks and unfulfilled (above-bid) requests.
+
+use crate::cloud::{FleetSpec, CATALOG};
+use crate::config::Config;
+use crate::experiments::parallel::{default_threads, run_specs, RunSpec};
+use crate::platform::{ArrivalProcess, FaultSpec, ScenarioBuilder};
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use crate::workload::{App, WorkloadSpec};
+
+/// Catalogue types swept homogeneously (all of Table V).
+const TYPES: &[usize] = &[0, 1, 2, 3, 4, 5];
+
+/// Bid margin over the Table V base spot price for the mixed+bids cell:
+/// low enough that volatile large types cross it, high enough that the
+/// fleet can fulfil requests most of the time.
+const BID_MARGIN: f64 = 1.1;
+
+fn mixed_fleet(bids: bool) -> FleetSpec {
+    FleetSpec {
+        pools: TYPES
+            .iter()
+            .map(|&t| {
+                let bid = CATALOG[t].spot_base * BID_MARGIN;
+                crate::cloud::PoolSpec { type_idx: t, bid: bids.then_some(bid) }
+            })
+            .collect(),
+    }
+}
+
+/// The sweep grid over a generated suite (`n_wl` workloads of `tasks`
+/// tasks each).
+pub fn grid(cfg: &Config, n_wl: usize, tasks: usize, horizon_s: u64) -> Vec<RunSpec> {
+    let rng = Rng::new(cfg.seed);
+    let suite: Vec<WorkloadSpec> = (0..n_wl)
+        .map(|i| WorkloadSpec::generate(i, App::FaceDetection, tasks, None, &rng))
+        .collect();
+    let cell = |fleet: FleetSpec, fault: FaultSpec| {
+        ScenarioBuilder::new(cfg.clone())
+            .workloads(suite.clone())
+            .fixed_ttc(Some(3600))
+            .arrivals(ArrivalProcess::FixedInterval { interval_s: 300 })
+            .horizon(horizon_s)
+            .fleet(fleet)
+            .fault(fault)
+            .record_traces(false)
+            .build()
+    };
+    let mut specs = vec![];
+    for &t in TYPES {
+        specs.push(RunSpec::new(
+            format!("fleet/homogeneous/{}", CATALOG[t].name),
+            cell(FleetSpec::homogeneous(t, None), FaultSpec::None),
+        ));
+    }
+    specs.push(RunSpec::new("fleet/mixed", cell(mixed_fleet(false), FaultSpec::None)));
+    specs.push(RunSpec::new(
+        "fleet/mixed+bids",
+        cell(mixed_fleet(true), FaultSpec::PoolReclamation),
+    ));
+    specs
+}
+
+pub fn run(cfg: &Config) -> anyhow::Result<String> {
+    run_scaled(cfg, default_threads(), 6, 100, 12 * 3600)
+}
+
+/// Parameterized so tests can run a scaled-down version.
+pub fn run_scaled(
+    cfg: &Config,
+    threads: usize,
+    n_wl: usize,
+    tasks: usize,
+    horizon_s: u64,
+) -> anyhow::Result<String> {
+    let specs = grid(cfg, n_wl, tasks, horizon_s);
+    let results = run_specs(&specs, threads)?;
+    let total_tasks = (n_wl * tasks) as f64;
+    let mut t = Table::new(vec![
+        "fleet",
+        "cost ($)",
+        "$/task",
+        "max inst",
+        "TTC (%)",
+        "violations",
+        "reclaims",
+        "requeued",
+        "unfulfilled",
+    ]);
+    let mut csv = String::from(
+        "fleet,cost,cost_per_task,max_instances,ttc_pct,violations,reclamations,requeued,unfulfilled\n",
+    );
+    for (spec, m) in specs.iter().zip(&results) {
+        let violations = m.outcomes.iter().filter(|o| !matches!(o.met_ttc(), Some(true))).count();
+        let row = [
+            spec.label.clone(),
+            format!("{:.3}", m.total_cost),
+            format!("{:.5}", m.total_cost / total_tasks),
+            format!("{}", m.max_instances),
+            format!("{:.0}", 100.0 * m.ttc_compliance()),
+            format!("{violations}"),
+            format!("{}", m.reclamations),
+            format!("{}", m.requeued_tasks),
+            format!("{}", m.unfulfilled_requests),
+        ];
+        csv.push_str(&row.join(","));
+        csv.push('\n');
+        t.row(row.to_vec());
+    }
+    std::fs::create_dir_all(super::OUT_DIR)?;
+    std::fs::write(format!("{}/heterogeneous.csv", super::OUT_DIR), &csv)?;
+    let mixed = &results[TYPES.len()];
+    let cheapest_homog = results[..TYPES.len()]
+        .iter()
+        .map(|m| m.total_cost)
+        .fold(f64::INFINITY, f64::min);
+    let summary = format!(
+        "mixed fleet ${:.3} vs cheapest homogeneous ${:.3} ({} cells; CSV in {}/heterogeneous.csv)\n",
+        mixed.total_cost,
+        cheapest_homog,
+        specs.len(),
+        super::OUT_DIR,
+    );
+    let out = format!("{}{summary}", t.render());
+    println!("{out}");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaled_sweep_covers_homogeneous_and_mixed_cells() {
+        let mut cfg = Config::paper_defaults();
+        cfg.use_xla = false;
+        cfg.control.n_min = 4.0;
+        let out = run_scaled(&cfg, 2, 2, 20, 4 * 3600).unwrap();
+        assert!(out.contains("fleet/homogeneous/m3.medium"));
+        assert!(out.contains("fleet/homogeneous/m4.10xlarge"));
+        assert!(out.contains("fleet/mixed"));
+        assert!(out.contains("fleet/mixed+bids"));
+    }
+
+    #[test]
+    fn grid_cells_are_well_formed() {
+        let cfg = Config::paper_defaults();
+        let g = grid(&cfg, 3, 10, 3600);
+        assert_eq!(g.len(), TYPES.len() + 2);
+        assert!(g.iter().all(|s| s.n_tasks() == 30));
+        assert!(g.iter().all(|s| !s.scenario.record_traces));
+        // every homogeneous cell carries exactly one pool; the mixed
+        // cells carry the full catalogue
+        for s in &g[..TYPES.len()] {
+            assert_eq!(s.scenario.fleet.pools.len(), 1);
+        }
+        assert_eq!(g[TYPES.len()].scenario.fleet.pools.len(), TYPES.len());
+        let bids = &g[TYPES.len() + 1].scenario.fleet;
+        assert!(bids.pools.iter().all(|p| p.bid.is_some()));
+        assert_eq!(g[TYPES.len() + 1].scenario.fault, FaultSpec::PoolReclamation);
+    }
+}

@@ -18,6 +18,7 @@ pub mod bench_report;
 pub mod cost;
 pub mod estimators;
 pub mod fig5;
+pub mod heterogeneous;
 pub mod lambda;
 pub mod market;
 pub mod parallel;
@@ -28,10 +29,10 @@ use crate::config::Config;
 /// Where experiment CSVs land.
 pub const OUT_DIR: &str = "out";
 
-/// All experiment ids, in paper order.
+/// All experiment ids, in paper order (extensions last).
 pub const ALL: &[&str] = &[
     "fig5", "fig6", "fig7", "table2", "fig8", "fig9", "table3", "table4", "fig10", "fig11",
-    "fig12", "table5", "ablation",
+    "fig12", "table5", "ablation", "heterogeneous",
 ];
 
 /// Run one experiment by id.
@@ -50,6 +51,7 @@ pub fn run(id: &str, cfg: &Config) -> anyhow::Result<String> {
         "fig12" => market::run_fig12(cfg),
         "table5" => market::run_table5(cfg),
         "ablation" => ablation::run(cfg),
+        "heterogeneous" => heterogeneous::run(cfg),
         other => anyhow::bail!("unknown experiment id '{other}' (use one of {ALL:?})"),
     }
 }

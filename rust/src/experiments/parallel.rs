@@ -201,7 +201,8 @@ pub fn run_sweep(name: &str, cfg: &Config, threads: usize) -> anyhow::Result<Str
         "cost" => cost_grid(cfg),
         "estimators" => estimator_grid(cfg),
         "seeds" => seed_grid(cfg, 8),
-        other => anyhow::bail!("unknown sweep '{other}' (use cost | estimators | seeds)"),
+        "fleet" => super::heterogeneous::grid(cfg, 6, 100, 12 * 3600),
+        other => anyhow::bail!("unknown sweep '{other}' (use cost | estimators | seeds | fleet)"),
     };
     let t0 = std::time::Instant::now();
     let results = run_specs(&specs, threads)?;

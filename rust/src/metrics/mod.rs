@@ -104,6 +104,15 @@ pub struct RunMetrics {
     pub tick_wall_ns: u128,
     /// Instances revoked by the fault model (spot reclamation).
     pub reclamations: u64,
+    /// Revocations per fleet pool (indexed like the scenario's
+    /// `FleetSpec::pools`; empty before a platform run sizes it). A
+    /// partial revocation shows up as a single hot entry while the
+    /// other pools stay at zero.
+    pub reclamations_by_pool: Vec<u64>,
+    /// Spot requests left pending because the pool's market price was
+    /// above its bid at request time (real-EC2 unfulfilled semantics);
+    /// the scaling loop retries at later instants.
+    pub unfulfilled_requests: u64,
     /// In-flight tasks re-queued through `TaskDb::requeue` after their
     /// instance was reclaimed (each later completes exactly once; the
     /// DB state machine panics on double completion).
@@ -128,6 +137,8 @@ impl PartialEq for RunMetrics {
             && self.finished_at == other.finished_at
             && self.ticks == other.ticks
             && self.reclamations == other.reclamations
+            && self.reclamations_by_pool == other.reclamations_by_pool
+            && self.unfulfilled_requests == other.unfulfilled_requests
             && self.requeued_tasks == other.requeued_tasks
             && self.tasks_completed == other.tasks_completed
     }

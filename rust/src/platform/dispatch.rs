@@ -1,10 +1,18 @@
-//! Chunk dispatch: map idle instances to work.
+//! Chunk dispatch: map free compute-unit slots to work.
+//!
+//! Capacity-aware: an instance of a `cus`-CU type absorbs up to `cus`
+//! concurrent chunks (one per compute unit) — a 40-CU m4.10xlarge takes
+//! 40 chunks, a 1-CU m3.medium one. Each pass of the assignment loop
+//! hands every instance with a free slot at most one chunk, then
+//! rescans, so a big instance fills over successive passes while chunks
+//! remain; with a homogeneous 1-CU fleet this is byte-for-byte the old
+//! one-chunk-per-idle-instance loop.
 //!
 //! Footprint chunks first (they unblock TTC confirmation), then
 //! tracker-allocated regular chunks (deficit-round-robin over the
 //! proportional-fair service rates; FIFO for Amazon AS), then pending
-//! merge steps. The idle-scan buffer is platform-owned and reused so the
-//! steady-state pass is allocation-free.
+//! merge steps. The free-slot scan buffer is platform-owned and reused
+//! so the steady-state pass is allocation-free.
 
 use crate::coordinator::chunk_size;
 use crate::db::TaskStatus;
@@ -20,15 +28,15 @@ impl Platform {
         self.tracker.set_pending(w, runnable);
     }
 
-    /// Dispatch work to every idle instance: footprint tasks first
-    /// (single-task chunks), then tracker-allocated chunks.
+    /// Dispatch work to every free compute-unit slot: footprint tasks
+    /// first (small chunks), then tracker-allocated chunks.
     pub(crate) fn assign_idle(&mut self) {
         let now = self.sim.now();
         let mut idle = std::mem::take(&mut self.idle_buf);
         loop {
             idle.clear();
             self.backend.for_each_instance(&mut |i| {
-                if i.is_idle() {
+                if i.has_free_slot() {
                     idle.push(i.id);
                 }
             });
@@ -150,7 +158,7 @@ impl Platform {
         let chunk = Chunk { id, workload: w, instance: inst_id, tasks, footprint, started_at: now };
         self.chunks.insert(id, chunk);
         if let Some(inst) = self.backend.instance_mut(inst_id) {
-            inst.current_chunk = Some(id);
+            inst.begin_chunk(id);
         }
         self.sim.schedule(
             (result.busy_s * self.exec_mult).ceil().max(1.0) as SimTime,
@@ -169,7 +177,7 @@ impl Platform {
             if !needs_merge {
                 continue;
             }
-            let idle = self.backend.first_idle();
+            let idle = self.backend.first_free_slot();
             if let Some(inst_id) = idle {
                 let merge_s = self.merge_duration(w);
                 self.metrics.total_busy_cus += merge_s;

@@ -7,14 +7,18 @@
 //! immediately.
 //!
 //! Reclamation semantics: a revoked instance dies *now* (no drain). Its
-//! in-flight chunk — the engine cannot cancel the already-scheduled
-//! `ChunkDone` — is removed from the live-chunk map so the stale event
-//! is ignored, and every claimed task re-enters Pending at the tail via
+//! in-flight chunks — a multi-CU instance can carry one per compute
+//! unit, and the engine cannot cancel the already-scheduled `ChunkDone`
+//! events — are removed from the live-chunk map so the stale events are
+//! ignored, and every claimed task re-enters Pending at the tail via
 //! `TaskDb::requeue` (FIFO re-entry, re-executed from scratch later; the
 //! DB state machine guarantees each task still completes exactly once).
 //! Footprint chunks return their task ids to the workload's footprint
 //! queue; a revoked merge bumps the workload's merge epoch so the stale
-//! `MergeDone` is discarded and the merge is re-dispatched.
+//! `MergeDone` is discarded and the merge is re-dispatched. Revocations
+//! are also tallied per pool (`RunMetrics::reclamations_by_pool`) so
+//! partial-revocation scenarios can verify that only the spiking pool
+//! was hit.
 
 use crate::cloud::MERGE_CHUNK;
 use crate::coordinator::footprint_count;
@@ -114,10 +118,10 @@ impl Platform {
                 self.finish_footprinting(w);
             }
         }
-        // instance becomes free (or dies if draining); usage-billed
-        // backends charge for the chunk here
+        // the chunk's slot frees (or the instance dies if draining and
+        // this was its last chunk); usage-billed backends charge here
         self.backend
-            .on_chunk_finished(instance, now, result.busy_s * mult, chunk.tasks.len());
+            .on_chunk_finished(instance, chunk_id, now, result.busy_s * mult, chunk.tasks.len());
         self.tracker.on_release(w);
         self.update_pending_flag(w);
         self.check_workload_done(w);
@@ -181,21 +185,32 @@ impl Platform {
         }
     }
 
-    /// Revoke one instance: tear down its in-flight work, requeue the
+    /// Revoke one instance: tear down its in-flight work — *every*
+    /// concurrent chunk a multi-CU instance carries — requeue the
     /// claimed tasks (FIFO tail re-entry), kill the instance. The
     /// already-billed increment is sunk (no partial-hour refund; keeps
     /// the cost curve monotone).
     pub(crate) fn reclaim_instance(&mut self, id: u64, now: SimTime) {
-        let in_flight = match self.backend.instance(id) {
-            Some(i) if i.state != crate::cloud::InstanceState::Terminated => i.current_chunk,
+        let (in_flight, type_idx) = match self.backend.instance(id) {
+            Some(i) if i.state != crate::cloud::InstanceState::Terminated => {
+                (i.chunks.clone(), i.type_idx)
+            }
             _ => return,
         };
         self.metrics.reclamations += 1;
-        match in_flight {
-            Some(chunk_id) if chunk_id == MERGE_CHUNK => {
-                // a merge was running here: forget it, bump the epoch so
-                // the stale MergeDone is ignored, and let dispatch_merges
-                // re-run it on a surviving/future instance
+        if let Some(pool) = self.backend.pool_of_type(type_idx) {
+            if let Some(n) = self.metrics.reclamations_by_pool.get_mut(pool) {
+                *n += 1;
+            }
+        }
+        for chunk_id in in_flight {
+            if chunk_id == MERGE_CHUNK {
+                // a merge was running in this slot: forget it, bump the
+                // epoch so the stale MergeDone is ignored, and let
+                // dispatch_merges re-run it on a surviving/future
+                // instance. One MERGE_CHUNK entry per dispatched merge;
+                // resetting clears merge_instance, so repeated entries
+                // resolve to the next merging workload on this instance.
                 if let Some(w) =
                     (0..self.wl.len()).find(|&w| self.wl[w].merge_instance == Some(id))
                 {
@@ -208,25 +223,21 @@ impl Platform {
                     // dispatch; it will be re-added on re-dispatch
                     self.metrics.total_busy_cus -= merge_s;
                 }
-            }
-            Some(chunk_id) => {
-                if let Some(chunk) = self.chunks.remove(&chunk_id) {
-                    let w = chunk.workload;
-                    for &t in &chunk.tasks {
-                        self.db.requeue((w, t));
-                    }
-                    self.metrics.requeued_tasks += chunk.tasks.len() as u64;
-                    if chunk.footprint {
-                        let st = &mut self.wl[w];
-                        st.footprint_outstanding -= chunk.tasks.len();
-                        st.footprint_pending.extend(chunk.tasks.iter().copied());
-                    } else {
-                        self.tracker.on_release(w);
-                    }
-                    self.update_pending_flag(w);
+            } else if let Some(chunk) = self.chunks.remove(&chunk_id) {
+                let w = chunk.workload;
+                for &t in &chunk.tasks {
+                    self.db.requeue((w, t));
                 }
+                self.metrics.requeued_tasks += chunk.tasks.len() as u64;
+                if chunk.footprint {
+                    let st = &mut self.wl[w];
+                    st.footprint_outstanding -= chunk.tasks.len();
+                    st.footprint_pending.extend(chunk.tasks.iter().copied());
+                } else {
+                    self.tracker.on_release(w);
+                }
+                self.update_pending_flag(w);
             }
-            None => {}
         }
         self.backend.revoke_instance(id, now);
     }

@@ -3,11 +3,13 @@
 //! The platform polls its [`FaultModel`] at every monitoring instant;
 //! the model inspects the backend (prices, fleet) and emits
 //! [`CloudEvent`]s for the loop to absorb. The first fault family is
-//! **spot reclamation** (§IV's core risk): when the simulated market
-//! price crosses the scenario's bid, every active spot instance is
-//! revoked at once — exactly EC2's behaviour for a single-bid launch
-//! group. In-flight chunks are torn down and their tasks re-enter the
-//! task DB's Pending list at the tail through
+//! **spot reclamation** (§IV's core risk), evaluated **per pool**: when
+//! a pool's simulated market price crosses its bid, that pool's active
+//! instances are revoked — a price spike on m4.10xlarge revokes only
+//! the m4.10xlarge pool while smaller pools keep working (*partial*
+//! revocation). The degenerate single-pool fleet reproduces the old
+//! whole-fleet behaviour exactly. In-flight chunks are torn down and
+//! their tasks re-enter the task DB's Pending list at the tail through
 //! [`crate::db::TaskDb::requeue`] (the documented FIFO re-entry).
 //!
 //! Determinism: price traces are seeded and polling happens at
@@ -40,14 +42,26 @@ pub trait FaultModel: std::fmt::Debug {
 pub enum FaultSpec {
     /// No injected events (the pre-scenario behaviour).
     None,
-    /// Market-driven spot reclamation: whenever the backend's unit price
-    /// exceeds `bid` $/hr at a monitoring instant, the whole fleet is
-    /// revoked. Only applies to reclaimable (spot) backends.
-    SpotReclamation { bid: f64 },
-    /// Scripted reclamation: the whole fleet is revoked at each listed
-    /// instant (evaluated at the first monitoring tick at/after it).
-    /// Like [`FaultSpec::SpotReclamation`], only applies to reclaimable
+    /// Market-driven spot reclamation with a global fallback bid: each
+    /// pool is revoked whenever its price exceeds its effective bid —
+    /// the pool's own [`crate::cloud::PoolSpec::bid`] when set, else
+    /// `bid` quoted for the base type and scaled to the pool's type by
+    /// the catalogue base-price ratio
+    /// ([`crate::cloud::FleetSpec::with_default_bid`]). The same
+    /// effective bid gates request *fulfilment* on the backend, so
+    /// above-bid stretches leave replacement requests pending instead
+    /// of the old fulfil-then-revoke churn. Only applies to reclaimable
     /// (spot) backends.
+    SpotReclamation { bid: f64 },
+    /// Market-driven reclamation using **only** each pool's own bid:
+    /// pools without a bid are never revoked. The mixed-fleet partial-
+    /// revocation scenario (`--fleet m3.medium,m4.10xlarge:bid=0.6
+    /// --fault reclaim-pools`).
+    PoolReclamation,
+    /// Scripted reclamation: the whole fleet (every pool) is revoked at
+    /// each listed instant (evaluated at the first monitoring tick
+    /// at/after it). Like the market-driven variants, only applies to
+    /// reclaimable (spot) backends.
     ReclamationAt { times: Vec<SimTime> },
 }
 
@@ -56,7 +70,18 @@ impl FaultSpec {
         match self {
             FaultSpec::None => Box::new(NoFaults),
             FaultSpec::SpotReclamation { bid } => Box::new(SpotReclamation { bid: *bid }),
+            // per-pool bids only: the fallback can never be crossed
+            FaultSpec::PoolReclamation => Box::new(SpotReclamation { bid: f64::INFINITY }),
             FaultSpec::ReclamationAt { times } => Box::new(ReclamationAt::new(times.clone())),
+        }
+    }
+
+    /// The global fallback bid the scenario assembly copies onto
+    /// bid-less pools (request-fulfilment gating).
+    pub fn spot_bid(&self) -> Option<f64> {
+        match self {
+            FaultSpec::SpotReclamation { bid } => Some(*bid),
+            _ => None,
         }
     }
 
@@ -65,9 +90,21 @@ impl FaultSpec {
         match self {
             FaultSpec::None => "none".into(),
             FaultSpec::SpotReclamation { bid } => format!("reclaim:{bid}"),
+            // the CLI token, so printed scenario headers round-trip
+            // through parse_fault
+            FaultSpec::PoolReclamation => "reclaim-pools".into(),
             FaultSpec::ReclamationAt { times } => format!("reclaim-at:{times:?}"),
         }
     }
+}
+
+/// Collect the active instances of catalogue type `type_idx`.
+fn collect_active_of_type(backend: &dyn CloudBackend, type_idx: usize, out: &mut Vec<u64>) {
+    backend.for_each_instance(&mut |i| {
+        if i.state != InstanceState::Terminated && i.type_idx == type_idx {
+            out.push(i.id);
+        }
+    });
 }
 
 fn collect_active(backend: &dyn CloudBackend, out: &mut Vec<u64>) {
@@ -86,31 +123,34 @@ impl FaultModel for NoFaults {
     fn poll(&mut self, _backend: &dyn CloudBackend, _now: SimTime, _out: &mut Vec<CloudEvent>) {}
 }
 
-/// Market-driven spot reclamation (see [`FaultSpec::SpotReclamation`]).
-///
-/// Modeling note: the bid gates *revocation* only. The scaling policy's
-/// replacement requests are always fulfilled at the market price, so
-/// during a sustained above-bid stretch the controller re-buys capacity
-/// each interval and loses it again at the next poll — a bid-chasing
-/// controller paying churn cost, which is exactly the stress regime the
-/// reclamation experiments want. Real EC2 would instead leave below-bid
-/// requests unfulfilled; an unfulfillable-request mode is listed in
-/// ROADMAP's open items.
+/// Market-driven spot reclamation, per pool (see
+/// [`FaultSpec::SpotReclamation`] / [`FaultSpec::PoolReclamation`]): a
+/// pool whose price exceeds its effective bid — the pool's own bid,
+/// falling back to `bid` — is revoked in one event; other pools are
+/// untouched. With a single-pool fleet this degenerates to the old
+/// whole-fleet wipe.
 #[derive(Debug, Clone)]
 pub struct SpotReclamation {
-    /// The launch group's bid, $/hr.
+    /// Fallback bid for pools without their own, $/hr
+    /// (`f64::INFINITY` = bid-less pools are never revoked).
     pub bid: f64,
 }
 
 impl FaultModel for SpotReclamation {
     fn poll(&mut self, backend: &dyn CloudBackend, now: SimTime, out: &mut Vec<CloudEvent>) {
-        if !backend.reclaimable() || backend.unit_price(now) <= self.bid {
+        if !backend.reclaimable() {
             return;
         }
-        let mut ids = vec![];
-        collect_active(backend, &mut ids);
-        if !ids.is_empty() {
-            out.push(CloudEvent::Reclamation { instances: ids });
+        for pool in 0..backend.pool_count() {
+            let bid = backend.pool_bid(pool).unwrap_or(self.bid);
+            if backend.pool_unit_price(pool, now) <= bid {
+                continue;
+            }
+            let mut ids = vec![];
+            collect_active_of_type(backend, backend.pool_type_idx(pool), &mut ids);
+            if !ids.is_empty() {
+                out.push(CloudEvent::Reclamation { instances: ids });
+            }
         }
     }
 }
@@ -151,7 +191,7 @@ impl FaultModel for ReclamationAt {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cloud::Provider;
+    use crate::cloud::{FleetSpec, Provider};
     use crate::config::MarketCfg;
 
     fn fleet_of(n: usize) -> Provider {
@@ -198,6 +238,40 @@ mod tests {
     }
 
     #[test]
+    fn pool_bid_crossing_revokes_only_that_pool() {
+        // big pool's bid sits below the price floor (always crossed);
+        // the small pool's bid sits above the hard price cap of
+        // on-demand x 1.2 (never crossed)
+        let fleet = FleetSpec::parse("m3.medium:bid=0.1,m4.4xlarge:bid=0.001").unwrap();
+        let mut p = Provider::with_fleet(MarketCfg::default(), 11, 8, &fleet);
+        let (small, rs) = p.request_spot_instance(0, 0);
+        Provider::instance_ready(&mut p, small, rs);
+        let (big, rb) = p.request_spot_instance(4, 0);
+        Provider::instance_ready(&mut p, big, rb);
+
+        let mut out = vec![];
+        SpotReclamation { bid: f64::INFINITY }.poll(&p, 500, &mut out);
+        assert_eq!(out.len(), 1, "exactly one pool crosses its bid");
+        match &out[0] {
+            CloudEvent::Reclamation { instances } => {
+                assert_eq!(instances, &vec![big], "only the big pool is revoked");
+            }
+        }
+    }
+
+    #[test]
+    fn bidless_pools_are_never_revoked_under_pool_reclamation() {
+        let fleet = FleetSpec::parse("m3.medium,m3.xlarge").unwrap();
+        let mut p = Provider::with_fleet(MarketCfg::default(), 11, 8, &fleet);
+        let (a, ra) = p.request_spot_instance(0, 0);
+        Provider::instance_ready(&mut p, a, ra);
+        let mut m = FaultSpec::PoolReclamation.build();
+        let mut out = vec![];
+        m.poll(&p, 500, &mut out);
+        assert!(out.is_empty(), "no pool has a bid, nothing can cross it");
+    }
+
+    #[test]
     fn scripted_schedule_skips_non_reclaimable_backends() {
         let mut od = Provider::new_on_demand(MarketCfg::default(), 1, 8);
         let (id, ready) = CloudBackend::request_instance(&mut od, 0);
@@ -228,6 +302,10 @@ mod tests {
     fn fault_spec_builds_and_describes() {
         assert!(FaultSpec::None.describe().contains("none"));
         assert!(FaultSpec::SpotReclamation { bid: 0.01 }.describe().contains("0.01"));
+        assert_eq!(FaultSpec::PoolReclamation.describe(), "reclaim-pools");
+        assert_eq!(FaultSpec::SpotReclamation { bid: 0.01 }.spot_bid(), Some(0.01));
+        assert_eq!(FaultSpec::PoolReclamation.spot_bid(), None);
+        assert_eq!(FaultSpec::None.spot_bid(), None);
         let spec = FaultSpec::ReclamationAt { times: vec![5, 2] };
         assert!(spec.describe().contains("reclaim-at"));
         // building sorts the scripted schedule

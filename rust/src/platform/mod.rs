@@ -28,8 +28,11 @@
 //! * [`tick`] — the GCI monitoring tick (ME assembly, estimator bank,
 //!   convergence, TTC confirmation, policy evaluation);
 //! * [`dispatch`] — the tracker-driven chunk allocator (footprint chunks,
-//!   regular chunks, merge steps);
-//! * [`scaling`] — fleet adjustment toward the policy target.
+//!   regular chunks, merge steps), capacity-aware: each instance absorbs
+//!   one concurrent chunk per CU;
+//! * [`scaling`] — fleet adjustment toward the policy's CU target,
+//!   translated into a type mix over the scenario's per-type pools
+//!   ([`crate::cloud::FleetSpec`]) by a greedy cheapest-$/CU fill.
 //!
 //! Perf (§Perf): the monitoring tick is allocation-free in steady state.
 //! All per-tick working sets — the bank's input matrices, its outputs,
@@ -228,10 +231,12 @@ pub struct Platform {
     pub(crate) k_max: usize,
     pub(crate) scratch: TickScratch,
     pub(crate) outs: StepOutputs,
-    /// Reused idle-instance id buffer for `assign_idle`.
+    /// Reused free-slot instance id buffer for `assign_idle`.
     pub(crate) idle_buf: Vec<u64>,
-    /// Reused (id, remaining-billed) buffer for busy-drain scans.
-    pub(crate) busy_buf: Vec<(u64, SimTime)>,
+    /// Reused (id, remaining-billed, cus) buffer for busy-drain scans.
+    pub(crate) busy_buf: Vec<(u64, SimTime, u32)>,
+    /// Reused pool-candidate buffer for the up-scaling mix fill.
+    pub(crate) pool_buf: Vec<scaling::PoolFill>,
     pub(crate) metrics: RunMetrics,
     pub(crate) arrived: usize,
     pub(crate) all_done_at: Option<SimTime>,
@@ -257,6 +262,7 @@ impl Platform {
             horizon_s,
             arrivals,
             backend: backend_kind,
+            fleet,
             fault,
             record_traces,
         } = scn;
@@ -271,7 +277,13 @@ impl Platform {
             cfg.use_xla,
         );
         let horizon_h = (horizon_s / 3600 + 2) as usize;
-        let backend = backend_kind.build(&cfg, cfg.seed, horizon_h);
+        // a scenario-level SpotReclamation bid doubles as the fulfilment
+        // gate on every bid-less pool (a pool's own bid always wins; the
+        // fallback is quoted for the base type and scaled per type), so
+        // requests placed while the market is above the bid stay pending
+        // instead of fuelling the old fulfil-then-revoke churn
+        let fleet = fleet.with_default_bid(fault.spot_bid());
+        let backend = backend_kind.build(&cfg, cfg.seed, horizon_h, &fleet);
         let exec_mult = backend.execution_multiplier();
         let fault = fault.build();
         let storage = ObjectStore::new(cfg.storage.clone());
@@ -310,6 +322,10 @@ impl Platform {
             })
             .collect();
         let n_real = specs.len();
+        let metrics = RunMetrics {
+            reclamations_by_pool: vec![0; backend.pool_count()],
+            ..RunMetrics::default()
+        };
         Platform {
             cfg,
             policy_kind,
@@ -343,7 +359,8 @@ impl Platform {
             outs: StepOutputs::default(),
             idle_buf: vec![],
             busy_buf: vec![],
-            metrics: RunMetrics::default(),
+            pool_buf: vec![],
+            metrics,
             arrived: 0,
             all_done_at: None,
         }
@@ -361,11 +378,10 @@ impl Platform {
 
     /// Execute the experiment to completion; returns the metrics.
     pub fn run(mut self) -> Result<RunMetrics> {
-        // bootstrap fleet at N_min (AS starts from the same launch group)
-        let initial = self.cfg.control.n_min as usize;
-        for _ in 0..initial {
-            self.request_instance();
-        }
+        // bootstrap the fleet at N_min CUs through the same greedy type
+        // mix as up-scaling (AS starts from the same launch group); a
+        // single 1-CU pool degenerates to N_min requests
+        self.fill_cus(self.cfg.control.n_min as i64);
         // workload arrivals per the scenario's arrival process
         let times = self.arrivals.times(self.specs.len(), self.cfg.seed);
         for (w, &at) in times.iter().enumerate() {
@@ -438,7 +454,7 @@ pub fn run_experiment(cfg: Config, specs: Vec<WorkloadSpec>, opts: RunOpts) -> R
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cloud::BackendKind;
+    use crate::cloud::{BackendKind, FleetSpec, InstanceState};
     use crate::util::rng::Rng;
     use crate::workload::{App, Mode, WorkloadSpec};
 
@@ -597,6 +613,155 @@ mod tests {
             .run()
             .unwrap();
         assert_eq!(shim, built, "builder diverged from the RunOpts shim");
+    }
+
+    /// The heterogeneous-fleet parity guard: the explicit degenerate
+    /// single-pool fleet (one bid-less m3.medium pool) must be the
+    /// *same* experiment as the pre-fleet shim — bit-identical
+    /// `RunMetrics`. Together with `shim_and_builder_are_bit_identical`
+    /// this pins the pool-aware cloud layer to the pre-refactor output.
+    #[test]
+    fn single_pool_fleet_is_bit_identical_to_shim() {
+        let shim = run_experiment(small_cfg(), small_suite(2, 30), fast_opts()).unwrap();
+        let built = ScenarioBuilder::new(small_cfg())
+            .workloads(small_suite(2, 30))
+            .fixed_ttc(Some(3600))
+            .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+            .horizon(6 * 3600)
+            .fleet(FleetSpec::parse("m3.medium").unwrap())
+            .build()
+            .run()
+            .unwrap();
+        assert_eq!(shim, built, "explicit single-pool fleet diverged from the shim");
+    }
+
+    /// Regression for the old up-scaling 1-CU assumption: a CU deficit
+    /// was requested as that many *instances*, over-provisioning a
+    /// 16-CU-type fleet 16-fold. The mix fill requests whole CU blocks,
+    /// so a 100-CU cap (`n_max`) can never exceed a handful of 16-CU
+    /// instances.
+    #[test]
+    fn multi_cu_fleet_does_not_overshoot_cu_target() {
+        let m = ScenarioBuilder::new(small_cfg())
+            .workloads(small_suite(2, 60))
+            .fixed_ttc(Some(1800))
+            .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+            .horizon(6 * 3600)
+            .fleet(FleetSpec::parse("m4.4xlarge").unwrap())
+            .build()
+            .run()
+            .unwrap();
+        // ceil(100 / 16) = 7 concurrent instances (+ transient drain
+        // overlap); the pre-fix behaviour requested dozens
+        assert!(
+            m.max_instances <= 10,
+            "{} concurrent 16-CU instances for a 100-CU cap",
+            m.max_instances
+        );
+        assert!(m.outcomes.iter().all(|o| o.completed_at.is_some()));
+        assert_eq!(m.tasks_completed, 2 * 60);
+    }
+
+    // ----- §IV lazy-drain billing window ---------------------------------
+
+    fn drain_platform(policy: PolicyKind) -> Platform {
+        let scn = ScenarioBuilder::new(small_cfg())
+            .workloads(small_suite(1, 10))
+            .policy(policy)
+            .build();
+        Platform::from_scenario(scn)
+    }
+
+    /// Boot one idle instance and pin its remaining pre-billed time to
+    /// `rem` seconds (at sim time 0), then shrink the fleet to zero.
+    fn boot_idle_with_remaining(p: &mut Platform, rem: SimTime) -> u64 {
+        let (id, ready) = p.backend.request_instance_in(0, 0).unwrap();
+        p.backend.instance_ready(id, ready);
+        p.backend.instance_mut(id).unwrap().billed_until = rem;
+        id
+    }
+
+    /// §IV: under AIMD an idle instance whose pre-billed hour still has
+    /// more than the renewal window left is free capacity — down-scaling
+    /// keeps it; once the remainder falls inside the window it is
+    /// released before the next increment bills.
+    #[test]
+    fn aimd_lazy_drain_respects_the_billing_window() {
+        // window = max(3/2 * monitor_interval + 1, 120) = 120 s here
+        let mut p = drain_platform(PolicyKind::Aimd);
+        let kept = boot_idle_with_remaining(&mut p, 121);
+        p.adjust_fleet(0.0);
+        assert_eq!(
+            p.backend.instance(kept).unwrap().state,
+            InstanceState::Running,
+            "remaining time just above the window must be kept"
+        );
+        // the same instance one tick later: now inside the window
+        p.backend.instance_mut(kept).unwrap().billed_until = 120;
+        p.adjust_fleet(0.0);
+        assert_eq!(
+            p.backend.instance(kept).unwrap().state,
+            InstanceState::Terminated,
+            "remaining time at/below the window must terminate"
+        );
+    }
+
+    /// Baselines (`PolicyKind != Aimd`) set N_tot[t+1] directly and
+    /// terminate eagerly no matter how much pre-billed time remains.
+    #[test]
+    fn baseline_policies_terminate_eagerly_regardless_of_window() {
+        for policy in [PolicyKind::Reactive, PolicyKind::AmazonAs1] {
+            let mut p = drain_platform(policy);
+            let id = boot_idle_with_remaining(&mut p, 3600);
+            p.adjust_fleet(0.0);
+            assert_eq!(
+                p.backend.instance(id).unwrap().state,
+                InstanceState::Terminated,
+                "{policy:?} must not apply the AIMD lazy-drain window"
+            );
+        }
+    }
+
+    /// Real-EC2 unfulfilled-request semantics: a bid below the simulated
+    /// price floor leaves every spot request pending — the fleet never
+    /// grows, nothing is billed, nothing can be reclaimed (no more
+    /// fulfil-at-market-then-revoke churn).
+    #[test]
+    fn below_floor_bid_starves_the_fleet() {
+        let m = ScenarioBuilder::new(small_cfg())
+            .workloads(small_suite(1, 5))
+            .fixed_ttc(Some(1200))
+            .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+            .horizon(1800)
+            .fault(FaultSpec::SpotReclamation { bid: 0.001 })
+            .build()
+            .run()
+            .unwrap();
+        assert_eq!(m.max_instances, 0, "an above-bid request must stay pending");
+        assert_eq!(m.total_cost, 0.0);
+        assert!(m.unfulfilled_requests > 0);
+        assert_eq!(m.reclamations, 0, "nothing was ever fulfilled, nothing to revoke");
+        assert!(m.outcomes[0].completed_at.is_none());
+    }
+
+    /// ... and a bid above the m3.medium hard price cap (the market
+    /// simulator clamps at on-demand x 1.2 = $0.0804) fulfils
+    /// everything: the fault bid only bites when the market actually
+    /// crosses it.
+    #[test]
+    fn above_cap_bid_fulfils_every_request() {
+        let m = ScenarioBuilder::new(small_cfg())
+            .workloads(small_suite(1, 20))
+            .fixed_ttc(Some(3600))
+            .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+            .horizon(4 * 3600)
+            .fault(FaultSpec::SpotReclamation { bid: 0.1 })
+            .build()
+            .run()
+            .unwrap();
+        assert_eq!(m.unfulfilled_requests, 0);
+        assert_eq!(m.reclamations, 0);
+        assert!(m.outcomes[0].completed_at.is_some());
     }
 
     /// Gating trace recording must not perturb the control loop: same

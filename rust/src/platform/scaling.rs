@@ -1,29 +1,127 @@
 //! Fleet adjustment toward the scaling-policy target.
 //!
+//! Up-scaling translates the policy's **CU** target into a *type mix*
+//! over the scenario's per-type pools: a greedy cheapest-$/CU fill at
+//! the current spot prices — among pools whose instance still fits in
+//! the remaining deficit, the cheapest per CU wins; when nothing fits
+//! (deficit smaller than every type) the smallest type overshoots
+//! least. A spot request whose pool price sits above its bid stays
+//! *unfulfilled* (real-EC2 semantics): the pool is skipped this round
+//! and the deficit is retried at later instants. With the degenerate
+//! single 1-CU pool this is exactly the old "request `target −
+//! committed` instances" loop — and for multi-CU types it fixes the old
+//! 1-CU assumption that over-provisioned a 16-CU fleet 16-fold.
+//!
 //! Down-scaling is *lazy* for the estimation-based methods: an excess
 //! instance is only terminated when its pre-billed hour is nearly
 //! exhausted (§IV: "the prudent action is always to terminate spot
 //! instances with the smallest remaining time before renewal" — an
 //! instance with 50 paid minutes left is free capacity; killing it
-//! early and re-requesting later would double-bill the hour). Amazon
-//! AS terminates immediately, as the real service does. The busy-drain
-//! scan reuses a platform-owned buffer so policy evaluation stays
-//! allocation-light.
+//! early and re-requesting later would double-bill the hour). The rule
+//! applies per instance — and therefore per pool — with one extra
+//! guard for heterogeneous fleets: an instance is only released when
+//! its whole CU block fits in the excess, so shedding 1 CU never kills
+//! a 40-CU instance. Amazon AS terminates immediately, as the real
+//! service does. The busy-drain and pool-candidate scans reuse
+//! platform-owned buffers so policy evaluation stays allocation-light.
 
 use crate::cloud::InstanceState;
 use crate::coordinator::policy::PolicyKind;
 use crate::platform::Platform;
 use crate::sim::Event;
 
+/// One up-scaling candidate pool (reused buffer element).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PoolFill {
+    pub(crate) pool: usize,
+    pub(crate) cus: u32,
+    /// $/CU/hr at the current instant (the greedy key).
+    pub(crate) per_cu: f64,
+    /// Cleared when a request comes back unfulfilled (price above bid);
+    /// prices are constant within an instant, so retrying is pointless
+    /// until the next monitoring tick.
+    pub(crate) open: bool,
+}
+
 impl Platform {
-    pub(crate) fn request_instance(&mut self) {
+    /// Request one instance from `pool`; returns the granted CUs, or 0
+    /// when the spot request stays pending (market above the pool bid).
+    pub(crate) fn request_instance_in(&mut self, pool: usize) -> u32 {
         let now = self.sim.now();
-        let (id, ready) = self.backend.request_instance(now);
-        self.sim.schedule_at(ready, Event::InstanceReady { instance: id });
+        match self.backend.request_instance_in(pool, now) {
+            Some((id, ready)) => {
+                self.sim.schedule_at(ready, Event::InstanceReady { instance: id });
+                self.backend.pool_cus(pool)
+            }
+            None => {
+                self.metrics.unfulfilled_requests += 1;
+                0
+            }
+        }
+    }
+
+    /// Greedy cheapest-$/CU mix fill: request instances across the
+    /// pools until `need` additional CUs are committed (or every pool is
+    /// price-blocked).
+    pub(crate) fn fill_cus(&mut self, mut need: i64) {
+        if need <= 0 {
+            return;
+        }
+        let now = self.sim.now();
+        let mut pools = std::mem::take(&mut self.pool_buf);
+        pools.clear();
+        for pool in 0..self.backend.pool_count() {
+            let cus = self.backend.pool_cus(pool);
+            let price = self.backend.pool_unit_price(pool, now);
+            pools.push(PoolFill { pool, cus, per_cu: price / cus as f64, open: true });
+        }
+        while need > 0 {
+            // among open pools that fit the deficit, cheapest per CU
+            // (ties keep the lower pool index: deterministic)
+            let mut pick: Option<usize> = None;
+            for (i, pf) in pools.iter().enumerate() {
+                if !pf.open || pf.cus as i64 > need {
+                    continue;
+                }
+                let better = match pick {
+                    Some(j) => pf.per_cu.total_cmp(&pools[j].per_cu).is_lt(),
+                    None => true,
+                };
+                if better {
+                    pick = Some(i);
+                }
+            }
+            // nothing fits: the smallest open type overshoots least
+            if pick.is_none() {
+                for (i, pf) in pools.iter().enumerate() {
+                    if !pf.open {
+                        continue;
+                    }
+                    let better = match pick {
+                        Some(j) => (pf.cus, pf.per_cu) < (pools[j].cus, pools[j].per_cu),
+                        None => true,
+                    };
+                    if better {
+                        pick = Some(i);
+                    }
+                }
+            }
+            let i = match pick {
+                Some(i) => i,
+                None => break, // every pool price-blocked this instant
+            };
+            let granted = self.request_instance_in(pools[i].pool);
+            if granted == 0 {
+                pools[i].open = false;
+            } else {
+                need -= granted as i64;
+            }
+        }
+        self.pool_buf = pools;
     }
 
     /// Scale the fleet toward `target` CUs (see module docs for the
-    /// billing-aware termination policy).
+    /// type-mix fill and the billing-aware termination policy).
     pub(crate) fn adjust_fleet(&mut self, target: f64) {
         let now = self.sim.now();
         let fleet = self.backend.describe(now);
@@ -35,25 +133,24 @@ impl Platform {
         // renewal window: terminate before the next billing increment hits
         let window = (self.cfg.control.monitor_interval_s * 3 / 2 + 1).max(120);
         if target > committed {
-            let need = (target - committed).round() as usize;
-            for _ in 0..need {
-                self.request_instance();
-            }
+            self.fill_cus((target - committed).round() as i64);
         } else if target < committed {
-            let mut excess = (committed - target).round() as usize;
+            let mut excess = (committed - target).round() as i64;
             // idle first, least remaining pre-billed time first (§IV)
             for id in self.backend.idle_instances_by_remaining(now) {
-                if excess == 0 {
+                if excess <= 0 {
                     break;
                 }
-                let rem = self
-                    .backend
-                    .instance(id)
-                    .map(|i| i.remaining_billed(now))
-                    .unwrap_or(0);
+                let (rem, cus) = match self.backend.instance(id) {
+                    Some(i) => (i.remaining_billed(now), i.cus),
+                    None => continue,
+                };
+                if cus as i64 > excess {
+                    continue; // releasing this block would undershoot
+                }
                 if !lazy || rem <= window {
                     self.backend.terminate_instance(id, now);
-                    excess -= 1;
+                    excess -= cus as i64;
                 }
             }
             // then drain busy ones if still above target (same laziness)
@@ -62,17 +159,20 @@ impl Platform {
                 busy.clear();
                 self.backend.for_each_instance(&mut |i| {
                     if i.state == InstanceState::Running && !i.is_idle() {
-                        busy.push((i.id, i.remaining_billed(now)));
+                        busy.push((i.id, i.remaining_billed(now), i.cus));
                     }
                 });
-                busy.sort_by_key(|&(id, rem)| (rem, id));
-                for &(id, rem) in &busy {
-                    if excess == 0 {
+                busy.sort_by_key(|&(id, rem, _)| (rem, id));
+                for &(id, rem, cus) in &busy {
+                    if excess <= 0 {
                         break;
+                    }
+                    if cus as i64 > excess {
+                        continue;
                     }
                     if !lazy || rem <= window {
                         self.backend.terminate_instance(id, now);
-                        excess -= 1;
+                        excess -= cus as i64;
                     }
                 }
                 self.busy_buf = busy;

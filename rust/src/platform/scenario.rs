@@ -34,7 +34,7 @@
 
 use anyhow::Result;
 
-use crate::cloud::BackendKind;
+use crate::cloud::{BackendKind, FleetSpec};
 use crate::config::Config;
 use crate::coordinator::PolicyKind;
 use crate::estimation::EstimatorKind;
@@ -58,6 +58,10 @@ pub struct Scenario {
     pub arrivals: ArrivalProcess,
     /// Cloud substrate the fleet runs on.
     pub backend: BackendKind,
+    /// Per-type instance pools (and their spot bids) the IaaS backends
+    /// provision from; the default is the degenerate single bid-less
+    /// m3.medium pool. Lambda ignores it.
+    pub fleet: FleetSpec,
     /// Cloud-event injection stream.
     pub fault: FaultSpec,
     /// Record estimator traces (off in sweeps: per-tick allocations).
@@ -77,6 +81,7 @@ impl Scenario {
             horizon_s: opts.horizon_s,
             arrivals: ArrivalProcess::FixedInterval { interval_s: opts.arrival_interval_s },
             backend: BackendKind::Spot,
+            fleet: FleetSpec::default(),
             fault: FaultSpec::None,
             record_traces: opts.record_traces,
         }
@@ -85,7 +90,31 @@ impl Scenario {
     /// Execute the scenario (pure in its inputs; the scenario itself is
     /// reusable — sweep cells call this from worker threads).
     pub fn run(&self) -> Result<RunMetrics> {
+        self.validate()?;
         Platform::from_scenario(self.clone()).run()
+    }
+
+    /// Reject configurations that would otherwise panic deep inside
+    /// platform assembly or run as silent no-ops: an invalid fleet
+    /// (empty / duplicate types — constructible because `FleetSpec`'s
+    /// fields are public), or `reclaim-pools` on a spot fleet where no
+    /// pool carries a bid (nothing could ever be revoked, which is
+    /// indistinguishable from "the market never spiked" in the
+    /// metrics). Fault specs on *non-reclaimable* backends
+    /// (on-demand/lambda) are deliberately not rejected: every fault
+    /// family is defined — and tested — to no-op there, so e.g. a
+    /// sweep can hold the fault axis fixed while varying the backend.
+    pub fn validate(&self) -> Result<()> {
+        if let Err(e) = self.fleet.validate() {
+            anyhow::bail!("invalid fleet spec: {e}");
+        }
+        if self.backend == BackendKind::Spot
+            && self.fault == FaultSpec::PoolReclamation
+            && self.fleet.pools.iter().all(|p| p.bid.is_none())
+        {
+            anyhow::bail!("reclaim-pools needs at least one pool bid (--fleet <type>:bid=<$/hr>)");
+        }
+        Ok(())
     }
 
     /// Total tasks across the suite (throughput accounting).
@@ -96,10 +125,11 @@ impl Scenario {
     /// One-line human description (CLI headers, sweep labels).
     pub fn describe(&self) -> String {
         format!(
-            "{} workloads / {} tasks | backend={} fault={} arrivals={} policy={:?} estimator={:?} ttc={:?}",
+            "{} workloads / {} tasks | backend={} fleet={} fault={} arrivals={} policy={:?} estimator={:?} ttc={:?}",
             self.specs.len(),
             self.n_tasks(),
             self.backend.name(),
+            self.fleet.describe(),
             self.fault.describe(),
             self.arrivals.describe(),
             self.policy,
@@ -157,6 +187,13 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Per-type instance pools the IaaS backends provision from (see
+    /// [`FleetSpec::parse`] for the CLI grammar).
+    pub fn fleet(mut self, fleet: FleetSpec) -> Self {
+        self.scn.fleet = fleet;
+        self
+    }
+
     pub fn fault(mut self, fault: FaultSpec) -> Self {
         self.scn.fault = fault;
         self
@@ -190,6 +227,7 @@ mod tests {
             ArrivalProcess::FixedInterval { interval_s: opts.arrival_interval_s }
         );
         assert_eq!(built.backend, BackendKind::Spot);
+        assert_eq!(built.fleet, FleetSpec::default());
         assert_eq!(built.fault, FaultSpec::None);
         assert!(built.record_traces);
     }
@@ -214,6 +252,40 @@ mod tests {
         assert_eq!(scn.fault, FaultSpec::SpotReclamation { bid: 0.01 });
         assert!(!scn.record_traces);
         assert!(scn.describe().contains("lambda"));
+    }
+
+    #[test]
+    fn run_rejects_invalid_or_inert_configurations() {
+        let cfg = Config::paper_defaults();
+        let empty = ScenarioBuilder::new(cfg.clone()).fleet(FleetSpec { pools: vec![] }).build();
+        let err = empty.run().unwrap_err().to_string();
+        assert!(err.contains("fleet"), "empty fleet must be an Err, not a panic: {err}");
+        // reclaim-pools over a fleet with no bids can never revoke
+        // anything: reject the dead configuration up front
+        let inert = ScenarioBuilder::new(cfg.clone())
+            .fleet(FleetSpec::parse("m3.medium,m3.xlarge").unwrap())
+            .fault(FaultSpec::PoolReclamation)
+            .build();
+        let err = inert.run().unwrap_err().to_string();
+        assert!(err.contains("reclaim-pools"), "bid-less reclaim-pools must error: {err}");
+        // ...while the same fault with a bid somewhere validates
+        let ok = ScenarioBuilder::new(cfg)
+            .fleet(FleetSpec::parse("m3.medium,m3.xlarge:bid=0.05").unwrap())
+            .fault(FaultSpec::PoolReclamation)
+            .build();
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn builder_carries_a_mixed_fleet() {
+        let fleet = FleetSpec::parse("m3.medium:bid=0.0085,m4.10xlarge:bid=0.6").unwrap();
+        let scn = ScenarioBuilder::new(Config::paper_defaults())
+            .fleet(fleet.clone())
+            .fault(FaultSpec::PoolReclamation)
+            .build();
+        assert_eq!(scn.fleet, fleet);
+        assert!(scn.describe().contains("m4.10xlarge:bid=0.6"));
+        assert!(scn.describe().contains("reclaim-pools"));
     }
 
     #[test]

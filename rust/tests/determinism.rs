@@ -7,6 +7,7 @@
 //! come from the seeded market (or a scripted schedule), never from
 //! wall clock, so fault-injected runs must be just as reproducible.
 
+use dithen::cloud::FleetSpec;
 use dithen::config::Config;
 use dithen::experiments::parallel::{run_specs, RunSpec};
 use dithen::platform::{
@@ -49,6 +50,23 @@ fn reclamation_scenario(seed: u64) -> Scenario {
         .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
         .horizon(6 * 3600)
         .fault(FaultSpec::SpotReclamation { bid: 0.0082 })
+        .build()
+}
+
+/// A heterogeneous two-pool fleet under per-pool market reclamation:
+/// whether (and when) the volatile 16-CU pool crosses its bid — and is
+/// *partially* revoked while the m3.medium pool keeps working — is
+/// itself part of the seed's determinism.
+fn mixed_fleet_scenario(seed: u64) -> Scenario {
+    let mut c = cfg(seed);
+    c.control.n_min = 20.0; // bootstrap fits one 16-CU instance
+    ScenarioBuilder::new(c)
+        .workloads(suite(seed, 2, 30))
+        .fixed_ttc(Some(1800))
+        .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+        .horizon(6 * 3600)
+        .fleet(FleetSpec::parse("m3.medium:bid=0.1,m4.4xlarge:bid=0.115").unwrap())
+        .fault(FaultSpec::PoolReclamation)
         .build()
 }
 
@@ -97,6 +115,18 @@ fn scripted_reclamation_is_bit_identical_across_runs() {
 }
 
 #[test]
+fn mixed_fleet_partial_revocation_is_bit_identical_across_runs() {
+    for seed in [3u64, 42] {
+        let scn = mixed_fleet_scenario(seed);
+        let a = scn.run().unwrap();
+        let b = scn.run().unwrap();
+        assert_eq!(a, b, "seed {seed}: mixed-fleet scenario diverged between runs");
+        assert_eq!(a.reclamations_by_pool, b.reclamations_by_pool);
+        assert_eq!(a.unfulfilled_requests, b.unfulfilled_requests);
+    }
+}
+
+#[test]
 fn parallel_runner_is_thread_count_invariant() {
     // a mixed grid: different seeds, estimators, policies, and a
     // reclamation scenario (the fault path must also be thread-invariant)
@@ -127,6 +157,7 @@ fn parallel_runner_is_thread_count_invariant() {
         ));
     }
     specs.push(RunSpec::new("det/reclaim", reclamation_scenario(55)));
+    specs.push(RunSpec::new("det/fleet", mixed_fleet_scenario(60)));
 
     let sequential = run_specs(&specs, 1).unwrap();
     for threads in [2usize, 4, 8] {
