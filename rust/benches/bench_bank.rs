@@ -53,7 +53,7 @@ fn main() {
         });
         if artifacts.join("manifest.json").exists() {
             let engine = Engine::load(&artifacts).unwrap();
-            let mut xla = Bank::new(w, k, params(), Backend::Xla(engine));
+            let mut xla = Bank::new(w, k, params(), Backend::xla(engine));
             common::bench(&format!("bank_step/xla/{w}x{k}"), 20, 500, || {
                 xla.step(&tick).unwrap()
             });

@@ -7,6 +7,7 @@
 //! dithen scenario [options]   run a composed scenario (backend/fault/arrivals)
 //! dithen sweep <grid>         parallel experiment grid (cost|estimators|seeds|fleet)
 //! dithen bench-report         measure tasks/s, write BENCH json
+//! dithen bench-check          gate: compare two bench reports, exit 1 on regression
 //! dithen list                 list experiment ids
 //! dithen market               print current simulated spot prices
 //! dithen --help
@@ -41,6 +42,7 @@ COMMANDS:
     scenario          run a composed scenario: pluggable backend, arrivals, faults
     sweep <grid>      run an experiment grid across cores: cost | estimators | seeds | fleet
     bench-report      measure end-to-end tasks/s + DB ops/s, write a JSON report
+    bench-check       regression gate: exit 1 if --current tasks/s < tolerance x --baseline
     list              list experiment ids
     market            print the simulated spot-price snapshot
 
@@ -55,6 +57,9 @@ OPTIONS:
     --threads <n>          worker threads for sweep/bench-report (default: cores)
     --out <file>           bench-report output path (default: BENCH_PR1.json)
     --smoke                bench-report/scenario: tiny CI-sized run
+    --baseline <file>      bench-check: the reference bench-report JSON
+    --current <file>       bench-check: the freshly measured bench-report JSON
+    --tolerance <ratio>    bench-check: minimum current/baseline tasks/s (default 0.8)
 
 SCENARIO OPTIONS:
     --backend <b>          spot (default) | ondemand | lambda
@@ -86,6 +91,9 @@ pub struct Cli {
     pub threads: Option<usize>,
     pub out: Option<String>,
     pub smoke: bool,
+    pub baseline: Option<String>,
+    pub current: Option<String>,
+    pub tolerance: Option<f64>,
     pub backend: Option<String>,
     pub fleet: Option<String>,
     pub fault: Option<String>,
@@ -141,6 +149,13 @@ pub fn parse(args: &[String]) -> Result<Cli, CliError> {
             }
             "--out" => cli.out = Some(need_value(&mut it, "--out")?),
             "--smoke" => cli.smoke = true,
+            "--baseline" => cli.baseline = Some(need_value(&mut it, "--baseline")?),
+            "--current" => cli.current = Some(need_value(&mut it, "--current")?),
+            "--tolerance" => {
+                let v = need_value(&mut it, "--tolerance")?;
+                cli.tolerance =
+                    Some(v.parse().map_err(|_| CliError(format!("bad --tolerance '{v}'")))?);
+            }
             "--backend" => cli.backend = Some(need_value(&mut it, "--backend")?),
             "--fleet" => cli.fleet = Some(need_value(&mut it, "--fleet")?),
             "--fault" => cli.fault = Some(need_value(&mut it, "--fault")?),
@@ -472,6 +487,21 @@ pub fn main_with(args: &[String]) -> anyhow::Result<i32> {
             let out = cli.out.as_deref().unwrap_or("BENCH_PR1.json");
             crate::experiments::bench_report::run(&cfg, threads, out, cli.smoke)?;
         }
+        "bench-check" => {
+            let baseline = cli
+                .baseline
+                .as_deref()
+                .ok_or_else(|| CliError("bench-check needs --baseline <json>".into()))?;
+            let current = cli
+                .current
+                .as_deref()
+                .ok_or_else(|| CliError("bench-check needs --current <json>".into()))?;
+            return crate::experiments::bench_check::run(
+                baseline,
+                current,
+                cli.tolerance.unwrap_or(0.8),
+            );
+        }
         "market" => {
             crate::experiments::market::run_table5(&cfg)?;
         }
@@ -519,6 +549,20 @@ mod tests {
         assert_eq!(c.out.as_deref(), Some("out/bench.json"));
         assert!(c.smoke);
         assert!(parse(&argv("bench-report --threads two")).is_err());
+    }
+
+    #[test]
+    fn parses_bench_check_flags() {
+        let c = parse(&argv(
+            "bench-check --baseline prev.json --current out/bench-ci.json --tolerance 0.75",
+        ))
+        .unwrap();
+        assert_eq!(c.command, "bench-check");
+        assert_eq!(c.baseline.as_deref(), Some("prev.json"));
+        assert_eq!(c.current.as_deref(), Some("out/bench-ci.json"));
+        assert_eq!(c.tolerance, Some(0.75));
+        assert!(parse(&argv("bench-check --tolerance high")).is_err());
+        assert!(parse(&argv("bench-check --baseline")).is_err(), "--baseline needs a value");
     }
 
     #[test]

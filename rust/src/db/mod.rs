@@ -3,11 +3,17 @@
 //! The GCI allocates chunks "in a manner analogous to a BitTorrent
 //! tracker": LCIs *write* task status + duration measurements, the GCI
 //! *reads* pending/processing/completed sets. This store keeps exactly
-//! those semantics, but on a flat-arena layout built for the monitoring
-//! tick (perf pass, §Perf):
+//! those semantics on a flat-arena layout built for the monitoring tick
+//! (perf pass, §Perf), and — since the PR-4 sharding pass — organizes
+//! that layout as one independent [`Shard`] per workload:
 //!
-//! * one `Vec<TaskRow>` arena per workload, indexed directly by task id
-//!   (task ids are dense 0..n — the front end numbers them at upload);
+//! * each shard owns one `Vec<TaskRow>` arena indexed directly by task
+//!   id (task ids are dense 0..n — the front end numbers them at
+//!   upload), its own intrusive per-status lists, its own incremental
+//!   `remaining` (m_{w,k}[t]) counters and its own time-ordered
+//!   measurement logs — shards share **nothing**, so concurrent
+//!   platform instances can own disjoint shards with no locking
+//!   ([`TaskDb::into_shards`] / [`TaskDb::from_shards`]);
 //! * intrusive doubly-linked lists thread the rows of each status, so
 //!   `claim` / `complete` / `requeue` are O(1) pointer splices and
 //!   status scans are in-order list walks with no allocation;
@@ -15,7 +21,14 @@
 //!   time order, make the ME's measurement queries (`measurements`,
 //!   `measurements_window`) binary-search slices instead of full-table
 //!   scans;
-//! * incremental `remaining` counters keep m_{w,k}[t] O(1).
+//! * the GCI tick resolves a workload to its shard once
+//!   ([`TaskDb::shard`]) and reads `remaining_slice` / `measurements`
+//!   shard-locally.
+//!
+//! `TaskDb` itself is a thin facade that routes the pre-shard,
+//! workload-indexed API onto the shard vector — every method is a
+//! one-line delegation, so the parity property test against the seed
+//! store below pins shard semantics too.
 //!
 //! Ordering semantics: within a status, tasks appear in *insertion*
 //! order (FIFO). For freshly inserted work this equals ascending task
@@ -28,6 +41,9 @@
 //! baseline and the semantic oracle for the parity property test.
 
 pub mod legacy;
+pub mod shard;
+
+pub use shard::{Shard, StatusIter};
 
 use crate::sim::SimTime;
 
@@ -39,10 +55,10 @@ pub enum TaskStatus {
     Failed,
 }
 
-const N_STATUS: usize = 4;
+pub(crate) const N_STATUS: usize = 4;
 
 #[inline]
-fn status_tag(s: TaskStatus) -> usize {
+pub(crate) fn status_tag(s: TaskStatus) -> usize {
     match s {
         TaskStatus::Pending => 0,
         TaskStatus::Processing => 1,
@@ -72,13 +88,13 @@ pub struct TaskRow {
 pub type TaskKey = (usize, usize);
 
 /// Intrusive-list null.
-const NIL: u32 = u32::MAX;
+pub(crate) const NIL: u32 = u32::MAX;
 
 #[derive(Debug, Clone, Copy)]
-struct StatusList {
-    head: u32,
-    tail: u32,
-    len: usize,
+pub(crate) struct StatusList {
+    pub(crate) head: u32,
+    pub(crate) tail: u32,
+    pub(crate) len: usize,
 }
 
 impl Default for StatusList {
@@ -87,104 +103,14 @@ impl Default for StatusList {
     }
 }
 
-/// Per-workload flat arena: rows indexed by task id plus intrusive
-/// per-status links and the per-media-type aggregates.
-#[derive(Debug, Default)]
-struct WlArena {
-    rows: Vec<TaskRow>,
-    /// Intrusive links; `next[id]`/`prev[id]` position `id` within the
-    /// list of its current status.
-    next: Vec<u32>,
-    prev: Vec<u32>,
-    lists: [StatusList; N_STATUS],
-    /// Not-completed counter per media type: m_{w,k}[t].
-    remaining: Vec<u64>,
-    /// Total inserted per media type (sizes the measurement reserve).
-    n_by_type: Vec<usize>,
-    /// Completed (time, measured CUS) per media type, appended in
-    /// nondecreasing simulation time.
-    meas: Vec<Vec<(SimTime, f64)>>,
-}
-
-impl WlArena {
-    fn push_back(&mut self, s: TaskStatus, id: usize) {
-        let si = status_tag(s);
-        let mut l = self.lists[si];
-        let id32 = id as u32;
-        self.prev[id] = l.tail;
-        self.next[id] = NIL;
-        if l.tail == NIL {
-            l.head = id32;
-        } else {
-            self.next[l.tail as usize] = id32;
-        }
-        l.tail = id32;
-        l.len += 1;
-        self.lists[si] = l;
-    }
-
-    fn unlink(&mut self, s: TaskStatus, id: usize) {
-        let si = status_tag(s);
-        let mut l = self.lists[si];
-        let (p, n) = (self.prev[id], self.next[id]);
-        if p == NIL {
-            l.head = n;
-        } else {
-            self.next[p as usize] = n;
-        }
-        if n == NIL {
-            l.tail = p;
-        } else {
-            self.prev[n as usize] = p;
-        }
-        l.len -= 1;
-        self.prev[id] = NIL;
-        self.next[id] = NIL;
-        self.lists[si] = l;
-    }
-
-    fn grow_types(&mut self, media_type: usize) {
-        if self.remaining.len() <= media_type {
-            self.remaining.resize(media_type + 1, 0);
-            self.n_by_type.resize(media_type + 1, 0);
-            self.meas.resize_with(media_type + 1, Vec::new);
-        }
-    }
-}
-
-/// In-order walk of one workload's status list. Zero allocation.
-#[derive(Debug, Clone)]
-pub struct StatusIter<'a> {
-    cur: u32,
-    remaining: usize,
-    next: &'a [u32],
-}
-
-impl Iterator for StatusIter<'_> {
-    type Item = usize;
-
-    #[inline]
-    fn next(&mut self) -> Option<usize> {
-        if self.cur == NIL {
-            return None;
-        }
-        let id = self.cur as usize;
-        self.cur = self.next[id];
-        self.remaining -= 1;
-        Some(id)
-    }
-
-    fn size_hint(&self) -> (usize, Option<usize>) {
-        (self.remaining, Some(self.remaining))
-    }
-}
-
-impl ExactSizeIterator for StatusIter<'_> {}
-
+/// The workload-sharded task store: a vector of independent
+/// [`Shard`]s behind the pre-shard, workload-indexed API. Deliberately
+/// carries **no** state of its own — every query derives from the
+/// shards, so going through [`Self::shard_mut`] can never desync the
+/// facade.
 #[derive(Debug, Default)]
 pub struct TaskDb {
-    wls: Vec<WlArena>,
-    total: usize,
+    shards: Vec<Shard>,
 }
 
 impl TaskDb {
@@ -192,40 +118,49 @@ impl TaskDb {
         Self::default()
     }
 
+    /// Assemble a db from per-workload shards. `shards[w].workload()`
+    /// must equal its position `w` (the inverse of [`Self::into_shards`]).
+    pub fn from_shards(shards: Vec<Shard>) -> Self {
+        for (w, s) in shards.iter().enumerate() {
+            assert_eq!(s.workload(), w, "shard at position {w} stores workload {}", s.workload());
+        }
+        TaskDb { shards }
+    }
+
+    /// Decompose into per-workload shards (nothing shared between
+    /// them) — the handoff point for concurrent platform instances.
+    pub fn into_shards(self) -> Vec<Shard> {
+        self.shards
+    }
+
+    /// Number of workload shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Borrow one workload's shard — the GCI tick resolves the
+    /// workload index once and reads shard-locally.
+    pub fn shard(&self, workload: usize) -> Option<&Shard> {
+        self.shards.get(workload)
+    }
+
+    /// Mutably borrow one workload's shard.
+    pub fn shard_mut(&mut self, workload: usize) -> Option<&mut Shard> {
+        self.shards.get_mut(workload)
+    }
+
+    fn shard_for(&mut self, workload: usize) -> &mut Shard {
+        while self.shards.len() <= workload {
+            self.shards.push(Shard::new(self.shards.len()));
+        }
+        &mut self.shards[workload]
+    }
+
     /// Register a new pending task. Task ids must be inserted densely
     /// in order (0, 1, 2, ...) per workload — the arena index *is* the
     /// task id.
     pub fn insert(&mut self, workload: usize, media_type: usize, task: usize) {
-        if self.wls.len() <= workload {
-            self.wls.resize_with(workload + 1, WlArena::default);
-        }
-        let arena = &mut self.wls[workload];
-        assert!(
-            task >= arena.rows.len(),
-            "task ({workload},{task}) inserted twice"
-        );
-        assert_eq!(
-            task,
-            arena.rows.len(),
-            "task ids must be dense and in order (workload {workload})"
-        );
-        arena.rows.push(TaskRow {
-            workload,
-            media_type,
-            task,
-            status: TaskStatus::Pending,
-            instance: None,
-            measured_cus: None,
-            completed_at: None,
-            exit_code: 0,
-        });
-        arena.next.push(NIL);
-        arena.prev.push(NIL);
-        arena.push_back(TaskStatus::Pending, task);
-        arena.grow_types(media_type);
-        arena.remaining[media_type] += 1;
-        arena.n_by_type[media_type] += 1;
-        self.total += 1;
+        self.shard_for(workload).insert(media_type, task);
     }
 
     /// Pre-size the measurement logs to the workload's final task
@@ -233,82 +168,37 @@ impl TaskDb {
     /// once after a workload's inserts (the platform does this at
     /// arrival).
     pub fn reserve_measurements(&mut self, workload: usize) {
-        if let Some(arena) = self.wls.get_mut(workload) {
-            for k in 0..arena.meas.len() {
-                let need = arena.n_by_type[k].saturating_sub(arena.meas[k].len());
-                arena.meas[k].reserve(need);
-            }
+        if let Some(s) = self.shards.get_mut(workload) {
+            s.reserve_measurements();
         }
     }
 
     /// LCI claims a task for an instance (Pending -> Processing). O(1).
     pub fn claim(&mut self, key: TaskKey, instance: u64) {
-        let arena = self.wls.get_mut(key.0).expect("unknown task");
-        {
-            let row = arena.rows.get(key.1).expect("unknown task");
-            assert_eq!(row.status, TaskStatus::Pending, "claiming non-pending task {key:?}");
-        }
-        arena.unlink(TaskStatus::Pending, key.1);
-        arena.push_back(TaskStatus::Processing, key.1);
-        let row = &mut arena.rows[key.1];
-        row.status = TaskStatus::Processing;
-        row.instance = Some(instance);
+        self.shards.get_mut(key.0).expect("unknown task").claim(key.1, instance);
     }
 
     /// LCI reports completion with the measured CUS. O(1).
     pub fn complete(&mut self, key: TaskKey, cus: f64, at: SimTime, exit_code: i32) {
-        let arena = self.wls.get_mut(key.0).expect("unknown task");
-        {
-            let row = arena.rows.get(key.1).expect("unknown task");
-            assert_eq!(row.status, TaskStatus::Processing, "completing unclaimed task {key:?}");
-        }
-        let to = if exit_code == 0 { TaskStatus::Completed } else { TaskStatus::Failed };
-        arena.unlink(TaskStatus::Processing, key.1);
-        arena.push_back(to, key.1);
-        let row = &mut arena.rows[key.1];
-        row.status = to;
-        row.measured_cus = Some(cus);
-        row.completed_at = Some(at);
-        row.exit_code = exit_code;
-        let media_type = row.media_type;
-        if to == TaskStatus::Completed {
-            arena.remaining[media_type] -= 1;
-            debug_assert!(
-                arena.meas[media_type].last().map_or(true, |&(t, _)| t <= at),
-                "completions must arrive in nondecreasing sim time"
-            );
-            arena.meas[media_type].push((at, cus));
-        }
+        self.shards.get_mut(key.0).expect("unknown task").complete(key.1, cus, at, exit_code);
     }
 
     /// Requeue a processing task (instance lost / spot reclaimed):
     /// Processing -> Pending, at the **tail** of the pending list (see
     /// module docs). O(1).
     pub fn requeue(&mut self, key: TaskKey) {
-        let arena = self.wls.get_mut(key.0).expect("unknown task");
-        {
-            let row = arena.rows.get(key.1).expect("unknown task");
-            assert_eq!(row.status, TaskStatus::Processing);
-        }
-        arena.unlink(TaskStatus::Processing, key.1);
-        arena.push_back(TaskStatus::Pending, key.1);
-        let row = &mut arena.rows[key.1];
-        row.status = TaskStatus::Pending;
-        row.instance = None;
+        self.shards.get_mut(key.0).expect("unknown task").requeue(key.1);
     }
 
     pub fn get(&self, key: TaskKey) -> Option<&TaskRow> {
-        self.wls.get(key.0).and_then(|a| a.rows.get(key.1))
+        self.shards.get(key.0).and_then(|s| s.get(key.1))
     }
 
     /// Walk a status list in order without allocating — the GCI-tick
     /// query primitive (`build_chunk` takes the first n via `.take(n)`).
     pub fn status_iter(&self, workload: usize, status: TaskStatus) -> StatusIter<'_> {
-        match self.wls.get(workload) {
-            Some(a) => {
-                let l = a.lists[status_tag(status)];
-                StatusIter { cur: l.head, remaining: l.len, next: &a.next }
-            }
+        match self.shards.get(workload) {
+            Some(s) => s.status_iter(status),
             None => StatusIter { cur: NIL, remaining: 0, next: &[] },
         }
     }
@@ -327,10 +217,7 @@ impl TaskDb {
 
     /// O(1) status cardinality.
     pub fn count_status(&self, workload: usize, status: TaskStatus) -> usize {
-        self.wls
-            .get(workload)
-            .map(|a| a.lists[status_tag(status)].len)
-            .unwrap_or(0)
+        self.shards.get(workload).map(|s| s.count_status(status)).unwrap_or(0)
     }
 
     /// Remaining (not completed) count for one (workload, media type).
@@ -341,7 +228,7 @@ impl TaskDb {
     /// Remaining counters per media type as a borrowed slice — the
     /// zero-allocation m_{w,k}[t] read on the GCI tick.
     pub fn remaining_slice(&self, workload: usize) -> &[u64] {
-        self.wls.get(workload).map(|a| a.remaining.as_slice()).unwrap_or(&[])
+        self.shards.get(workload).map(|s| s.remaining_slice()).unwrap_or(&[])
     }
 
     /// Remaining (not completed) items per media type: m_{w,k}[t]
@@ -354,11 +241,7 @@ impl TaskDb {
     /// All completed (time, CUS) measurements for (workload, media
     /// type), in nondecreasing completion time. Zero allocation.
     pub fn measurements(&self, workload: usize, media_type: usize) -> &[(SimTime, f64)] {
-        self.wls
-            .get(workload)
-            .and_then(|a| a.meas.get(media_type))
-            .map(|v| v.as_slice())
-            .unwrap_or(&[])
+        self.shards.get(workload).map(|s| s.measurements(media_type)).unwrap_or(&[])
     }
 
     /// The (since, until] window of the completion log as a borrowed
@@ -371,10 +254,10 @@ impl TaskDb {
         since: SimTime,
         until: SimTime,
     ) -> &[(SimTime, f64)] {
-        let log = self.measurements(workload, media_type);
-        let start = log.partition_point(|&(t, _)| t <= since);
-        let end = log.partition_point(|&(t, _)| t <= until);
-        &log[start..end.max(start)]
+        self.shards
+            .get(workload)
+            .map(|s| s.measurements_window(media_type, since, until))
+            .unwrap_or(&[])
     }
 
     /// Completed-task CUS measurements within (since, until]
@@ -400,19 +283,16 @@ impl TaskDb {
 
     /// A workload is complete when nothing is pending or processing.
     pub fn workload_complete(&self, workload: usize) -> bool {
-        self.count_status(workload, TaskStatus::Pending) == 0
-            && self.count_status(workload, TaskStatus::Processing) == 0
-            && (self.count_status(workload, TaskStatus::Completed)
-                + self.count_status(workload, TaskStatus::Failed))
-                > 0
+        self.shards.get(workload).map(|s| s.workload_complete()).unwrap_or(false)
     }
 
+    /// Total tasks ever inserted, derived from the shards (O(#workloads)).
     pub fn len(&self) -> usize {
-        self.total
+        self.shards.iter().map(|s| s.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.total == 0
+        self.shards.iter().all(|s| s.is_empty())
     }
 }
 
@@ -544,6 +424,51 @@ mod tests {
         assert!(db.remaining_slice(9).is_empty());
         assert!(db.measurements(0, 9).is_empty());
         assert!(db.get((9, 0)).is_none());
+    }
+
+    #[test]
+    fn shard_accessors_expose_the_facade_state() {
+        let mut db = TaskDb::new();
+        db.insert(0, 0, 0);
+        db.insert(2, 1, 0);
+        assert_eq!(db.shard_count(), 3);
+        // workload 1 exists as an empty interposed shard
+        let s1 = db.shard(1).unwrap();
+        assert!(s1.is_empty());
+        assert_eq!(s1.workload(), 1);
+        let s2 = db.shard(2).unwrap();
+        assert_eq!(s2.remaining_slice(), &[0, 1]);
+        assert!(db.shard(9).is_none());
+        db.shard_mut(2).unwrap().claim(0, 5);
+        assert_eq!(db.count_status(2, TaskStatus::Processing), 1);
+    }
+
+    #[test]
+    fn shards_roundtrip_through_the_facade() {
+        let mut db = TaskDb::new();
+        for w in 0..3 {
+            for t in 0..4 {
+                db.insert(w, t % 2, t);
+            }
+        }
+        db.claim((1, 2), 9);
+        db.complete((1, 2), 1.5, 30, 0);
+        let len = db.len();
+        let shards = db.into_shards();
+        assert_eq!(shards.len(), 3);
+        let db = TaskDb::from_shards(shards);
+        assert_eq!(db.len(), len);
+        assert_eq!(db.count_status(1, TaskStatus::Completed), 1);
+        assert_eq!(db.remaining_slice(1), &[2, 1]);
+        assert_eq!(db.measurements(1, 0), &[(30, 1.5)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shard at position")]
+    fn from_shards_rejects_misplaced_workloads() {
+        let mut shards = db_with(2).into_shards();
+        shards.insert(0, Shard::new(7));
+        let _ = TaskDb::from_shards(shards);
     }
 
     /// Drive the arena and the seed (legacy) store through the same

@@ -1,0 +1,371 @@
+//! One task-DB shard: the complete store for a single workload.
+//!
+//! PR-4 made the per-workload arena of the flat-arena refactor a
+//! first-class, independently-ownable type. A [`Shard`] carries its own
+//! rows, intrusive status lists, `m_{w,k}` counters and time-ordered
+//! measurement logs — *nothing* is shared between shards, so
+//!
+//! * a multi-platform process can hand each workload's shard to a
+//!   different platform instance (or thread) with no synchronization:
+//!   `Shard` is plain data (`Send`), and [`super::TaskDb::into_shards`] /
+//!   [`super::TaskDb::from_shards`] move shards out of and back into the
+//!   facade losslessly;
+//! * the GCI tick's per-workload reads (`remaining_slice`,
+//!   `measurements`) resolve the workload index once via
+//!   [`super::TaskDb::shard`] and then touch only this shard's memory —
+//!   one bounds check per workload per tick instead of one per query.
+//!
+//! [`super::TaskDb`] keeps the exact pre-shard API (workload-indexed
+//! keys) as a thin delegating facade; the legacy parity property test in
+//! `super` drives that facade, so shard semantics stay pinned to the
+//! seed store.
+//!
+//! All asymptotics of the PR-1 arena are unchanged: O(1) splices for
+//! `claim`/`complete`/`requeue`, zero-allocation status walks, O(1)
+//! remaining counters, binary-searched measurement windows.
+
+use crate::sim::SimTime;
+
+use super::{status_tag, StatusList, TaskRow, TaskStatus, N_STATUS, NIL};
+
+/// Flat task arena for one workload: rows indexed by task id plus
+/// intrusive per-status links and the per-media-type aggregates.
+#[derive(Debug, Default)]
+pub struct Shard {
+    /// The workload this shard stores (stamped into every [`TaskRow`]).
+    workload: usize,
+    rows: Vec<TaskRow>,
+    /// Intrusive links; `next[id]`/`prev[id]` position `id` within the
+    /// list of its current status.
+    next: Vec<u32>,
+    prev: Vec<u32>,
+    lists: [StatusList; N_STATUS],
+    /// Not-completed counter per media type: m_{w,k}[t].
+    remaining: Vec<u64>,
+    /// Total inserted per media type (sizes the measurement reserve).
+    n_by_type: Vec<usize>,
+    /// Completed (time, measured CUS) per media type, appended in
+    /// nondecreasing simulation time.
+    meas: Vec<Vec<(SimTime, f64)>>,
+}
+
+/// In-order walk of one shard's status list. Zero allocation.
+#[derive(Debug, Clone)]
+pub struct StatusIter<'a> {
+    pub(super) cur: u32,
+    pub(super) remaining: usize,
+    pub(super) next: &'a [u32],
+}
+
+impl Iterator for StatusIter<'_> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        if self.cur == NIL {
+            return None;
+        }
+        let id = self.cur as usize;
+        self.cur = self.next[id];
+        self.remaining -= 1;
+        Some(id)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl ExactSizeIterator for StatusIter<'_> {}
+
+impl Shard {
+    /// An empty shard for `workload`.
+    pub fn new(workload: usize) -> Self {
+        Shard { workload, ..Self::default() }
+    }
+
+    /// The workload this shard stores.
+    pub fn workload(&self) -> usize {
+        self.workload
+    }
+
+    fn push_back(&mut self, s: TaskStatus, id: usize) {
+        let si = status_tag(s);
+        let mut l = self.lists[si];
+        let id32 = id as u32;
+        self.prev[id] = l.tail;
+        self.next[id] = NIL;
+        if l.tail == NIL {
+            l.head = id32;
+        } else {
+            self.next[l.tail as usize] = id32;
+        }
+        l.tail = id32;
+        l.len += 1;
+        self.lists[si] = l;
+    }
+
+    fn unlink(&mut self, s: TaskStatus, id: usize) {
+        let si = status_tag(s);
+        let mut l = self.lists[si];
+        let (p, n) = (self.prev[id], self.next[id]);
+        if p == NIL {
+            l.head = n;
+        } else {
+            self.next[p as usize] = n;
+        }
+        if n == NIL {
+            l.tail = p;
+        } else {
+            self.prev[n as usize] = p;
+        }
+        l.len -= 1;
+        self.prev[id] = NIL;
+        self.next[id] = NIL;
+        self.lists[si] = l;
+    }
+
+    fn grow_types(&mut self, media_type: usize) {
+        if self.remaining.len() <= media_type {
+            self.remaining.resize(media_type + 1, 0);
+            self.n_by_type.resize(media_type + 1, 0);
+            self.meas.resize_with(media_type + 1, Vec::new);
+        }
+    }
+
+    /// Register a new pending task. Task ids must be inserted densely
+    /// in order (0, 1, 2, ...) — the arena index *is* the task id.
+    pub fn insert(&mut self, media_type: usize, task: usize) {
+        let workload = self.workload;
+        assert!(
+            task >= self.rows.len(),
+            "task ({workload},{task}) inserted twice"
+        );
+        assert_eq!(
+            task,
+            self.rows.len(),
+            "task ids must be dense and in order (workload {workload})"
+        );
+        self.rows.push(TaskRow {
+            workload,
+            media_type,
+            task,
+            status: TaskStatus::Pending,
+            instance: None,
+            measured_cus: None,
+            completed_at: None,
+            exit_code: 0,
+        });
+        self.next.push(NIL);
+        self.prev.push(NIL);
+        self.push_back(TaskStatus::Pending, task);
+        self.grow_types(media_type);
+        self.remaining[media_type] += 1;
+        self.n_by_type[media_type] += 1;
+    }
+
+    /// Pre-size the measurement logs to the final task counts so
+    /// steady-state `complete` calls never reallocate.
+    pub fn reserve_measurements(&mut self) {
+        for k in 0..self.meas.len() {
+            let need = self.n_by_type[k].saturating_sub(self.meas[k].len());
+            self.meas[k].reserve(need);
+        }
+    }
+
+    /// LCI claims a task for an instance (Pending -> Processing). O(1).
+    pub fn claim(&mut self, task: usize, instance: u64) {
+        {
+            let row = self.rows.get(task).expect("unknown task");
+            assert_eq!(
+                row.status,
+                TaskStatus::Pending,
+                "claiming non-pending task ({}, {task})",
+                self.workload
+            );
+        }
+        self.unlink(TaskStatus::Pending, task);
+        self.push_back(TaskStatus::Processing, task);
+        let row = &mut self.rows[task];
+        row.status = TaskStatus::Processing;
+        row.instance = Some(instance);
+    }
+
+    /// LCI reports completion with the measured CUS. O(1).
+    pub fn complete(&mut self, task: usize, cus: f64, at: SimTime, exit_code: i32) {
+        {
+            let row = self.rows.get(task).expect("unknown task");
+            assert_eq!(
+                row.status,
+                TaskStatus::Processing,
+                "completing unclaimed task ({}, {task})",
+                self.workload
+            );
+        }
+        let to = if exit_code == 0 { TaskStatus::Completed } else { TaskStatus::Failed };
+        self.unlink(TaskStatus::Processing, task);
+        self.push_back(to, task);
+        let row = &mut self.rows[task];
+        row.status = to;
+        row.measured_cus = Some(cus);
+        row.completed_at = Some(at);
+        row.exit_code = exit_code;
+        let media_type = row.media_type;
+        if to == TaskStatus::Completed {
+            self.remaining[media_type] -= 1;
+            debug_assert!(
+                self.meas[media_type].last().map_or(true, |&(t, _)| t <= at),
+                "completions must arrive in nondecreasing sim time"
+            );
+            self.meas[media_type].push((at, cus));
+        }
+    }
+
+    /// Requeue a processing task (instance lost / spot reclaimed):
+    /// Processing -> Pending, at the **tail** of the pending list (see
+    /// the module docs in [`super`]). O(1).
+    pub fn requeue(&mut self, task: usize) {
+        {
+            let row = self.rows.get(task).expect("unknown task");
+            assert_eq!(row.status, TaskStatus::Processing);
+        }
+        self.unlink(TaskStatus::Processing, task);
+        self.push_back(TaskStatus::Pending, task);
+        let row = &mut self.rows[task];
+        row.status = TaskStatus::Pending;
+        row.instance = None;
+    }
+
+    pub fn get(&self, task: usize) -> Option<&TaskRow> {
+        self.rows.get(task)
+    }
+
+    /// Walk a status list in order without allocating.
+    pub fn status_iter(&self, status: TaskStatus) -> StatusIter<'_> {
+        let l = self.lists[status_tag(status)];
+        StatusIter { cur: l.head, remaining: l.len, next: &self.next }
+    }
+
+    /// O(1) status cardinality.
+    pub fn count_status(&self, status: TaskStatus) -> usize {
+        self.lists[status_tag(status)].len
+    }
+
+    /// Remaining counters per media type as a borrowed slice — the
+    /// zero-allocation m_{w,k}[t] read on the GCI tick.
+    pub fn remaining_slice(&self) -> &[u64] {
+        &self.remaining
+    }
+
+    /// All completed (time, CUS) measurements for one media type, in
+    /// nondecreasing completion time. Zero allocation.
+    pub fn measurements(&self, media_type: usize) -> &[(SimTime, f64)] {
+        self.meas.get(media_type).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// The (since, until] window of the completion log as a borrowed
+    /// slice (binary search on the time-ordered log). Zero allocation.
+    pub fn measurements_window(
+        &self,
+        media_type: usize,
+        since: SimTime,
+        until: SimTime,
+    ) -> &[(SimTime, f64)] {
+        let log = self.measurements(media_type);
+        let start = log.partition_point(|&(t, _)| t <= since);
+        let end = log.partition_point(|&(t, _)| t <= until);
+        &log[start..end.max(start)]
+    }
+
+    /// The workload is complete when nothing is pending or processing.
+    pub fn workload_complete(&self) -> bool {
+        self.count_status(TaskStatus::Pending) == 0
+            && self.count_status(TaskStatus::Processing) == 0
+            && (self.count_status(TaskStatus::Completed) + self.count_status(TaskStatus::Failed))
+                > 0
+    }
+
+    /// Total tasks ever inserted into this shard.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard_with(n: usize) -> Shard {
+        let mut s = Shard::new(3);
+        for t in 0..n {
+            s.insert(t % 2, t);
+        }
+        s
+    }
+
+    #[test]
+    fn shard_stamps_its_workload_into_rows() {
+        let s = shard_with(2);
+        assert_eq!(s.workload(), 3);
+        assert_eq!(s.get(0).unwrap().workload, 3);
+        assert_eq!(s.get(1).unwrap().workload, 3);
+    }
+
+    #[test]
+    fn shards_share_nothing() {
+        // mutating one shard is invisible to another — the multi-platform
+        // isolation contract
+        let mut a = shard_with(4);
+        let b = shard_with(4);
+        a.claim(0, 7);
+        a.complete(0, 2.0, 10, 0);
+        assert_eq!(a.count_status(TaskStatus::Completed), 1);
+        assert_eq!(b.count_status(TaskStatus::Completed), 0);
+        assert_eq!(a.remaining_slice(), &[1, 2]);
+        assert_eq!(b.remaining_slice(), &[2, 2]);
+    }
+
+    #[test]
+    fn shards_move_across_threads() {
+        // Shard is plain data: each workload's store can be processed on
+        // its own thread with no synchronization, then collected
+        let shards: Vec<Shard> = (0..4).map(|_| shard_with(8)).collect();
+        let processed: Vec<Shard> = std::thread::scope(|scope| {
+            let handles: Vec<_> = shards
+                .into_iter()
+                .map(|mut s| {
+                    scope.spawn(move || {
+                        for t in 0..s.len() {
+                            s.claim(t, 1);
+                            s.complete(t, 1.0, (t as u64 + 1) * 10, 0);
+                        }
+                        s
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for s in &processed {
+            assert!(s.workload_complete());
+            assert_eq!(s.count_status(TaskStatus::Completed), 8);
+            assert_eq!(s.remaining_slice(), &[0, 0]);
+        }
+    }
+
+    #[test]
+    fn window_queries_are_shard_local() {
+        let mut s = shard_with(3);
+        for (t, at) in [(0usize, 10u64), (1, 20), (2, 30)] {
+            s.claim(t, 1);
+            s.complete(t, t as f64, at, 0);
+        }
+        // media types alternate 0,1,0
+        assert_eq!(s.measurements(0), &[(10, 0.0), (30, 2.0)]);
+        assert_eq!(s.measurements_window(0, 10, 30), &[(30, 2.0)]);
+        assert!(s.measurements(9).is_empty());
+    }
+}

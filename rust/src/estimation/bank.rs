@@ -11,9 +11,21 @@
 //! The parity test at the bottom asserts both backends agree to f32
 //! round-off on random states.
 
+use std::sync::{Arc, RwLock};
+
 use anyhow::Result;
 
 use crate::runtime::{Engine, StepInputs, StepOutputs, N_PARAMS};
+
+/// A compiled PJRT engine shared between banks: sweep cells with the
+/// same (W, K) artifact shape reuse one executable instead of loading
+/// and compiling it per cell (see [`super::cache::BankCache`]). The
+/// `RwLock` exists for lazy per-shape *compilation* only — the one
+/// write lock per shape inserts the executable, after which every
+/// concurrent `monitor_step` execution runs under a **read** lock
+/// ([`Engine::compiled`] + `Executable::run(&self)`), so same-shape
+/// cells on different sweep workers never serialize the hot path.
+pub type SharedEngine = Arc<RwLock<Engine>>;
 
 /// Scalar knobs of the bank (mirrors PARAMS_LAYOUT in model.py minus
 /// n_tot, which varies per tick).
@@ -42,10 +54,21 @@ impl BankParams {
     }
 }
 
-/// Which compute backend the bank uses.
+/// Which compute backend the bank uses. `Clone` hands out another
+/// reference to the same shared engine (never a recompilation) — the
+/// bank *cache* relies on this to mint per-run banks from one cached
+/// backend selection.
+#[derive(Clone)]
 pub enum Backend {
     Native,
-    Xla(Engine),
+    Xla(SharedEngine),
+}
+
+impl Backend {
+    /// Wrap an owned engine for (potential) sharing.
+    pub fn xla(engine: Engine) -> Backend {
+        Backend::Xla(Arc::new(RwLock::new(engine)))
+    }
 }
 
 impl std::fmt::Debug for Backend {
@@ -85,7 +108,9 @@ impl Bank {
     }
 
     /// Try to build an XLA-backed bank; fall back to native (and report
-    /// which) if artifacts are missing.
+    /// which) if artifacts are missing. One-off, uncached construction
+    /// over the same selection logic the [`super::cache::BankCache`]
+    /// uses (`cache::resolve` — shared so the two can never drift).
     pub fn with_best_backend(
         w: usize,
         k: usize,
@@ -93,17 +118,8 @@ impl Bank {
         artifacts_dir: &std::path::Path,
         prefer_xla: bool,
     ) -> (Self, &'static str) {
-        if prefer_xla {
-            if let Ok(engine) = Engine::load(artifacts_dir) {
-                // the bank must adopt the artifact's padded (W, K) shape;
-                // the caller masks the unused slots
-                if let Some(v) = engine.manifest().pick(w, k) {
-                    let (vw, vk) = (v.w, v.k);
-                    return (Self::new(vw, vk, params, Backend::Xla(engine)), "xla");
-                }
-            }
-        }
-        (Self::new(w, k, params, Backend::Native), "native")
+        let v = super::cache::resolve(w, k, params, artifacts_dir, prefer_xla);
+        (v.instantiate(), v.backend_name())
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -159,7 +175,22 @@ impl Bank {
                 native_step_into(self.w, self.k, &self.b_hat, &self.pi, inp, &self.params, out);
             }
             Backend::Xla(engine) => {
-                let exe = engine.executable(self.w, self.k)?;
+                // fast path: the shape is compiled — execute under a
+                // read lock so concurrent same-engine banks don't
+                // serialize. The write lock is taken once per shape to
+                // compile, then re-checked through the loop.
+                let guard = loop {
+                    let g = engine.read().expect("bank engine lock poisoned");
+                    if g.compiled(self.w, self.k).is_some() {
+                        break g;
+                    }
+                    drop(g);
+                    let mut g = engine.write().expect("bank engine lock poisoned");
+                    g.executable(self.w, self.k)?;
+                };
+                let exe = guard
+                    .compiled(self.w, self.k)
+                    .expect("executable compiled under the write lock above");
                 let params = [
                     // must match PARAMS_LAYOUT in model.py
                     self.params.sigma_z2,
@@ -383,7 +414,7 @@ mod tests {
             return;
         }
         let (w, k) = (8, 2);
-        let mut xla_bank = Bank::new(w, k, params(), Backend::Xla(Engine::load(&dir).unwrap()));
+        let mut xla_bank = Bank::new(w, k, params(), Backend::xla(Engine::load(&dir).unwrap()));
         let mut nat_bank = Bank::new(w, k, params(), Backend::Native);
         assert_eq!(xla_bank.backend_name(), "xla");
         let mut rng = Rng::new(0xD17E);

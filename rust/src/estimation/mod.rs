@@ -5,17 +5,19 @@
 pub mod adhoc;
 pub mod arma;
 pub mod bank;
+pub mod cache;
 pub mod convergence;
 pub mod kalman;
 
 pub use adhoc::AdHoc;
 pub use arma::Arma;
 pub use bank::{Backend, Bank, BankParams, TickInputs};
+pub use cache::{BankCache, BankVariant, CacheStats};
 pub use convergence::{DeviationDetector, SlopeDetector};
 pub use kalman::Kalman;
 
 /// Which estimator a simulation run uses (Table II comparisons).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum EstimatorKind {
     Kalman,
     AdHoc,

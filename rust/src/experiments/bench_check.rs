@@ -1,0 +1,262 @@
+//! `dithen bench-check`: the CI bench-regression gate.
+//!
+//! Compares two `dithen-bench-report/v1` payloads and exits non-zero
+//! when the current sweep throughput (`current.tasks_per_s`) falls
+//! below `tolerance × baseline` — so a PR that quietly serializes the
+//! sweep harness (a lock on the hot path, a cache that stopped
+//! hitting) turns the build red instead of a number in an artifact
+//! nobody reads.
+//!
+//! ```text
+//! dithen bench-check --baseline prev.json --current out/bench-ci.json --tolerance 0.8
+//! ```
+//!
+//! Gate semantics (deliberately one-sided and tolerant — CI runners are
+//! shared and noisy, so the default 0.8 tolerance flags only >20 %
+//! regressions; improvements always pass):
+//!
+//! * **fail (exit 1)** — both reports are measured, comparable (same
+//!   grid) and `current < tolerance × baseline`;
+//! * **pass (exit 0)** — comparable and within tolerance;
+//! * **skip (exit 0, with a printed reason)** — the baseline is the
+//!   committed `pending-measurement` placeholder, has null numbers, or
+//!   ran a different grid (`cost-smoke` vs `cost-default` are not
+//!   comparable). The gate never fails on an absent history — the
+//!   first measured run *creates* the history;
+//! * **error (exit ≠ 0 via `Err`)** — the *current* report is missing
+//!   or malformed: that's a broken pipeline, not a missing baseline.
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Outcome of one comparison (exit-code mapping in [`run`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Gate {
+    /// Comparable and within tolerance: `current ≥ tolerance × baseline`.
+    Pass { baseline: f64, current: f64, ratio: f64 },
+    /// Comparable and regressed beyond tolerance.
+    Fail { baseline: f64, current: f64, ratio: f64 },
+    /// No comparable baseline; the reason is printed, the gate passes.
+    Skip { reason: String },
+}
+
+fn tasks_per_s(doc: &Json) -> Option<f64> {
+    doc.get("current")?.get("tasks_per_s")?.as_f64()
+}
+
+fn grid(doc: &Json) -> Option<&str> {
+    doc.get("grid")?.as_str()
+}
+
+fn is_report(doc: &Json) -> bool {
+    doc.get("schema").and_then(|s| s.as_str()) == Some("dithen-bench-report/v1")
+}
+
+/// Pure comparison over parsed reports (IO-free; unit-tested).
+pub fn check(baseline: &Json, current: &Json, tolerance: f64) -> Result<Gate> {
+    anyhow::ensure!(
+        tolerance > 0.0 && tolerance.is_finite(),
+        "tolerance must be a positive ratio (got {tolerance})"
+    );
+    anyhow::ensure!(is_report(current), "current report is not dithen-bench-report/v1");
+    let cur =
+        tasks_per_s(current).context("current report carries no measured current.tasks_per_s")?;
+    anyhow::ensure!(cur.is_finite() && cur > 0.0, "current tasks_per_s is not a positive number");
+    if !is_report(baseline) {
+        return Ok(Gate::Skip { reason: "baseline is not a dithen-bench-report/v1 payload".into() });
+    }
+    if baseline.get("status").and_then(|s| s.as_str()) == Some("pending-measurement") {
+        return Ok(Gate::Skip {
+            reason: "baseline is the pending-measurement placeholder (no history yet)".into(),
+        });
+    }
+    let base = match tasks_per_s(baseline) {
+        Some(b) if b.is_finite() && b > 0.0 => b,
+        _ => {
+            return Ok(Gate::Skip {
+                reason: "baseline carries no measured current.tasks_per_s".into(),
+            })
+        }
+    };
+    match (grid(baseline), grid(current)) {
+        (Some(bg), Some(cg)) if bg != cg => {
+            return Ok(Gate::Skip {
+                reason: format!("baseline grid '{bg}' != current grid '{cg}' (not comparable)"),
+            })
+        }
+        _ => {}
+    }
+    let ratio = cur / base;
+    if ratio < tolerance {
+        Ok(Gate::Fail { baseline: base, current: cur, ratio })
+    } else {
+        Ok(Gate::Pass { baseline: base, current: cur, ratio })
+    }
+}
+
+fn load(path: &str) -> Result<Json> {
+    let body =
+        std::fs::read_to_string(path).with_context(|| format!("reading bench report {path}"))?;
+    json::parse(&body).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))
+}
+
+/// File-level entry point; returns the process exit code.
+pub fn run(baseline_path: &str, current_path: &str, tolerance: f64) -> Result<i32> {
+    let current = load(current_path)?;
+    // an unreadable baseline is a skip (first run / expired artifact),
+    // an unreadable current report is an error (broken pipeline)
+    let gate = match load(baseline_path) {
+        Ok(baseline) => check(&baseline, &current, tolerance)?,
+        Err(e) => {
+            check(&Json::Null, &current, tolerance)?; // still validate current
+            Gate::Skip { reason: format!("baseline unreadable: {e:#}") }
+        }
+    };
+    match gate {
+        Gate::Pass { baseline, current, ratio } => {
+            println!(
+                "bench-check PASS: {current:.1} tasks/s vs baseline {baseline:.1} \
+                 ({:+.1} %, tolerance {:.0} %)",
+                100.0 * (ratio - 1.0),
+                100.0 * tolerance,
+            );
+            Ok(0)
+        }
+        Gate::Fail { baseline, current, ratio } => {
+            eprintln!(
+                "bench-check FAIL: {current:.1} tasks/s is {:.1} % of baseline {baseline:.1} \
+                 (tolerance {:.0} %) — sweep throughput regressed",
+                100.0 * ratio,
+                100.0 * tolerance,
+            );
+            Ok(1)
+        }
+        Gate::Skip { reason } => {
+            println!("bench-check SKIP (gate passes): {reason}");
+            Ok(0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(grid: &str, tps: f64) -> Json {
+        json::parse(&format!(
+            "{{\"schema\": \"dithen-bench-report/v1\", \"grid\": \"{grid}\", \
+              \"current\": {{\"tasks_per_s\": {tps}}}}}"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let base = report("cost-smoke", 1000.0);
+        // 15 % down on a 20 % budget: pass
+        let cur = report("cost-smoke", 850.0);
+        match check(&base, &cur, 0.8).unwrap() {
+            Gate::Pass { ratio, .. } => assert!((ratio - 0.85).abs() < 1e-9),
+            other => panic!("expected pass, got {other:?}"),
+        }
+        // improvements always pass
+        assert!(matches!(
+            check(&base, &report("cost-smoke", 5000.0), 0.8).unwrap(),
+            Gate::Pass { .. }
+        ));
+    }
+
+    #[test]
+    fn regression_beyond_tolerance_fails() {
+        let base = report("cost-smoke", 1000.0);
+        let cur = report("cost-smoke", 700.0);
+        match check(&base, &cur, 0.8).unwrap() {
+            Gate::Fail { ratio, .. } => assert!((ratio - 0.7).abs() < 1e-9),
+            other => panic!("expected fail, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn placeholder_baseline_skips() {
+        // the committed BENCH_PR1.json shape: right schema, null numbers
+        let base = json::parse(
+            "{\"schema\": \"dithen-bench-report/v1\", \"grid\": \"cost-default\", \
+              \"status\": \"pending-measurement\", \"current\": {\"tasks_per_s\": null}}",
+        )
+        .unwrap();
+        let cur = report("cost-smoke", 100.0);
+        assert!(matches!(check(&base, &cur, 0.8).unwrap(), Gate::Skip { .. }));
+    }
+
+    #[test]
+    fn null_baseline_numbers_skip_even_without_status() {
+        let base = json::parse(
+            "{\"schema\": \"dithen-bench-report/v1\", \"grid\": \"cost-smoke\", \
+              \"current\": {\"tasks_per_s\": null}}",
+        )
+        .unwrap();
+        assert!(matches!(
+            check(&base, &report("cost-smoke", 100.0), 0.8).unwrap(),
+            Gate::Skip { .. }
+        ));
+    }
+
+    #[test]
+    fn mismatched_grids_skip() {
+        let base = report("cost-default", 1000.0);
+        let cur = report("cost-smoke", 10.0);
+        match check(&base, &cur, 0.8).unwrap() {
+            Gate::Skip { reason } => assert!(reason.contains("not comparable")),
+            other => panic!("expected skip, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn broken_current_report_is_an_error_not_a_skip() {
+        let base = report("cost-smoke", 1000.0);
+        let no_schema = json::parse("{\"current\": {\"tasks_per_s\": 5.0}}").unwrap();
+        assert!(check(&base, &no_schema, 0.8).is_err());
+        let null_tps = json::parse(
+            "{\"schema\": \"dithen-bench-report/v1\", \"current\": {\"tasks_per_s\": null}}",
+        )
+        .unwrap();
+        assert!(check(&base, &null_tps, 0.8).is_err());
+        assert!(check(&base, &report("cost-smoke", 100.0), 0.0).is_err(), "zero tolerance");
+        assert!(check(&base, &report("cost-smoke", 100.0), f64::NAN).is_err());
+    }
+
+    #[test]
+    fn run_maps_gate_to_exit_codes() {
+        let dir = std::env::temp_dir().join(format!("dithen-bench-check-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = |name: &str, body: &str| {
+            let path = dir.join(name);
+            std::fs::write(&path, body).unwrap();
+            path.to_str().unwrap().to_string()
+        };
+        let base = p(
+            "base.json",
+            "{\"schema\": \"dithen-bench-report/v1\", \"grid\": \"g\", \
+              \"current\": {\"tasks_per_s\": 1000.0}}",
+        );
+        let good = p(
+            "good.json",
+            "{\"schema\": \"dithen-bench-report/v1\", \"grid\": \"g\", \
+              \"current\": {\"tasks_per_s\": 900.0}}",
+        );
+        let bad = p(
+            "bad.json",
+            "{\"schema\": \"dithen-bench-report/v1\", \"grid\": \"g\", \
+              \"current\": {\"tasks_per_s\": 100.0}}",
+        );
+        assert_eq!(run(&base, &good, 0.8).unwrap(), 0);
+        assert_eq!(run(&base, &bad, 0.8).unwrap(), 1);
+        // missing baseline file: skip, gate passes
+        let missing = dir.join("nope.json").to_str().unwrap().to_string();
+        assert_eq!(run(&missing, &good, 0.8).unwrap(), 0);
+        // missing *current* file: hard error
+        assert!(run(&base, &missing, 0.8).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

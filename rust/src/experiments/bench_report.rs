@@ -24,11 +24,12 @@ use std::time::Instant;
 use crate::config::Config;
 use crate::coordinator::PolicyKind;
 use crate::db::{legacy::LegacyTaskDb, TaskDb, TaskStatus};
+use crate::estimation::BankCache;
 use crate::platform::RunOpts;
 use crate::util::rng::Rng;
 use crate::workload::{App, WorkloadSpec};
 
-use super::parallel::{cost_grid, run_specs, RunSpec};
+use super::parallel::{cost_grid, run_specs_with_cache, RunSpec};
 
 /// Everything the report records.
 #[derive(Debug, Clone)]
@@ -42,6 +43,12 @@ pub struct BenchReport {
     pub db_tasks: usize,
     pub db_legacy_ops_per_s: f64,
     pub db_arena_ops_per_s: f64,
+    /// Bank-cache lookups served from a cached variant across both
+    /// sweep passes (sequential + parallel share one cache, like a
+    /// real multi-grid session).
+    pub cache_hits: u64,
+    /// Bank-cache lookups that resolved a backend from scratch.
+    pub cold_builds: u64,
 }
 
 impl BenchReport {
@@ -58,8 +65,26 @@ impl BenchReport {
         self.db_arena_ops_per_s / self.db_legacy_ops_per_s.max(1e-9)
     }
 
+    /// The tasks/s-by-thread-count series: the measured sweep
+    /// throughput at 1 thread and at the requested width (deduped when
+    /// the request *is* 1 thread). Cross-report tooling reads this to
+    /// track scaling, not just the endpoint.
+    pub fn sweep_series(&self) -> Vec<(usize, f64)> {
+        if self.threads <= 1 {
+            vec![(1, self.seq_tasks_per_s())]
+        } else {
+            vec![(1, self.seq_tasks_per_s()), (self.threads, self.par_tasks_per_s())]
+        }
+    }
+
     /// Serialize (no serde in the vendor set; the schema is flat).
     pub fn to_json(&self) -> String {
+        let series = self
+            .sweep_series()
+            .iter()
+            .map(|&(t, tps)| format!("{{\"threads\": {t}, \"tasks_per_s\": {tps:.1}}}"))
+            .collect::<Vec<_>>()
+            .join(", ");
         format!(
             "{{\n\
              \x20 \"schema\": \"dithen-bench-report/v1\",\n\
@@ -67,6 +92,8 @@ impl BenchReport {
              \x20 \"runs\": {runs},\n\
              \x20 \"threads\": {threads},\n\
              \x20 \"tasks_simulated_total\": {tasks},\n\
+             \x20 \"cache\": {{\"cache_hits\": {hits}, \"cold_builds\": {cold}}},\n\
+             \x20 \"sweep_tasks_per_s\": [{series}],\n\
              \x20 \"baseline\": {{\n\
              \x20   \"mode\": \"sequential-1-thread (pre-refactor harness had no parallel runner)\",\n\
              \x20   \"wall_s\": {sw:.3},\n\
@@ -89,6 +116,8 @@ impl BenchReport {
             grid = self.grid,
             runs = self.runs,
             threads = self.threads,
+            hits = self.cache_hits,
+            cold = self.cold_builds,
             dbt = self.db_tasks,
             tasks = self.tasks_total,
             sw = self.seq_wall_s,
@@ -223,15 +252,26 @@ pub fn run(cfg: &Config, threads: usize, out_path: &str, smoke: bool) -> anyhow:
     let runs = grid.len();
     let tasks_total: usize = grid.iter().map(|s| s.n_tasks()).sum();
 
+    // one dedicated cache across both passes, so the recorded hit/cold
+    // counts are attributable to exactly this bench run; warmed first
+    // so cold-build cost (XLA manifest parse + compile) lands in
+    // neither timed pass — otherwise it would all fall on the 1-thread
+    // baseline and inflate the reported speedup
+    let cache = BankCache::new();
+    for spec in &grid {
+        spec.scenario.bank_variant(&cache);
+    }
+
     eprintln!("bench-report: {runs} runs / {tasks_total} tasks, sequential baseline...");
     let t0 = Instant::now();
-    let seq = run_specs(&grid, 1)?;
+    let seq = run_specs_with_cache(&grid, 1, &cache)?;
     let seq_wall_s = t0.elapsed().as_secs_f64();
 
     eprintln!("bench-report: parallel x{threads}...");
     let t0 = Instant::now();
-    let par = run_specs(&grid, threads)?;
+    let par = run_specs_with_cache(&grid, threads, &cache)?;
     let par_wall_s = t0.elapsed().as_secs_f64();
+    let cache_stats = cache.stats();
 
     anyhow::ensure!(
         seq == par,
@@ -256,6 +296,8 @@ pub fn run(cfg: &Config, threads: usize, out_path: &str, smoke: bool) -> anyhow:
         db_tasks,
         db_legacy_ops_per_s,
         db_arena_ops_per_s,
+        cache_hits: cache_stats.hits,
+        cold_builds: cache_stats.cold_builds,
     };
     let json = report.to_json();
     if let Some(dir) = std::path::Path::new(out_path).parent() {
@@ -268,6 +310,7 @@ pub fn run(cfg: &Config, threads: usize, out_path: &str, smoke: bool) -> anyhow:
         "grid: {runs} runs / {tasks} tasks\n\
          sequential baseline: {sw:.2}s ({stp:.0} tasks/s)\n\
          parallel x{threads}:  {pw:.2}s ({ptp:.0} tasks/s, {spd:.2}x)\n\
+         bank cache: {cold} cold builds / {hits} hits across both passes\n\
          task-DB: arena {da:.2e} ops/s vs legacy {dl:.2e} ops/s ({dspd:.2}x)\n\
          wrote {out_path}\n",
         tasks = report.tasks_total,
@@ -280,6 +323,8 @@ pub fn run(cfg: &Config, threads: usize, out_path: &str, smoke: bool) -> anyhow:
         dl = report.db_legacy_ops_per_s,
         dspd = report.db_speedup(),
         threads = report.threads,
+        cold = report.cold_builds,
+        hits = report.cache_hits,
     );
     println!("{summary}");
     Ok(summary)
@@ -308,6 +353,8 @@ mod tests {
             db_tasks: 1000,
             db_legacy_ops_per_s: 1.0e6,
             db_arena_ops_per_s: 9.0e6,
+            cache_hits: 19,
+            cold_builds: 1,
         };
         let j = crate::util::json::parse(&r.to_json()).unwrap();
         assert_eq!(
@@ -315,6 +362,24 @@ mod tests {
             Some("dithen-bench-report/v1")
         );
         assert_eq!(j.get("tasks_simulated_total").unwrap().as_usize(), Some(12345));
+        // bank-cache observability (PR-4): hits/cold builds travel in
+        // the report, and the throughput series carries both measured
+        // thread counts
+        let cache = j.get("cache").unwrap();
+        assert_eq!(cache.get("cache_hits").unwrap().as_usize(), Some(19));
+        assert_eq!(cache.get("cold_builds").unwrap().as_usize(), Some(1));
+        let series = j.get("sweep_tasks_per_s").unwrap().as_arr().unwrap();
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].get("threads").unwrap().as_usize(), Some(1));
+        assert_eq!(series[1].get("threads").unwrap().as_usize(), Some(8));
+        assert!(
+            (series[0].get("tasks_per_s").unwrap().as_f64().unwrap() - r.seq_tasks_per_s()).abs()
+                < 0.1
+        );
+        assert!(
+            (series[1].get("tasks_per_s").unwrap().as_f64().unwrap() - r.par_tasks_per_s()).abs()
+                < 0.1
+        );
         let cur = j.get("current").unwrap();
         // the DB workload size must travel with the ops/s numbers so
         // cross-report comparisons know what was measured
@@ -325,5 +390,25 @@ mod tests {
         );
         assert!(cur.get("speedup_vs_baseline").unwrap().as_f64().unwrap() > 4.9);
         assert!(cur.get("db_speedup_vs_legacy").unwrap().as_f64().unwrap() > 8.9);
+    }
+
+    #[test]
+    fn single_thread_series_is_deduped() {
+        let r = BenchReport {
+            grid: "cost-smoke",
+            threads: 1,
+            runs: 4,
+            tasks_total: 100,
+            seq_wall_s: 1.0,
+            par_wall_s: 1.0,
+            db_tasks: 10,
+            db_legacy_ops_per_s: 1.0,
+            db_arena_ops_per_s: 1.0,
+            cache_hits: 3,
+            cold_builds: 1,
+        };
+        assert_eq!(r.sweep_series().len(), 1);
+        let j = crate::util::json::parse(&r.to_json()).unwrap();
+        assert_eq!(j.get("sweep_tasks_per_s").unwrap().as_arr().unwrap().len(), 1);
     }
 }

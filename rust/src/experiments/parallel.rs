@@ -27,7 +27,7 @@ use std::sync::Mutex;
 
 use crate::config::Config;
 use crate::coordinator::PolicyKind;
-use crate::estimation::EstimatorKind;
+use crate::estimation::{BankCache, EstimatorKind};
 use crate::metrics::RunMetrics;
 use crate::platform::{RunOpts, Scenario, ScenarioBuilder};
 use crate::workload::{paper_suite, WorkloadSpec};
@@ -56,9 +56,19 @@ impl RunSpec {
         RunSpec::new(label, Scenario::from_opts(cfg, suite, opts))
     }
 
-    /// Execute this cell (pure in its inputs).
+    /// Execute this cell (pure in its inputs) through the process-wide
+    /// bank cache.
     pub fn execute(&self) -> anyhow::Result<RunMetrics> {
         self.scenario.run()
+    }
+
+    /// Execute this cell resolving its estimator bank through an
+    /// explicit shared [`BankCache`] — the N cells of a grid that share
+    /// a (W, K, estimator, params) bank shape pay backend selection
+    /// once. Cached and uncached execution are bit-identical
+    /// (`estimation::cache` determinism pin).
+    pub fn execute_with_cache(&self, cache: &BankCache) -> anyhow::Result<RunMetrics> {
+        self.scenario.run_with_cache(cache)
     }
 
     /// Total tasks this cell simulates (throughput accounting).
@@ -74,9 +84,13 @@ pub fn default_threads() -> usize {
 
 /// Evaluate `f(0..n)` on a pool of `threads` scoped workers pulling
 /// indices from a shared atomic counter (work-stealing-lite: the
-/// counter is the one queue). Results come back **in index order**, so
-/// parallelism never changes observable output. `threads <= 1` runs
-/// inline with no pool.
+/// counter is the one queue). Results land in pre-sized **per-index
+/// slots**, so collection never serializes workers on a shared lock
+/// (the pre-PR-4 version funneled every result through one
+/// `Mutex<Vec>`): each slot's mutex is touched by exactly the one
+/// worker that claimed its index, making every lock acquisition
+/// uncontended, and index order holds by construction — no post-sort.
+/// `threads <= 1` runs inline with no pool.
 pub fn run_many<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -87,7 +101,7 @@ where
         return (0..n).map(f).collect();
     }
     let next = AtomicUsize::new(0);
-    let done: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
@@ -96,18 +110,34 @@ where
                     break;
                 }
                 let r = f(i);
-                done.lock().unwrap().push((i, r));
+                *slots[i].lock().unwrap() = Some(r);
             });
         }
     });
-    let mut v = done.into_inner().unwrap();
-    v.sort_by_key(|&(i, _)| i);
-    v.into_iter().map(|(_, r)| r).collect()
+    slots
+        .into_iter()
+        .map(|s| {
+            s.into_inner()
+                .unwrap()
+                .expect("every claimed index writes its slot before the scope joins")
+        })
+        .collect()
 }
 
-/// Run every spec of a grid, `threads`-wide; results in spec order.
+/// Run every spec of a grid, `threads`-wide, through the process-wide
+/// bank cache; results in spec order.
 pub fn run_specs(specs: &[RunSpec], threads: usize) -> anyhow::Result<Vec<RunMetrics>> {
-    run_many(specs.len(), threads, |i| specs[i].execute())
+    run_specs_with_cache(specs, threads, BankCache::global())
+}
+
+/// Run every spec of a grid, `threads`-wide, sharing one explicit
+/// [`BankCache`] across all cells; results in spec order.
+pub fn run_specs_with_cache(
+    specs: &[RunSpec],
+    threads: usize,
+    cache: &BankCache,
+) -> anyhow::Result<Vec<RunMetrics>> {
+    run_many(specs.len(), threads, |i| specs[i].execute_with_cache(cache))
         .into_iter()
         .collect()
 }
@@ -204,9 +234,12 @@ pub fn run_sweep(name: &str, cfg: &Config, threads: usize) -> anyhow::Result<Str
         "fleet" => super::heterogeneous::grid(cfg, 6, 100, 12 * 3600),
         other => anyhow::bail!("unknown sweep '{other}' (use cost | estimators | seeds | fleet)"),
     };
+    let cache = BankCache::global();
+    let cache_before = cache.stats();
     let t0 = std::time::Instant::now();
     let results = run_specs(&specs, threads)?;
     let wall = t0.elapsed().as_secs_f64();
+    let cache_after = cache.stats();
     let mut table = crate::util::table::Table::new(vec![
         "run",
         "cost ($)",
@@ -226,9 +259,12 @@ pub fn run_sweep(name: &str, cfg: &Config, threads: usize) -> anyhow::Result<Str
         ]);
     }
     let summary = format!(
-        "{} runs / {tasks} simulated tasks in {wall:.2}s on {threads} threads ({:.0} tasks/s)\n",
+        "{} runs / {tasks} simulated tasks in {wall:.2}s on {threads} threads ({:.0} tasks/s) | \
+         bank cache: {} cold builds / {} hits\n",
         specs.len(),
         tasks as f64 / wall.max(1e-9),
+        cache_after.cold_builds - cache_before.cold_builds,
+        cache_after.hits - cache_before.hits,
     );
     let out = format!("{}{summary}", table.render());
     println!("{out}");
@@ -285,17 +321,65 @@ mod tests {
         assert_eq!(seq, par, "thread count changed simulation results");
     }
 
+    /// Cache-contention pin: 8 workers over cells that all share one
+    /// (W, K, estimator, params) bank shape — every cell after the
+    /// first resolves its bank from the shared cache, concurrently —
+    /// must produce exactly the sequential results.
+    #[test]
+    fn contended_cache_is_thread_count_invariant() {
+        let specs = tiny_specs(8); // same suite shape per cell => one variant
+        let seq_cache = BankCache::new();
+        let seq = run_specs_with_cache(&specs, 1, &seq_cache).unwrap();
+        let par_cache = BankCache::new();
+        let par = run_specs_with_cache(&specs, 8, &par_cache).unwrap();
+        assert_eq!(seq, par, "shared bank cache changed simulation results");
+        for (name, cache) in [("sequential", &seq_cache), ("parallel", &par_cache)] {
+            let s = cache.stats();
+            assert_eq!(s.cold_builds, 1, "{name}: cells share one bank shape");
+            assert_eq!(s.hits, specs.len() as u64 - 1, "{name}: all later cells must hit");
+        }
+    }
+
+    fn assert_labels_unique(specs: &[RunSpec]) {
+        let mut labels: Vec<&str> = specs.iter().map(|s| s.label.as_str()).collect();
+        labels.sort_unstable();
+        let n = labels.len();
+        labels.dedup();
+        assert_eq!(labels.len(), n, "duplicate sweep labels");
+    }
+
+    /// Mirror of `grids_are_well_formed` for the heterogeneous fleet
+    /// grid (`dithen sweep fleet`): labels unique, every cell simulates
+    /// work, traces stay off in sweeps.
+    #[test]
+    fn fleet_grid_is_well_formed() {
+        let cfg = Config::paper_defaults();
+        let g = crate::experiments::heterogeneous::grid(&cfg, 3, 10, 3600);
+        assert!(!g.is_empty());
+        assert_labels_unique(&g);
+        assert!(g.iter().all(|s| s.n_tasks() > 0));
+        assert!(g.iter().all(|s| !s.scenario.record_traces));
+        // every cell must survive scenario validation (the mixed+bids
+        // cell carries the bids reclaim-pools requires)
+        for s in &g {
+            s.scenario.validate().unwrap_or_else(|e| panic!("{}: {e}", s.label));
+        }
+    }
+
     #[test]
     fn grids_are_well_formed() {
         let cfg = Config::paper_defaults();
         let g = cost_grid(&cfg);
         assert_eq!(g.len(), 10); // 5 policies x 2 TTCs
+        assert_labels_unique(&g);
         assert!(g.iter().all(|s| s.n_tasks() > 0));
         // sweeps never read traces; recording stays off (perf)
         assert!(g.iter().all(|s| !s.scenario.record_traces));
         assert_eq!(estimator_grid(&cfg).len(), 3);
+        assert_labels_unique(&estimator_grid(&cfg));
         let seeds = seed_grid(&cfg, 4);
         assert_eq!(seeds.len(), 4);
+        assert_labels_unique(&seeds);
         // per-run seeds are distinct and deterministic
         let s: Vec<u64> = seeds.iter().map(|r| r.scenario.cfg.seed).collect();
         assert_eq!(s, vec![cfg.seed, cfg.seed + 1, cfg.seed + 2, cfg.seed + 3]);

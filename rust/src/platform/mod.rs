@@ -68,7 +68,7 @@ use crate::coordinator::policy::{PolicyKind, ScalingPolicy};
 use crate::coordinator::Tracker;
 use crate::db::TaskDb;
 use crate::estimation::{
-    AdHoc, Arma, Bank, BankParams, DeviationDetector, EstimatorKind, SlopeDetector,
+    AdHoc, Arma, Bank, BankCache, DeviationDetector, EstimatorKind, SlopeDetector,
 };
 use crate::lci::Chunk;
 use crate::metrics::{RunMetrics, WorkloadOutcome};
@@ -251,8 +251,20 @@ impl Platform {
         Platform::from_scenario(Scenario::from_opts(cfg, specs, opts))
     }
 
-    /// Assemble the platform a scenario describes.
+    /// Assemble the platform a scenario describes, resolving its
+    /// estimator bank through the process-wide [`BankCache`].
     pub fn from_scenario(scn: Scenario) -> Platform {
+        Platform::from_scenario_with_cache(scn, BankCache::global())
+    }
+
+    /// Assemble the platform a scenario describes, resolving its
+    /// estimator bank through `cache` — sweep cells sharing a
+    /// (W, K, estimator, params) shape pay XLA executable selection
+    /// once (PR-4; `estimation::cache` pins cached == uncached).
+    pub fn from_scenario_with_cache(scn: Scenario, cache: &BankCache) -> Platform {
+        // the one bank-variant request (shared with
+        // Scenario::bank_variant, so a pre-warmed cache is always hit)
+        let bank = scn.bank_variant(cache).instantiate();
         let Scenario {
             cfg,
             specs,
@@ -266,16 +278,7 @@ impl Platform {
             fault,
             record_traces,
         } = scn;
-        let n_w = specs.len().max(1);
         let k_max = specs.iter().map(|s| s.n_types).max().unwrap_or(1).max(1);
-        let params = BankParams::from_config(&cfg.control);
-        let (bank, _backend) = Bank::with_best_backend(
-            n_w,
-            k_max,
-            params,
-            std::path::Path::new(&cfg.artifacts_dir),
-            cfg.use_xla,
-        );
         let horizon_h = (horizon_s / 3600 + 2) as usize;
         // a scenario-level SpotReclamation bid doubles as the fulfilment
         // gate on every bid-less pool (a pool's own bid always wins; the

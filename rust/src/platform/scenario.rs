@@ -88,10 +88,41 @@ impl Scenario {
     }
 
     /// Execute the scenario (pure in its inputs; the scenario itself is
-    /// reusable — sweep cells call this from worker threads).
+    /// reusable — sweep cells call this from worker threads). Bank
+    /// construction goes through the process-wide
+    /// [`crate::estimation::BankCache`].
     pub fn run(&self) -> Result<RunMetrics> {
+        self.run_with_cache(crate::estimation::BankCache::global())
+    }
+
+    /// Execute the scenario resolving its estimator bank through an
+    /// explicit cache (sweep harnesses pass one shared cache across all
+    /// cells; tests pass a fresh one for attributable hit counts).
+    pub fn run_with_cache(&self, cache: &crate::estimation::BankCache) -> Result<RunMetrics> {
         self.validate()?;
-        Platform::from_scenario(self.clone()).run()
+        Platform::from_scenario_with_cache(self.clone(), cache).run()
+    }
+
+    /// Resolve this scenario's bank variant in `cache` — the *exact*
+    /// request platform assembly makes (assembly calls this method, so
+    /// the two can never drift). Calling it ahead of a timed sweep
+    /// warms the cache, keeping cold-build cost (XLA manifest parse +
+    /// executable compilation) out of the measured passes.
+    pub fn bank_variant(
+        &self,
+        cache: &crate::estimation::BankCache,
+    ) -> std::sync::Arc<crate::estimation::BankVariant> {
+        let n_w = self.specs.len().max(1);
+        let k_max = self.specs.iter().map(|s| s.n_types).max().unwrap_or(1).max(1);
+        let params = crate::estimation::BankParams::from_config(&self.cfg.control);
+        cache.variant(
+            n_w,
+            k_max,
+            params,
+            self.estimator,
+            std::path::Path::new(&self.cfg.artifacts_dir),
+            self.cfg.use_xla,
+        )
     }
 
     /// Reject configurations that would otherwise panic deep inside

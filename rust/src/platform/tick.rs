@@ -67,7 +67,10 @@ impl Platform {
             if st.arrived_at > now || matches!(st.phase, WlPhase::Done) || self.arrived <= w {
                 continue;
             }
-            let remaining = self.db.remaining_slice(w);
+            // resolve the workload's DB shard once; every m_{w,k} /
+            // measurement read below is then shard-local (PR-4)
+            let shard = self.db.shard(w);
+            let remaining = shard.map(|s| s.remaining_slice()).unwrap_or(&[]);
             let dl = st.deadline.unwrap_or(now + 3600);
             // safety margin of one monitoring interval: allocation is
             // interval-quantized, so pacing against the raw deadline
@@ -79,7 +82,7 @@ impl Platform {
                 let slot = w * self.k_max + ki;
                 sc.slot_mask[idx] = 1.0;
                 sc.m_rem[idx] = remaining.get(ki).copied().unwrap_or(0) as f32;
-                let log = self.db.measurements(w, ki);
+                let log = shard.map(|s| s.measurements(ki)).unwrap_or(&[]);
                 let cursor = self.meas_cursor[slot];
                 if log.len() > cursor {
                     let fresh = &log[cursor..];

@@ -208,6 +208,15 @@ impl Engine {
         &self.manifest
     }
 
+    /// The already-compiled executable covering (needed_w, needed_k),
+    /// if any — the read-only fast path shared-engine banks take so
+    /// concurrent executions need no exclusive lock (see
+    /// [`crate::estimation::bank::SharedEngine`]).
+    pub fn compiled(&self, needed_w: usize, needed_k: usize) -> Option<&Executable> {
+        let v = self.manifest.pick(needed_w, needed_k)?;
+        self.compiled.get(&(v.w, v.k))
+    }
+
     /// Get (compiling on first use) the smallest executable covering
     /// (needed_w, needed_k).
     pub fn executable(&mut self, needed_w: usize, needed_k: usize) -> Result<&Executable> {

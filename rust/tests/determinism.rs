@@ -9,7 +9,8 @@
 
 use dithen::cloud::FleetSpec;
 use dithen::config::Config;
-use dithen::experiments::parallel::{run_specs, RunSpec};
+use dithen::estimation::BankCache;
+use dithen::experiments::parallel::{run_specs, run_specs_with_cache, RunSpec};
 use dithen::platform::{
     run_experiment, ArrivalProcess, FaultSpec, RunOpts, Scenario, ScenarioBuilder,
 };
@@ -124,6 +125,36 @@ fn mixed_fleet_partial_revocation_is_bit_identical_across_runs() {
         assert_eq!(a.reclamations_by_pool, b.reclamations_by_pool);
         assert_eq!(a.unfulfilled_requests, b.unfulfilled_requests);
     }
+}
+
+/// PR-4 bank-cache determinism pin at the whole-run level: the same
+/// grid through a cold private cache (every cell cold-builds its
+/// variant — the pre-cache behaviour), through the *same* cache again
+/// (every cell hits), and through the process-global cache must be
+/// bit-identical. The grid mixes 1- and 2-workload suites so several
+/// (W, K) variants coexist in one cache.
+#[test]
+fn bank_cache_reuse_does_not_change_results() {
+    let mut specs: Vec<RunSpec> = vec![];
+    for (i, n_wl) in [1usize, 2, 1, 2].into_iter().enumerate() {
+        let seed = 31 + i as u64;
+        specs.push(RunSpec::from_opts(
+            format!("cache/{i}"),
+            cfg(seed),
+            suite(seed, n_wl, 25),
+            opts(),
+        ));
+    }
+    let cache = BankCache::new();
+    let cold = run_specs_with_cache(&specs, 2, &cache).unwrap();
+    let cold_stats = cache.stats();
+    assert_eq!(cold_stats.cold_builds, 2, "two distinct (W, K) shapes in the grid");
+    let warm = run_specs_with_cache(&specs, 2, &cache).unwrap();
+    assert_eq!(cold, warm, "a cache hit changed simulation results");
+    assert_eq!(cache.stats().cold_builds, cold_stats.cold_builds, "warm pass must not rebuild");
+    assert!(cache.stats().hits > cold_stats.hits);
+    let global = run_specs(&specs, 2).unwrap();
+    assert_eq!(cold, global, "global-cache run diverged from private-cache run");
 }
 
 #[test]
