@@ -8,8 +8,8 @@
 
 mod common;
 
-use dithen::estimation::{Backend, Bank, BankParams, TickInputs};
-use dithen::runtime::Engine;
+use dithen::estimation::{Backend, Bank, BankParams, BatchScratch, TickInputs};
+use dithen::runtime::{Engine, StepOutputs};
 use dithen::util::rng::Rng;
 
 fn params() -> BankParams {
@@ -60,5 +60,65 @@ fn main() {
         } else {
             eprintln!("artifacts missing; skipping XLA bench for {w}x{k}");
         }
+    }
+
+    // PR-5: the lockstep batch path vs N per-cell steps, per batch
+    // width — one sweep tick over N same-shape cells either as N
+    // `step_into` calls or as gather → one `step_batch_into` → scatter
+    // on the padded [N, W*K] scratch. Native backend (the grid-default
+    // configuration); rust/BENCHMARKS.md "PR-5 update" records when
+    // batching wins.
+    let (w, k) = (32usize, 4usize);
+    for &n in &[4usize, 16, 64] {
+        let mut cells = Vec::with_capacity(n);
+        for _ in 0..n {
+            cells.push(inputs(w, k, &mut rng));
+        }
+        let mut looped: Vec<Bank> =
+            (0..n).map(|_| Bank::new(w, k, params(), Backend::Native)).collect();
+        let mut batched: Vec<Bank> =
+            (0..n).map(|_| Bank::new(w, k, params(), Backend::Native)).collect();
+        let mut outs: Vec<StepOutputs> = (0..n).map(|_| StepOutputs::default()).collect();
+        let template = Bank::new(w, k, params(), Backend::Native);
+        let mut batch = BatchScratch::default();
+        common::bench(&format!("bank_batch/looped/{n}x{w}x{k}"), 20, 500, || {
+            for (i, (slot, meas, bt, m, d)) in cells.iter().enumerate() {
+                looped[i]
+                    .step_into(
+                        &TickInputs {
+                            b_tilde: bt,
+                            meas_mask: meas,
+                            m_rem: m,
+                            slot_mask: slot,
+                            d,
+                            n_tot: 10.0,
+                        },
+                        &mut outs[i],
+                    )
+                    .unwrap();
+            }
+        });
+        common::bench(&format!("bank_batch/lockstep/{n}x{w}x{k}"), 20, 500, || {
+            batch.begin(n, w, k);
+            for (i, (slot, meas, bt, m, d)) in cells.iter().enumerate() {
+                batch
+                    .gather(
+                        &batched[i],
+                        &TickInputs {
+                            b_tilde: bt,
+                            meas_mask: meas,
+                            m_rem: m,
+                            slot_mask: slot,
+                            d,
+                            n_tot: 10.0,
+                        },
+                    )
+                    .unwrap();
+            }
+            template.step_batch_into(&mut batch).unwrap();
+            for (i, bank) in batched.iter_mut().enumerate() {
+                batch.scatter(i, bank, &mut outs[i]);
+            }
+        });
     }
 }

@@ -40,7 +40,8 @@ COMMANDS:
     repro <exp|all>   regenerate a paper table/figure (fig5..fig12, table2..table5)
     run               run the platform on the 30-workload paper suite
     scenario          run a composed scenario: pluggable backend, arrivals, faults
-    sweep <grid>      run an experiment grid across cores: cost | estimators | seeds | fleet
+    sweep <grid>      run an experiment grid across cores:
+                      cost | estimators | seeds | fleet | smoke
     bench-report      measure end-to-end tasks/s + DB ops/s, write a JSON report
     bench-check       regression gate: exit 1 if --current tasks/s < tolerance x --baseline
     list              list experiment ids
@@ -54,7 +55,11 @@ OPTIONS:
     --ttc <seconds>        fixed per-workload TTC (0 = best effort)
     --seed <n>             master seed
     --native               force the native estimator bank (skip XLA)
-    --threads <n>          worker threads for sweep/bench-report (default: cores)
+    --threads <n[,n..]>    worker threads (default: cores); bench-report takes a
+                           comma list and measures one pass per width (scaling
+                           curve), sweep uses the max
+    --batched              sweep: lockstep batched executor (one padded bank
+                           execution across same-shape cells; bit-identical)
     --out <file>           bench-report output path (default: BENCH_PR1.json)
     --smoke                bench-report/scenario: tiny CI-sized run
     --baseline <file>      bench-check: the reference bench-report JSON
@@ -88,7 +93,11 @@ pub struct Cli {
     pub ttc: Option<u64>,
     pub seed: Option<u64>,
     pub native: bool,
-    pub threads: Option<usize>,
+    /// `--threads` accepts a comma list (`--threads 1,2,4,8`):
+    /// bench-report measures one pass per width (a scaling curve);
+    /// sweep, the one single-width consumer, uses the max.
+    pub threads: Option<Vec<usize>>,
+    pub batched: bool,
     pub out: Option<String>,
     pub smoke: bool,
     pub baseline: Option<String>,
@@ -144,9 +153,9 @@ pub fn parse(args: &[String]) -> Result<Cli, CliError> {
             "--native" => cli.native = true,
             "--threads" => {
                 let v = need_value(&mut it, "--threads")?;
-                cli.threads =
-                    Some(v.parse().map_err(|_| CliError(format!("bad --threads '{v}'")))?);
+                cli.threads = Some(parse_threads(&v)?);
             }
+            "--batched" => cli.batched = true,
             "--out" => cli.out = Some(need_value(&mut it, "--out")?),
             "--smoke" => cli.smoke = true,
             "--baseline" => cli.baseline = Some(need_value(&mut it, "--baseline")?),
@@ -184,6 +193,25 @@ pub fn parse(args: &[String]) -> Result<Cli, CliError> {
         }
     }
     Ok(cli)
+}
+
+/// Parse `--threads`: a single width or a comma list of widths
+/// (`1,2,4,8`), each >= 1.
+pub fn parse_threads(s: &str) -> Result<Vec<usize>, CliError> {
+    let widths: Result<Vec<usize>, CliError> = s
+        .split(',')
+        .map(|t| {
+            let t = t.trim();
+            t.parse::<usize>().map_err(|_| CliError(format!("bad --threads value '{t}'")))
+        })
+        .collect();
+    let widths = widths?;
+    // split(',') always yields at least one token (an empty one fails
+    // the parse above), so only the zero-width case remains to reject
+    if widths.contains(&0) {
+        return Err(CliError("--threads widths must be >= 1".into()));
+    }
+    Ok(widths)
 }
 
 pub fn parse_policy(s: &str) -> Result<PolicyKind, CliError> {
@@ -475,17 +503,21 @@ pub fn main_with(args: &[String]) -> anyhow::Result<i32> {
         }
         "sweep" => {
             let grid = cli.arg.as_deref().unwrap_or("cost");
+            // single-width consumer: a comma list collapses to its max
             let threads = cli
                 .threads
+                .as_ref()
+                .and_then(|v| v.iter().copied().max())
                 .unwrap_or_else(crate::experiments::parallel::default_threads);
-            crate::experiments::parallel::run_sweep(grid, &cfg, threads)?;
+            crate::experiments::parallel::run_sweep(grid, &cfg, threads, cli.batched)?;
         }
         "bench-report" => {
             let threads = cli
                 .threads
-                .unwrap_or_else(crate::experiments::parallel::default_threads);
+                .clone()
+                .unwrap_or_else(|| vec![crate::experiments::parallel::default_threads()]);
             let out = cli.out.as_deref().unwrap_or("BENCH_PR1.json");
-            crate::experiments::bench_report::run(&cfg, threads, out, cli.smoke)?;
+            crate::experiments::bench_report::run(&cfg, &threads, out, cli.smoke)?;
         }
         "bench-check" => {
             let baseline = cli
@@ -543,12 +575,28 @@ mod tests {
         let c = parse(&argv("sweep cost --threads 8")).unwrap();
         assert_eq!(c.command, "sweep");
         assert_eq!(c.arg.as_deref(), Some("cost"));
-        assert_eq!(c.threads, Some(8));
+        assert_eq!(c.threads, Some(vec![8]));
+        assert!(!c.batched);
+        let c = parse(&argv("sweep smoke --batched --threads 2")).unwrap();
+        assert!(c.batched);
+        assert_eq!(c.arg.as_deref(), Some("smoke"));
         let c = parse(&argv("bench-report --out out/bench.json --threads 2 --smoke")).unwrap();
         assert_eq!(c.command, "bench-report");
         assert_eq!(c.out.as_deref(), Some("out/bench.json"));
         assert!(c.smoke);
         assert!(parse(&argv("bench-report --threads two")).is_err());
+    }
+
+    #[test]
+    fn threads_accepts_a_comma_list() {
+        let c = parse(&argv("bench-report --threads 1,2,4,8")).unwrap();
+        assert_eq!(c.threads, Some(vec![1, 2, 4, 8]));
+        assert_eq!(parse_threads("4").unwrap(), vec![4]);
+        assert_eq!(parse_threads(" 1, 2 ").unwrap(), vec![1, 2]);
+        assert!(parse_threads("").is_err());
+        assert!(parse_threads("1,").is_err());
+        assert!(parse_threads("1,zero").is_err());
+        assert!(parse_threads("0").is_err(), "zero-width pools are rejected");
     }
 
     #[test]

@@ -52,6 +52,23 @@ impl BankParams {
             n_w_max: c.n_w_max as f32,
         }
     }
+
+    /// The artifact's parameter vector for one execution — the single
+    /// encoding of PARAMS_LAYOUT (model.py order) shared by the
+    /// per-cell and the batched XLA paths, so a layout change can never
+    /// drift between them.
+    fn to_array(self, n_tot: f32) -> [f32; N_PARAMS] {
+        [
+            self.sigma_z2,
+            self.sigma_v2,
+            n_tot,
+            self.alpha,
+            self.beta,
+            self.n_min,
+            self.n_max,
+            self.n_w_max,
+        ]
+    }
 }
 
 /// Which compute backend the bank uses. `Clone` hands out another
@@ -69,6 +86,28 @@ impl Backend {
     pub fn xla(engine: Engine) -> Backend {
         Backend::Xla(Arc::new(RwLock::new(engine)))
     }
+}
+
+/// Acquire a read guard on `engine` with the (w, k) executable
+/// compiled — the one copy of the compile-resolution protocol shared
+/// by the per-cell and the batched step: fast path is a read lock on
+/// an already-compiled shape; otherwise a write lock compiles it once
+/// and the loop re-checks (a racing compiler's work is observed, never
+/// repeated).
+fn compiled_read_guard(
+    engine: &SharedEngine,
+    w: usize,
+    k: usize,
+) -> Result<std::sync::RwLockReadGuard<'_, Engine>> {
+    Ok(loop {
+        let g = engine.read().expect("bank engine lock poisoned");
+        if g.compiled(w, k).is_some() {
+            break g;
+        }
+        drop(g);
+        let mut g = engine.write().expect("bank engine lock poisoned");
+        g.executable(w, k)?;
+    })
 }
 
 impl std::fmt::Debug for Backend {
@@ -177,32 +216,11 @@ impl Bank {
             Backend::Xla(engine) => {
                 // fast path: the shape is compiled — execute under a
                 // read lock so concurrent same-engine banks don't
-                // serialize. The write lock is taken once per shape to
-                // compile, then re-checked through the loop.
-                let guard = loop {
-                    let g = engine.read().expect("bank engine lock poisoned");
-                    if g.compiled(self.w, self.k).is_some() {
-                        break g;
-                    }
-                    drop(g);
-                    let mut g = engine.write().expect("bank engine lock poisoned");
-                    g.executable(self.w, self.k)?;
-                };
+                // serialize (see `compiled_read_guard`).
+                let guard = compiled_read_guard(engine, self.w, self.k)?;
                 let exe = guard
                     .compiled(self.w, self.k)
-                    .expect("executable compiled under the write lock above");
-                let params = [
-                    // must match PARAMS_LAYOUT in model.py
-                    self.params.sigma_z2,
-                    self.params.sigma_v2,
-                    inp.n_tot,
-                    self.params.alpha,
-                    self.params.beta,
-                    self.params.n_min,
-                    self.params.n_max,
-                    self.params.n_w_max,
-                ];
-                debug_assert_eq!(params.len(), N_PARAMS);
+                    .expect("executable compiled by compiled_read_guard");
                 *out = exe.run(&StepInputs {
                     b_hat: &self.b_hat,
                     pi: &self.pi,
@@ -211,13 +229,240 @@ impl Bank {
                     m_rem: inp.m_rem,
                     slot_mask: inp.slot_mask,
                     d: inp.d,
-                    params,
+                    params: self.params.to_array(inp.n_tot),
                 })?;
             }
         }
         self.b_hat.copy_from_slice(&out.b_hat);
         self.pi.copy_from_slice(&out.pi);
         Ok(())
+    }
+
+    /// One lockstep batch step: advance every lane gathered into
+    /// `batch` — all cells of one (W, K) bank shape — through a single
+    /// call, instead of one `step_into` per cell (PR-5; see
+    /// [`BatchScratch`] for the layout). `self` is the *template* bank
+    /// of the batch: it contributes the shape, the params and the
+    /// backend (for XLA, the shared engine); per-lane estimator state
+    /// travels in the batch scratch, gathered from and scattered back
+    /// to each cell's own bank.
+    ///
+    /// Backends:
+    /// * **Native** — the padded lanes are processed back-to-back
+    ///   through the one [`native_step_slices`] kernel, so the batched
+    ///   path is bit-identical to N per-cell `step_into` calls by
+    ///   construction (and the contiguous `[N, W*K]` layout keeps the
+    ///   whole batch's working set cache-resident across lanes).
+    /// * **XLA** — the engine read lock is taken **once** for the whole
+    ///   batch (amortizing the per-step lock acquisition and executable
+    ///   lookup of the per-cell path) and each lane runs the compiled
+    ///   (W, K) executable. The lanes are *not* row-concatenated into
+    ///   one [N·W, K] execution: the (11)–(14) reductions (n*, the
+    ///   rate rescale) sum over **all** rows of an execution, so
+    ///   concatenation would couple independent cells through n* — a
+    ///   genuine single-dispatch batch needs a batch-dimension
+    ///   artifact variant ([N, W, K] inputs, per-cell reductions,
+    ///   n_tot[N] params) from python/compile, which slots in behind
+    ///   this same call once the manifest carries one.
+    pub fn step_batch_into(&self, batch: &mut BatchScratch) -> Result<()> {
+        anyhow::ensure!(
+            batch.w == self.w && batch.k == self.k,
+            "batch shape ({}, {}) does not match template bank ({}, {})",
+            batch.w,
+            batch.k,
+            self.w,
+            self.k
+        );
+        let wk = self.w * self.k;
+        let (w, k, n) = (batch.w, batch.k, batch.n);
+        match &self.backend {
+            Backend::Native => {
+                for lane in 0..n {
+                    let inp = TickInputs {
+                        b_tilde: &batch.b_tilde[lane * wk..][..wk],
+                        meas_mask: &batch.meas_mask[lane * wk..][..wk],
+                        m_rem: &batch.m_rem[lane * wk..][..wk],
+                        slot_mask: &batch.slot_mask[lane * wk..][..wk],
+                        d: &batch.d[lane * w..][..w],
+                        n_tot: batch.n_tot[lane],
+                    };
+                    let (n_star, n_next) = native_step_slices(
+                        w,
+                        k,
+                        &batch.b_hat[lane * wk..][..wk],
+                        &batch.pi[lane * wk..][..wk],
+                        &inp,
+                        &self.params,
+                        SliceOutputs {
+                            b_hat: &mut batch.out_b_hat[lane * wk..][..wk],
+                            pi: &mut batch.out_pi[lane * wk..][..wk],
+                            r: &mut batch.out_r[lane * w..][..w],
+                            s: &mut batch.out_s[lane * w..][..w],
+                        },
+                    );
+                    batch.out_n_star[lane] = n_star;
+                    batch.out_n_next[lane] = n_next;
+                }
+            }
+            Backend::Xla(engine) => {
+                // one read-lock acquisition for the whole batch (the
+                // same compile-resolution protocol as step_into)
+                let guard = compiled_read_guard(engine, w, k)?;
+                let exe = guard
+                    .compiled(w, k)
+                    .expect("executable compiled by compiled_read_guard");
+                for lane in 0..n {
+                    let params = self.params.to_array(batch.n_tot[lane]);
+                    let o = exe.run(&StepInputs {
+                        b_hat: &batch.b_hat[lane * wk..][..wk],
+                        pi: &batch.pi[lane * wk..][..wk],
+                        b_tilde: &batch.b_tilde[lane * wk..][..wk],
+                        meas_mask: &batch.meas_mask[lane * wk..][..wk],
+                        m_rem: &batch.m_rem[lane * wk..][..wk],
+                        slot_mask: &batch.slot_mask[lane * wk..][..wk],
+                        d: &batch.d[lane * w..][..w],
+                        params,
+                    })?;
+                    batch.out_b_hat[lane * wk..][..wk].copy_from_slice(&o.b_hat);
+                    batch.out_pi[lane * wk..][..wk].copy_from_slice(&o.pi);
+                    batch.out_r[lane * w..][..w].copy_from_slice(&o.r);
+                    batch.out_s[lane * w..][..w].copy_from_slice(&o.s);
+                    batch.out_n_star[lane] = o.n_star;
+                    batch.out_n_next[lane] = o.n_next;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Padded gather/scatter scratch for one lockstep batch of same-shape
+/// cells (PR-5): per-lane bank state and tick inputs land in dense
+/// row-major `[N, W*K]` / `[N, W]` / `[N]` arrays, one
+/// [`Bank::step_batch_into`] advances every lane, and per-lane outputs
+/// scatter back into each cell's own [`Bank`] / `StepOutputs`.
+///
+/// Sized once per (capacity, W, K) by [`BatchScratch::begin`] and then
+/// only refilled — the steady-state gather → step → scatter round
+/// performs **zero heap allocations** (pinned alongside the per-cell
+/// contract in `tests/alloc_steady_state.rs`).
+#[derive(Debug, Default)]
+pub struct BatchScratch {
+    /// Lanes gathered since the last `begin`.
+    n: usize,
+    /// Lane capacity the buffers are sized for.
+    cap: usize,
+    w: usize,
+    k: usize,
+    // per-lane persistent state gathered from each cell's bank
+    b_hat: Vec<f32>,
+    pi: Vec<f32>,
+    // per-lane tick inputs
+    b_tilde: Vec<f32>,
+    meas_mask: Vec<f32>,
+    m_rem: Vec<f32>,
+    slot_mask: Vec<f32>,
+    d: Vec<f32>,
+    n_tot: Vec<f32>,
+    // per-lane step outputs (filled by `Bank::step_batch_into`)
+    out_b_hat: Vec<f32>,
+    out_pi: Vec<f32>,
+    out_r: Vec<f32>,
+    out_s: Vec<f32>,
+    out_n_star: Vec<f32>,
+    out_n_next: Vec<f32>,
+}
+
+impl BatchScratch {
+    /// Start a new lockstep round: size every buffer for up to `cap`
+    /// lanes of shape (w, k) and reset the lane count. Re-sizing to the
+    /// shape already held is a no-op (no allocation).
+    pub fn begin(&mut self, cap: usize, w: usize, k: usize) {
+        let wk = w * k;
+        self.b_hat.resize(cap * wk, 0.0);
+        self.pi.resize(cap * wk, 0.0);
+        self.b_tilde.resize(cap * wk, 0.0);
+        self.meas_mask.resize(cap * wk, 0.0);
+        self.m_rem.resize(cap * wk, 0.0);
+        self.slot_mask.resize(cap * wk, 0.0);
+        self.d.resize(cap * w, 0.0);
+        self.n_tot.resize(cap, 0.0);
+        self.out_b_hat.resize(cap * wk, 0.0);
+        self.out_pi.resize(cap * wk, 0.0);
+        self.out_r.resize(cap * w, 0.0);
+        self.out_s.resize(cap * w, 0.0);
+        self.out_n_star.resize(cap, 0.0);
+        self.out_n_next.resize(cap, 0.0);
+        self.cap = cap;
+        self.w = w;
+        self.k = k;
+        self.n = 0;
+    }
+
+    /// Gather one cell into the next free lane: its bank's persistent
+    /// `b_hat`/`pi` plus this tick's inputs. Returns the lane index.
+    /// Input sizes are validated exactly like [`Bank::step_into`].
+    pub fn gather(&mut self, bank: &Bank, inp: &TickInputs) -> Result<usize> {
+        anyhow::ensure!(
+            bank.w == self.w && bank.k == self.k,
+            "cell bank ({}, {}) does not match batch shape ({}, {})",
+            bank.w,
+            bank.k,
+            self.w,
+            self.k
+        );
+        anyhow::ensure!(self.n < self.cap, "batch is full ({} lanes)", self.cap);
+        let wk = self.w * self.k;
+        anyhow::ensure!(inp.b_tilde.len() == wk, "b_tilde size");
+        anyhow::ensure!(inp.meas_mask.len() == wk, "meas_mask size");
+        anyhow::ensure!(inp.m_rem.len() == wk, "m_rem size");
+        anyhow::ensure!(inp.slot_mask.len() == wk, "slot_mask size");
+        anyhow::ensure!(inp.d.len() == self.w, "d size");
+        let lane = self.n;
+        self.b_hat[lane * wk..][..wk].copy_from_slice(&bank.b_hat);
+        self.pi[lane * wk..][..wk].copy_from_slice(&bank.pi);
+        self.b_tilde[lane * wk..][..wk].copy_from_slice(inp.b_tilde);
+        self.meas_mask[lane * wk..][..wk].copy_from_slice(inp.meas_mask);
+        self.m_rem[lane * wk..][..wk].copy_from_slice(inp.m_rem);
+        self.slot_mask[lane * wk..][..wk].copy_from_slice(inp.slot_mask);
+        self.d[lane * self.w..][..self.w].copy_from_slice(inp.d);
+        self.n_tot[lane] = inp.n_tot;
+        self.n = lane + 1;
+        Ok(lane)
+    }
+
+    /// Lanes gathered since the last [`Self::begin`].
+    pub fn lanes(&self) -> usize {
+        self.n
+    }
+
+    /// Scatter one lane's step results back into its cell: refill the
+    /// cell's `StepOutputs` (resized on first use, then in place —
+    /// the same contract as [`Bank::step_into`]) and persist the new
+    /// `b_hat`/`pi` into the cell's bank.
+    pub fn scatter(&self, lane: usize, bank: &mut Bank, out: &mut StepOutputs) {
+        assert!(lane < self.n, "lane {lane} was never gathered (n = {})", self.n);
+        assert!(
+            bank.w == self.w && bank.k == self.k,
+            "cell bank ({}, {}) does not match batch shape ({}, {})",
+            bank.w,
+            bank.k,
+            self.w,
+            self.k
+        );
+        let wk = self.w * self.k;
+        out.b_hat.resize(wk, 0.0);
+        out.pi.resize(wk, 0.0);
+        out.r.resize(self.w, 0.0);
+        out.s.resize(self.w, 0.0);
+        out.b_hat.copy_from_slice(&self.out_b_hat[lane * wk..][..wk]);
+        out.pi.copy_from_slice(&self.out_pi[lane * wk..][..wk]);
+        out.r.copy_from_slice(&self.out_r[lane * self.w..][..self.w]);
+        out.s.copy_from_slice(&self.out_s[lane * self.w..][..self.w]);
+        out.n_star = self.out_n_star[lane];
+        out.n_next = self.out_n_next[lane];
+        bank.b_hat.copy_from_slice(&out.b_hat);
+        bank.pi.copy_from_slice(&out.pi);
     }
 }
 
@@ -237,22 +482,32 @@ pub fn native_step(
     out
 }
 
-/// [`native_step`] writing into reused output buffers: allocation-free
-/// once `out` holds (w*k)/(w)-sized vectors.
-pub fn native_step_into(
+/// Caller-owned output slices of one monitor-step kernel invocation.
+/// Borrowed views so the same kernel serves both the `Vec`-backed
+/// per-cell path ([`native_step_into`]) and one lane of the padded
+/// lockstep batch ([`Bank::step_batch_into`]).
+struct SliceOutputs<'a> {
+    b_hat: &'a mut [f32],
+    pi: &'a mut [f32],
+    r: &'a mut [f32],
+    s: &'a mut [f32],
+}
+
+/// The monitor-step math on borrowed slices; returns `(n_star,
+/// n_next)`. This is the **one** copy of the native kernel — the
+/// per-cell and the batched paths both call it, so the two can never
+/// diverge numerically (the lockstep determinism pin in
+/// `tests/determinism.rs` rests on this).
+fn native_step_slices(
     w: usize,
     k: usize,
     b_hat: &[f32],
     pi: &[f32],
     inp: &TickInputs,
     p: &BankParams,
-    out: &mut StepOutputs,
-) {
+    out: SliceOutputs<'_>,
+) -> (f32, f32) {
     let wk = w * k;
-    out.b_hat.resize(wk, 0.0);
-    out.pi.resize(wk, 0.0);
-    out.r.resize(w, 0.0);
-    out.s.resize(w, 0.0);
     // 1. masked Kalman update (eqs. 6-9), inert outside slot_mask
     for i in 0..wk {
         let pi_minus = pi[i] + p.sigma_z2;
@@ -303,12 +558,46 @@ pub fn native_step_into(
         *s *= scale;
     }
     // 4. AIMD (Fig. 4)
-    out.n_star = n_star;
-    out.n_next = if inp.n_tot <= n_star {
+    let n_next = if inp.n_tot <= n_star {
         (inp.n_tot + p.alpha).min(p.n_max)
     } else {
         (p.beta * inp.n_tot).max(p.n_min)
     };
+    (n_star, n_next)
+}
+
+/// [`native_step`] writing into reused output buffers: allocation-free
+/// once `out` holds (w*k)/(w)-sized vectors.
+pub fn native_step_into(
+    w: usize,
+    k: usize,
+    b_hat: &[f32],
+    pi: &[f32],
+    inp: &TickInputs,
+    p: &BankParams,
+    out: &mut StepOutputs,
+) {
+    let wk = w * k;
+    out.b_hat.resize(wk, 0.0);
+    out.pi.resize(wk, 0.0);
+    out.r.resize(w, 0.0);
+    out.s.resize(w, 0.0);
+    let (n_star, n_next) = native_step_slices(
+        w,
+        k,
+        b_hat,
+        pi,
+        inp,
+        p,
+        SliceOutputs {
+            b_hat: &mut out.b_hat,
+            pi: &mut out.pi,
+            r: &mut out.r,
+            s: &mut out.s,
+        },
+    );
+    out.n_star = n_star;
+    out.n_next = n_next;
 }
 
 #[cfg(test)]
@@ -465,6 +754,160 @@ mod tests {
             n_tot: 1.0,
         });
         assert!(r.is_err());
+    }
+
+    /// The batch-path determinism pin at the bank level: N cells
+    /// driven through gather → `step_batch_into` → scatter must be
+    /// bit-identical — outputs *and* persistent state — to the same
+    /// cells stepped one `step_into` at a time, across many ticks and
+    /// diverging per-cell input streams.
+    #[test]
+    fn batched_step_is_bit_identical_to_per_cell_steps() {
+        let (w, k, n) = (5usize, 3usize, 6usize);
+        let mut looped: Vec<Bank> =
+            (0..n).map(|_| Bank::new(w, k, params(), Backend::Native)).collect();
+        let mut batched: Vec<Bank> =
+            (0..n).map(|_| Bank::new(w, k, params(), Backend::Native)).collect();
+        let template = Bank::new(w, k, params(), Backend::Native);
+        let mut batch = BatchScratch::default();
+        let mut outs: Vec<StepOutputs> = (0..n).map(|_| StepOutputs::default()).collect();
+        let mut rng = Rng::new(0xBA7C);
+        for step in 0..30 {
+            // per-cell input streams diverge (own RNG draws per cell)
+            let ticks: Vec<_> = (0..n).map(|_| random_tick(w, k, &mut rng)).collect();
+            batch.begin(n, w, k);
+            for (i, (slot, meas, b_tilde, m_rem, d, n_tot)) in ticks.iter().enumerate() {
+                let inp = TickInputs {
+                    b_tilde,
+                    meas_mask: meas,
+                    m_rem,
+                    slot_mask: slot,
+                    d,
+                    n_tot: *n_tot,
+                };
+                let lane = batch.gather(&batched[i], &inp).unwrap();
+                assert_eq!(lane, i);
+            }
+            assert_eq!(batch.lanes(), n);
+            template.step_batch_into(&mut batch).unwrap();
+            for (i, (slot, meas, b_tilde, m_rem, d, n_tot)) in ticks.iter().enumerate() {
+                batch.scatter(i, &mut batched[i], &mut outs[i]);
+                let reference = looped[i]
+                    .step(&TickInputs {
+                        b_tilde,
+                        meas_mask: meas,
+                        m_rem,
+                        slot_mask: slot,
+                        d,
+                        n_tot: *n_tot,
+                    })
+                    .unwrap();
+                assert_eq!(outs[i], reference, "step {step} cell {i}: batched output diverged");
+                assert_eq!(batched[i].b_hat(), looped[i].b_hat(), "step {step} cell {i}: b_hat");
+                assert_eq!(batched[i].pi(), looped[i].pi(), "step {step} cell {i}: pi");
+            }
+        }
+    }
+
+    /// Lockstep width must not matter: one 8-lane batch and two 4-lane
+    /// batches over the same cells give identical results (each lane is
+    /// an independent column of the padded execution).
+    #[test]
+    fn batch_width_does_not_change_results() {
+        let (w, k, n) = (3usize, 2usize, 8usize);
+        let mut rng = Rng::new(0x51DE);
+        let ticks: Vec<_> = (0..n).map(|_| random_tick(w, k, &mut rng)).collect();
+        let template = Bank::new(w, k, params(), Backend::Native);
+        let run_with_width = |width: usize| -> Vec<(Vec<f32>, Vec<f32>, StepOutputs)> {
+            let mut banks: Vec<Bank> =
+                (0..n).map(|_| Bank::new(w, k, params(), Backend::Native)).collect();
+            let mut outs: Vec<StepOutputs> = (0..n).map(|_| StepOutputs::default()).collect();
+            let mut batch = BatchScratch::default();
+            for chunk in 0..n.div_ceil(width) {
+                let lo = chunk * width;
+                let hi = (lo + width).min(n);
+                batch.begin(hi - lo, w, k);
+                for i in lo..hi {
+                    let (slot, meas, b_tilde, m_rem, d, n_tot) = &ticks[i];
+                    batch
+                        .gather(
+                            &banks[i],
+                            &TickInputs {
+                                b_tilde,
+                                meas_mask: meas,
+                                m_rem,
+                                slot_mask: slot,
+                                d,
+                                n_tot: *n_tot,
+                            },
+                        )
+                        .unwrap();
+                }
+                template.step_batch_into(&mut batch).unwrap();
+                for i in lo..hi {
+                    batch.scatter(i - lo, &mut banks[i], &mut outs[i]);
+                }
+            }
+            banks
+                .iter()
+                .zip(&outs)
+                .map(|(b, o)| (b.b_hat().to_vec(), b.pi().to_vec(), o.clone()))
+                .collect()
+        };
+        let full = run_with_width(n);
+        for width in [1usize, 2, 4] {
+            assert_eq!(run_with_width(width), full, "batch width {width} changed results");
+        }
+    }
+
+    #[test]
+    fn batch_rejects_shape_mismatches() {
+        let template = Bank::new(2, 2, params(), Backend::Native);
+        let other = Bank::new(3, 2, params(), Backend::Native);
+        let mut batch = BatchScratch::default();
+        batch.begin(2, 2, 2);
+        // wrong-shape cell bank
+        assert!(batch
+            .gather(
+                &other,
+                &TickInputs {
+                    b_tilde: &[0.0; 6],
+                    meas_mask: &[0.0; 6],
+                    m_rem: &[0.0; 6],
+                    slot_mask: &[0.0; 6],
+                    d: &[0.0; 3],
+                    n_tot: 1.0,
+                },
+            )
+            .is_err());
+        // wrong-size inputs
+        assert!(batch
+            .gather(
+                &template,
+                &TickInputs {
+                    b_tilde: &[0.0; 3],
+                    meas_mask: &[0.0; 4],
+                    m_rem: &[0.0; 4],
+                    slot_mask: &[0.0; 4],
+                    d: &[0.0; 2],
+                    n_tot: 1.0,
+                },
+            )
+            .is_err());
+        // wrong-shape template
+        assert!(other.step_batch_into(&mut batch).is_err());
+        // capacity overflow
+        let ok = TickInputs {
+            b_tilde: &[0.0; 4],
+            meas_mask: &[0.0; 4],
+            m_rem: &[0.0; 4],
+            slot_mask: &[0.0; 4],
+            d: &[0.0; 2],
+            n_tot: 1.0,
+        };
+        batch.gather(&template, &ok).unwrap();
+        batch.gather(&template, &ok).unwrap();
+        assert!(batch.gather(&template, &ok).is_err(), "third lane must overflow cap 2");
     }
 
     #[test]

@@ -104,6 +104,14 @@ impl VariantKey {
 /// plus the backend — for XLA, a [`SharedEngine`] handle whose clone
 /// is a reference, never a recompilation. [`BankVariant::instantiate`]
 /// mints fresh per-run banks from it.
+///
+/// The returned `Arc` doubles as the **lockstep batch-group key**
+/// (PR-5): two sweep cells may share one padded batch execution iff
+/// the cache hands both the *same* `Arc` — same (W, K), params,
+/// estimator and backend by construction of [`VariantKey`], so the
+/// batched executor (`experiments::batched`) never has to re-derive
+/// shape compatibility, and padding agreement on XLA is automatic
+/// (the key bakes in the artifact-padded shape).
 #[derive(Clone)]
 pub struct BankVariant {
     w: usize,

@@ -11,7 +11,7 @@ pub mod kalman;
 
 pub use adhoc::AdHoc;
 pub use arma::Arma;
-pub use bank::{Backend, Bank, BankParams, TickInputs};
+pub use bank::{Backend, Bank, BankParams, BatchScratch, TickInputs};
 pub use cache::{BankCache, BankVariant, CacheStats};
 pub use convergence::{DeviationDetector, SlopeDetector};
 pub use kalman::Kalman;

@@ -1,0 +1,253 @@
+//! Lockstep batched sweep executor (PR-5): advance N same-shape sweep
+//! cells on one shared tick cadence and execute their estimator-bank
+//! steps as **one** padded batch per round instead of one
+//! `Bank::step_into` per cell per tick.
+//!
+//! Dense parameter grids (Doyle et al., arXiv:1604.04804; Li et al.,
+//! arXiv:1809.06529) overwhelmingly consist of cells that share one
+//! (W, K, params, backend) bank shape — the `cost` grid is 10 cells of
+//! a single shape. The per-cell runner (`super::parallel::run_specs`)
+//! already parallelizes across cores; this executor additionally
+//! vectorizes *across* cells: each round it
+//!
+//! 1. **pumps** every live cell's event loop to its next monitoring
+//!    instant ([`Platform::pump_to_tick`]) and runs the pre-bank tick
+//!    phase ([`Platform::tick_gather`]);
+//! 2. **gathers** every cell's bank state + tick inputs into one padded
+//!    `[N, W*K]` scratch ([`BatchScratch`]);
+//! 3. issues **one** [`Bank::step_batch_into`] — a contiguous sweep
+//!    over all lanes on the native backend (one padded execution per
+//!    lane under a single engine read lock on XLA; see the method docs
+//!    for why lanes are not row-concatenated);
+//! 4. **scatters** each lane's `StepOutputs` back and runs the
+//!    post-bank phase ([`Platform::tick_finish`]).
+//!
+//! Cells finish (and drop out of the batch) independently; a cell's
+//! event history is exactly what a solo [`Scenario::run`] would
+//! produce, so batched results are **bit-identical** to the per-cell
+//! path and invariant in batch width and thread count
+//! (`tests/determinism.rs::batched_sweep_is_bit_identical_to_per_cell`).
+//!
+//! Grouping: cells are batched only with cells resolving to the *same*
+//! cached bank variant (same `Arc` out of the [`BankCache`] — same
+//! shape, params, estimator and backend). Mixed grids form one batch
+//! group per variant; a cell sharing its variant with nobody runs as a
+//! width-1 batch through the same code path.
+
+use std::sync::Arc;
+
+use crate::estimation::{BankCache, BankVariant, BatchScratch};
+use crate::metrics::RunMetrics;
+use crate::platform::Platform;
+
+use super::parallel::{run_many, RunSpec};
+
+/// Run a grid through the lockstep batched executor, `threads`-wide;
+/// results in spec order, bit-identical to
+/// [`super::parallel::run_specs`]. Each variant group is split into up
+/// to `threads` batches so the worker pool has independent work even
+/// when the whole grid shares one bank shape.
+pub fn run_specs_batched(
+    specs: &[RunSpec],
+    threads: usize,
+    cache: &BankCache,
+) -> anyhow::Result<Vec<RunMetrics>> {
+    run_specs_batched_opts(specs, threads, None, cache)
+}
+
+/// [`run_specs_batched`] with an explicit cap on the lockstep batch
+/// width (`max_batch`; `None` = split each variant group evenly across
+/// the worker pool). Width {1, 4, N} and any thread count produce the
+/// same results — pinned by the determinism suite.
+pub fn run_specs_batched_opts(
+    specs: &[RunSpec],
+    threads: usize,
+    max_batch: Option<usize>,
+    cache: &BankCache,
+) -> anyhow::Result<Vec<RunMetrics>> {
+    if specs.is_empty() {
+        return Ok(vec![]);
+    }
+    // group cells by their resolved bank variant: cells share a batch
+    // only when the cache hands both the same Arc (same shape, params,
+    // estimator, backend preference) — this doubles as the cache
+    // warm-up, so platform assembly below always hits
+    let variants: Vec<Arc<BankVariant>> =
+        specs.iter().map(|s| s.scenario.bank_variant(cache)).collect();
+    let mut groups: Vec<(usize, Vec<usize>)> = vec![];
+    for (i, v) in variants.iter().enumerate() {
+        let key = Arc::as_ptr(v) as usize;
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, idxs)) => idxs.push(i),
+            None => groups.push((key, vec![i])),
+        }
+    }
+    // chunk each group into batches (deterministic in specs/threads/
+    // max_batch only — never in worker scheduling)
+    let mut batches: Vec<(Arc<BankVariant>, Vec<usize>)> = vec![];
+    for (_, idxs) in groups {
+        let width = match max_batch {
+            Some(b) => b.max(1),
+            None if threads > 1 => idxs.len().div_ceil(threads.min(idxs.len())),
+            None => idxs.len(),
+        };
+        for chunk in idxs.chunks(width.max(1)) {
+            batches.push((variants[chunk[0]].clone(), chunk.to_vec()));
+        }
+    }
+    let per_batch = run_many(batches.len(), threads, |b| {
+        let (variant, idxs) = &batches[b];
+        run_batch(specs, idxs, variant, cache)
+    });
+    let mut results: Vec<Option<RunMetrics>> = (0..specs.len()).map(|_| None).collect();
+    for (batch_results, (_, idxs)) in per_batch.into_iter().zip(&batches) {
+        for (m, &i) in batch_results?.into_iter().zip(idxs) {
+            results[i] = Some(m);
+        }
+    }
+    Ok(results
+        .into_iter()
+        .map(|m| m.expect("every spec index lands in exactly one batch"))
+        .collect())
+}
+
+/// Drive one batch of same-variant cells in lockstep to completion;
+/// results aligned with `idxs`.
+fn run_batch(
+    specs: &[RunSpec],
+    idxs: &[usize],
+    variant: &BankVariant,
+    cache: &BankCache,
+) -> anyhow::Result<Vec<RunMetrics>> {
+    let n = idxs.len();
+    // the template bank contributes shape/params/backend to the batch
+    // step; per-cell estimator state lives in each platform's own bank
+    let template = variant.instantiate();
+    let (w, k) = (template.w, template.k);
+    let mut platforms: Vec<Option<Platform>> = Vec::with_capacity(n);
+    for &i in idxs {
+        let scn = &specs[i].scenario;
+        scn.validate()?;
+        let mut p = Platform::from_scenario_with_cache(scn.clone(), cache);
+        p.start();
+        platforms.push(Some(p));
+    }
+    let mut results: Vec<Option<RunMetrics>> = (0..n).map(|_| None).collect();
+    let mut batch = BatchScratch::default();
+    let mut live: Vec<usize> = (0..n).collect();
+    let mut ticking: Vec<usize> = Vec::with_capacity(n);
+    while !live.is_empty() {
+        // 1. pump every live cell to its next monitoring instant and
+        //    run its pre-bank phase; cells whose run ended finalize
+        ticking.clear();
+        for &c in &live {
+            let p = platforms[c].as_mut().expect("live cell holds a platform");
+            if p.pump_to_tick()? {
+                p.tick_gather();
+                ticking.push(c);
+            } else {
+                let done = platforms[c].take().expect("live cell holds a platform");
+                results[c] = Some(done.finalize()?);
+            }
+        }
+        if ticking.is_empty() {
+            break;
+        }
+        // 2. gather every ticking cell into the padded scratch
+        batch.begin(ticking.len(), w, k);
+        for &c in &ticking {
+            let p = platforms[c].as_ref().expect("ticking cell holds a platform");
+            batch.gather(&p.bank, &p.bank_inputs())?;
+        }
+        // 3. one batch execution for the whole round
+        template.step_batch_into(&mut batch)?;
+        // 4. scatter outputs back and run each cell's post-bank phase
+        for (lane, &c) in ticking.iter().enumerate() {
+            let p = platforms[c].as_mut().expect("ticking cell holds a platform");
+            batch.scatter(lane, &mut p.bank, &mut p.outs);
+            p.tick_finish();
+            if p.all_done_at.is_some() {
+                let done = platforms[c].take().expect("cell still holds a platform");
+                results[c] = Some(done.finalize()?);
+            }
+        }
+        live.clear();
+        live.extend(ticking.iter().copied().filter(|&c| platforms[c].is_some()));
+    }
+    Ok(results
+        .into_iter()
+        .map(|m| m.expect("every cell either finalizes on pump or after a tick"))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::platform::RunOpts;
+    use crate::util::rng::Rng;
+    use crate::workload::{App, WorkloadSpec};
+
+    fn tiny_specs(n: usize, n_wl: usize) -> Vec<RunSpec> {
+        let rng = Rng::new(5);
+        (0..n)
+            .map(|i| {
+                let mut cfg = Config::paper_defaults();
+                cfg.use_xla = false;
+                cfg.control.n_min = 4.0;
+                cfg.seed = 300 + i as u64;
+                let suite: Vec<WorkloadSpec> = (0..n_wl)
+                    .map(|w| WorkloadSpec::generate(w, App::FaceDetection, 12, None, &rng))
+                    .collect();
+                RunSpec::from_opts(
+                    format!("batched/{i}"),
+                    cfg,
+                    suite,
+                    RunOpts {
+                        fixed_ttc_s: Some(3600),
+                        arrival_interval_s: 60,
+                        horizon_s: 3 * 3600,
+                        record_traces: false,
+                        ..Default::default()
+                    },
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batched_matches_per_cell_on_a_shared_shape_grid() {
+        let specs = tiny_specs(5, 1);
+        let reference = super::super::parallel::run_specs(&specs, 1).unwrap();
+        let cache = BankCache::new();
+        let batched = run_specs_batched(&specs, 1, &cache).unwrap();
+        assert_eq!(reference, batched, "lockstep batch diverged from per-cell execution");
+    }
+
+    #[test]
+    fn mixed_shape_grids_form_one_group_per_variant() {
+        // 3 one-workload cells + 2 two-workload cells: two variants,
+        // so width-unbounded batching must still produce spec-order
+        // results identical to the per-cell runner
+        let mut specs = tiny_specs(3, 1);
+        specs.extend(tiny_specs(2, 2).into_iter().enumerate().map(|(i, mut s)| {
+            s.label = format!("batched/two/{i}");
+            s
+        }));
+        let reference = super::super::parallel::run_specs(&specs, 1).unwrap();
+        let batched = run_specs_batched(&specs, 2, &BankCache::new()).unwrap();
+        assert_eq!(reference, batched);
+    }
+
+    #[test]
+    fn empty_grid_is_fine() {
+        assert!(run_specs_batched(&[], 4, &BankCache::new()).unwrap().is_empty());
+    }
+
+    #[test]
+    fn invalid_cell_surfaces_as_error() {
+        let mut specs = tiny_specs(1, 1);
+        specs[0].scenario.fleet = crate::cloud::FleetSpec { pools: vec![] };
+        assert!(run_specs_batched(&specs, 1, &BankCache::new()).is_err());
+    }
+}

@@ -7,17 +7,20 @@
 //! the same file:
 //!
 //! 1. **end-to-end**: the grid run sequentially (1 thread — the only
-//!    mode the pre-refactor harness had) vs. on the parallel runner at
-//!    the requested width. Tasks/second counts every simulated task of
-//!    every run.
+//!    mode the pre-refactor harness had) vs. the parallel runner at
+//!    every requested width (`--threads` takes a comma list; one timed
+//!    pass per width — the `sweep_tasks_per_s` scaling curve) vs. the
+//!    PR-5 lockstep batched executor at the max width
+//!    (`batched_tasks_per_s`). Tasks/second counts every simulated
+//!    task of every run.
 //! 2. **task-DB microbench**: the identical insert→claim→complete
 //!    lifecycle plus per-tick query mix on the flat-arena [`TaskDb`]
 //!    vs. the seed's BTreeMap store ([`legacy::LegacyTaskDb`]), which
 //!    is kept in-tree precisely to keep this baseline measurable.
 //!
-//! The parallel results are asserted equal to the sequential ones
-//! before anything is written — a bench run doubles as a determinism
-//! check.
+//! Every parallel and batched pass is asserted equal to the sequential
+//! results before anything is written — a bench run doubles as a
+//! determinism check.
 
 use std::time::Instant;
 
@@ -35,28 +38,46 @@ use super::parallel::{cost_grid, run_specs_with_cache, RunSpec};
 #[derive(Debug, Clone)]
 pub struct BenchReport {
     pub grid: &'static str,
-    pub threads: usize,
     pub runs: usize,
     pub tasks_total: usize,
     pub seq_wall_s: f64,
-    pub par_wall_s: f64,
+    /// Timed parallel passes as `(threads, wall_s)` in ascending width
+    /// (`bench-report --threads 1,2,4,8` measures one pass per width
+    /// above 1; the 1-thread baseline is `seq_wall_s`). The last entry
+    /// is the max width — `current.tasks_per_s` in the JSON, what
+    /// `bench-check` gates on (like-for-like at the max width).
+    pub widths: Vec<(usize, f64)>,
+    /// Wall time of the lockstep batched executor pass
+    /// (`experiments::batched`) over the same grid at the max width.
+    pub batched_wall_s: f64,
     pub db_tasks: usize,
     pub db_legacy_ops_per_s: f64,
     pub db_arena_ops_per_s: f64,
-    /// Bank-cache lookups served from a cached variant across both
-    /// sweep passes (sequential + parallel share one cache, like a
-    /// real multi-grid session).
+    /// Bank-cache lookups served from a cached variant across every
+    /// sweep pass (all passes share one cache, like a real multi-grid
+    /// session).
     pub cache_hits: u64,
     /// Bank-cache lookups that resolved a backend from scratch.
     pub cold_builds: u64,
 }
 
 impl BenchReport {
+    /// The widest measured thread count (1 when only the sequential
+    /// baseline ran).
+    pub fn threads(&self) -> usize {
+        self.widths.last().map(|&(t, _)| t).unwrap_or(1)
+    }
+    fn par_wall_s(&self) -> f64 {
+        self.widths.last().map(|&(_, w)| w).unwrap_or(self.seq_wall_s)
+    }
     pub fn seq_tasks_per_s(&self) -> f64 {
         self.tasks_total as f64 / self.seq_wall_s.max(1e-9)
     }
     pub fn par_tasks_per_s(&self) -> f64 {
-        self.tasks_total as f64 / self.par_wall_s.max(1e-9)
+        self.tasks_total as f64 / self.par_wall_s().max(1e-9)
+    }
+    pub fn batched_tasks_per_s(&self) -> f64 {
+        self.tasks_total as f64 / self.batched_wall_s.max(1e-9)
     }
     pub fn parallel_speedup(&self) -> f64 {
         self.par_tasks_per_s() / self.seq_tasks_per_s().max(1e-9)
@@ -66,15 +87,15 @@ impl BenchReport {
     }
 
     /// The tasks/s-by-thread-count series: the measured sweep
-    /// throughput at 1 thread and at the requested width (deduped when
-    /// the request *is* 1 thread). Cross-report tooling reads this to
-    /// track scaling, not just the endpoint.
+    /// throughput at 1 thread plus every requested width — a real
+    /// scaling curve when `--threads` is a comma list, not just two
+    /// points. Cross-report tooling reads this to track scaling.
     pub fn sweep_series(&self) -> Vec<(usize, f64)> {
-        if self.threads <= 1 {
-            vec![(1, self.seq_tasks_per_s())]
-        } else {
-            vec![(1, self.seq_tasks_per_s()), (self.threads, self.par_tasks_per_s())]
+        let mut series = vec![(1, self.seq_tasks_per_s())];
+        for &(t, wall) in &self.widths {
+            series.push((t, self.tasks_total as f64 / wall.max(1e-9)));
         }
+        series
     }
 
     /// Serialize (no serde in the vendor set; the schema is flat).
@@ -94,6 +115,7 @@ impl BenchReport {
              \x20 \"tasks_simulated_total\": {tasks},\n\
              \x20 \"cache\": {{\"cache_hits\": {hits}, \"cold_builds\": {cold}}},\n\
              \x20 \"sweep_tasks_per_s\": [{series}],\n\
+             \x20 \"batched_tasks_per_s\": {btp:.1},\n\
              \x20 \"baseline\": {{\n\
              \x20   \"mode\": \"sequential-1-thread (pre-refactor harness had no parallel runner)\",\n\
              \x20   \"wall_s\": {sw:.3},\n\
@@ -115,15 +137,16 @@ impl BenchReport {
              }}\n",
             grid = self.grid,
             runs = self.runs,
-            threads = self.threads,
+            threads = self.threads(),
             hits = self.cache_hits,
             cold = self.cold_builds,
             dbt = self.db_tasks,
             tasks = self.tasks_total,
+            btp = self.batched_tasks_per_s(),
             sw = self.seq_wall_s,
             stp = self.seq_tasks_per_s(),
             dl = self.db_legacy_ops_per_s,
-            pw = self.par_wall_s,
+            pw = self.par_wall_s(),
             ptp = self.par_tasks_per_s(),
             spd = self.parallel_speedup(),
             da = self.db_arena_ops_per_s,
@@ -206,11 +229,12 @@ fn ops_per_s(mut f: impl FnMut() -> f64, ops: usize) -> f64 {
     ops as f64 / best.max(1e-9)
 }
 
-/// A reduced grid for CI smoke runs (`--smoke`): 4 policies over a
-/// tiny 3-workload suite with a short horizon — seconds, not minutes.
-/// Exercises the same code paths (grid fan-out, determinism assert,
-/// JSON write) without the full paper-suite cost.
-fn smoke_grid(cfg: &Config) -> Vec<RunSpec> {
+/// A reduced grid for CI smoke runs (`--smoke`, also `dithen sweep
+/// smoke`): 4 policies over a tiny 3-workload suite with a short
+/// horizon — seconds, not minutes. Exercises the same code paths (grid
+/// fan-out, determinism assert, JSON write) without the full
+/// paper-suite cost.
+pub(crate) fn smoke_grid(cfg: &Config) -> Vec<RunSpec> {
     let mut base = cfg.clone();
     base.control.monitor_interval_s = 300;
     base.control.n_min = 4.0;
@@ -244,18 +268,28 @@ fn smoke_grid(cfg: &Config) -> Vec<RunSpec> {
 }
 
 /// Run the bench and write the JSON report to `out_path`. `smoke`
-/// swaps the full cost grid for [`smoke_grid`] (CI-sized).
-pub fn run(cfg: &Config, threads: usize, out_path: &str, smoke: bool) -> anyhow::Result<String> {
+/// swaps the full cost grid for [`smoke_grid`] (CI-sized). `threads`
+/// is the requested width *list* (`--threads 1,2,4,8`): the 1-thread
+/// baseline is always measured, every listed width above 1 gets its
+/// own timed pass (a real scaling curve in `sweep_tasks_per_s`), and
+/// the lockstep batched executor is timed at the max width. Every pass
+/// is asserted bit-identical to the sequential baseline before
+/// anything is written — a bench run doubles as a determinism check
+/// for the parallel *and* the batched path.
+pub fn run(cfg: &Config, threads: &[usize], out_path: &str, smoke: bool) -> anyhow::Result<String> {
     let mut cfg = cfg.clone();
     cfg.use_xla = false; // backend-independent numbers (see bench_bank)
     let grid = if smoke { smoke_grid(&cfg) } else { cost_grid(&cfg) };
     let runs = grid.len();
     let tasks_total: usize = grid.iter().map(|s| s.n_tasks()).sum();
+    let mut widths: Vec<usize> = threads.iter().copied().filter(|&t| t > 1).collect();
+    widths.sort_unstable();
+    widths.dedup();
 
-    // one dedicated cache across both passes, so the recorded hit/cold
+    // one dedicated cache across all passes, so the recorded hit/cold
     // counts are attributable to exactly this bench run; warmed first
     // so cold-build cost (XLA manifest parse + compile) lands in
-    // neither timed pass — otherwise it would all fall on the 1-thread
+    // no timed pass — otherwise it would all fall on the 1-thread
     // baseline and inflate the reported speedup
     let cache = BankCache::new();
     for spec in &grid {
@@ -267,16 +301,29 @@ pub fn run(cfg: &Config, threads: usize, out_path: &str, smoke: bool) -> anyhow:
     let seq = run_specs_with_cache(&grid, 1, &cache)?;
     let seq_wall_s = t0.elapsed().as_secs_f64();
 
-    eprintln!("bench-report: parallel x{threads}...");
-    let t0 = Instant::now();
-    let par = run_specs_with_cache(&grid, threads, &cache)?;
-    let par_wall_s = t0.elapsed().as_secs_f64();
-    let cache_stats = cache.stats();
+    let mut measured: Vec<(usize, f64)> = Vec::with_capacity(widths.len());
+    for &t in &widths {
+        eprintln!("bench-report: parallel x{t}...");
+        let t0 = Instant::now();
+        let par = run_specs_with_cache(&grid, t, &cache)?;
+        let wall = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(
+            seq == par,
+            "{t}-thread runner diverged from sequential results — determinism violation"
+        );
+        measured.push((t, wall));
+    }
 
+    let batch_threads = measured.last().map(|&(t, _)| t).unwrap_or(1);
+    eprintln!("bench-report: lockstep batched x{batch_threads}...");
+    let t0 = Instant::now();
+    let batched = crate::experiments::batched::run_specs_batched(&grid, batch_threads, &cache)?;
+    let batched_wall_s = t0.elapsed().as_secs_f64();
     anyhow::ensure!(
-        seq == par,
-        "parallel runner diverged from sequential results — determinism violation"
+        seq == batched,
+        "batched executor diverged from sequential results — determinism violation"
     );
+    let cache_stats = cache.stats();
 
     eprintln!("bench-report: task-DB microbench (arena vs legacy)...");
     let db_tasks = if smoke { 10_000 } else { 50_000 };
@@ -288,11 +335,11 @@ pub fn run(cfg: &Config, threads: usize, out_path: &str, smoke: bool) -> anyhow:
 
     let report = BenchReport {
         grid: if smoke { "cost-smoke" } else { "cost-default" },
-        threads,
         runs,
         tasks_total,
         seq_wall_s,
-        par_wall_s,
+        widths: measured,
+        batched_wall_s,
         db_tasks,
         db_legacy_ops_per_s,
         db_arena_ops_per_s,
@@ -306,23 +353,32 @@ pub fn run(cfg: &Config, threads: usize, out_path: &str, smoke: bool) -> anyhow:
         }
     }
     std::fs::write(out_path, &json)?;
+    let curve = report
+        .sweep_series()
+        .iter()
+        .map(|&(t, tps)| format!("{t}t:{tps:.0}"))
+        .collect::<Vec<_>>()
+        .join(" ");
     let summary = format!(
         "grid: {runs} runs / {tasks} tasks\n\
          sequential baseline: {sw:.2}s ({stp:.0} tasks/s)\n\
-         parallel x{threads}:  {pw:.2}s ({ptp:.0} tasks/s, {spd:.2}x)\n\
-         bank cache: {cold} cold builds / {hits} hits across both passes\n\
+         parallel x{threads}:  {pw:.2}s ({ptp:.0} tasks/s, {spd:.2}x) | curve: {curve}\n\
+         batched x{threads}:   {bw:.2}s ({btp:.0} tasks/s, lockstep)\n\
+         bank cache: {cold} cold builds / {hits} hits across all passes\n\
          task-DB: arena {da:.2e} ops/s vs legacy {dl:.2e} ops/s ({dspd:.2}x)\n\
          wrote {out_path}\n",
         tasks = report.tasks_total,
         sw = report.seq_wall_s,
         stp = report.seq_tasks_per_s(),
-        pw = report.par_wall_s,
+        pw = report.par_wall_s(),
         ptp = report.par_tasks_per_s(),
         spd = report.parallel_speedup(),
+        bw = report.batched_wall_s,
+        btp = report.batched_tasks_per_s(),
         da = report.db_arena_ops_per_s,
         dl = report.db_legacy_ops_per_s,
         dspd = report.db_speedup(),
-        threads = report.threads,
+        threads = report.threads(),
         cold = report.cold_builds,
         hits = report.cache_hits,
     );
@@ -345,39 +401,49 @@ mod tests {
     fn json_is_parseable_by_our_parser() {
         let r = BenchReport {
             grid: "cost-default",
-            threads: 8,
             runs: 10,
             tasks_total: 12345,
             seq_wall_s: 10.0,
-            par_wall_s: 2.0,
+            widths: vec![(2, 5.0), (8, 2.0)],
+            batched_wall_s: 2.5,
             db_tasks: 1000,
             db_legacy_ops_per_s: 1.0e6,
             db_arena_ops_per_s: 9.0e6,
             cache_hits: 19,
             cold_builds: 1,
         };
+        assert_eq!(r.threads(), 8, "the max width is the headline thread count");
         let j = crate::util::json::parse(&r.to_json()).unwrap();
         assert_eq!(
             j.get("schema").unwrap().as_str(),
             Some("dithen-bench-report/v1")
         );
         assert_eq!(j.get("tasks_simulated_total").unwrap().as_usize(), Some(12345));
+        assert_eq!(j.get("threads").unwrap().as_usize(), Some(8));
         // bank-cache observability (PR-4): hits/cold builds travel in
-        // the report, and the throughput series carries both measured
-        // thread counts
+        // the report, and the throughput series carries *every*
+        // measured thread count — a scaling curve, not two points
         let cache = j.get("cache").unwrap();
         assert_eq!(cache.get("cache_hits").unwrap().as_usize(), Some(19));
         assert_eq!(cache.get("cold_builds").unwrap().as_usize(), Some(1));
         let series = j.get("sweep_tasks_per_s").unwrap().as_arr().unwrap();
-        assert_eq!(series.len(), 2);
-        assert_eq!(series[0].get("threads").unwrap().as_usize(), Some(1));
-        assert_eq!(series[1].get("threads").unwrap().as_usize(), Some(8));
+        assert_eq!(series.len(), 3);
+        for (i, want_t) in [1usize, 2, 8].iter().enumerate() {
+            assert_eq!(series[i].get("threads").unwrap().as_usize(), Some(*want_t));
+        }
         assert!(
             (series[0].get("tasks_per_s").unwrap().as_f64().unwrap() - r.seq_tasks_per_s()).abs()
                 < 0.1
         );
         assert!(
-            (series[1].get("tasks_per_s").unwrap().as_f64().unwrap() - r.par_tasks_per_s()).abs()
+            (series[2].get("tasks_per_s").unwrap().as_f64().unwrap() - r.par_tasks_per_s()).abs()
+                < 0.1
+        );
+        // the lockstep-batched throughput travels alongside the curve
+        // (PR-5): the next PR's gate can read it from the artifact
+        assert!(
+            (j.get("batched_tasks_per_s").unwrap().as_f64().unwrap() - r.batched_tasks_per_s())
+                .abs()
                 < 0.1
         );
         let cur = j.get("current").unwrap();
@@ -396,19 +462,27 @@ mod tests {
     fn single_thread_series_is_deduped() {
         let r = BenchReport {
             grid: "cost-smoke",
-            threads: 1,
             runs: 4,
             tasks_total: 100,
             seq_wall_s: 1.0,
-            par_wall_s: 1.0,
+            widths: vec![],
+            batched_wall_s: 1.0,
             db_tasks: 10,
             db_legacy_ops_per_s: 1.0,
             db_arena_ops_per_s: 1.0,
             cache_hits: 3,
             cold_builds: 1,
         };
+        assert_eq!(r.threads(), 1);
         assert_eq!(r.sweep_series().len(), 1);
         let j = crate::util::json::parse(&r.to_json()).unwrap();
         assert_eq!(j.get("sweep_tasks_per_s").unwrap().as_arr().unwrap().len(), 1);
+        // max width falls back to the sequential pass
+        assert!(
+            (j.get("current").unwrap().get("tasks_per_s").unwrap().as_f64().unwrap()
+                - r.seq_tasks_per_s())
+            .abs()
+                < 0.1
+        );
     }
 }

@@ -14,6 +14,7 @@
 //!   fig12,table5  spot-market traces and catalogue
 
 pub mod ablation;
+pub mod batched;
 pub mod bench_check;
 pub mod bench_report;
 pub mod cost;

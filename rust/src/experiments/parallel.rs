@@ -27,9 +27,11 @@ use std::sync::Mutex;
 
 use crate::config::Config;
 use crate::coordinator::PolicyKind;
+use crate::db::TaskStatus;
 use crate::estimation::{BankCache, EstimatorKind};
 use crate::metrics::RunMetrics;
-use crate::platform::{RunOpts, Scenario, ScenarioBuilder};
+use crate::platform::{Platform, RunOpts, Scenario, ScenarioBuilder};
+use crate::sim::SimTime;
 use crate::workload::{paper_suite, WorkloadSpec};
 
 /// One cell of an experiment grid: a fully self-contained scenario plus
@@ -225,19 +227,33 @@ pub fn seed_grid(cfg: &Config, n: usize) -> Vec<RunSpec> {
 }
 
 /// Run a named grid and render a summary table (the `dithen sweep`
-/// subcommand).
-pub fn run_sweep(name: &str, cfg: &Config, threads: usize) -> anyhow::Result<String> {
+/// subcommand). `batched` routes execution through the lockstep
+/// batched executor (`dithen sweep --batched`; bit-identical results —
+/// see [`super::batched`]).
+pub fn run_sweep(
+    name: &str,
+    cfg: &Config,
+    threads: usize,
+    batched: bool,
+) -> anyhow::Result<String> {
     let specs = match name {
         "cost" => cost_grid(cfg),
         "estimators" => estimator_grid(cfg),
         "seeds" => seed_grid(cfg, 8),
         "fleet" => super::heterogeneous::grid(cfg, 6, 100, 12 * 3600),
-        other => anyhow::bail!("unknown sweep '{other}' (use cost | estimators | seeds | fleet)"),
+        "smoke" => super::bench_report::smoke_grid(cfg),
+        other => {
+            anyhow::bail!("unknown sweep '{other}' (use cost | estimators | seeds | fleet | smoke)")
+        }
     };
     let cache = BankCache::global();
     let cache_before = cache.stats();
     let t0 = std::time::Instant::now();
-    let results = run_specs(&specs, threads)?;
+    let results = if batched {
+        super::batched::run_specs_batched(&specs, threads, cache)?
+    } else {
+        run_specs(&specs, threads)?
+    };
     let wall = t0.elapsed().as_secs_f64();
     let cache_after = cache.stats();
     let mut table = crate::util::table::Table::new(vec![
@@ -259,9 +275,10 @@ pub fn run_sweep(name: &str, cfg: &Config, threads: usize) -> anyhow::Result<Str
         ]);
     }
     let summary = format!(
-        "{} runs / {tasks} simulated tasks in {wall:.2}s on {threads} threads ({:.0} tasks/s) | \
-         bank cache: {} cold builds / {} hits\n",
+        "{} runs / {tasks} simulated tasks in {wall:.2}s on {threads} threads{} \
+         ({:.0} tasks/s) | bank cache: {} cold builds / {} hits\n",
         specs.len(),
+        if batched { " [lockstep-batched]" } else { "" },
         tasks as f64 / wall.max(1e-9),
         cache_after.cold_builds - cache_before.cold_builds,
         cache_after.hits - cache_before.hits,
@@ -269,6 +286,194 @@ pub fn run_sweep(name: &str, cfg: &Config, threads: usize) -> anyhow::Result<Str
     let out = format!("{}{summary}", table.render());
     println!("{out}");
     Ok(out)
+}
+
+// ----- multi-platform driver over disjoint shard sets (PR-5) -----------
+
+/// Partition a many-workload scenario into `parts` sub-scenarios over
+/// **disjoint workload shard sets**: contiguous, balanced workload
+/// slices, each re-indexed to arrival slots 0.. within its part (the
+/// task DB is sharded per workload — PR-4 — so each part's platform
+/// owns a disjoint set of [`crate::db::Shard`]s by construction).
+///
+/// Semantics: each part is an *independent* platform instance — its own
+/// fleet bootstrap, its own controller, its own arrival schedule over
+/// its subset. That is exactly the paper's horizontal-scale story (one
+/// GCI per tenant slice) and the disjoint-workload regime where the
+/// decomposition is faithful; workloads that would have contended for
+/// one shared controller in the unsplit run are instead isolated, so a
+/// multi-part run is *not* bit-equal to the unsplit platform in
+/// general. The degenerate 1-part split **is** the unsplit run and is
+/// pinned bit-identical through the whole drive/merge machinery
+/// (`tests/determinism.rs`).
+pub fn split_scenario(scn: &Scenario, parts: usize) -> Vec<Scenario> {
+    let n = scn.specs.len();
+    let parts = parts.max(1).min(n.max(1));
+    let base = n / parts;
+    let extra = n % parts;
+    // clone the scenario scaffold (config, fleet, fault, ...) with the
+    // specs emptied, so each WorkloadSpec is cloned exactly once into
+    // its part — not O(parts * n) throwaway clones
+    let mut scaffold = scn.clone();
+    scaffold.specs = vec![];
+    let mut subs = Vec::with_capacity(parts);
+    let mut lo = 0usize;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        let mut sub = scaffold.clone();
+        sub.specs = scn.specs[lo..lo + len].to_vec();
+        for (j, s) in sub.specs.iter_mut().enumerate() {
+            s.id = j;
+        }
+        subs.push(sub);
+        lo += len;
+    }
+    subs
+}
+
+/// Sum step functions (sample-and-hold curves): the merged value at any
+/// instant is the sum of every part's latest value. Points are emitted
+/// at the union of the parts' sample instants; simultaneous updates
+/// collapse to one point carrying the final value. `Exact` integer
+/// deltas keep the instances curve lossless; f64 curves accumulate in
+/// part order (deterministic).
+fn merge_step_curves_f64(curves: &[&[(SimTime, f64)]]) -> Vec<(SimTime, f64)> {
+    let mut deltas: Vec<(SimTime, f64)> = vec![];
+    for c in curves {
+        let mut prev = 0.0;
+        for &(t, v) in *c {
+            deltas.push((t, v - prev));
+            prev = v;
+        }
+    }
+    deltas.sort_by_key(|&(t, _)| t); // stable: ties keep part order
+    let mut out: Vec<(SimTime, f64)> = Vec::with_capacity(deltas.len());
+    let mut acc = 0.0f64;
+    for (t, d) in deltas {
+        acc += d;
+        match out.last_mut() {
+            Some(last) if last.0 == t => last.1 = acc,
+            _ => out.push((t, acc)),
+        }
+    }
+    out
+}
+
+fn merge_step_curves_usize(curves: &[&[(SimTime, usize)]]) -> Vec<(SimTime, usize)> {
+    let mut deltas: Vec<(SimTime, i64)> = vec![];
+    for c in curves {
+        let mut prev = 0i64;
+        for &(t, v) in *c {
+            deltas.push((t, v as i64 - prev));
+            prev = v as i64;
+        }
+    }
+    deltas.sort_by_key(|&(t, _)| t);
+    let mut out: Vec<(SimTime, usize)> = Vec::with_capacity(deltas.len());
+    let mut acc = 0i64;
+    for (t, d) in deltas {
+        acc += d;
+        match out.last_mut() {
+            Some(last) if last.0 == t => last.1 = acc.max(0) as usize,
+            _ => out.push((t, acc.max(0) as usize)),
+        }
+    }
+    out
+}
+
+/// Deterministically merge per-part [`RunMetrics`] into one aggregate
+/// report: costs/counters sum, curves merge as step-function sums,
+/// outcomes and traces concatenate in part order with workload indices
+/// re-offset to the original scenario's numbering. A single part is
+/// returned unchanged (bit-identity for the 1-part pin).
+pub fn merge_metrics(parts: Vec<RunMetrics>) -> RunMetrics {
+    if parts.len() <= 1 {
+        return parts.into_iter().next().unwrap_or_default();
+    }
+    let mut out = RunMetrics {
+        cost_curve: merge_step_curves_f64(
+            &parts.iter().map(|p| p.cost_curve.as_slice()).collect::<Vec<_>>(),
+        ),
+        n_star_curve: merge_step_curves_f64(
+            &parts.iter().map(|p| p.n_star_curve.as_slice()).collect::<Vec<_>>(),
+        ),
+        instances_curve: merge_step_curves_usize(
+            &parts.iter().map(|p| p.instances_curve.as_slice()).collect::<Vec<_>>(),
+        ),
+        ..RunMetrics::default()
+    };
+    // concurrent max across platforms from the merged step sum; never
+    // below the largest single part's own (intra-sample) max
+    let curve_max = out.instances_curve.iter().map(|&(_, v)| v).max().unwrap_or(0);
+    let part_max = parts.iter().map(|p| p.max_instances).max().unwrap_or(0);
+    out.max_instances = curve_max.max(part_max);
+    let mut offset = 0usize;
+    for p in parts {
+        out.total_cost += p.total_cost;
+        out.total_busy_cus += p.total_busy_cus;
+        out.finished_at = out.finished_at.max(p.finished_at);
+        out.ticks += p.ticks;
+        out.tick_wall_ns += p.tick_wall_ns;
+        out.reclamations += p.reclamations;
+        out.unfulfilled_requests += p.unfulfilled_requests;
+        out.requeued_tasks += p.requeued_tasks;
+        out.tasks_completed += p.tasks_completed;
+        if out.reclamations_by_pool.len() < p.reclamations_by_pool.len() {
+            out.reclamations_by_pool.resize(p.reclamations_by_pool.len(), 0);
+        }
+        for (dst, src) in out.reclamations_by_pool.iter_mut().zip(&p.reclamations_by_pool) {
+            *dst += *src;
+        }
+        for ((w, k), trace) in p.traces {
+            out.traces.insert((w + offset, k), trace);
+        }
+        let n_wl = p.outcomes.len();
+        out.outcomes.extend(p.outcomes);
+        offset += n_wl;
+    }
+    out
+}
+
+/// Run one many-workload scenario as `parts` concurrent platform
+/// instances over disjoint workload shard sets and merge their metrics
+/// deterministically (spec order; thread count never changes the
+/// result). Each part's final task DB is decomposed via
+/// [`crate::db::TaskDb::into_shards`] and audited: every terminal task
+/// across all shard sets is counted exactly once against the part's
+/// reported completions before the merge is trusted.
+pub fn run_sharded(
+    scn: &Scenario,
+    parts: usize,
+    threads: usize,
+    cache: &BankCache,
+) -> anyhow::Result<RunMetrics> {
+    let subs = split_scenario(scn, parts);
+    type PartRun = anyhow::Result<(RunMetrics, crate::db::TaskDb)>;
+    let runs = run_many(subs.len(), threads, |i| -> PartRun {
+        let sub = &subs[i];
+        sub.validate()?;
+        Platform::from_scenario_with_cache(sub.clone(), cache).run_with_db()
+    });
+    let mut metrics = Vec::with_capacity(subs.len());
+    for (run, sub) in runs.into_iter().zip(&subs) {
+        let (m, db) = run?;
+        // the exactly-once receipt over this part's disjoint shard set
+        let terminal: usize = db
+            .into_shards()
+            .iter()
+            .map(|s| s.count_status(TaskStatus::Completed) + s.count_status(TaskStatus::Failed))
+            .sum();
+        anyhow::ensure!(
+            terminal == m.tasks_completed,
+            "shard audit: part of {} workloads reports {} completions but its shards hold {} \
+             terminal tasks",
+            sub.specs.len(),
+            m.tasks_completed,
+            terminal,
+        );
+        metrics.push(m);
+    }
+    Ok(merge_metrics(metrics))
 }
 
 #[cfg(test)]
@@ -364,6 +569,83 @@ mod tests {
         for s in &g {
             s.scenario.validate().unwrap_or_else(|e| panic!("{}: {e}", s.label));
         }
+    }
+
+    // ----- shard-split driver units ------------------------------------
+
+    fn many_workload_scenario(n_wl: usize) -> Scenario {
+        let mut cfg = Config::paper_defaults();
+        cfg.use_xla = false;
+        cfg.control.n_min = 4.0;
+        cfg.seed = 77;
+        let rng = Rng::new(cfg.seed);
+        let suite: Vec<WorkloadSpec> = (0..n_wl)
+            .map(|w| WorkloadSpec::generate(w, App::FaceDetection, 15, None, &rng))
+            .collect();
+        ScenarioBuilder::new(cfg)
+            .workloads(suite)
+            .fixed_ttc(Some(3600))
+            .arrivals(crate::platform::ArrivalProcess::FixedInterval { interval_s: 60 })
+            .horizon(4 * 3600)
+            .record_traces(false)
+            .build()
+    }
+
+    #[test]
+    fn split_is_balanced_contiguous_and_reindexed() {
+        let scn = many_workload_scenario(5);
+        let subs = split_scenario(&scn, 2);
+        assert_eq!(subs.len(), 2);
+        assert_eq!(subs[0].specs.len(), 3);
+        assert_eq!(subs[1].specs.len(), 2);
+        // contiguous original order, local ids re-stamped to 0..
+        assert_eq!(subs[0].specs[2].name, scn.specs[2].name);
+        assert_eq!(subs[1].specs[0].name, scn.specs[3].name);
+        for sub in &subs {
+            for (j, s) in sub.specs.iter().enumerate() {
+                assert_eq!(s.id, j, "workload ids must be local arrival slots");
+            }
+        }
+        // more parts than workloads clamps to one workload per part
+        assert_eq!(split_scenario(&scn, 99).len(), 5);
+        // a 1-part split is the scenario itself
+        let one = split_scenario(&scn, 1);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].specs.len(), 5);
+    }
+
+    #[test]
+    fn step_curve_merge_sums_and_holds() {
+        let a: Vec<(u64, f64)> = vec![(0, 1.0), (10, 3.0)];
+        let b: Vec<(u64, f64)> = vec![(5, 2.0), (10, 4.0), (20, 5.0)];
+        let merged = merge_step_curves_f64(&[&a, &b]);
+        assert_eq!(merged, vec![(0, 1.0), (5, 3.0), (10, 7.0), (20, 8.0)]);
+        let ai: Vec<(u64, usize)> = vec![(0, 2), (10, 1)];
+        let bi: Vec<(u64, usize)> = vec![(10, 3), (15, 0)];
+        let merged = merge_step_curves_usize(&[&ai, &bi]);
+        assert_eq!(merged, vec![(0, 2), (10, 4), (15, 1)]);
+    }
+
+    #[test]
+    fn merging_one_part_is_identity() {
+        let m = many_workload_scenario(2).run().unwrap();
+        let merged = merge_metrics(vec![m.clone()]);
+        assert_eq!(m, merged);
+    }
+
+    #[test]
+    fn sharded_run_conserves_tasks_and_sums_cost() {
+        let scn = many_workload_scenario(4);
+        let cache = BankCache::new();
+        let merged = run_sharded(&scn, 2, 2, &cache).unwrap();
+        assert_eq!(merged.outcomes.len(), 4);
+        assert_eq!(merged.tasks_completed, scn.n_tasks());
+        // cost must be the exact sum of the two independent parts
+        let subs = split_scenario(&scn, 2);
+        let part_cost: f64 =
+            subs.iter().map(|s| s.run_with_cache(&cache).unwrap().total_cost).sum();
+        assert_eq!(merged.total_cost, part_cost);
+        assert!(merged.max_instances >= 1);
     }
 
     #[test]

@@ -183,6 +183,13 @@ pub(crate) struct TickScratch {
     pub(crate) dd: Vec<f64>,
     pub(crate) active: Vec<bool>,
     pub(crate) rates_tmp: Vec<f64>,
+    /// Active CUs at this tick's monitoring instant (the bank's n_tot
+    /// input) — stashed by `tick_gather` so the bank step and
+    /// `tick_finish` read the same pre-step fleet description.
+    pub(crate) n_tot: f32,
+    /// Committed CUs (running + booting) at the same instant — the
+    /// scaling policy's N_tot input.
+    pub(crate) committed_cus: f64,
 }
 
 /// The assembled platform. Construct through [`Scenario::run`],
@@ -379,39 +386,54 @@ impl Platform {
         self.backend.name()
     }
 
-    /// Execute the experiment to completion; returns the metrics.
-    pub fn run(mut self) -> Result<RunMetrics> {
-        // bootstrap the fleet at N_min CUs through the same greedy type
-        // mix as up-scaling (AS starts from the same launch group); a
-        // single 1-CU pool degenerates to N_min requests
+    /// Bootstrap the experiment: N_min CUs through the same greedy type
+    /// mix as up-scaling (AS starts from the same launch group; a
+    /// single 1-CU pool degenerates to N_min requests), workload
+    /// arrivals per the scenario's arrival process, and the first
+    /// monitoring tick.
+    pub(crate) fn start(&mut self) {
         self.fill_cus(self.cfg.control.n_min as i64);
-        // workload arrivals per the scenario's arrival process
         let times = self.arrivals.times(self.specs.len(), self.cfg.seed);
         for (w, &at) in times.iter().enumerate() {
             self.sim.schedule_at(at, Event::WorkloadArrival { workload: w });
         }
-        // first monitoring tick
         self.sim
             .schedule(self.cfg.control.monitor_interval_s, Event::MonitorTick);
+    }
 
+    /// Pump the event loop up to (and consuming) the next
+    /// `MonitorTick`. Returns `Ok(true)` stopped *at* a tick — the
+    /// caller runs the tick phases (`tick_gather` → bank step →
+    /// `tick_finish`) before pumping again — and `Ok(false)` when the
+    /// run is over (queue drained, horizon crossed, or all workloads
+    /// done): call [`Platform::finalize`]. This is the lockstep
+    /// executor's suspension point (`experiments::batched`).
+    pub(crate) fn pump_to_tick(&mut self) -> Result<bool> {
         while let Some((now, event)) = self.sim.next() {
             if now > self.horizon_s {
-                break;
+                return Ok(false);
             }
             match event {
                 Event::WorkloadArrival { workload } => self.on_arrival(workload)?,
                 Event::InstanceReady { instance } => self.on_instance_ready(instance),
                 Event::ChunkDone { instance, chunk } => self.on_chunk_done(instance, chunk),
                 Event::MergeDone { workload, epoch } => self.on_merge_done(workload, epoch),
-                Event::MonitorTick => self.on_tick()?,
+                Event::MonitorTick => return Ok(true),
                 Event::FootprintDone { .. } => {} // handled inline
             }
             if self.all_done_at.is_some() {
-                break;
+                return Ok(false);
             }
         }
+        Ok(false)
+    }
 
-        // wind down: terminate everything, settle billing
+    /// Wind down a finished run — terminate everything, settle billing,
+    /// assemble the metrics — and hand back the task DB alongside them
+    /// (the multi-platform shard driver decomposes it via
+    /// [`crate::db::TaskDb::into_shards`] for its exactly-once merge
+    /// receipts).
+    pub(crate) fn finalize_with_db(mut self) -> Result<(RunMetrics, TaskDb)> {
         let now = self.sim.now();
         let mut ids: Vec<u64> = vec![];
         self.backend.for_each_instance(&mut |i| ids.push(i.id));
@@ -444,7 +466,40 @@ impl Platform {
                 trace.final_measured = Some(sum / log.len() as f64);
             }
         }
-        Ok(self.metrics)
+        Ok((self.metrics, self.db))
+    }
+
+    /// Wind down a finished run; returns the metrics.
+    pub(crate) fn finalize(self) -> Result<RunMetrics> {
+        self.finalize_with_db().map(|(m, _)| m)
+    }
+
+    /// Execute the experiment to completion; returns the metrics.
+    ///
+    /// The loop is phrased in the PR-5 tick phases — pump to the next
+    /// monitoring instant, gather, one solo bank step, finish — which
+    /// is operation-for-operation the pre-split event loop (the
+    /// determinism and shim-parity pins below and in
+    /// `tests/determinism.rs` hold across the refactor). The lockstep
+    /// batch executor (`experiments::batched`) drives the same phases
+    /// but replaces the solo [`Platform::step_bank`] with one padded
+    /// batch execution across cells.
+    pub fn run(self) -> Result<RunMetrics> {
+        self.run_with_db().map(|(m, _)| m)
+    }
+
+    /// [`Platform::run`], additionally returning the final task DB.
+    pub fn run_with_db(mut self) -> Result<(RunMetrics, TaskDb)> {
+        self.start();
+        while self.pump_to_tick()? {
+            self.tick_gather();
+            self.step_bank()?;
+            self.tick_finish();
+            if self.all_done_at.is_some() {
+                break;
+            }
+        }
+        self.finalize_with_db()
     }
 }
 

@@ -10,6 +10,22 @@
 //! the post-fault fleet. With the `NoFaults` model this is byte-for-byte
 //! the pre-scenario tick.
 //!
+//! §Structure (PR-5): the tick is split at the bank step so a lockstep
+//! batch driver can interpose — [`Platform::tick_gather`] runs
+//! everything *up to* the estimator-bank inputs (billing, faults, ME
+//! assembly into `TickScratch`, the fleet description stashed as
+//! `scratch.n_tot` / `scratch.committed_cus`), the bank step consumes
+//! [`Platform::bank_inputs`] (solo runs via [`Platform::step_bank`];
+//! the batched executor gathers the same inputs into a padded
+//! [`crate::estimation::BatchScratch`] lane instead), and
+//! [`Platform::tick_finish`] runs everything *after* it off the
+//! refilled `StepOutputs`. A solo tick is exactly the pre-split tick:
+//! the same operations in the same order on the same state. Each phase
+//! accrues its *own* wall time into `metrics.tick_wall_ns`, so a
+//! batched cell never absorbs other lanes' work in its tick metric
+//! (the shared padded execution is timed by the batch driver's caller,
+//! e.g. `bench-report`'s `batched_tasks_per_s`, not per cell).
+//!
 //! §Perf: allocation-free in steady state with traces off — every
 //! working set lives in [`super::TickScratch`] or a platform-owned
 //! buffer and is reused across ticks. Trace recording (three Vec pushes
@@ -28,9 +44,15 @@ use crate::runtime::StepOutputs;
 use crate::sim::Event;
 
 impl Platform {
-    pub(crate) fn on_tick(&mut self) -> Result<()> {
+    /// The pre-bank half of the monitoring tick: settle billing, poll
+    /// the fault model, assemble the estimator-bank inputs (eqs. 1-3
+    /// bookkeeping) into `self.scratch`, and stash the fleet
+    /// description the post-bank half needs (`n_tot`,
+    /// `committed_cus`). After this returns, [`Platform::bank_inputs`]
+    /// is the exact input of this tick's bank step.
+    pub(crate) fn tick_gather(&mut self) {
         let now = self.sim.now();
-        let tick_start = Instant::now();
+        let t0 = Instant::now();
         self.backend.bill_through(now);
 
         // ----- fault injection (spot reclamation) -----------------------
@@ -42,10 +64,9 @@ impl Platform {
         }
         self.fault_events = evs;
 
-        // take the scratch + output buffers so field borrows stay
-        // disjoint; returned at the end of the tick
+        // take the scratch so field borrows stay disjoint; returned at
+        // the end of the phase
         let mut sc = std::mem::take(&mut self.scratch);
-        let mut outs = std::mem::take(&mut self.outs);
 
         // ----- ME: assemble bank inputs (eqs. 1-3 bookkeeping) ----------
         let n_w = self.specs.len();
@@ -106,20 +127,60 @@ impl Platform {
             }
         }
         let fleet = self.backend.describe(now);
-        let n_tot = fleet.active_cus as f32;
+        sc.n_tot = fleet.active_cus as f32;
+        sc.committed_cus = fleet.committed_cus;
+        self.scratch = sc;
+        self.metrics.tick_wall_ns += t0.elapsed().as_nanos();
+    }
 
-        // ----- the L1/L2 hot path: estimator-bank step -------------------
-        self.bank.step_into(
+    /// This tick's estimator-bank inputs, borrowed from the scratch
+    /// [`Platform::tick_gather`] filled — the gather point of the
+    /// lockstep batch executor (`experiments::batched`).
+    pub(crate) fn bank_inputs(&self) -> crate::estimation::TickInputs<'_> {
+        let sc = &self.scratch;
+        crate::estimation::TickInputs {
+            b_tilde: &sc.b_tilde,
+            meas_mask: &sc.meas_mask,
+            m_rem: &sc.m_rem,
+            slot_mask: &sc.slot_mask,
+            d: &sc.d,
+            n_tot: sc.n_tot,
+        }
+    }
+
+    /// The solo bank step: one `step_into` on this platform's own bank
+    /// (the batched executor replaces exactly this call with its padded
+    /// lane).
+    pub(crate) fn step_bank(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        // field-disjoint borrows: bank (mut) reads scratch (shared) and
+        // refills outs (mut)
+        let r = self.bank.step_into(
             &crate::estimation::TickInputs {
-                b_tilde: &sc.b_tilde,
-                meas_mask: &sc.meas_mask,
-                m_rem: &sc.m_rem,
-                slot_mask: &sc.slot_mask,
-                d: &sc.d,
-                n_tot,
+                b_tilde: &self.scratch.b_tilde,
+                meas_mask: &self.scratch.meas_mask,
+                m_rem: &self.scratch.m_rem,
+                slot_mask: &self.scratch.slot_mask,
+                d: &self.scratch.d,
+                n_tot: self.scratch.n_tot,
             },
-            &mut outs,
-        )?;
+            &mut self.outs,
+        );
+        self.metrics.tick_wall_ns += t0.elapsed().as_nanos();
+        r
+    }
+
+    /// The post-bank half of the monitoring tick, consuming the
+    /// refilled `self.outs`: passive estimators + convergence, service
+    /// rates, TTC confirmation, the scaling policy, tracker credits,
+    /// dispatch, metrics and the next tick's scheduling.
+    pub(crate) fn tick_finish(&mut self) {
+        let t0 = Instant::now();
+        let now = self.sim.now();
+        let n_w = self.specs.len();
+        let bk = self.bank.k;
+        let mut sc = std::mem::take(&mut self.scratch);
+        let outs = std::mem::take(&mut self.outs);
 
         // ----- passive estimators + convergence + traces ----------------
         sc.converged.clear();
@@ -190,7 +251,8 @@ impl Platform {
         }
 
         // ----- service rates from the *driving* estimator ----------------
-        let n_star = self.driving_rates_into(&outs, &mut sc, n_tot as f64);
+        let n_tot = sc.n_tot as f64;
+        let n_star = self.driving_rates_into(&outs, &mut sc, n_tot);
         for w in 0..n_w {
             self.rates[w] = sc.rates_tmp[w].min(self.cfg.control.n_w_max);
         }
@@ -224,7 +286,7 @@ impl Platform {
             });
             let ctx = PolicyCtx {
                 now,
-                n_tot: fleet.committed_cus,
+                n_tot: sc.committed_cus,
                 n_star,
                 n_star_history: &self.n_star_history,
                 mean_utilization: self.backend.mean_utilization(now),
@@ -239,7 +301,7 @@ impl Platform {
         self.assign_idle();
 
         self.metrics.ticks += 1;
-        self.metrics.tick_wall_ns += tick_start.elapsed().as_nanos();
+        self.metrics.tick_wall_ns += t0.elapsed().as_nanos();
         self.sample_instances(now);
 
         // continue while work remains or arrivals are still scheduled
@@ -253,7 +315,6 @@ impl Platform {
 
         self.scratch = sc;
         self.outs = outs;
-        Ok(())
     }
 
     // ----- helpers ---------------------------------------------------------

@@ -14,7 +14,8 @@ use std::sync::Mutex;
 
 use dithen::db::{TaskDb, TaskStatus};
 use dithen::estimation::{
-    AdHoc, Arma, Backend, Bank, BankParams, DeviationDetector, SlopeDetector, TickInputs,
+    AdHoc, Arma, Backend, Bank, BankParams, BatchScratch, DeviationDetector, SlopeDetector,
+    TickInputs,
 };
 use dithen::runtime::StepOutputs;
 
@@ -136,6 +137,68 @@ fn native_bank_step_into_is_allocation_free_after_warmup() {
     assert_eq!(
         delta, 0,
         "bank step_into steady state allocated {delta} times (must be zero)"
+    );
+}
+
+/// The lockstep batch tick (PR-5): once the padded scratch and every
+/// cell's `StepOutputs` have been through one warm-up round, a full
+/// gather → `step_batch_into` → scatter round over N cells must not
+/// touch the heap — the batched executor's hot loop keeps the
+/// zero-allocation contract the per-cell tick established.
+#[test]
+#[ignore = "allocation counting needs --test-threads=1; CI runs with --ignored"]
+fn lockstep_batch_tick_is_allocation_free_after_warmup() {
+    let _g = GATE.lock().unwrap();
+    let (w, k, n) = (16usize, 2usize, 8usize);
+    let wk = w * k;
+    let params = BankParams {
+        sigma_z2: 0.5,
+        sigma_v2: 0.5,
+        alpha: 5.0,
+        beta: 0.9,
+        n_min: 10.0,
+        n_max: 100.0,
+        n_w_max: 10.0,
+    };
+    let template = Bank::new(w, k, params, Backend::Native);
+    let mut banks: Vec<Bank> = (0..n).map(|_| Bank::new(w, k, params, Backend::Native)).collect();
+    let mut outs: Vec<StepOutputs> = (0..n).map(|_| StepOutputs::default()).collect();
+    let slot = vec![1.0f32; wk];
+    let meas = vec![1.0f32; wk];
+    let b_tilde = vec![42.0f32; wk];
+    let m_rem = vec![10.0f32; wk];
+    let d = vec![1000.0f32; w];
+    let tick = TickInputs {
+        b_tilde: &b_tilde,
+        meas_mask: &meas,
+        m_rem: &m_rem,
+        slot_mask: &slot,
+        d: &d,
+        n_tot: 10.0,
+    };
+    let mut batch = BatchScratch::default();
+    let round = |banks: &mut Vec<Bank>, outs: &mut Vec<StepOutputs>, batch: &mut BatchScratch| {
+        batch.begin(n, w, k);
+        for bank in banks.iter() {
+            batch.gather(bank, &tick).unwrap();
+        }
+        template.step_batch_into(batch).unwrap();
+        for (i, bank) in banks.iter_mut().enumerate() {
+            batch.scatter(i, bank, &mut outs[i]);
+        }
+    };
+    // warm: sizes the padded scratch and every cell's output buffers
+    round(&mut banks, &mut outs, &mut batch);
+
+    let before = allocs();
+    for _ in 0..100 {
+        round(&mut banks, &mut outs, &mut batch);
+    }
+    let delta = allocs() - before;
+    std::hint::black_box(&outs);
+    assert_eq!(
+        delta, 0,
+        "lockstep batch round allocated {delta} times in steady state (must be zero)"
     );
 }
 

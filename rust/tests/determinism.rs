@@ -10,7 +10,8 @@
 use dithen::cloud::FleetSpec;
 use dithen::config::Config;
 use dithen::estimation::BankCache;
-use dithen::experiments::parallel::{run_specs, run_specs_with_cache, RunSpec};
+use dithen::experiments::batched::{run_specs_batched, run_specs_batched_opts};
+use dithen::experiments::parallel::{run_sharded, run_specs, run_specs_with_cache, RunSpec};
 use dithen::platform::{
     run_experiment, ArrivalProcess, FaultSpec, RunOpts, Scenario, ScenarioBuilder,
 };
@@ -155,6 +156,88 @@ fn bank_cache_reuse_does_not_change_results() {
     assert!(cache.stats().hits > cold_stats.hits);
     let global = run_specs(&specs, 2).unwrap();
     assert_eq!(cold, global, "global-cache run diverged from private-cache run");
+}
+
+/// PR-5 lockstep pin: the batched sweep executor must be
+/// **bit-identical** to the per-cell sequential path on a mixed grid —
+/// several (W, K) variants, a market-driven reclamation cell and a
+/// mixed-fleet partial-revocation cell included — and invariant across
+/// batch widths {1, 4, unbounded} and thread counts. Every comparison
+/// is exhaustive `RunMetrics` equality.
+#[test]
+fn batched_sweep_is_bit_identical_to_per_cell() {
+    let mut specs: Vec<RunSpec> = vec![];
+    for (i, est) in dithen::estimation::EstimatorKind::ALL.iter().enumerate() {
+        let seed = 400 + i as u64;
+        specs.push(RunSpec::from_opts(
+            format!("batch/{i}"),
+            cfg(seed),
+            suite(seed, 2, 25),
+            RunOpts { estimator: *est, ..opts() },
+        ));
+    }
+    specs.push(RunSpec::from_opts("batch/one-wl", cfg(410), suite(410, 1, 30), opts()));
+    specs.push(RunSpec::new("batch/reclaim", reclamation_scenario(415)));
+    specs.push(RunSpec::new("batch/fleet", mixed_fleet_scenario(420)));
+
+    let reference = run_specs(&specs, 1).unwrap();
+    for (threads, max_batch) in
+        [(1usize, Some(1usize)), (1, Some(4)), (1, None), (4, None), (8, Some(2))]
+    {
+        let cache = BankCache::new();
+        let batched = run_specs_batched_opts(&specs, threads, max_batch, &cache).unwrap();
+        assert_eq!(
+            reference, batched,
+            "batched executor (threads={threads}, max_batch={max_batch:?}) diverged from the \
+             per-cell sequential path"
+        );
+    }
+    // the default chunking too (the `dithen sweep --batched` path)
+    let batched = run_specs_batched(&specs, 2, &BankCache::new()).unwrap();
+    assert_eq!(reference, batched);
+}
+
+/// PR-5 shard-split pin, degenerate case: a 1-part "split" driven
+/// through the whole multi-platform machinery (split → platform per
+/// part → shard audit → merge) must be bit-identical to the unsplit
+/// `Scenario::run`.
+#[test]
+fn sharded_single_part_is_bit_identical_to_unsplit() {
+    let scn = ScenarioBuilder::new(cfg(33))
+        .workloads(suite(33, 3, 25))
+        .fixed_ttc(Some(3600))
+        .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+        .horizon(6 * 3600)
+        .build();
+    let cache = BankCache::new();
+    let unsplit = scn.run_with_cache(&cache).unwrap();
+    let merged = run_sharded(&scn, 1, 1, &cache).unwrap();
+    assert_eq!(unsplit, merged, "1-part sharded run diverged from the unsplit platform");
+}
+
+/// PR-5 shard-split pin, multi-part: platform instances over disjoint
+/// workload shard sets merge to the same `RunMetrics` no matter how
+/// many worker threads drive them, and the merged totals conserve the
+/// scenario's work exactly (every task terminal exactly once across
+/// the disjoint shard sets — the in-driver audit would fail the run
+/// otherwise).
+#[test]
+fn sharded_runs_merge_thread_count_invariantly() {
+    let scn = ScenarioBuilder::new(cfg(34))
+        .workloads(suite(34, 4, 20))
+        .fixed_ttc(Some(3600))
+        .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+        .horizon(6 * 3600)
+        .record_traces(false)
+        .build();
+    let cache = BankCache::new();
+    let reference = run_sharded(&scn, 3, 1, &cache).unwrap();
+    for threads in [2usize, 4, 8] {
+        let m = run_sharded(&scn, 3, threads, &cache).unwrap();
+        assert_eq!(reference, m, "{threads}-thread sharded run diverged");
+    }
+    assert_eq!(reference.outcomes.len(), 4);
+    assert_eq!(reference.tasks_completed, scn.n_tasks());
 }
 
 #[test]
