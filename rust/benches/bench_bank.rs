@@ -8,7 +8,9 @@
 
 mod common;
 
-use dithen::estimation::{Backend, Bank, BankParams, BatchScratch, TickInputs};
+use dithen::estimation::{
+    kalman_update_scalar, kalman_update_simd, Backend, Bank, BankParams, BatchScratch, TickInputs,
+};
 use dithen::runtime::{Engine, StepOutputs};
 use dithen::util::rng::Rng;
 
@@ -60,6 +62,37 @@ fn main() {
         } else {
             eprintln!("artifacts missing; skipping XLA bench for {w}x{k}");
         }
+    }
+
+    // PR-6: the stage-1 Kalman measurement update in isolation, scalar
+    // index loop vs the 8-lane unrolled kernel `native_step_slices` now
+    // calls, across the ISSUE grid of bank shapes. Both variants are
+    // bit-identical by construction (no reassociation, no cross-lane
+    // ops) — this bench records what the unrolling is worth, and the
+    // outputs are compared once per shape as a cheap sanity cross-check.
+    for &(w, k) in &[(4usize, 8usize), (8, 16), (16, 32)] {
+        let wk = w * k;
+        let (slot, meas, bt, _m, _d) = inputs(w, k, &mut rng);
+        let b_hat: Vec<f32> = (0..wk).map(|_| rng.uniform(1.0, 200.0) as f32).collect();
+        let pi: Vec<f32> = (0..wk).map(|_| rng.uniform(0.1, 5.0) as f32).collect();
+        let p = params();
+        let mut sb = vec![0.0f32; wk];
+        let mut sp = vec![0.0f32; wk];
+        let mut vb = vec![0.0f32; wk];
+        let mut vp = vec![0.0f32; wk];
+        common::bench(&format!("kalman_stage1/scalar/{w}x{k}"), 100, 20000, || {
+            kalman_update_scalar(&b_hat, &pi, &bt, &meas, &slot, &p, &mut sb, &mut sp);
+            sb[0]
+        });
+        common::bench(&format!("kalman_stage1/simd/{w}x{k}"), 100, 20000, || {
+            kalman_update_simd(&b_hat, &pi, &bt, &meas, &slot, &p, &mut vb, &mut vp);
+            vb[0]
+        });
+        assert!(
+            sb.iter().zip(&vb).all(|(a, b)| a.to_bits() == b.to_bits())
+                && sp.iter().zip(&vp).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "scalar and SIMD stage-1 kernels diverged at {w}x{k}"
+        );
     }
 
     // PR-5: the lockstep batch path vs N per-cell steps, per batch

@@ -5,7 +5,7 @@
 //! dithen repro <exp|all>      regenerate a paper table/figure (see list)
 //! dithen run [options]        run the platform on the paper suite
 //! dithen scenario [options]   run a composed scenario (backend/fault/arrivals)
-//! dithen sweep <grid>         parallel experiment grid (cost|estimators|seeds|fleet)
+//! dithen sweep <grid>         parallel experiment grid (cost|estimators|seeds|fleet|smoke|sparse)
 //! dithen bench-report         measure tasks/s, write BENCH json
 //! dithen bench-check          gate: compare two bench reports, exit 1 on regression
 //! dithen list                 list experiment ids
@@ -41,7 +41,7 @@ COMMANDS:
     run               run the platform on the 30-workload paper suite
     scenario          run a composed scenario: pluggable backend, arrivals, faults
     sweep <grid>      run an experiment grid across cores:
-                      cost | estimators | seeds | fleet | smoke
+                      cost | estimators | seeds | fleet | smoke | sparse
     bench-report      measure end-to-end tasks/s + DB ops/s, write a JSON report
     bench-check       regression gate: exit 1 if --current tasks/s < tolerance x --baseline
     list              list experiment ids

@@ -187,6 +187,27 @@ pub trait CloudBackend {
     /// backends).
     fn bill_through(&mut self, now: SimTime);
 
+    /// Earliest instant at which [`CloudBackend::bill_through`] would
+    /// charge something — one leg of the sparse-tick skip horizon
+    /// (PR-6): a monitoring instant strictly before this time can be
+    /// fast-forwarded without missing a billing charge or a cost-curve
+    /// point. `None` means "never" (usage-billed backends, whose cost
+    /// accrues entirely in completion events). The conservative default
+    /// (`Some(now)`) makes an unaware backend simply never skip.
+    fn next_billing_due(&self, now: SimTime) -> Option<SimTime> {
+        Some(now)
+    }
+
+    /// Earliest instant strictly after `now` at which any pool's
+    /// [`CloudBackend::pool_unit_price`] can change — the market leg of
+    /// the skip horizon (market-driven fault models and the greedy
+    /// fill's price comparisons both read live prices). `None` means
+    /// prices are constant from `now` on (flat-rate and usage-billed
+    /// backends).
+    fn next_price_change(&self, _now: SimTime) -> Option<SimTime> {
+        None
+    }
+
     /// `describeInstances()` fleet summary — the aggregate over every
     /// pool (what the scaling controller reads).
     fn describe(&self, now: SimTime) -> FleetView;
@@ -304,13 +325,23 @@ pub(crate) fn fleet_idle_by_remaining(
     v.into_iter().map(|(id, _)| id).collect()
 }
 
+// One-pass (allocation-free) mean over active instances: identical to
+// `stats::mean` of the collected utilizations — same left-to-right
+// summation order over the same id-ordered values, empty fleet -> 0.0 —
+// but callable from the fast-forward path of a skipped tick, which must
+// not touch the heap.
 pub(crate) fn fleet_mean_utilization(instances: &BTreeMap<u64, Instance>, now: SimTime) -> f64 {
-    let us: Vec<f64> = instances
-        .values()
-        .filter(|i| i.is_active(now))
-        .map(|i| i.utilization(now))
-        .collect();
-    crate::util::stats::mean(&us)
+    let mut sum = 0.0f64;
+    let mut count = 0usize;
+    for i in instances.values().filter(|i| i.is_active(now)) {
+        sum += i.utilization(now);
+        count += 1;
+    }
+    if count == 0 {
+        0.0
+    } else {
+        sum / count as f64
+    }
 }
 
 // ----- Lambda backend --------------------------------------------------
@@ -384,6 +415,11 @@ impl CloudBackend for LambdaBackend {
 
     fn bill_through(&mut self, _now: SimTime) {
         // usage-billed: all cost accrues in on_chunk_finished
+    }
+
+    fn next_billing_due(&self, _now: SimTime) -> Option<SimTime> {
+        // bill_through never charges: time-based billing is never due
+        None
     }
 
     fn describe(&self, now: SimTime) -> FleetView {
@@ -507,6 +543,17 @@ mod tests {
         b.bill_through(ready + 50_000);
         assert_eq!(b.total_cost(), 0.0);
         assert_eq!(b.describe(ready).c_tot, 0.0);
+    }
+
+    #[test]
+    fn lambda_has_no_skip_horizon_legs() {
+        // usage-billed: time-based billing is never due and prices are
+        // flat, so neither leg ever blocks a sparse-tick skip
+        let mut b = lambda();
+        let (id, ready) = b.request_instance(100);
+        b.instance_ready(id, ready);
+        assert_eq!(b.next_billing_due(ready), None);
+        assert_eq!(b.next_price_change(ready), None);
     }
 
     #[test]

@@ -52,6 +52,24 @@ impl PriceTrace {
         self.hourly[h.min(self.hourly.len() - 1)]
     }
 
+    /// Earliest instant strictly after `t_secs` at which [`price_at`]
+    /// can return a different value: the next hour boundary, while one
+    /// still lies inside the trace. Past the last sample the step
+    /// interpolation clamps to `hourly[len-1]`, so the price is
+    /// constant forever and there is no next change (`None`).
+    ///
+    /// [`price_at`]: PriceTrace::price_at
+    pub fn next_change_after(&self, t_secs: u64) -> Option<u64> {
+        let next_h = t_secs / 3600 + 1;
+        // boundaries at or beyond the last sample index never change
+        // the clamped lookup
+        if (next_h as usize) <= self.hourly.len().saturating_sub(1) {
+            Some(next_h * 3600)
+        } else {
+            None
+        }
+    }
+
     pub fn max(&self) -> f64 {
         self.hourly.iter().cloned().fold(f64::MIN, f64::max)
     }
@@ -130,6 +148,14 @@ impl Market {
 
     pub fn horizon_hours(&self) -> usize {
         self.horizon_hours
+    }
+
+    /// Earliest instant strictly after `t_secs` at which *any* type's
+    /// spot price can move. Every trace is sampled on the same hourly
+    /// grid with the same length, so one boundary bounds all pools;
+    /// `None` once every trace has clamped to its final sample.
+    pub fn next_price_change(&self, t_secs: u64) -> Option<u64> {
+        self.traces.first().and_then(|t| t.next_change_after(t_secs))
     }
 }
 
@@ -215,5 +241,20 @@ mod tests {
         // beyond the horizon clamps to the last sample
         let last = *m.trace(0).hourly.last().unwrap();
         assert_eq!(m.spot_price(0, u64::MAX / 2), last);
+    }
+
+    #[test]
+    fn next_change_is_the_next_in_trace_hour_boundary() {
+        let m = Market::new(MarketCfg::default(), 7, 3); // samples @ h 0,1,2
+        assert_eq!(m.next_price_change(0), Some(3600));
+        assert_eq!(m.next_price_change(3599), Some(3600));
+        assert_eq!(m.next_price_change(3600), Some(7200), "boundary itself already applied");
+        // the last sample (h=2) covers [7200, ∞) under clamping: no change
+        assert_eq!(m.next_price_change(7200), None);
+        assert_eq!(m.next_price_change(50_000), None);
+        // soundness against the lookup: price is constant on [t, next)
+        let t = m.trace(1);
+        let nb = t.next_change_after(100).unwrap();
+        assert_eq!(t.price_at(100), t.price_at(nb - 1));
     }
 }

@@ -315,6 +315,28 @@ impl crate::cloud::CloudBackend for Provider {
         Provider::bill_through(self, now)
     }
 
+    fn next_billing_due(&self, _now: SimTime) -> Option<SimTime> {
+        // `Instance::bill_through` charges the moment `now` reaches an
+        // instance's `billed_until`, so the earliest such instant over
+        // the billable states is exactly when the next charge lands.
+        // Booting instances are excluded (billing starts at readiness —
+        // an InstanceReady *event*, already part of the skip horizon);
+        // terminated ones never bill again.
+        self.instances
+            .values()
+            .filter(|i| matches!(i.state, InstanceState::Running | InstanceState::Draining))
+            .map(|i| i.billed_until)
+            .min()
+    }
+
+    fn next_price_change(&self, now: SimTime) -> Option<SimTime> {
+        if self.flat_rate.is_some() {
+            None // on-demand: flat rates never move
+        } else {
+            self.market.next_price_change(now)
+        }
+    }
+
     fn describe(&self, now: SimTime) -> FleetView {
         Provider::describe(self, now)
     }
@@ -455,6 +477,42 @@ mod tests {
     fn mean_utilization_empty_fleet_is_zero() {
         let p = provider();
         assert_eq!(p.mean_utilization(100), 0.0);
+    }
+
+    #[test]
+    fn next_billing_due_tracks_earliest_billed_until() {
+        let mut p = provider();
+        assert_eq!(p.next_billing_due(0), None, "empty fleet never bills");
+        let (a, ra) = p.request_spot_instance(0, 0);
+        // a booting instance does not bill until its ready event fires
+        assert_eq!(p.next_billing_due(0), None);
+        p.instance_ready(a, ra);
+        // first increment charged at readiness: next charge one hour on
+        assert_eq!(p.next_billing_due(ra), Some(ra + 3600));
+        let (b, rb) = p.request_spot_instance(0, 1800);
+        p.instance_ready(b, rb);
+        assert_eq!(p.next_billing_due(rb), Some(ra + 3600), "earliest instance wins");
+        // soundness: bill_through strictly before the due instant is free
+        let c = p.total_cost();
+        p.bill_through(ra + 3599);
+        assert_eq!(p.total_cost(), c);
+        p.bill_through(ra + 3600);
+        assert!(p.total_cost() > c);
+        // terminating an idle instance removes it from the horizon
+        p.terminate_instance(a, ra + 3601);
+        assert_eq!(p.next_billing_due(ra + 3601), Some(rb + 3600));
+    }
+
+    #[test]
+    fn next_price_change_modes() {
+        let p = provider(); // spot: hourly boundaries within the trace
+        assert_eq!(
+            CloudBackend::next_price_change(&p, 100),
+            p.market().next_price_change(100)
+        );
+        assert!(CloudBackend::next_price_change(&p, 100).is_some());
+        let od = Provider::new_on_demand(MarketCfg::default(), 1, 24);
+        assert_eq!(CloudBackend::next_price_change(&od, 100), None, "flat rates never move");
     }
 
     #[test]

@@ -508,21 +508,18 @@ fn native_step_slices(
     out: SliceOutputs<'_>,
 ) -> (f32, f32) {
     let wk = w * k;
-    // 1. masked Kalman update (eqs. 6-9), inert outside slot_mask
-    for i in 0..wk {
-        let pi_minus = pi[i] + p.sigma_z2;
-        let kappa = pi_minus / (pi_minus + p.sigma_v2);
-        let b_meas = b_hat[i] + kappa * (inp.b_tilde[i] - b_hat[i]);
-        let pi_meas = (1.0 - kappa) * pi_minus;
-        let m = inp.meas_mask[i];
-        let mut b = m * b_meas + (1.0 - m) * b_hat[i];
-        let mut pv = m * pi_meas + (1.0 - m) * pi_minus;
-        let s = inp.slot_mask[i];
-        b = s * b + (1.0 - s) * b_hat[i];
-        pv = s * pv + (1.0 - s) * pi[i];
-        out.b_hat[i] = b;
-        out.pi[i] = pv;
-    }
+    // 1. masked Kalman update (eqs. 6-9), inert outside slot_mask —
+    // the element-wise stage, vectorized (PR-6)
+    kalman_update_simd(
+        &b_hat[..wk],
+        &pi[..wk],
+        &inp.b_tilde[..wk],
+        &inp.meas_mask[..wk],
+        &inp.slot_mask[..wk],
+        p,
+        &mut out.b_hat[..wk],
+        &mut out.pi[..wk],
+    );
     // 2. r_w = sum_k m*mask*b (eq. 1)
     for wi in 0..w {
         let mut acc = 0.0f32;
@@ -598,6 +595,115 @@ pub fn native_step_into(
     );
     out.n_star = n_star;
     out.n_next = n_next;
+}
+
+/// One element of the stage-1 masked Kalman update (eqs. 6-9). The
+/// single source of the per-element arithmetic: the scalar reference
+/// and the vectorized kernel both inline exactly this expression, so
+/// they cannot drift (and `simd_kernel_matches_scalar` pins the
+/// equality bit-for-bit anyway).
+#[inline(always)]
+fn kalman_cell(p: &BankParams, b_hat: f32, pi: f32, b_tilde: f32, m: f32, s: f32) -> (f32, f32) {
+    let pi_minus = pi + p.sigma_z2;
+    let kappa = pi_minus / (pi_minus + p.sigma_v2);
+    let b_meas = b_hat + kappa * (b_tilde - b_hat);
+    let pi_meas = (1.0 - kappa) * pi_minus;
+    let mut b = m * b_meas + (1.0 - m) * b_hat;
+    let mut pv = m * pi_meas + (1.0 - m) * pi_minus;
+    b = s * b + (1.0 - s) * b_hat;
+    pv = s * pv + (1.0 - s) * pi;
+    (b, pv)
+}
+
+/// Scalar reference for the stage-1 masked Kalman update: one
+/// [`kalman_cell`] per element, in index order. Exists so the
+/// `simd_kernel_matches_scalar` pin and `bench_bank` have a
+/// known-scalar baseline to hold the vectorized kernel against.
+#[allow(clippy::too_many_arguments)] // mirrors the 8-plane kernel ABI; a struct would obscure it
+pub fn kalman_update_scalar(
+    b_hat: &[f32],
+    pi: &[f32],
+    b_tilde: &[f32],
+    meas_mask: &[f32],
+    slot_mask: &[f32],
+    p: &BankParams,
+    out_b: &mut [f32],
+    out_pi: &mut [f32],
+) {
+    for i in 0..b_hat.len() {
+        let (b, pv) = kalman_cell(p, b_hat[i], pi[i], b_tilde[i], meas_mask[i], slot_mask[i]);
+        out_b[i] = b;
+        out_pi[i] = pv;
+    }
+}
+
+/// Number of f32 lanes the vectorized stage-1 kernel processes per
+/// unrolled block. Eight f32s fill one AVX/AVX2 ymm register (and one
+/// sublane row of a TPU VPU's 8×128 tile — the shape the XLA backend's
+/// compiled kernel vectorizes to), so the unrolled block lowers to a
+/// handful of whole-register ops on the targets we care about while
+/// SSE/NEON simply split it into two 4-lane halves.
+pub const KERNEL_LANES: usize = 8;
+
+/// Vectorized stage-1 masked Kalman update (PR-6): the element loop of
+/// [`kalman_update_scalar`] restructured into [`KERNEL_LANES`]-wide
+/// unrolled blocks over `chunks_exact`, plus a scalar tail. Each lane
+/// of a block evaluates the *same* [`kalman_cell`] expression on its
+/// own element — no cross-lane operation, no reassociation, no FMA
+/// contraction the scalar path wouldn't also do — so the result is
+/// **bit-identical** to the scalar reference by construction; the
+/// block structure only hands the compiler exact trip counts and
+/// bounds-check-free slices so the eight independent element flows
+/// lower to packed f32 arithmetic.
+#[allow(clippy::too_many_arguments)] // same 8-plane signature as the scalar reference
+pub fn kalman_update_simd(
+    b_hat: &[f32],
+    pi: &[f32],
+    b_tilde: &[f32],
+    meas_mask: &[f32],
+    slot_mask: &[f32],
+    p: &BankParams,
+    out_b: &mut [f32],
+    out_pi: &mut [f32],
+) {
+    const L: usize = KERNEL_LANES;
+    let n = b_hat.len();
+    let blocks = n / L;
+    let split = blocks * L;
+    let bh_t = &b_hat[split..];
+    let pi_t = &pi[split..];
+    let (ob, ob_t) = out_b.split_at_mut(split);
+    let (op, op_t) = out_pi.split_at_mut(split);
+    for ((((ob, op), bh), pv), ((bt, mm), sm)) in ob
+        .chunks_exact_mut(L)
+        .zip(op.chunks_exact_mut(L))
+        .zip(b_hat[..split].chunks_exact(L))
+        .zip(pi[..split].chunks_exact(L))
+        .zip(
+            b_tilde[..split]
+                .chunks_exact(L)
+                .zip(meas_mask[..split].chunks_exact(L))
+                .zip(slot_mask[..split].chunks_exact(L)),
+        )
+    {
+        for j in 0..L {
+            let (b, pvx) = kalman_cell(p, bh[j], pv[j], bt[j], mm[j], sm[j]);
+            ob[j] = b;
+            op[j] = pvx;
+        }
+    }
+    for j in 0..n - split {
+        let (b, pvx) = kalman_cell(
+            p,
+            bh_t[j],
+            pi_t[j],
+            b_tilde[split + j],
+            meas_mask[split + j],
+            slot_mask[split + j],
+        );
+        ob_t[j] = b;
+        op_t[j] = pvx;
+    }
 }
 
 #[cfg(test)]
@@ -927,5 +1033,225 @@ mod tests {
         bank.reset_slot(1, 1);
         assert_eq!(bank.estimate(1, 1), 0.0);
         assert!(bank.estimate(0, 0) > 0.0);
+    }
+
+    /// PR-6 pin: the vectorized stage-1 kernel is bit-identical to the
+    /// scalar reference, and both production paths (per-cell
+    /// `step_into`, batched `step_batch_into`) route through it. Exact
+    /// f32 equality — shapes cover whole-block (wk % 8 == 0),
+    /// tail-only (wk < 8) and mixed cases, evolving real state
+    /// trajectories so the comparison isn't anchored at zero.
+    #[test]
+    fn simd_kernel_matches_scalar() {
+        let mut rng = Rng::new(0x51AD);
+        for (w, k) in [(4usize, 8usize), (8, 16), (16, 32), (3, 5), (1, 1), (2, 7)] {
+            let wk = w * k;
+            let mut b_hat: Vec<f32> = (0..wk).map(|_| rng.uniform(0.0, 200.0) as f32).collect();
+            let mut pi: Vec<f32> = (0..wk).map(|_| rng.uniform(0.0, 5.0) as f32).collect();
+            for step in 0..10 {
+                let (slot, meas, b_tilde, m_rem, d, n_tot) = random_tick(w, k, &mut rng);
+                let (mut sb, mut sp) = (vec![0.0f32; wk], vec![0.0f32; wk]);
+                let (mut vb, mut vp) = (vec![0.0f32; wk], vec![0.0f32; wk]);
+                let p = params();
+                kalman_update_scalar(&b_hat, &pi, &b_tilde, &meas, &slot, &p, &mut sb, &mut sp);
+                kalman_update_simd(&b_hat, &pi, &b_tilde, &meas, &slot, &p, &mut vb, &mut vp);
+                for i in 0..wk {
+                    assert_eq!(
+                        sb[i].to_bits(),
+                        vb[i].to_bits(),
+                        "({w},{k}) step {step} b_hat[{i}]: scalar={} simd={}",
+                        sb[i],
+                        vb[i]
+                    );
+                    assert_eq!(sp[i].to_bits(), vp[i].to_bits(), "({w},{k}) step {step} pi[{i}]");
+                }
+                let inp = TickInputs {
+                    b_tilde: &b_tilde,
+                    meas_mask: &meas,
+                    m_rem: &m_rem,
+                    slot_mask: &slot,
+                    d: &d,
+                    n_tot,
+                };
+                // per-cell path: stage 1 of step_into is the kernel
+                let mut cell = Bank::new(w, k, params(), Backend::Native);
+                cell.b_hat.copy_from_slice(&b_hat);
+                cell.pi.copy_from_slice(&pi);
+                let out = cell.step(&inp).unwrap();
+                assert_eq!(out.b_hat, sb, "({w},{k}) step {step}: per-cell path diverged");
+                assert_eq!(out.pi, sp, "({w},{k}) step {step}: per-cell pi diverged");
+                // batched path: one gathered lane, same kernel
+                let mut lane_bank = Bank::new(w, k, params(), Backend::Native);
+                lane_bank.b_hat.copy_from_slice(&b_hat);
+                lane_bank.pi.copy_from_slice(&pi);
+                let template = Bank::new(w, k, params(), Backend::Native);
+                let mut batch = BatchScratch::default();
+                batch.begin(1, w, k);
+                batch.gather(&lane_bank, &inp).unwrap();
+                template.step_batch_into(&mut batch).unwrap();
+                let mut bout = StepOutputs::default();
+                batch.scatter(0, &mut lane_bank, &mut bout);
+                assert_eq!(bout.b_hat, sb, "({w},{k}) step {step}: batched path diverged");
+                assert_eq!(bout.pi, sp, "({w},{k}) step {step}: batched pi diverged");
+                // evolve the trajectory for the next step
+                b_hat = sb;
+                pi = sp;
+            }
+        }
+    }
+
+    /// The sparse-tick skipper's bank leg (PR-6,
+    /// `Platform::fast_forward_tick`): on an all-zero slot mask the
+    /// step is a fixed point — persistent `b_hat`/`pi` come back
+    /// bit-unchanged and the consumed outputs (`r`, `s`, `n_star`) are
+    /// zero *independent of `n_tot`* — so a skipped tick may reuse the
+    /// previous step's outputs verbatim while the fleet keeps decaying.
+    #[test]
+    fn zero_slot_mask_step_is_a_fixed_point() {
+        let (w, k) = (4usize, 3usize);
+        let wk = w * k;
+        let mut bank = Bank::new(w, k, params(), Backend::Native);
+        let mut rng = Rng::new(0x1D1E);
+        for _ in 0..5 {
+            let (slot, meas, b_tilde, m_rem, d, n_tot) = random_tick(w, k, &mut rng);
+            bank.step(&TickInputs {
+                b_tilde: &b_tilde,
+                meas_mask: &meas,
+                m_rem: &m_rem,
+                slot_mask: &slot,
+                d: &d,
+                n_tot,
+            })
+            .unwrap();
+        }
+        let b0 = bank.b_hat().to_vec();
+        let p0 = bank.pi().to_vec();
+        let zeros = vec![0.0f32; wk];
+        let d = vec![0.0f32; w];
+        for n_tot in [0.0f32, 7.0, 50.0] {
+            let out = bank
+                .step(&TickInputs {
+                    b_tilde: &zeros,
+                    meas_mask: &zeros,
+                    m_rem: &zeros,
+                    slot_mask: &zeros,
+                    d: &d,
+                    n_tot,
+                })
+                .unwrap();
+            assert_eq!(bank.b_hat(), &b0[..], "state must be preserved (n_tot={n_tot})");
+            assert_eq!(bank.pi(), &p0[..], "covariance must be preserved (n_tot={n_tot})");
+            assert!(out.r.iter().all(|&x| x == 0.0), "r must be zero");
+            assert!(out.s.iter().all(|&x| x == 0.0), "s must be zero");
+            assert_eq!(out.n_star, 0.0, "n_star must be zero independent of n_tot");
+        }
+    }
+
+    /// ROADMAP 5a, stub side: pin the padded row-major `[N, W, K]`
+    /// batch layout a batch-dimension XLA artifact will consume —
+    /// `[N, W*K]` planes at flat offset `lane*W*K + wi*K + ki`,
+    /// `[N, W]` planes at `lane*W + wi`, `[N]` scalars at `lane` — so
+    /// the artifact swap behind `step_batch_into` cannot silently
+    /// reinterpret the buffers.
+    #[test]
+    fn batch_layout_is_padded_row_major() {
+        let (w, k, cap) = (3usize, 4usize, 5usize);
+        let wk = w * k;
+        let mut batch = BatchScratch::default();
+        batch.begin(cap, w, k);
+        let sentinel = |lane: usize, wi: usize, ki: usize| (lane * 1000 + wi * 100 + ki) as f32;
+        let mut banks: Vec<Bank> =
+            (0..cap).map(|_| Bank::new(w, k, params(), Backend::Native)).collect();
+        let no_meas = vec![0.0f32; wk];
+        let all_slots = vec![1.0f32; wk];
+        for lane in 0..cap {
+            let mut b_tilde = vec![0.0f32; wk];
+            let mut m_rem = vec![0.0f32; wk];
+            for wi in 0..w {
+                for ki in 0..k {
+                    b_tilde[wi * k + ki] = sentinel(lane, wi, ki);
+                    m_rem[wi * k + ki] = sentinel(lane, wi, ki) + 0.5;
+                    banks[lane].b_hat[wi * k + ki] = sentinel(lane, wi, ki) + 0.25;
+                }
+            }
+            let d: Vec<f32> = (0..w).map(|wi| sentinel(lane, wi, 99)).collect();
+            let got = batch
+                .gather(
+                    &banks[lane],
+                    &TickInputs {
+                        b_tilde: &b_tilde,
+                        meas_mask: &no_meas,
+                        m_rem: &m_rem,
+                        slot_mask: &all_slots,
+                        d: &d,
+                        n_tot: lane as f32 + 0.125,
+                    },
+                )
+                .unwrap();
+            assert_eq!(got, lane, "gather must hand out lanes in order");
+        }
+        for lane in 0..cap {
+            for wi in 0..w {
+                for ki in 0..k {
+                    let flat = lane * wk + wi * k + ki;
+                    let s = sentinel(lane, wi, ki);
+                    assert_eq!(batch.b_tilde[flat], s, "b_tilde [{lane},{wi},{ki}]");
+                    assert_eq!(batch.m_rem[flat], s + 0.5, "m_rem [{lane},{wi},{ki}]");
+                    assert_eq!(batch.b_hat[flat], s + 0.25, "b_hat [{lane},{wi},{ki}]");
+                }
+                assert_eq!(batch.d[lane * w + wi], sentinel(lane, wi, 99), "d [{lane},{wi}]");
+            }
+            assert_eq!(batch.n_tot[lane], lane as f32 + 0.125, "n_tot [{lane}]");
+        }
+    }
+
+    /// ROADMAP 5a, stub side: `begin` re-sizing to the shape already
+    /// held must not zero the buffers — a partially-filled round leaves
+    /// trailing lanes as stale padding that the kernel must ignore via
+    /// the lane count (exactly the contract a padded batch-dimension
+    /// artifact has: it executes `cap` lanes but only the first
+    /// `lanes()` scatter back).
+    #[test]
+    fn batch_padding_lanes_are_stale_not_zeroed() {
+        let (w, k, cap) = (2usize, 3usize, 4usize);
+        let wk = w * k;
+        let mut batch = BatchScratch::default();
+        batch.begin(cap, w, k);
+        let bank = Bank::new(w, k, params(), Backend::Native);
+        let b_tilde = vec![7.0f32; wk];
+        let ones = vec![1.0f32; wk];
+        let m_rem = vec![3.0f32; wk];
+        let d = vec![60.0f32; w];
+        let fill = TickInputs {
+            b_tilde: &b_tilde,
+            meas_mask: &ones,
+            m_rem: &m_rem,
+            slot_mask: &ones,
+            d: &d,
+            n_tot: 9.0,
+        };
+        for _ in 0..cap {
+            batch.gather(&bank, &fill).unwrap();
+        }
+        // new round, same shape: no realloc, no zeroing — only the lane
+        // count resets
+        batch.begin(cap, w, k);
+        assert_eq!(batch.lanes(), 0);
+        batch.gather(&bank, &fill).unwrap();
+        assert_eq!(batch.lanes(), 1);
+        for lane in 1..cap {
+            assert!(
+                batch.b_tilde[lane * wk..][..wk].iter().all(|&x| x == 7.0),
+                "padding lane {lane} must keep its stale contents"
+            );
+        }
+        // and the partial round still executes correctly over lane 0
+        bank.step_batch_into(&mut batch).unwrap();
+        let mut out = StepOutputs::default();
+        let mut cell = Bank::new(w, k, params(), Backend::Native);
+        batch.scatter(0, &mut cell, &mut out);
+        let mut reference = Bank::new(w, k, params(), Backend::Native);
+        let expect = reference.step(&fill).unwrap();
+        assert_eq!(out, expect, "partial round diverged from per-cell step");
     }
 }

@@ -11,7 +11,10 @@ pub mod kalman;
 
 pub use adhoc::AdHoc;
 pub use arma::Arma;
-pub use bank::{Backend, Bank, BankParams, BatchScratch, TickInputs};
+pub use bank::{
+    kalman_update_scalar, kalman_update_simd, Backend, Bank, BankParams, BatchScratch, TickInputs,
+    KERNEL_LANES,
+};
 pub use cache::{BankCache, BankVariant, CacheStats};
 pub use convergence::{DeviationDetector, SlopeDetector};
 pub use kalman::Kalman;

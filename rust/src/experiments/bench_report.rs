@@ -50,6 +50,15 @@ pub struct BenchReport {
     /// Wall time of the lockstep batched executor pass
     /// (`experiments::batched`) over the same grid at the max width.
     pub batched_wall_s: f64,
+    /// The PR-6 sparse pass: cells of [`sparse_grid`] (long horizon,
+    /// low arrival rate — the regime where the event-driven tick
+    /// skipper earns its keep), with the executed/skipped tick split
+    /// summed across cells. Skipped runs are asserted bit-identical to
+    /// dense-tick twins before anything is written.
+    pub sparse_runs: usize,
+    pub sparse_wall_s: f64,
+    pub sparse_ticks_executed: u64,
+    pub sparse_ticks_skipped: u64,
     pub db_tasks: usize,
     pub db_legacy_ops_per_s: f64,
     pub db_arena_ops_per_s: f64,
@@ -116,6 +125,8 @@ impl BenchReport {
              \x20 \"cache\": {{\"cache_hits\": {hits}, \"cold_builds\": {cold}}},\n\
              \x20 \"sweep_tasks_per_s\": [{series}],\n\
              \x20 \"batched_tasks_per_s\": {btp:.1},\n\
+             \x20 \"sparse\": {{\"runs\": {sruns}, \"wall_s\": {sws:.3}, \
+             \"ticks_executed\": {ste}, \"ticks_skipped\": {sts}}},\n\
              \x20 \"baseline\": {{\n\
              \x20   \"mode\": \"sequential-1-thread (pre-refactor harness had no parallel runner)\",\n\
              \x20   \"wall_s\": {sw:.3},\n\
@@ -137,6 +148,10 @@ impl BenchReport {
              }}\n",
             grid = self.grid,
             runs = self.runs,
+            sruns = self.sparse_runs,
+            sws = self.sparse_wall_s,
+            ste = self.sparse_ticks_executed,
+            sts = self.sparse_ticks_skipped,
             threads = self.threads(),
             hits = self.cache_hits,
             cold = self.cold_builds,
@@ -267,6 +282,46 @@ pub(crate) fn smoke_grid(cfg: &Config) -> Vec<RunSpec> {
     .collect()
 }
 
+/// The PR-6 sparse grid (`dithen sweep sparse`, and the bench-report
+/// sparse pass): long horizon, low arrival rate — workloads finish
+/// well before the next one arrives, so most monitoring instants fall
+/// in idle stretches the event-driven tick skipper can fast-forward.
+/// A market-reclamation cell is included so the skip horizon's
+/// fault/price legs get exercised, not just the billing leg.
+pub(crate) fn sparse_grid(cfg: &Config) -> Vec<RunSpec> {
+    use crate::platform::{ArrivalProcess, FaultSpec, ScenarioBuilder};
+    let mut base = cfg.clone();
+    base.use_xla = false;
+    base.control.monitor_interval_s = 300;
+    base.control.n_min = 4.0;
+    let rng = Rng::new(base.seed);
+    let suite: Vec<WorkloadSpec> = (0..3)
+        .map(|i| WorkloadSpec::generate(i, App::FaceDetection, 15, None, &rng))
+        .collect();
+    let cell = |name: &str| {
+        (
+            format!("sparse/{name}"),
+            ScenarioBuilder::new(base.clone())
+                .workloads(suite.clone())
+                .fixed_ttc(Some(3600))
+                .arrivals(ArrivalProcess::FixedInterval { interval_s: 5400 })
+                .horizon(16 * 3600)
+                .record_traces(false),
+        )
+    };
+    let mut specs = vec![];
+    for policy in [PolicyKind::Aimd, PolicyKind::Reactive] {
+        let (label, builder) = cell(&format!("{policy:?}").to_lowercase());
+        specs.push(RunSpec::new(label, builder.policy(policy).build()));
+    }
+    let (label, builder) = cell("reclaim");
+    specs.push(RunSpec::new(
+        label,
+        builder.fault(FaultSpec::SpotReclamation { bid: 0.0082 }).build(),
+    ));
+    specs
+}
+
 /// Run the bench and write the JSON report to `out_path`. `smoke`
 /// swaps the full cost grid for [`smoke_grid`] (CI-sized). `threads`
 /// is the requested width *list* (`--threads 1,2,4,8`): the 1-thread
@@ -323,6 +378,36 @@ pub fn run(cfg: &Config, threads: &[usize], out_path: &str, smoke: bool) -> anyh
         seq == batched,
         "batched executor diverged from sequential results — determinism violation"
     );
+    // PR-6: the sparse pass. Timed with the tick skipper on, then
+    // asserted bit-identical to untimed dense-tick twins — the bench
+    // run itself proves the fast-forward path exact on this grid.
+    let sparse = sparse_grid(&cfg);
+    for spec in &sparse {
+        spec.scenario.bank_variant(&cache); // warm, like the main grid
+    }
+    eprintln!("bench-report: sparse grid ({} runs, tick skipper on)...", sparse.len());
+    let t0 = Instant::now();
+    let skipped = run_specs_with_cache(&sparse, batch_threads, &cache)?;
+    let sparse_wall_s = t0.elapsed().as_secs_f64();
+    let dense: Vec<RunSpec> = sparse
+        .iter()
+        .map(|s| {
+            let mut d = s.clone();
+            d.scenario.dense_ticks = true;
+            d
+        })
+        .collect();
+    let dense = run_specs_with_cache(&dense, batch_threads, &cache)?;
+    anyhow::ensure!(
+        skipped == dense,
+        "tick-skipped sparse runs diverged from dense-tick twins — fast-forward is not exact"
+    );
+    let sparse_ticks_executed: u64 = skipped.iter().map(|m| m.ticks_executed()).sum();
+    let sparse_ticks_skipped: u64 = skipped.iter().map(|m| m.ticks_skipped).sum();
+    anyhow::ensure!(
+        sparse_ticks_skipped > 0,
+        "sparse grid executed every tick — the skipper never engaged"
+    );
     let cache_stats = cache.stats();
 
     eprintln!("bench-report: task-DB microbench (arena vs legacy)...");
@@ -340,6 +425,10 @@ pub fn run(cfg: &Config, threads: &[usize], out_path: &str, smoke: bool) -> anyh
         seq_wall_s,
         widths: measured,
         batched_wall_s,
+        sparse_runs: sparse.len(),
+        sparse_wall_s,
+        sparse_ticks_executed,
+        sparse_ticks_skipped,
         db_tasks,
         db_legacy_ops_per_s,
         db_arena_ops_per_s,
@@ -364,6 +453,7 @@ pub fn run(cfg: &Config, threads: &[usize], out_path: &str, smoke: bool) -> anyh
          sequential baseline: {sw:.2}s ({stp:.0} tasks/s)\n\
          parallel x{threads}:  {pw:.2}s ({ptp:.0} tasks/s, {spd:.2}x) | curve: {curve}\n\
          batched x{threads}:   {bw:.2}s ({btp:.0} tasks/s, lockstep)\n\
+         sparse x{threads}:    {sparsew:.2}s ({ste} ticks executed / {sts} skipped, dense-twin verified)\n\
          bank cache: {cold} cold builds / {hits} hits across all passes\n\
          task-DB: arena {da:.2e} ops/s vs legacy {dl:.2e} ops/s ({dspd:.2}x)\n\
          wrote {out_path}\n",
@@ -375,6 +465,9 @@ pub fn run(cfg: &Config, threads: &[usize], out_path: &str, smoke: bool) -> anyh
         spd = report.parallel_speedup(),
         bw = report.batched_wall_s,
         btp = report.batched_tasks_per_s(),
+        sparsew = report.sparse_wall_s,
+        ste = report.sparse_ticks_executed,
+        sts = report.sparse_ticks_skipped,
         da = report.db_arena_ops_per_s,
         dl = report.db_legacy_ops_per_s,
         dspd = report.db_speedup(),
@@ -406,6 +499,10 @@ mod tests {
             seq_wall_s: 10.0,
             widths: vec![(2, 5.0), (8, 2.0)],
             batched_wall_s: 2.5,
+            sparse_runs: 3,
+            sparse_wall_s: 0.5,
+            sparse_ticks_executed: 400,
+            sparse_ticks_skipped: 900,
             db_tasks: 1000,
             db_legacy_ops_per_s: 1.0e6,
             db_arena_ops_per_s: 9.0e6,
@@ -446,6 +543,12 @@ mod tests {
                 .abs()
                 < 0.1
         );
+        // the sparse tick split travels in the report (PR-6): CI reads
+        // ticks_skipped from the artifact to prove the skipper engaged
+        let sparse = j.get("sparse").unwrap();
+        assert_eq!(sparse.get("runs").unwrap().as_usize(), Some(3));
+        assert_eq!(sparse.get("ticks_executed").unwrap().as_usize(), Some(400));
+        assert_eq!(sparse.get("ticks_skipped").unwrap().as_usize(), Some(900));
         let cur = j.get("current").unwrap();
         // the DB workload size must travel with the ops/s numbers so
         // cross-report comparisons know what was measured
@@ -467,6 +570,10 @@ mod tests {
             seq_wall_s: 1.0,
             widths: vec![],
             batched_wall_s: 1.0,
+            sparse_runs: 0,
+            sparse_wall_s: 0.0,
+            sparse_ticks_executed: 0,
+            sparse_ticks_skipped: 0,
             db_tasks: 10,
             db_legacy_ops_per_s: 1.0,
             db_arena_ops_per_s: 1.0,

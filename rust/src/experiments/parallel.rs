@@ -242,8 +242,11 @@ pub fn run_sweep(
         "seeds" => seed_grid(cfg, 8),
         "fleet" => super::heterogeneous::grid(cfg, 6, 100, 12 * 3600),
         "smoke" => super::bench_report::smoke_grid(cfg),
+        "sparse" => super::bench_report::sparse_grid(cfg),
         other => {
-            anyhow::bail!("unknown sweep '{other}' (use cost | estimators | seeds | fleet | smoke)")
+            anyhow::bail!(
+                "unknown sweep '{other}' (use cost | estimators | seeds | fleet | smoke | sparse)"
+            )
         }
     };
     let cache = BankCache::global();
@@ -413,6 +416,7 @@ pub fn merge_metrics(parts: Vec<RunMetrics>) -> RunMetrics {
         out.total_busy_cus += p.total_busy_cus;
         out.finished_at = out.finished_at.max(p.finished_at);
         out.ticks += p.ticks;
+        out.ticks_skipped += p.ticks_skipped;
         out.tick_wall_ns += p.tick_wall_ns;
         out.reclamations += p.reclamations;
         out.unfulfilled_requests += p.unfulfilled_requests;

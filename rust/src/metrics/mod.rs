@@ -102,6 +102,14 @@ pub struct RunMetrics {
     /// Monitoring ticks executed and total tick wall-time (perf metric).
     pub ticks: u64,
     pub tick_wall_ns: u128,
+    /// How many of `ticks` were *fast-forwarded* by the sparse-tick
+    /// skipper (PR-6) instead of running the full gather/step/finish
+    /// round. Like `tick_wall_ns` this is a perf observable, not a
+    /// simulation output — a skipped tick is bit-identical to a dense
+    /// one in every compared field — so it is excluded from `PartialEq`
+    /// (the `tick_skip_is_bit_identical_to_dense` pin compares a
+    /// skipping run against a dense-tick run directly).
+    pub ticks_skipped: u64,
     /// Instances revoked by the fault model (spot reclamation).
     pub reclamations: u64,
     /// Revocations per fleet pool (indexed like the scenario's
@@ -125,7 +133,8 @@ pub struct RunMetrics {
 impl PartialEq for RunMetrics {
     fn eq(&self, other: &Self) -> bool {
         // every simulation output, but NOT tick_wall_ns (host wall
-        // clock — see the struct docs)
+        // clock) or ticks_skipped (executor strategy) — see the struct
+        // docs
         self.cost_curve == other.cost_curve
             && self.instances_curve == other.instances_curve
             && self.n_star_curve == other.n_star_curve
@@ -175,6 +184,12 @@ impl RunMetrics {
         } else {
             self.tick_wall_ns as f64 / self.ticks as f64
         }
+    }
+
+    /// Monitoring ticks that ran the full gather/step/finish round
+    /// (as opposed to being fast-forwarded by the sparse-tick skipper).
+    pub fn ticks_executed(&self) -> u64 {
+        self.ticks - self.ticks_skipped
     }
 }
 
@@ -231,6 +246,9 @@ mod tests {
         let mut b = a.clone();
         b.tick_wall_ns = 99_999; // host timing noise must not break determinism checks
         assert_eq!(a, b);
+        b.ticks_skipped = 5; // executor strategy, not a simulation output
+        assert_eq!(a, b);
+        assert_eq!(b.ticks_executed(), 4);
         b.total_cost = 2.0;
         assert_ne!(a, b);
         let mut c = a.clone();

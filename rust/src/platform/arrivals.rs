@@ -11,6 +11,12 @@
 //! Invariant: arrival times are nondecreasing in the slot index — the
 //! platform's per-tick bookkeeping (`arrived <= w` guards) relies on
 //! arrival order matching workload-id order.
+//!
+//! Because `Platform::start` schedules *every* arrival instant up front
+//! as a simulator event, the engine's `next_non_tick_time` is a
+//! complete bound on future arrivals — the sparse-tick skipper (PR-6)
+//! leans on this: no arrival can materialize inside a skipped stretch
+//! that the event queue did not already know about.
 
 use crate::sim::SimTime;
 use crate::util::rng::Rng;

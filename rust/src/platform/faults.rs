@@ -34,6 +34,18 @@ pub enum CloudEvent {
 /// pushes events for the platform to absorb.
 pub trait FaultModel: std::fmt::Debug {
     fn poll(&mut self, backend: &dyn CloudBackend, now: SimTime, out: &mut Vec<CloudEvent>);
+
+    /// Earliest instant at which a future [`FaultModel::poll`] could
+    /// behave differently from a poll at `now` — the fault leg of the
+    /// sparse-tick skip horizon (PR-6). Monitoring instants strictly
+    /// before this time may be fast-forwarded without polling; `None`
+    /// means no future poll can ever emit (or advance internal state)
+    /// beyond what `now` sees. The conservative default (`Some(now)`)
+    /// makes a model that hasn't reasoned about skipping simply never
+    /// allow it.
+    fn next_scheduled(&self, _backend: &dyn CloudBackend, now: SimTime) -> Option<SimTime> {
+        Some(now)
+    }
 }
 
 /// Plain-data fault descriptor carried by a `Scenario` (the trait object
@@ -121,6 +133,10 @@ pub struct NoFaults;
 
 impl FaultModel for NoFaults {
     fn poll(&mut self, _backend: &dyn CloudBackend, _now: SimTime, _out: &mut Vec<CloudEvent>) {}
+
+    fn next_scheduled(&self, _backend: &dyn CloudBackend, _now: SimTime) -> Option<SimTime> {
+        None // never emits: no fault leg on the skip horizon
+    }
 }
 
 /// Market-driven spot reclamation, per pool (see
@@ -151,6 +167,19 @@ impl FaultModel for SpotReclamation {
             if !ids.is_empty() {
                 out.push(CloudEvent::Reclamation { instances: ids });
             }
+        }
+    }
+
+    fn next_scheduled(&self, backend: &dyn CloudBackend, now: SimTime) -> Option<SimTime> {
+        // a bid crossing can only appear when a pool price moves; on
+        // non-reclaimable backends poll() is a permanent no-op. (The
+        // billing leg does NOT cover this: billed_until anchors to each
+        // instance's readiness instant, not to hour boundaries, so a
+        // crossing could otherwise fall inside a skipped stretch.)
+        if backend.reclaimable() {
+            backend.next_price_change(now)
+        } else {
+            None
         }
     }
 }
@@ -185,6 +214,15 @@ impl FaultModel for ReclamationAt {
         if !ids.is_empty() {
             out.push(CloudEvent::Reclamation { instances: ids });
         }
+    }
+
+    fn next_scheduled(&self, _backend: &dyn CloudBackend, _now: SimTime) -> Option<SimTime> {
+        // the next scripted instant, unconditionally: poll() advances
+        // its cursor *before* the reclaimable() check, so dense and
+        // skipped runs must stop at the same instants to keep the
+        // cursor state identical (conservative on non-reclaimable
+        // backends, but observably exact).
+        self.times.get(self.next).copied()
     }
 }
 
@@ -296,6 +334,34 @@ mod tests {
         assert_eq!(out.len(), 2, "t=900 fires at the next poll after it");
         f.poll(&p, 3000, &mut out);
         assert_eq!(out.len(), 2, "schedule exhausted");
+    }
+
+    #[test]
+    fn next_scheduled_legs_of_the_skip_horizon() {
+        let p = fleet_of(1);
+        // no faults: no leg at all
+        assert_eq!(NoFaults.next_scheduled(&p, 500), None);
+        // market-driven: the next price boundary on reclaimable backends
+        let m = SpotReclamation { bid: 0.01 };
+        assert_eq!(m.next_scheduled(&p, 500), CloudBackend::next_price_change(&p, 500));
+        assert!(m.next_scheduled(&p, 500).is_some());
+        let od = Provider::new_on_demand(MarketCfg::default(), 1, 8);
+        assert_eq!(m.next_scheduled(&od, 500), None, "on-demand is never reclaimed");
+        // scripted: the next un-fired instant, and it tracks the cursor
+        let mut f = ReclamationAt::new(vec![900, 300]);
+        assert_eq!(f.next_scheduled(&p, 100), Some(300));
+        let mut out = vec![];
+        f.poll(&p, 300, &mut out);
+        assert_eq!(f.next_scheduled(&p, 300), Some(900));
+        f.poll(&p, 2000, &mut out);
+        assert_eq!(f.next_scheduled(&p, 2000), None, "schedule exhausted");
+        // the cursor advances even on non-reclaimable backends, so the
+        // scripted leg must hold there too — dense and skipped runs
+        // keep identical cursor state
+        let mut g = ReclamationAt::new(vec![700]);
+        assert_eq!(g.next_scheduled(&od, 100), Some(700));
+        g.poll(&od, 800, &mut out);
+        assert_eq!(g.next_scheduled(&od, 800), None);
     }
 
     #[test]

@@ -101,6 +101,10 @@ pub struct RunOpts {
     /// default (the Fig. 6/7 / Table II pipelines need them); sweeps
     /// turn it off — it is the largest per-tick allocation source.
     pub record_traces: bool,
+    /// Disable the event-driven sparse-tick skipper (PR-6): run every
+    /// monitoring instant densely. Off by default — skipping is
+    /// bit-identical to dense ticks (pinned in `tests/determinism.rs`).
+    pub dense_ticks: bool,
 }
 
 impl Default for RunOpts {
@@ -112,6 +116,7 @@ impl Default for RunOpts {
             arrival_interval_s: crate::workload::ARRIVAL_INTERVAL_S,
             horizon_s: 24 * 3600,
             record_traces: true,
+            dense_ticks: false,
         }
     }
 }
@@ -204,6 +209,7 @@ pub struct Platform {
     pub(crate) horizon_s: u64,
     pub(crate) arrivals: ArrivalProcess,
     pub(crate) record_traces: bool,
+    pub(crate) dense_ticks: bool,
     pub(crate) sim: SimEngine,
     pub(crate) backend: Box<dyn CloudBackend>,
     /// Cached `backend.execution_multiplier()` (1.0 for whole-core
@@ -284,6 +290,7 @@ impl Platform {
             fleet,
             fault,
             record_traces,
+            dense_ticks,
         } = scn;
         let k_max = specs.iter().map(|s| s.n_types).max().unwrap_or(1).max(1);
         let horizon_h = (horizon_s / 3600 + 2) as usize;
@@ -344,6 +351,7 @@ impl Platform {
             horizon_s,
             arrivals,
             record_traces,
+            dense_ticks,
             sim: SimEngine::new(),
             backend,
             exec_mult,

@@ -66,6 +66,13 @@ pub struct Scenario {
     pub fault: FaultSpec,
     /// Record estimator traces (off in sweeps: per-tick allocations).
     pub record_traces: bool,
+    /// Force every monitoring instant to run the full
+    /// gather/step/finish round, disabling the event-driven sparse-tick
+    /// skipper (PR-6). Off by default — skipping is proven
+    /// bit-identical (`tick_skip_is_bit_identical_to_dense`); this
+    /// switch exists as the dense reference arm of that pin and as an
+    /// escape hatch for debugging.
+    pub dense_ticks: bool,
 }
 
 impl Scenario {
@@ -84,6 +91,7 @@ impl Scenario {
             fleet: FleetSpec::default(),
             fault: FaultSpec::None,
             record_traces: opts.record_traces,
+            dense_ticks: opts.dense_ticks,
         }
     }
 
@@ -235,6 +243,13 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Disable the sparse-tick skipper: run every monitoring instant
+    /// densely (the reference arm of the skip-equivalence pin).
+    pub fn dense_ticks(mut self, on: bool) -> Self {
+        self.scn.dense_ticks = on;
+        self
+    }
+
     pub fn build(self) -> Scenario {
         self.scn
     }
@@ -261,6 +276,8 @@ mod tests {
         assert_eq!(built.fleet, FleetSpec::default());
         assert_eq!(built.fault, FaultSpec::None);
         assert!(built.record_traces);
+        assert!(!built.dense_ticks, "skipping is the default in both APIs");
+        assert_eq!(built.dense_ticks, opts.dense_ticks);
     }
 
     #[test]
@@ -274,6 +291,7 @@ mod tests {
             .backend(BackendKind::Lambda)
             .fault(FaultSpec::SpotReclamation { bid: 0.01 })
             .record_traces(false)
+            .dense_ticks(true)
             .build();
         assert_eq!(scn.policy, PolicyKind::Mwa);
         assert_eq!(scn.estimator, EstimatorKind::Arma);
@@ -282,6 +300,7 @@ mod tests {
         assert_eq!(scn.backend, BackendKind::Lambda);
         assert_eq!(scn.fault, FaultSpec::SpotReclamation { bid: 0.01 });
         assert!(!scn.record_traces);
+        assert!(scn.dense_ticks);
         assert!(scn.describe().contains("lambda"));
     }
 

@@ -309,12 +309,159 @@ impl Platform {
         let work_left = (0..n_w)
             .any(|w| self.arrived > w && !matches!(self.wl[w].phase, WlPhase::Done));
         if more_arrivals || work_left {
-            self.sim
-                .schedule(self.cfg.control.monitor_interval_s, Event::MonitorTick);
+            let interval = self.cfg.control.monitor_interval_s;
+            let mut next_tick = now + interval;
+            // ----- sparse-tick skipping (PR-6) --------------------------
+            // Between workload batches the dense loop burns ticks on an
+            // idle platform. When every arrived workload is Done
+            // (`!work_left`; the chunk map being empty is the same fact
+            // seen from the dispatch side) the only observable work a
+            // dense tick does is decay the idle fleet, settle due
+            // billing and append curve samples — all replayed exactly by
+            // `fast_forward_tick`, tick by tick, while event dispatch is
+            // provably idle (no arrival, completion, price change or
+            // scheduled fault strictly before the skip horizon).
+            if !self.dense_ticks && !work_left && more_arrivals && self.chunks.is_empty() {
+                next_tick = self.skip_idle_ticks(next_tick, interval, &mut sc, &outs);
+            }
+            self.sim.schedule_at(next_tick, Event::MonitorTick);
         }
 
         self.scratch = sc;
         self.outs = outs;
+    }
+
+    // ----- sparse-tick skipping (PR-6) -------------------------------------
+
+    /// Earliest instant at which something *other than a monitoring
+    /// tick* can change observable platform state: the next non-tick
+    /// simulator event (arrivals are all pre-scheduled at `start`, so
+    /// this bounds them; chunk completions and instance readiness are
+    /// events too), the fault model's next scheduled action, and the
+    /// fleet's next billing increment. Monitoring instants strictly
+    /// before this horizon observe a platform that only the replayed
+    /// per-tick work itself mutates.
+    pub(crate) fn skip_horizon(&self) -> crate::sim::SimTime {
+        let now = self.sim.now();
+        // eligibility requires pending arrivals, so the queue holds at
+        // least one non-tick event
+        let mut h = self
+            .sim
+            .next_non_tick_time()
+            .expect("skip eligibility requires a pending arrival event");
+        if let Some(t) = self.fault.next_scheduled(&*self.backend, now) {
+            h = h.min(t);
+        }
+        if let Some(t) = self.backend.next_billing_due(now) {
+            h = h.min(t);
+        }
+        h
+    }
+
+    /// Fast-forward monitoring instants from `next_tick` (exclusive of
+    /// the tick that just ran) while they fall strictly before the skip
+    /// horizon, replaying each one's observable work. Returns the first
+    /// instant that must run densely. The horizon is recomputed whenever
+    /// a replayed tick changes the event queue (an AIMD refill below the
+    /// floor schedules `InstanceReady`) — the stale horizon is only ever
+    /// conservative in between (terminating idle instances can only move
+    /// the billing leg later), but a new event can pull it earlier.
+    pub(crate) fn skip_idle_ticks(
+        &mut self,
+        mut next_tick: crate::sim::SimTime,
+        interval: u64,
+        sc: &mut TickScratch,
+        outs: &StepOutputs,
+    ) -> crate::sim::SimTime {
+        'outer: loop {
+            let horizon = self.skip_horizon();
+            if next_tick >= horizon || next_tick > self.horizon_s {
+                return next_tick;
+            }
+            let pending = self.sim.pending();
+            while next_tick < horizon && next_tick <= self.horizon_s {
+                self.fast_forward_tick(next_tick, sc, outs);
+                next_tick += interval;
+                if self.sim.pending() != pending {
+                    continue 'outer;
+                }
+            }
+            return next_tick;
+        }
+    }
+
+    /// Replay the observable work of one idle monitoring tick at `t`
+    /// without running the full gather/step/finish round. Exactness
+    /// argument, piece by piece against the dense tick:
+    ///
+    /// * billing (`bill_through`) — nothing is due strictly before the
+    ///   skip horizon (its leg is the fleet-wide min `billed_until`, and
+    ///   a charge lands exactly when `billed_until <= now`), and with
+    ///   nothing newly billed the dense call appends no cost sample;
+    /// * fault poll — the horizon's `next_scheduled` leg proves the
+    ///   model would observe nothing and (for `ReclamationAt`) that its
+    ///   script cursor would not advance;
+    /// * ME assembly — every arrived workload is `Done`, so the dense
+    ///   gather writes an all-zero slot/measurement mask (phases only
+    ///   change in event handlers, never mid-tick);
+    /// * the bank step — on an all-zero slot mask the kernel is
+    ///   state-preserving (`b_hat`/`pi` write back unchanged) and its
+    ///   consumed outputs (`r`, `s`, `n_star`) are zero independent of
+    ///   `n_tot`, so `outs` already holds exactly what a dense step at
+    ///   `t` would produce (`n_next` does vary with `n_tot` but nothing
+    ///   reads it);
+    /// * passive estimators / TTC — both loops skip every workload
+    ///   (`Done` / empty `converged`);
+    /// * everything else — replayed live below, in dense-tick order.
+    ///
+    /// `tick_wall_ns` is deliberately not accrued here: it is a perf
+    /// observable excluded from `RunMetrics` equality, and timing the
+    /// fast path would cost more than the path itself.
+    pub(crate) fn fast_forward_tick(
+        &mut self,
+        t: crate::sim::SimTime,
+        sc: &mut TickScratch,
+        outs: &StepOutputs,
+    ) {
+        self.sim.advance_to(t);
+        let n_w = self.specs.len();
+        // dense gather's observable remainder: the fleet description
+        let fleet = self.backend.describe(t);
+        sc.n_tot = fleet.active_cus as f32;
+        sc.committed_cus = fleet.committed_cus;
+        // dense finish, minus the provably-no-op loops
+        sc.converged.clear();
+        let n_star = self.driving_rates_into(outs, sc, sc.n_tot as f64);
+        for w in 0..n_w {
+            self.rates[w] = sc.rates_tmp[w].min(self.cfg.control.n_w_max);
+        }
+        self.n_star_history.push(n_star);
+        self.metrics.n_star_curve.push((t, n_star));
+        let eval_due = match self.policy.eval_interval_s() {
+            Some(iv) => t.saturating_sub(self.last_policy_eval) >= iv,
+            None => true,
+        };
+        if eval_due {
+            self.last_policy_eval = t;
+            let work_pending = (0..n_w).any(|w| {
+                self.arrived > w && !matches!(self.wl[w].phase, WlPhase::Done)
+            });
+            let ctx = PolicyCtx {
+                now: t,
+                n_tot: sc.committed_cus,
+                n_star,
+                n_star_history: &self.n_star_history,
+                mean_utilization: self.backend.mean_utilization(t),
+                work_pending,
+            };
+            let target = self.policy.target(&ctx).round().max(0.0);
+            self.adjust_fleet(target);
+        }
+        self.tracker.tick(&self.rates);
+        self.assign_idle();
+        self.metrics.ticks += 1;
+        self.metrics.ticks_skipped += 1;
+        self.sample_instances(t);
     }
 
     // ----- helpers ---------------------------------------------------------

@@ -106,6 +106,35 @@ impl Engine {
         self.queue.peek().map(|s| s.at)
     }
 
+    /// Earliest scheduled instant of any **non-`MonitorTick`** event —
+    /// the engine half of the sparse-tick skip horizon (PR-6): a
+    /// monitoring instant strictly before this time can only observe
+    /// state the previous tick already saw, because every externally
+    /// driven change (arrival, chunk completion, instance readiness,
+    /// footprint/merge completion) enters the platform through one of
+    /// these queued events. Scans the heap's backing storage without
+    /// allocating; `None` when no such event is pending.
+    pub fn next_non_tick_time(&self) -> Option<SimTime> {
+        self.queue
+            .iter()
+            .filter(|s| !matches!(s.event, Event::MonitorTick))
+            .map(|s| s.at)
+            .min()
+    }
+
+    /// Advance the clock to `t` without dispatching anything — the
+    /// fast-forward primitive for skipped monitoring instants. The
+    /// caller must have proven no queued event fires before `t`
+    /// (checked in debug builds).
+    pub fn advance_to(&mut self, t: SimTime) {
+        debug_assert!(t >= self.now, "advance_to would move time backwards");
+        debug_assert!(
+            self.queue.peek().map_or(true, |s| s.at >= t),
+            "advance_to would skip over a pending event"
+        );
+        self.now = t;
+    }
+
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
@@ -170,6 +199,35 @@ mod tests {
         assert_eq!(t, 10, "past event must fire at the current instant");
         assert_eq!(ev, Event::WorkloadArrival { workload: 7 });
         assert_eq!(e.now(), 10);
+    }
+
+    #[test]
+    fn next_non_tick_time_ignores_monitor_ticks() {
+        let mut e = Engine::new();
+        assert_eq!(e.next_non_tick_time(), None);
+        e.schedule(10, Event::MonitorTick);
+        assert_eq!(e.next_non_tick_time(), None, "a tick is not an external event");
+        e.schedule(50, Event::WorkloadArrival { workload: 0 });
+        e.schedule(30, Event::ChunkDone { instance: 1, chunk: 2 });
+        e.schedule(70, Event::InstanceReady { instance: 3 });
+        assert_eq!(e.next_non_tick_time(), Some(30));
+        // popping the earliest non-tick event moves the horizon out
+        e.next(); // tick @10
+        e.next(); // chunk @30
+        assert_eq!(e.next_non_tick_time(), Some(50));
+    }
+
+    #[test]
+    fn advance_to_moves_clock_without_dispatch() {
+        let mut e = Engine::new();
+        e.schedule(100, Event::WorkloadArrival { workload: 1 });
+        e.advance_to(40);
+        assert_eq!(e.now(), 40);
+        assert_eq!(e.pending(), 1, "advance_to must not dispatch");
+        // events scheduled after an advance are relative to the new now
+        e.schedule(10, Event::MonitorTick);
+        assert_eq!(e.next().map(|(t, _)| t), Some(50));
+        assert_eq!(e.next().map(|(t, _)| t), Some(100));
     }
 
     #[test]

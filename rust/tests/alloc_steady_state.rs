@@ -12,12 +12,16 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use dithen::cloud::{CloudBackend, Provider};
+use dithen::config::MarketCfg;
 use dithen::db::{TaskDb, TaskStatus};
 use dithen::estimation::{
-    AdHoc, Arma, Backend, Bank, BankParams, BatchScratch, DeviationDetector, SlopeDetector,
-    TickInputs,
+    kalman_update_scalar, kalman_update_simd, AdHoc, Arma, Backend, Bank, BankParams,
+    BatchScratch, DeviationDetector, SlopeDetector, TickInputs,
 };
+use dithen::platform::{FaultModel, NoFaults, ReclamationAt, SpotReclamation};
 use dithen::runtime::StepOutputs;
+use dithen::sim::{Engine, Event};
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
@@ -200,6 +204,104 @@ fn lockstep_batch_tick_is_allocation_free_after_warmup() {
         delta, 0,
         "lockstep batch round allocated {delta} times in steady state (must be zero)"
     );
+}
+
+/// The PR-6 skip primitives, engine half: computing the skip horizon
+/// (`next_non_tick_time` — a scan of the heap's backing storage) and
+/// fast-forwarding the clock (`advance_to`) must not touch the heap.
+/// These run once per *skipped* monitoring instant, so an allocation
+/// here would silently tax exactly the regime the skipper exists to
+/// accelerate.
+#[test]
+#[ignore = "allocation counting needs --test-threads=1; CI runs with --ignored"]
+fn engine_skip_primitives_are_allocation_free() {
+    let _g = GATE.lock().unwrap();
+    let mut e = Engine::new();
+    // a realistically mixed queue: far-future arrivals behind a run of
+    // monitor ticks (the shape the skipper actually scans); everything
+    // sits past the advance range below, as `advance_to` requires
+    for i in 0..64u64 {
+        e.schedule_at(10_000 + i * 60, Event::MonitorTick);
+    }
+    for w in 0..8usize {
+        e.schedule_at(10_000 + w as u64 * 7200, Event::WorkloadArrival { workload: w });
+    }
+
+    let before = allocs();
+    let mut acc = 0u64;
+    for t in 0..1000u64 {
+        acc += e.next_non_tick_time().unwrap_or(0);
+        acc += e.pending() as u64;
+        e.advance_to(t); // strictly below every queued event
+    }
+    let delta = allocs() - before;
+    std::hint::black_box(acc);
+    assert_eq!(delta, 0, "engine skip primitives allocated {delta} times (must be zero)");
+}
+
+/// The PR-6 skip primitives, backend + fault half: the billing-due,
+/// price-change and fault-schedule legs of the skip horizon are read
+/// once per skip-eligibility check. All must be allocation-free scans
+/// of existing state.
+#[test]
+#[ignore = "allocation counting needs --test-threads=1; CI runs with --ignored"]
+fn skip_horizon_legs_are_allocation_free() {
+    let _g = GATE.lock().unwrap();
+    let mut p = Provider::new(MarketCfg::default(), 11, 8);
+    for i in 0..16usize {
+        let (id, ready_at) = p.request_spot_instance(0, i as u64 * 100);
+        p.instance_ready(id, ready_at);
+    }
+    let market = SpotReclamation { bid: 0.0082 };
+    let scripted = ReclamationAt::new(vec![600, 1200, 9000]);
+
+    let before = allocs();
+    let mut acc = 0u64;
+    for t in 0..1000u64 {
+        acc += CloudBackend::next_billing_due(&p, t).unwrap_or(0);
+        acc += CloudBackend::next_price_change(&p, t).unwrap_or(0);
+        acc += market.next_scheduled(&p, t).unwrap_or(0);
+        acc += scripted.next_scheduled(&p, t).unwrap_or(0);
+        acc += NoFaults.next_scheduled(&p, t).unwrap_or(0);
+    }
+    let delta = allocs() - before;
+    std::hint::black_box(acc);
+    assert_eq!(delta, 0, "skip horizon legs allocated {delta} times (must be zero)");
+}
+
+/// The PR-6 SIMD stage-1 kernel: like the scalar path it replaces, the
+/// 8-lane unrolled Kalman update works entirely in caller-provided
+/// slices — no spill buffers, no temporaries on the heap.
+#[test]
+#[ignore = "allocation counting needs --test-threads=1; CI runs with --ignored"]
+fn simd_kernel_is_allocation_free() {
+    let _g = GATE.lock().unwrap();
+    let wk = 16 * 32 + 3; // odd tail exercises the scalar remainder
+    let p = BankParams {
+        sigma_z2: 0.5,
+        sigma_v2: 0.5,
+        alpha: 5.0,
+        beta: 0.9,
+        n_min: 10.0,
+        n_max: 100.0,
+        n_w_max: 10.0,
+    };
+    let b_hat = vec![40.0f32; wk];
+    let pi = vec![1.0f32; wk];
+    let b_tilde = vec![42.0f32; wk];
+    let meas = vec![1.0f32; wk];
+    let slot = vec![1.0f32; wk];
+    let mut ob = vec![0.0f32; wk];
+    let mut op = vec![0.0f32; wk];
+
+    let before = allocs();
+    for _ in 0..100 {
+        kalman_update_simd(&b_hat, &pi, &b_tilde, &meas, &slot, &p, &mut ob, &mut op);
+        kalman_update_scalar(&b_hat, &pi, &b_tilde, &meas, &slot, &p, &mut ob, &mut op);
+    }
+    let delta = allocs() - before;
+    std::hint::black_box((&ob, &op));
+    assert_eq!(delta, 0, "estimator kernel allocated {delta} times (must be zero)");
 }
 
 /// The traces-off tick path: with `record_traces = false` the per-slot

@@ -240,6 +240,163 @@ fn sharded_runs_merge_thread_count_invariantly() {
     assert_eq!(reference.tasks_completed, scn.n_tasks());
 }
 
+/// PR-6 sparse regime: three small workloads arrive two hours apart
+/// and finish well inside their gap, so most monitoring instants fall
+/// in provably idle stretches — exactly where the event-driven tick
+/// skipper engages. `dense` pins the skipper off (the pre-PR-6 dense
+/// tick loop) for the bit-identity comparisons below. Traces stay on:
+/// the equality checks then cover every per-tick curve and sample the
+/// fast-forward path must reproduce, not just end-of-run totals.
+fn sparse_scenario(seed: u64, dense: bool) -> Scenario {
+    ScenarioBuilder::new(cfg(seed))
+        .workloads(suite(seed, 3, 12))
+        .fixed_ttc(Some(1800))
+        .arrivals(ArrivalProcess::FixedInterval { interval_s: 7200 })
+        .horizon(8 * 3600)
+        .dense_ticks(dense)
+        .build()
+}
+
+/// PR-6 headline pin: a tick-skipped run must be **bit-identical** to
+/// its dense twin — exhaustive `RunMetrics` equality over every curve,
+/// trace, cost and outcome (only the `ticks_skipped` diagnostic is
+/// excluded from `PartialEq`) — while actually executing fewer ticks.
+#[test]
+fn tick_skip_is_bit_identical_to_dense() {
+    for seed in [1u64, 42, 20161021] {
+        let skip = sparse_scenario(seed, false).run().unwrap();
+        let dense = sparse_scenario(seed, true).run().unwrap();
+        assert_eq!(skip, dense, "seed {seed}: tick-skipped run diverged from dense twin");
+        assert_eq!(dense.ticks_skipped, 0, "dense_ticks must pin the skipper off");
+        assert!(skip.ticks_skipped > 0, "seed {seed}: sparse regime never engaged the skipper");
+        assert_eq!(skip.ticks, dense.ticks, "charged tick count must match the dense run");
+        assert!(
+            skip.ticks_executed() < dense.ticks,
+            "seed {seed}: skipping must reduce executed ticks ({} vs {})",
+            skip.ticks_executed(),
+            dense.ticks
+        );
+    }
+}
+
+/// The `RunOpts` shim reaches the same skipper: `dense_ticks` through
+/// `run_experiment` pins it off the same way the builder does.
+#[test]
+fn tick_skip_via_run_opts_shim() {
+    let sparse_opts = |dense| RunOpts {
+        fixed_ttc_s: Some(1800),
+        arrival_interval_s: 7200,
+        horizon_s: 8 * 3600,
+        dense_ticks: dense,
+        ..Default::default()
+    };
+    let skip = run_experiment(cfg(9), suite(9, 3, 12), sparse_opts(false)).unwrap();
+    let dense = run_experiment(cfg(9), suite(9, 3, 12), sparse_opts(true)).unwrap();
+    assert_eq!(skip, dense);
+    assert!(skip.ticks_skipped > 0);
+    assert_eq!(dense.ticks_skipped, 0);
+}
+
+/// Fault-injected sparse runs: every fault leg of the skip horizon
+/// (market bid-crossing, per-pool bids on a mixed fleet, scripted
+/// schedule — including an instant deep inside an idle stretch) must
+/// stop the fast-forward exactly where the dense run observes the
+/// event.
+#[test]
+fn tick_skip_under_faults_is_bit_identical_to_dense() {
+    let scn = |seed, fault: FaultSpec, dense| {
+        ScenarioBuilder::new(cfg(seed))
+            .workloads(suite(seed, 3, 12))
+            .fixed_ttc(Some(1800))
+            .arrivals(ArrivalProcess::FixedInterval { interval_s: 7200 })
+            .horizon(8 * 3600)
+            .fault(fault)
+            .dense_ticks(dense)
+            .build()
+    };
+    let faults = [
+        ("reclaim", FaultSpec::SpotReclamation { bid: 0.0082 }),
+        // 20000 s sits in the post-completion idle tail — the scripted
+        // leg must cut the skip there so the cursor state stays dense
+        ("reclaim-at", FaultSpec::ReclamationAt { times: vec![600, 5000, 20000] }),
+    ];
+    for (name, fault) in faults {
+        let skip = scn(13, fault.clone(), false).run().unwrap();
+        let dense = scn(13, fault, true).run().unwrap();
+        assert_eq!(skip, dense, "{name}: tick-skipped run diverged from dense twin");
+        assert_eq!(skip.reclamations, dense.reclamations);
+        assert!(skip.ticks_skipped > 0, "{name}: skipper never engaged");
+    }
+    // mixed two-pool fleet under per-pool reclamation: the skip horizon
+    // must respect per-instance hourly billing anchors and the price
+    // boundaries of both pools at once
+    let mixed = |dense| {
+        let mut c = cfg(17);
+        c.control.n_min = 20.0;
+        ScenarioBuilder::new(c)
+            .workloads(suite(17, 3, 12))
+            .fixed_ttc(Some(1800))
+            .arrivals(ArrivalProcess::FixedInterval { interval_s: 7200 })
+            .horizon(8 * 3600)
+            .fleet(FleetSpec::parse("m3.medium:bid=0.1,m4.4xlarge:bid=0.115").unwrap())
+            .fault(FaultSpec::PoolReclamation)
+            .dense_ticks(dense)
+            .build()
+    };
+    let skip = mixed(false).run().unwrap();
+    let dense = mixed(true).run().unwrap();
+    assert_eq!(skip, dense, "mixed fleet: tick-skipped run diverged from dense twin");
+    assert_eq!(skip.reclamations_by_pool, dense.reclamations_by_pool);
+    assert!(skip.ticks_skipped > 0, "mixed fleet: skipper never engaged");
+}
+
+/// The skipper composes with every executor: the parallel runner, the
+/// PR-5 lockstep batched executor, and the multi-platform shard driver
+/// all produce results bit-identical to the dense sequential reference.
+#[test]
+fn tick_skip_composes_with_batched_and_sharded_executors() {
+    let skip_specs = vec![
+        RunSpec::new("skip/plain", sparse_scenario(70, false)),
+        RunSpec::new("skip/reclaim", {
+            let mut s = sparse_scenario(71, false);
+            s.fault = FaultSpec::SpotReclamation { bid: 0.0082 };
+            s
+        }),
+    ];
+    let dense_specs: Vec<RunSpec> = skip_specs
+        .iter()
+        .map(|s| {
+            let mut d = s.clone();
+            d.scenario.dense_ticks = true;
+            d
+        })
+        .collect();
+    let reference = run_specs(&dense_specs, 1).unwrap();
+    let parallel = run_specs(&skip_specs, 2).unwrap();
+    assert_eq!(reference, parallel, "parallel tick-skipped sweep diverged from dense reference");
+    assert!(parallel.iter().all(|m| m.ticks_skipped > 0));
+    let batched = run_specs_batched(&skip_specs, 2, &BankCache::new()).unwrap();
+    assert_eq!(reference, batched, "batched tick-skipped sweep diverged from dense reference");
+    assert!(batched.iter().all(|m| m.ticks_skipped > 0));
+
+    // shard driver: each part's platform sees its own sparse subset
+    let shard_scn = |dense| {
+        ScenarioBuilder::new(cfg(72))
+            .workloads(suite(72, 4, 12))
+            .fixed_ttc(Some(1800))
+            .arrivals(ArrivalProcess::FixedInterval { interval_s: 7200 })
+            .horizon(12 * 3600)
+            .dense_ticks(dense)
+            .build()
+    };
+    let cache = BankCache::new();
+    let dense = run_sharded(&shard_scn(true), 2, 1, &cache).unwrap();
+    let skipped = run_sharded(&shard_scn(false), 2, 2, &cache).unwrap();
+    assert_eq!(dense, skipped, "sharded tick-skipped run diverged from dense sharded run");
+    assert!(skipped.ticks_skipped > 0, "no shard engaged the skipper");
+    assert_eq!(dense.ticks_skipped, 0);
+}
+
 #[test]
 fn parallel_runner_is_thread_count_invariant() {
     // a mixed grid: different seeds, estimators, policies, and a
