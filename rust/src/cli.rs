@@ -8,6 +8,7 @@
 //! dithen sweep <grid>         parallel experiment grid (cost|estimators|seeds|fleet|smoke|sparse)
 //! dithen bench-report         measure tasks/s, write BENCH json
 //! dithen bench-check          gate: compare two bench reports, exit 1 on regression
+//! dithen serve                resident CaaS daemon: HTTP submission, SSE, Prometheus
 //! dithen list                 list experiment ids
 //! dithen market               print current simulated spot prices
 //! dithen --help
@@ -44,6 +45,8 @@ COMMANDS:
                       cost | estimators | seeds | fleet | smoke | sparse
     bench-report      measure end-to-end tasks/s + DB ops/s, write a JSON report
     bench-check       regression gate: exit 1 if --current tasks/s < tolerance x --baseline
+    serve             resident CaaS daemon: POST /submit + /advance, GET /status/{w},
+                      /metrics (Prometheus), /events (SSE), /healthz
     list              list experiment ids
     market            print the simulated spot-price snapshot
 
@@ -79,6 +82,11 @@ SCENARIO OPTIONS:
     --horizon <s>          hard stop in sim seconds
     --no-traces            skip estimator-trace recording (sweep-style)
     -h, --help             show this help
+
+SERVE OPTIONS (plus the scenario options above for the template):
+    --port <n>             listen port on 127.0.0.1 (default 8080)
+    --pace <speed>         paced clock: sim-seconds per wall-second; without it
+                           the clock is scripted and only moves on POST /advance
 ";
 
 /// Parsed command line.
@@ -111,6 +119,8 @@ pub struct Cli {
     pub tasks: Option<usize>,
     pub horizon: Option<u64>,
     pub no_traces: bool,
+    pub port: Option<u16>,
+    pub pace: Option<f64>,
     pub help: bool,
 }
 
@@ -184,6 +194,18 @@ pub fn parse(args: &[String]) -> Result<Cli, CliError> {
                     Some(v.parse().map_err(|_| CliError(format!("bad --horizon '{v}'")))?);
             }
             "--no-traces" => cli.no_traces = true,
+            "--port" => {
+                let v = need_value(&mut it, "--port")?;
+                cli.port = Some(v.parse().map_err(|_| CliError(format!("bad --port '{v}'")))?);
+            }
+            "--pace" => {
+                let v = need_value(&mut it, "--pace")?;
+                let speed: f64 = v.parse().map_err(|_| CliError(format!("bad --pace '{v}'")))?;
+                if speed.is_nan() || speed <= 0.0 {
+                    return Err(CliError("--pace must be a positive speed".into()));
+                }
+                cli.pace = Some(speed);
+            }
             flag if flag.starts_with('-') => {
                 return Err(CliError(format!("unknown flag '{flag}'")));
             }
@@ -424,6 +446,77 @@ fn run_scenario(cli: &Cli, mut cfg: Config) -> anyhow::Result<i32> {
     Ok(0)
 }
 
+/// `dithen serve`: run the resident daemon until SIGTERM/SIGINT or a
+/// `POST /shutdown`, then print the final (drained) run summary.
+fn run_serve(cli: &Cli, mut cfg: Config) -> anyhow::Result<i32> {
+    use crate::serve::{ClockMode, Daemon, ServeOpts};
+    // mid-run admission grows the estimator bank one row per workload,
+    // which is native-only (XLA executables are shape-compiled)
+    cfg.use_xla = false;
+    let backend = match &cli.backend {
+        Some(s) => parse_backend(s)?,
+        None => BackendKind::Spot,
+    };
+    let fleet = match &cli.fleet {
+        Some(s) => parse_fleet(s)?,
+        None => FleetSpec::default(),
+    };
+    let fault = match &cli.fault {
+        Some(s) => parse_fault(s)?,
+        None => FaultSpec::None,
+    };
+    let template = ScenarioBuilder::new(cfg.clone())
+        .policy(cli.policy.as_deref().map(parse_policy).transpose()?.unwrap_or(PolicyKind::Aimd))
+        .estimator(
+            cli.estimator
+                .as_deref()
+                .map(parse_estimator)
+                .transpose()?
+                .unwrap_or(EstimatorKind::Kalman),
+        )
+        // best-effort by default: each submission may carry its own ttc
+        .fixed_ttc(match cli.ttc {
+            Some(0) | None => None,
+            Some(t) => Some(t),
+        })
+        .horizon(cli.horizon.unwrap_or(7 * 24 * 3600))
+        .arrivals(ArrivalProcess::Scripted { times: vec![] })
+        .backend(backend)
+        .fleet(fleet)
+        .fault(fault)
+        .record_traces(!cli.no_traces)
+        .build();
+    let clock = match cli.pace {
+        Some(speed) => ClockMode::Paced { speed },
+        None => ClockMode::Scripted,
+    };
+    let opts = ServeOpts { template, clock, workload_seed: cfg.seed };
+    crate::serve::install_signal_handlers();
+    let handle = Daemon::spawn(opts, cli.port.unwrap_or(8080))?;
+    println!(
+        "dithen serve listening on {} | clock: {} | horizon: {}s",
+        handle.base_url(),
+        match cli.pace {
+            Some(speed) => format!("paced x{speed}"),
+            None => "scripted (POST /advance)".to_string(),
+        },
+        cli.horizon.unwrap_or(7 * 24 * 3600),
+    );
+    let m = handle.wait()?;
+    println!(
+        "drained at {} | cost ${:.3} | {} workloads ({} tasks) | reclamations {} | \
+         requeued tasks {} | ticks {}",
+        crate::util::table::fmt_hm(m.finished_at as f64),
+        m.total_cost,
+        m.outcomes.len(),
+        m.tasks_completed,
+        m.reclamations,
+        m.requeued_tasks,
+        m.ticks,
+    );
+    Ok(0)
+}
+
 /// Entry point used by main().
 pub fn main_with(args: &[String]) -> anyhow::Result<i32> {
     let cli = match parse(args) {
@@ -500,6 +593,9 @@ pub fn main_with(args: &[String]) -> anyhow::Result<i32> {
         }
         "scenario" => {
             return run_scenario(&cli, cfg);
+        }
+        "serve" => {
+            return run_serve(&cli, cfg);
         }
         "sweep" => {
             let grid = cli.arg.as_deref().unwrap_or("cost");
@@ -643,6 +739,22 @@ mod tests {
         assert_eq!(fleet.pools[1].bid, Some(0.6));
         assert!(parse_fleet("warp9.huge").is_err());
         assert!(parse(&argv("scenario --fleet")).is_err(), "--fleet needs a value");
+    }
+
+    #[test]
+    fn parses_serve_flags() {
+        let c = parse(&argv("serve --port 8787 --ttc 1500 --fault reclaim-at:300,420")).unwrap();
+        assert_eq!(c.command, "serve");
+        assert_eq!(c.port, Some(8787));
+        assert_eq!(c.ttc, Some(1500));
+        assert_eq!(c.fault.as_deref(), Some("reclaim-at:300,420"));
+        assert_eq!(c.pace, None, "default clock is scripted");
+        let c = parse(&argv("serve --pace 60")).unwrap();
+        assert_eq!(c.pace, Some(60.0));
+        assert!(parse(&argv("serve --port eighty")).is_err());
+        assert!(parse(&argv("serve --pace 0")).is_err(), "pace must be positive");
+        assert!(parse(&argv("serve --pace -2")).is_err());
+        assert!(parse(&argv("serve --pace nan")).is_err());
     }
 
     #[test]

@@ -176,6 +176,28 @@ impl Bank {
         self.pi[idx] = 0.0;
     }
 
+    /// Widen the bank to `new_w` workload rows, appending zeroed
+    /// estimator state (PR-7: `dithen serve` admits workloads into a
+    /// *live* platform, so the bank must grow mid-run). Appended rows
+    /// are bitwise-neutral until their workload arrives: every stage of
+    /// [`native_step_slices`] reduces per row except the n* sum, which
+    /// accumulates in row order — a trailing masked row contributes an
+    /// exact `+0.0` tail term, so rows `0..w` step to the same bits a
+    /// narrower bank would produce. The XLA backend compiles a fixed
+    /// (W, K) executable and offers no such guarantee; growth there is
+    /// rejected rather than silently re-shaped.
+    pub fn grow_w(&mut self, new_w: usize) -> Result<()> {
+        anyhow::ensure!(new_w >= self.w, "bank cannot shrink ({} -> {new_w})", self.w);
+        anyhow::ensure!(
+            matches!(self.backend, Backend::Native),
+            "mid-run bank growth requires the native backend (xla executables are shape-compiled)"
+        );
+        self.b_hat.resize(new_w * self.k, 0.0);
+        self.pi.resize(new_w * self.k, 0.0);
+        self.w = new_w;
+        Ok(())
+    }
+
     pub fn b_hat(&self) -> &[f32] {
         &self.b_hat
     }
@@ -723,7 +745,11 @@ mod tests {
         }
     }
 
-    fn random_tick(w: usize, k: usize, rng: &mut Rng) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, f32) {
+    fn random_tick(
+        w: usize,
+        k: usize,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, f32) {
         let wk = w * k;
         let slot: Vec<f32> = (0..wk).map(|_| if rng.f64() < 0.8 { 1.0 } else { 0.0 }).collect();
         let meas: Vec<f32> = (0..wk)
@@ -761,6 +787,75 @@ mod tests {
                 assert!((bank.estimate(wi, ki) - 42.0).abs() < 1e-3);
             }
         }
+    }
+
+    #[test]
+    fn grown_bank_is_bitwise_equal_to_wide_bank() {
+        // PR-7 pin: a bank grown mid-run must continue exactly like a
+        // bank that was wide from the start (masked trailing rows are
+        // bitwise-neutral) — this is what makes `dithen serve`'s
+        // mid-run workload admission a bit-exact twin of the batch run.
+        let k = 2;
+        let mut wide = Bank::new(2, k, params(), Backend::Native);
+        let mut narrow = Bank::new(1, k, params(), Backend::Native);
+        let mut rng = Rng::new(0x5E7E);
+        // phase 1: only row 0 live; the wide bank carries a masked row 1
+        for _ in 0..5 {
+            let (slot, meas, b_tilde, m_rem, d, n_tot) = random_tick(1, k, &mut rng);
+            let pad = |v: &[f32]| {
+                let mut p = v.to_vec();
+                p.resize(2 * k, 0.0);
+                p
+            };
+            let wide_d = vec![d[0], 0.0];
+            let a = wide
+                .step(&TickInputs {
+                    b_tilde: &pad(&b_tilde),
+                    meas_mask: &pad(&meas),
+                    m_rem: &pad(&m_rem),
+                    slot_mask: &pad(&slot),
+                    d: &wide_d,
+                    n_tot,
+                })
+                .unwrap();
+            let b = narrow
+                .step(&TickInputs {
+                    b_tilde: &b_tilde,
+                    meas_mask: &meas,
+                    m_rem: &m_rem,
+                    slot_mask: &slot,
+                    d: &d,
+                    n_tot,
+                })
+                .unwrap();
+            assert_eq!(a.n_star.to_bits(), b.n_star.to_bits());
+            assert_eq!(a.b_hat[..k], b.b_hat[..k]);
+        }
+        // grow and run both rows live with identical inputs
+        narrow.grow_w(2).unwrap();
+        assert_eq!(narrow.b_hat(), wide.b_hat());
+        assert_eq!(narrow.pi(), wide.pi());
+        for _ in 0..5 {
+            let (slot, meas, b_tilde, m_rem, d, n_tot) = random_tick(2, k, &mut rng);
+            let inp = TickInputs {
+                b_tilde: &b_tilde,
+                meas_mask: &meas,
+                m_rem: &m_rem,
+                slot_mask: &slot,
+                d: &d,
+                n_tot,
+            };
+            let a = wide.step(&inp).unwrap();
+            let b = narrow.step(&inp).unwrap();
+            assert_eq!(a.b_hat, b.b_hat);
+            assert_eq!(a.pi, b.pi);
+            assert_eq!(a.r, b.r);
+            assert_eq!(a.s, b.s);
+            assert_eq!(a.n_star.to_bits(), b.n_star.to_bits());
+            assert_eq!(a.n_next.to_bits(), b.n_next.to_bits());
+        }
+        // shrinking is a contract violation, not a resize
+        assert!(narrow.grow_w(1).is_err());
     }
 
     #[test]

@@ -29,6 +29,7 @@ pub mod lci;
 pub mod metrics;
 pub mod platform;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod storage;
 pub mod util;

@@ -193,6 +193,57 @@ impl RunMetrics {
     }
 }
 
+/// One monitoring instant's observable state, snapshotted after the
+/// tick phases complete — the payload of the `dithen serve` SSE `tick`
+/// event (PR-7) and the per-tick view a resident client can follow
+/// without polling `/metrics`. Counters are cumulative (they mirror the
+/// matching [`RunMetrics`] fields mid-run); the fleet figures are the
+/// instant's [`crate::cloud::FleetView`] description.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TickSummary {
+    /// Sim time of the monitoring instant (seconds).
+    pub t: SimTime,
+    /// Ticks accounted so far (dense + skipped), = `RunMetrics::ticks`.
+    pub ticks: u64,
+    /// Workloads that have reached the front end.
+    pub arrived: usize,
+    /// Workloads that have completed (all tasks + merge done).
+    pub done: usize,
+    pub tasks_completed: u64,
+    pub requeued_tasks: u64,
+    pub reclamations: u64,
+    /// Active CUs (running + draining) at the instant.
+    pub active_cus: f64,
+    /// Committed CUs (active + booting) — what scaling decisions see.
+    pub committed_cus: f64,
+    /// Cumulative billed cost in USD.
+    pub total_cost: f64,
+}
+
+impl TickSummary {
+    /// Compact single-line JSON rendering (the SSE `data:` payload).
+    /// All fields are numeric, so no string escaping is involved.
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"t\":{},\"ticks\":{},\"arrived\":{},\"done\":{},",
+                "\"tasks_completed\":{},\"requeued_tasks\":{},\"reclamations\":{},",
+                "\"active_cus\":{},\"committed_cus\":{},\"total_cost\":{}}}"
+            ),
+            self.t,
+            self.ticks,
+            self.arrived,
+            self.done,
+            self.tasks_completed,
+            self.requeued_tasks,
+            self.reclamations,
+            self.active_cus,
+            self.committed_cus,
+            self.total_cost,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -254,5 +305,25 @@ mod tests {
         let mut c = a.clone();
         c.ticks = 10; // tick *count* is a simulation output and must compare
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn tick_summary_json_is_flat_and_numeric() {
+        let s = TickSummary {
+            t: 120,
+            ticks: 2,
+            arrived: 1,
+            done: 0,
+            tasks_completed: 7,
+            active_cus: 4.0,
+            committed_cus: 6.5,
+            total_cost: 0.0486,
+            ..Default::default()
+        };
+        let j = s.to_json();
+        assert!(j.starts_with("{\"t\":120,"), "{j}");
+        assert!(j.contains("\"tasks_completed\":7"), "{j}");
+        assert!(j.contains("\"committed_cus\":6.5"), "{j}");
+        assert!(j.ends_with('}'), "{j}");
     }
 }

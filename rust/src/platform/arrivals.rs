@@ -37,6 +37,14 @@ pub enum ArrivalProcess {
     /// Poisson process: exponential inter-arrival gaps with the given
     /// mean, drawn from the seeded RNG (first arrival at t = 0).
     Poisson { mean_gap_s: f64 },
+    /// An explicit per-slot arrival schedule — the batch twin of a
+    /// `dithen serve` submission log (PR-7). The daemon records the
+    /// effective arrival instant of every `POST /submit` it accepts;
+    /// replaying that log through a `Scripted` scenario reproduces the
+    /// served run bit-for-bit, which is what `tests/serve_parity.rs`
+    /// pins. Times are clamped to the nondecreasing invariant on read;
+    /// slots beyond the scripted length repeat the last instant.
+    Scripted { times: Vec<SimTime> },
 }
 
 impl ArrivalProcess {
@@ -63,6 +71,15 @@ impl ArrivalProcess {
                     })
                     .collect()
             }
+            ArrivalProcess::Scripted { ref times } => {
+                let mut last = 0u64;
+                (0..n)
+                    .map(|w| {
+                        last = times.get(w).copied().unwrap_or(last).max(last);
+                        last
+                    })
+                    .collect()
+            }
         }
     }
 
@@ -72,6 +89,7 @@ impl ArrivalProcess {
             ArrivalProcess::FixedInterval { interval_s } => format!("fixed:{interval_s}"),
             ArrivalProcess::Bursty { burst, gap_s } => format!("burst:{burst}x{gap_s}"),
             ArrivalProcess::Poisson { mean_gap_s } => format!("poisson:{mean_gap_s}"),
+            ArrivalProcess::Scripted { ref times } => format!("scripted:{}", times.len()),
         }
     }
 }
@@ -118,9 +136,25 @@ mod tests {
             ArrivalProcess::FixedInterval { interval_s: 60 },
             ArrivalProcess::Bursty { burst: 2, gap_s: 60 },
             ArrivalProcess::Poisson { mean_gap_s: 60.0 },
+            ArrivalProcess::Scripted { times: vec![0, 60] },
         ] {
             assert!(p.times(0, 3).is_empty());
         }
+    }
+
+    #[test]
+    fn scripted_replays_the_submission_log() {
+        let p = ArrivalProcess::Scripted { times: vec![0, 60, 60, 900] };
+        assert_eq!(p.times(4, 1), vec![0, 60, 60, 900]);
+        // seed-independent: the log *is* the schedule
+        assert_eq!(p.times(4, 99), vec![0, 60, 60, 900]);
+        // out-of-order entries are clamped to the nondecreasing
+        // invariant, extra slots repeat the last instant
+        let p = ArrivalProcess::Scripted { times: vec![300, 60] };
+        assert_eq!(p.times(3, 0), vec![300, 300, 300]);
+        // an empty script pins every slot to t = 0
+        let p = ArrivalProcess::Scripted { times: vec![] };
+        assert_eq!(p.times(2, 0), vec![0, 0]);
     }
 
     #[test]
@@ -128,5 +162,6 @@ mod tests {
         assert_eq!(ArrivalProcess::FixedInterval { interval_s: 60 }.describe(), "fixed:60");
         assert_eq!(ArrivalProcess::Bursty { burst: 3, gap_s: 900 }.describe(), "burst:3x900");
         assert_eq!(ArrivalProcess::Poisson { mean_gap_s: 120.0 }.describe(), "poisson:120");
+        assert_eq!(ArrivalProcess::Scripted { times: vec![0, 9, 9] }.describe(), "scripted:3");
     }
 }

@@ -409,6 +409,86 @@ impl Platform {
             .schedule(self.cfg.control.monitor_interval_s, Event::MonitorTick);
     }
 
+    /// Admit one workload into a *running* platform (PR-7, `dithen
+    /// serve`): the mid-run twin of the spec having been in the suite
+    /// from the start with a [`ArrivalProcess::Scripted`] arrival at
+    /// `at`. The estimator bank widens by one row of zeroed state —
+    /// bitwise-neutral until the workload arrives
+    /// ([`crate::estimation::Bank::grow_w`]) — and every per-workload
+    /// array gains its slot, so the next `tick_gather` sees exactly the
+    /// state the wide-from-birth platform would carry.
+    ///
+    /// Caller contract (enforced by the serve daemon):
+    /// * ids are dense: `spec.id` == current suite length;
+    /// * `at` is not before any already-scheduled arrival — the
+    ///   per-tick `arrived <= w` bookkeeping requires arrival order to
+    ///   match id order (`at` is clamped to `now` by the engine);
+    /// * native estimator bank (XLA executables are shape-compiled,
+    ///   so [`crate::estimation::Bank::grow_w`] rejects growth there).
+    ///
+    /// Clearing `all_done_at` is what resumes a quiescent run: when
+    /// the latch was set mid-pump, the next `MonitorTick` is still in
+    /// the queue (the pump returns before popping it), so the tick
+    /// chain continues on the same grid the batch twin ticks on.
+    ///
+    /// Returns the workload's admitted index.
+    pub fn admit_workload(&mut self, spec: WorkloadSpec, at: SimTime) -> Result<usize> {
+        anyhow::ensure!(
+            spec.id == self.specs.len(),
+            "workload ids must be dense: got {}, next is {}",
+            spec.id,
+            self.specs.len()
+        );
+        anyhow::ensure!(
+            spec.n_types >= 1 && spec.n_types <= self.k_max,
+            "workload has {} media types; this platform's bank is K={}",
+            spec.n_types,
+            self.k_max
+        );
+        anyhow::ensure!(
+            self.sim.now() <= self.horizon_s,
+            "cannot admit past the scenario horizon ({}s)",
+            self.horizon_s
+        );
+        let w = spec.id;
+        self.bank.grow_w(w + 1)?;
+        self.specs.push(spec);
+        self.wl.push(WlState {
+            phase: WlPhase::Footprinting,
+            arrived_at: 0,
+            deadline: None,
+            ttc_extended: false,
+            confirmed: false,
+            footprint_pending: vec![],
+            footprint_outstanding: 0,
+            footprint_meas: vec![],
+            completed_tasks: 0,
+            completed_at: None,
+            split_busy: 0.0,
+            merge_dispatched: false,
+            merge_instance: None,
+            merge_epoch: 0,
+        });
+        for _ in 0..self.k_max {
+            self.est.push(SlotEst {
+                adhoc: AdHoc::paper(),
+                arma: Arma::paper(),
+                kalman_det: SlopeDetector::new(),
+                adhoc_det: SlopeDetector::new(),
+                arma_det: DeviationDetector::paper(self.cfg.control.monitor_interval_s),
+                cum_cus: 0.0,
+                cum_done: 0,
+                seeded: false,
+            });
+            self.meas_cursor.push(0);
+            self.last_meas.push(f32::NAN);
+        }
+        self.rates.push(0.0);
+        self.sim.schedule_at(at, Event::WorkloadArrival { workload: w });
+        self.all_done_at = None;
+        Ok(w)
+    }
+
     /// Pump the event loop up to (and consuming) the next
     /// `MonitorTick`. Returns `Ok(true)` stopped *at* a tick — the
     /// caller runs the tick phases (`tick_gather` → bank step →
@@ -927,5 +1007,63 @@ mod tests {
         assert!(m.reclamations > 0, "no instances were revoked");
         assert!(m.outcomes.iter().all(|o| o.completed_at.is_some()));
         assert_eq!(m.tasks_completed, 2 * 40, "task counts must balance");
+    }
+
+    #[test]
+    fn mid_run_admission_is_bitwise_equal_to_the_scripted_batch_twin() {
+        // PR-7 pin: admitting a workload into a quiescent live platform
+        // (`dithen serve`'s mid-run /submit path) must continue the run
+        // exactly as if the workload had been in the suite from the
+        // start with a Scripted arrival at the same instant. Workload 0
+        // finishes long before t = 3600, so the admission lands after
+        // the all-done latch — the hard case, where the tick chain is
+        // resumed from the still-queued MonitorTick.
+        use crate::estimation::BankCache;
+        let rng = Rng::new(42);
+        let spec0 = WorkloadSpec::generate(0, App::FaceDetection, 30, None, &rng);
+        let spec1 = WorkloadSpec::generate(1, App::FaceDetection, 25, None, &rng);
+        let build = |specs: Vec<WorkloadSpec>, times: Vec<SimTime>| {
+            ScenarioBuilder::new(small_cfg())
+                .workloads(specs)
+                .fixed_ttc(Some(1500))
+                .arrivals(ArrivalProcess::Scripted { times })
+                .horizon(6 * 3600)
+                .build()
+        };
+        let batch = build(vec![spec0.clone(), spec1.clone()], vec![0, 3600]).run().unwrap();
+
+        let cache = BankCache::new();
+        let scn = build(vec![spec0], vec![0]);
+        let mut p = Platform::from_scenario_with_cache(scn, &cache);
+        p.start();
+        while p.pump_to_tick().unwrap() {
+            p.tick_gather();
+            p.step_bank().unwrap();
+            p.tick_finish();
+            if p.all_done_at.is_some() {
+                break;
+            }
+        }
+        assert!(p.all_done_at.is_some(), "workload 0 should have drained");
+        p.admit_workload(spec1, 3600).unwrap();
+        assert!(p.all_done_at.is_none(), "admission must clear the latch");
+        while p.pump_to_tick().unwrap() {
+            p.tick_gather();
+            p.step_bank().unwrap();
+            p.tick_finish();
+            if p.all_done_at.is_some() {
+                break;
+            }
+        }
+        let (live, _db) = p.finalize_with_db().unwrap();
+        assert_eq!(live, batch, "mid-run admission diverged from the scripted batch twin");
+        assert_eq!(live.tasks_completed, 55);
+
+        // contract violations surface as errors, not corruption
+        let scn = build(vec![WorkloadSpec::generate(0, App::Brisk, 5, None, &rng)], vec![0]);
+        let mut p = Platform::from_scenario_with_cache(scn, &cache);
+        p.start();
+        let bad_id = WorkloadSpec::generate(5, App::Brisk, 5, None, &rng);
+        assert!(p.admit_workload(bad_id, 0).is_err(), "non-dense id must be rejected");
     }
 }

@@ -43,6 +43,13 @@ use crate::platform::{ArrivalProcess, FaultSpec, Platform, RunOpts};
 use crate::workload::WorkloadSpec;
 
 /// A complete, self-contained experiment description.
+///
+/// Also the daemon's configuration unit (PR-7): `dithen serve` holds a
+/// workload-less `Scenario` as its *template* and, at first advance,
+/// fills `specs` + `arrivals` (as [`ArrivalProcess::Scripted`]) from
+/// the HTTP submission log — so a served run is assembled by exactly
+/// this struct's code path, which is why scripted-clock serving is
+/// bit-identical to the batch twin (`tests/serve_parity.rs`).
 #[derive(Debug, Clone)]
 pub struct Scenario {
     pub cfg: Config,

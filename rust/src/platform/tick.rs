@@ -30,6 +30,15 @@
 //! working set lives in [`super::TickScratch`] or a platform-owned
 //! buffer and is reused across ticks. Trace recording (three Vec pushes
 //! per active slot per tick) is gated behind `record_traces`.
+//!
+//! §Serve (PR-7): the phase seams double as the daemon's *ingestion
+//! suspension points* — `dithen serve`'s control thread drains queued
+//! HTTP submissions between `tick_finish` and the next
+//! `pump_to_tick`, so a mid-run [`Platform::admit_workload`] always
+//! lands on a monitoring-instant boundary. `tick_gather` re-sizes the
+//! scratch from the *current* `bank.w` every tick, which is what lets
+//! an admitted workload (one `Bank::grow_w` row) flow through the
+//! next round with no daemon-specific tick code.
 
 use std::time::Instant;
 

@@ -1,0 +1,201 @@
+//! Request routing and wire-format helpers for `dithen serve` (PR-7):
+//! the thin layer between the transport ([`super::http`]) and the
+//! daemon's command loop ([`super::daemon`]).
+//!
+//! Submission parameters travel in the query string (`POST
+//! /submit?app=face-detection&tasks=50&at=60`) rather than a JSON body
+//! — every parameter is a scalar, so the query string is the simplest
+//! thing that a shell one-liner, the CI smoke step, and the parity
+//! test can all produce identically. Responses are JSON, hand-rendered
+//! with [`json_escape`] for the few string fields.
+
+use super::http::HttpError;
+use crate::workload::{App, APP_MODELS};
+
+/// The daemon's endpoint surface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// `GET /healthz` — liveness, always 200 while the daemon runs.
+    Healthz,
+    /// `GET /metrics` — Prometheus text exposition.
+    Metrics,
+    /// `GET /events` — SSE stream of cloud events and tick summaries.
+    Events,
+    /// `GET /status/{workload}` — task DB shard counters.
+    Status(usize),
+    /// `POST /submit` — inject a workload into the live scenario.
+    Submit,
+    /// `POST /advance` — drive the scripted clock (scripted mode only).
+    Advance,
+    /// `POST /shutdown` — graceful drain and finalize.
+    Shutdown,
+}
+
+/// Map (method, path) to a route; wrong method on a known path is 405,
+/// unknown paths are 404, a non-numeric workload id is 400.
+pub fn route(method: &str, path: &str) -> Result<Route, HttpError> {
+    let known_get = ["/healthz", "/metrics", "/events"];
+    let known_post = ["/submit", "/advance", "/shutdown"];
+    match (method, path) {
+        ("GET", "/healthz") => Ok(Route::Healthz),
+        ("GET", "/metrics") => Ok(Route::Metrics),
+        ("GET", "/events") => Ok(Route::Events),
+        ("POST", "/submit") => Ok(Route::Submit),
+        ("POST", "/advance") => Ok(Route::Advance),
+        ("POST", "/shutdown") => Ok(Route::Shutdown),
+        _ => {
+            if let Some(rest) = path.strip_prefix("/status/") {
+                if method != "GET" {
+                    return Err(HttpError::new(405, "method not allowed"));
+                }
+                return rest
+                    .parse::<usize>()
+                    .map(Route::Status)
+                    .map_err(|_| HttpError::new(400, "bad workload id"));
+            }
+            if known_get.contains(&path) || known_post.contains(&path) {
+                Err(HttpError::new(405, "method not allowed"))
+            } else {
+                Err(HttpError::new(404, "no such route"))
+            }
+        }
+    }
+}
+
+fn hex_val(b: u8) -> Option<u8> {
+    match b {
+        b'0'..=b'9' => Some(b - b'0'),
+        b'a'..=b'f' => Some(b - b'a' + 10),
+        b'A'..=b'F' => Some(b - b'A' + 10),
+        _ => None,
+    }
+}
+
+/// Decode `%XX` escapes and `+`-as-space. A malformed escape passes
+/// through literally rather than erroring — query parsing never fails.
+fn pct_decode(s: &str) -> String {
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b'%' if i + 2 < b.len() => match (hex_val(b[i + 1]), hex_val(b[i + 2])) {
+                (Some(hi), Some(lo)) => {
+                    out.push(hi << 4 | lo);
+                    i += 3;
+                }
+                _ => {
+                    out.push(b'%');
+                    i += 1;
+                }
+            },
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Split a raw query string into decoded key/value pairs. Keys without
+/// `=` get an empty value; empty segments are dropped.
+pub fn parse_query(q: &str) -> Vec<(String, String)> {
+    q.split('&')
+        .filter(|s| !s.is_empty())
+        .map(|pair| {
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            (pct_decode(k), pct_decode(v))
+        })
+        .collect()
+}
+
+/// First value for `key` among parsed query params.
+pub fn query_get<'a>(params: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    params.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+/// Escape a string for embedding in a JSON double-quoted literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Resolve an application by its canonical model name
+/// (`face-detection`, `transcode`, …) — the same labels the CLI and
+/// the paper's §V use.
+pub fn parse_app(name: &str) -> Option<App> {
+    APP_MODELS.iter().find(|m| m.name == name).map(|m| m.app)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_dispatch_by_method_and_path() {
+        assert_eq!(route("GET", "/healthz"), Ok(Route::Healthz));
+        assert_eq!(route("GET", "/metrics"), Ok(Route::Metrics));
+        assert_eq!(route("GET", "/events"), Ok(Route::Events));
+        assert_eq!(route("POST", "/submit"), Ok(Route::Submit));
+        assert_eq!(route("POST", "/advance"), Ok(Route::Advance));
+        assert_eq!(route("POST", "/shutdown"), Ok(Route::Shutdown));
+        assert_eq!(route("GET", "/status/7"), Ok(Route::Status(7)));
+        // wrong method on a known path -> 405
+        assert_eq!(route("POST", "/healthz").unwrap_err().status, 405);
+        assert_eq!(route("GET", "/submit").unwrap_err().status, 405);
+        assert_eq!(route("POST", "/status/7").unwrap_err().status, 405);
+        // unknown path -> 404, junk id -> 400
+        assert_eq!(route("GET", "/nope").unwrap_err().status, 404);
+        assert_eq!(route("GET", "/status/abc").unwrap_err().status, 400);
+        assert_eq!(route("GET", "/status/").unwrap_err().status, 400);
+    }
+
+    #[test]
+    fn query_strings_decode_percent_and_plus() {
+        let p = parse_query("app=face-detection&tasks=50&note=a+b%20c&flag");
+        assert_eq!(query_get(&p, "app"), Some("face-detection"));
+        assert_eq!(query_get(&p, "tasks"), Some("50"));
+        assert_eq!(query_get(&p, "note"), Some("a b c"));
+        assert_eq!(query_get(&p, "flag"), Some(""));
+        assert_eq!(query_get(&p, "absent"), None);
+        // malformed escapes pass through instead of erroring
+        let p = parse_query("x=%zz&y=%2");
+        assert_eq!(query_get(&p, "x"), Some("%zz"));
+        assert_eq!(query_get(&p, "y"), Some("%2"));
+        assert!(parse_query("").is_empty());
+    }
+
+    #[test]
+    fn json_escape_covers_quotes_and_controls() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("l1\nl2\tt"), "l1\\nl2\\tt");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn apps_parse_by_model_name() {
+        assert_eq!(parse_app("face-detection"), Some(App::FaceDetection));
+        assert_eq!(parse_app("transcode"), Some(App::Transcode));
+        assert_eq!(parse_app("word-histogram"), Some(App::WordHistogram));
+        assert_eq!(parse_app("not-an-app"), None);
+    }
+}

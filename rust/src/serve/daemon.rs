@@ -1,0 +1,858 @@
+//! The resident CaaS daemon behind `dithen serve` (PR-7).
+//!
+//! ## Threading model
+//!
+//! [`crate::platform::Platform`] is deliberately not `Send`-shared: a
+//! single **control thread** owns it outright (actor style), and HTTP
+//! connection threads talk to it over an `mpsc` [`Command`] channel
+//! with per-request reply channels. The accept loop spawns one short-
+//! lived thread per connection (one request per connection, see
+//! [`super::http`]); `/events` handlers stay alive forwarding SSE
+//! frames until either side drops.
+//!
+//! ## Clock modes and determinism
+//!
+//! The sim clock never reads the wall clock. Under
+//! [`ClockMode::Scripted`] the simulation only moves when a client
+//! `POST /advance`s it, so a scripted client's submit/advance sequence
+//! is a *program*, and replaying it reproduces the run bit-for-bit:
+//! submissions received while the daemon is idle accumulate and the
+//! first advance assembles the accumulated suite into a plain
+//! [`Scenario`] with [`ArrivalProcess::Scripted`] arrivals — literally
+//! the batch code path (`tests/serve_parity.rs` pins `RunMetrics`
+//! equality). Submissions landing on a *running* platform go through
+//! [`crate::platform::Platform::admit_workload`], whose bitwise
+//! batch-twin argument lives with that method. Under
+//! [`ClockMode::Paced`] the control thread maps wall time onto sim
+//! time at a configured rate for interactive use — same code path per
+//! tick, but no bit-reproducibility claim, since tick timing then
+//! depends on when submissions race the wall clock.
+//!
+//! The PR-5 tick phases are the suspension points: between
+//! `tick_finish` and the next `pump_to_tick` the control thread drains
+//! queued commands, so ingestion lands exactly on monitoring-instant
+//! boundaries.
+
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::estimation::BankCache;
+use crate::metrics::{RunMetrics, TickSummary};
+use crate::platform::{ArrivalProcess, CloudEvent, Platform, Scenario, WlPhase};
+use crate::sim::SimTime;
+use crate::util::rng::Rng;
+use crate::workload::{app_model, App, WorkloadSpec};
+
+use super::api::{self, Route};
+use super::events::SseHub;
+use super::http::{self, Request};
+use super::prometheus::PromText;
+
+/// Process-wide graceful-shutdown latch, set by the SIGTERM/SIGINT
+/// handler installed by the `serve` CLI command. The control loop
+/// polls it between commands (≤100 ms latency). Tests never install
+/// the handler, so in-process daemons are unaffected.
+pub static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod sig {
+    use super::SHUTDOWN;
+    use std::sync::atomic::Ordering;
+
+    /// `sighandler_t` — a plain C function pointer, so the declaration
+    /// below needs no pointer casts.
+    type Handler = extern "C" fn(i32);
+
+    extern "C" {
+        fn signal(signum: i32, handler: Handler) -> usize;
+    }
+
+    extern "C" fn on_signal(_sig: i32) {
+        // a store to an atomic is async-signal-safe
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGTERM, on_signal);
+            signal(SIGINT, on_signal);
+        }
+    }
+}
+
+/// Bind SIGTERM/SIGINT to the graceful-shutdown latch (no-op off
+/// unix). Called by the CLI only — a test daemon shuts down over HTTP
+/// or [`DaemonHandle::join`].
+pub fn install_signal_handlers() {
+    #[cfg(unix)]
+    sig::install();
+}
+
+/// How the daemon maps wall time onto sim time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ClockMode {
+    /// Sim time moves only on `POST /advance` — fully deterministic;
+    /// the mode every test and the parity pin run under.
+    Scripted,
+    /// Sim time tracks wall time at `speed` sim-seconds per
+    /// wall-second (interactive use; no bit-reproducibility claim).
+    Paced { speed: f64 },
+}
+
+impl ClockMode {
+    fn label(&self) -> String {
+        match *self {
+            ClockMode::Scripted => "scripted".to_string(),
+            ClockMode::Paced { speed } => format!("paced:{speed}"),
+        }
+    }
+}
+
+/// Daemon configuration: a workload-less [`Scenario`] acting as the
+/// template (backend, fleet, fault model, policy, estimator, horizon,
+/// TTC, config), plus serve-specific knobs.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Scenario template; `specs` and `arrivals` are ignored — they
+    /// are replaced by the accumulated submissions and their scripted
+    /// arrival instants at assembly time.
+    pub template: Scenario,
+    pub clock: ClockMode,
+    /// Root seed for workload generation (`WorkloadSpec::generate`
+    /// substreams per id). Defaults to the template's `cfg.seed` in
+    /// the CLI; separate so a scripted client can reproduce a batch
+    /// suite built from a different generator root.
+    pub workload_seed: u64,
+}
+
+/// One `POST /submit`, decoded.
+#[derive(Debug, Clone)]
+pub struct SubmitReq {
+    pub app: App,
+    pub tasks: usize,
+    /// Requested sim arrival instant; clamped to now and to the latest
+    /// already-scheduled arrival (ids must arrive in order).
+    pub at: Option<SimTime>,
+    /// Per-workload requested TTC (the spec's `requested_ttc`).
+    pub ttc: Option<u64>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SubmitAck {
+    pub workload: usize,
+    pub arrival_at: SimTime,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct AdvanceAck {
+    pub now: SimTime,
+    pub ticks_run: u64,
+    /// No more progress is possible without new submissions.
+    pub quiescent: bool,
+    pub all_done: bool,
+}
+
+enum Command {
+    Submit(SubmitReq, Sender<Result<SubmitAck, String>>),
+    Advance { to: Option<SimTime>, reply: Sender<Result<AdvanceAck, String>> },
+    Status { workload: usize, reply: Sender<Option<String>> },
+    Metrics { reply: Sender<String> },
+    Subscribe { tx: Sender<String> },
+    Shutdown { reply: Sender<()> },
+}
+
+/// Handle to a spawned daemon: the bound address plus the control
+/// channel. Dropping the handle does NOT stop the daemon — call
+/// [`DaemonHandle::join`] (tests) or [`DaemonHandle::wait`] (CLI,
+/// which relies on the signal latch or `POST /shutdown`).
+pub struct DaemonHandle {
+    pub addr: SocketAddr,
+    tx: Sender<Command>,
+    control: JoinHandle<Result<RunMetrics>>,
+}
+
+impl DaemonHandle {
+    pub fn base_url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    /// Ask the control loop to stop (idempotent; tolerates an already
+    /// stopped daemon).
+    pub fn shutdown(&self) {
+        let (rtx, rrx) = channel();
+        if self.tx.send(Command::Shutdown { reply: rtx }).is_ok() {
+            let _ = rrx.recv_timeout(Duration::from_secs(60));
+        }
+    }
+
+    /// Graceful stop + final metrics: what a scripted client calls
+    /// once its submission program is complete.
+    pub fn join(self) -> Result<RunMetrics> {
+        self.shutdown();
+        self.wait()
+    }
+
+    /// Wait for the control loop to exit on its own (SIGTERM latch or
+    /// `POST /shutdown`) and return the final metrics.
+    pub fn wait(self) -> Result<RunMetrics> {
+        match self.control.join() {
+            Ok(r) => r,
+            Err(_) => anyhow::bail!("daemon control thread panicked"),
+        }
+    }
+}
+
+pub struct Daemon;
+
+impl Daemon {
+    /// Bind `127.0.0.1:port` (0 = ephemeral, for tests), spawn the
+    /// accept loop and the control thread, and return immediately.
+    pub fn spawn(opts: ServeOpts, port: u16) -> Result<DaemonHandle> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        let (tx, rx) = channel::<Command>();
+        let done = Arc::new(AtomicBool::new(false));
+
+        let conn_tx = tx.clone();
+        let accept_done = done.clone();
+        thread::Builder::new().name("dithen-http".into()).spawn(move || {
+            for stream in listener.incoming() {
+                if accept_done.load(Ordering::SeqCst) {
+                    break;
+                }
+                if let Ok(s) = stream {
+                    let tx = conn_tx.clone();
+                    let _ = thread::Builder::new()
+                        .name("dithen-conn".into())
+                        .spawn(move || handle_connection(s, tx));
+                }
+            }
+        })?;
+
+        let control = thread::Builder::new().name("dithen-ctl".into()).spawn(move || {
+            let result = Control::new(opts).run(&rx);
+            // unblock the accept loop so its thread exits too
+            done.store(true, Ordering::SeqCst);
+            let _ = TcpStream::connect(addr);
+            result
+        })?;
+
+        Ok(DaemonHandle { addr, tx, control })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// connection handling (per-connection threads)
+// ---------------------------------------------------------------------------
+
+fn handle_connection(stream: TcpStream, tx: Sender<Command>) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let reader_half = match stream.try_clone() {
+        Ok(c) => c,
+        Err(_) => return,
+    };
+    let mut reader = std::io::BufReader::new(reader_half);
+    let mut writer = stream;
+    let req = match http::read_request(&mut reader) {
+        Ok(Some(r)) => r,
+        Ok(None) => return,
+        Err(e) => {
+            let _ = http::write_error(&mut writer, e);
+            return;
+        }
+    };
+    match api::route(&req.method, &req.path) {
+        Err(e) => {
+            let _ = http::write_error(&mut writer, e);
+        }
+        Ok(route) => dispatch(route, &req, &mut writer, &tx),
+    }
+}
+
+/// Send a command and wait for the control loop's reply; `None` when
+/// the daemon is gone (reply with 503).
+fn ask<T>(tx: &Sender<Command>, build: impl FnOnce(Sender<T>) -> Command) -> Option<T> {
+    let (rtx, rrx) = channel();
+    tx.send(build(rtx)).ok()?;
+    rrx.recv().ok()
+}
+
+fn respond_json(w: &mut TcpStream, status: u16, body: String) {
+    let _ = http::write_response(w, status, "application/json", body.as_bytes());
+}
+
+fn respond_unavailable(w: &mut TcpStream) {
+    let _ = http::write_error(w, http::HttpError::new(503, "daemon is shutting down"));
+}
+
+fn dispatch(route: Route, req: &Request, w: &mut TcpStream, tx: &Sender<Command>) {
+    match route {
+        Route::Healthz => match ask(tx, |r| Command::Metrics { reply: r }) {
+            // a healthz that round-trips the control thread proves the
+            // loop is alive, not merely that the socket accepts
+            Some(_) => respond_json(w, 200, "{\"ok\":true}".to_string()),
+            None => respond_unavailable(w),
+        },
+        Route::Metrics => match ask(tx, |r| Command::Metrics { reply: r }) {
+            Some(text) => {
+                let _ = http::write_response(
+                    w,
+                    200,
+                    "text/plain; version=0.0.4; charset=utf-8",
+                    text.as_bytes(),
+                );
+            }
+            None => respond_unavailable(w),
+        },
+        Route::Status(workload) => {
+            match ask(tx, |r| Command::Status { workload, reply: r }) {
+                Some(Some(json)) => respond_json(w, 200, json),
+                Some(None) => {
+                    let _ = http::write_error(w, http::HttpError::new(404, "unknown workload"));
+                }
+                None => respond_unavailable(w),
+            }
+        }
+        Route::Submit => {
+            let params = api::parse_query(&req.query);
+            let app = match api::query_get(&params, "app").and_then(api::parse_app) {
+                Some(a) => a,
+                None => {
+                    respond_json(
+                        w,
+                        400,
+                        "{\"error\":\"unknown or missing app (use a model name like face-detection)\"}"
+                            .to_string(),
+                    );
+                    return;
+                }
+            };
+            let tasks = match api::query_get(&params, "tasks").and_then(|t| t.parse().ok()) {
+                Some(n) if n > 0 => n,
+                _ => {
+                    respond_json(
+                        w,
+                        400,
+                        "{\"error\":\"tasks must be a positive integer\"}".to_string(),
+                    );
+                    return;
+                }
+            };
+            let at = api::query_get(&params, "at").and_then(|t| t.parse().ok());
+            let ttc = api::query_get(&params, "ttc").and_then(|t| t.parse().ok());
+            match ask(tx, |r| Command::Submit(SubmitReq { app, tasks, at, ttc }, r)) {
+                Some(Ok(ack)) => respond_json(
+                    w,
+                    200,
+                    format!("{{\"workload\":{},\"arrival_at\":{}}}", ack.workload, ack.arrival_at),
+                ),
+                Some(Err(e)) => {
+                    respond_json(w, 409, format!("{{\"error\":\"{}\"}}", api::json_escape(&e)))
+                }
+                None => respond_unavailable(w),
+            }
+        }
+        Route::Advance => {
+            let params = api::parse_query(&req.query);
+            let to = api::query_get(&params, "to").and_then(|t| t.parse().ok());
+            match ask(tx, |r| Command::Advance { to, reply: r }) {
+                Some(Ok(a)) => respond_json(
+                    w,
+                    200,
+                    format!(
+                        "{{\"now\":{},\"ticks_run\":{},\"quiescent\":{},\"all_done\":{}}}",
+                        a.now, a.ticks_run, a.quiescent, a.all_done
+                    ),
+                ),
+                Some(Err(e)) => {
+                    respond_json(w, 409, format!("{{\"error\":\"{}\"}}", api::json_escape(&e)))
+                }
+                None => respond_unavailable(w),
+            }
+        }
+        Route::Shutdown => match ask(tx, |r| Command::Shutdown { reply: r }) {
+            Some(()) => respond_json(w, 200, "{\"ok\":true,\"draining\":true}".to_string()),
+            None => respond_unavailable(w),
+        },
+        Route::Events => {
+            let (etx, erx) = channel::<String>();
+            if tx.send(Command::Subscribe { tx: etx }).is_err() {
+                respond_unavailable(w);
+                return;
+            }
+            if http::write_sse_preamble(w).is_err() {
+                return;
+            }
+            let _ = w.set_write_timeout(Some(Duration::from_secs(10)));
+            loop {
+                match erx.recv_timeout(Duration::from_secs(15)) {
+                    Ok(frame) => {
+                        if w.write_all(frame.as_bytes()).and_then(|_| w.flush()).is_err() {
+                            break;
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        // comment line keep-alive; also detects dead peers
+                        if w.write_all(b": keep-alive\n\n").and_then(|_| w.flush()).is_err() {
+                            break;
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// control thread: the single owner of the platform
+// ---------------------------------------------------------------------------
+
+struct Control {
+    template: Scenario,
+    clock: ClockMode,
+    rng: Rng,
+    cache: BankCache,
+    hub: SseHub,
+    /// Submissions accumulated before the platform is assembled.
+    pending_specs: Vec<WorkloadSpec>,
+    pending_times: Vec<SimTime>,
+    platform: Option<Platform>,
+    next_id: usize,
+    /// Latest scheduled arrival instant — later submissions clamp to
+    /// it so arrival order always matches id order.
+    last_arrival: SimTime,
+    stop: bool,
+    /// Horizon crossed: the run is over; submissions are rejected.
+    finished: bool,
+    /// Wall-clock anchor for paced mode (set at assembly).
+    paced_origin: Option<Instant>,
+}
+
+impl Control {
+    fn new(opts: ServeOpts) -> Self {
+        Control {
+            template: opts.template,
+            clock: opts.clock,
+            rng: Rng::new(opts.workload_seed),
+            cache: BankCache::new(),
+            hub: SseHub::new(),
+            pending_specs: vec![],
+            pending_times: vec![],
+            platform: None,
+            next_id: 0,
+            last_arrival: 0,
+            stop: false,
+            finished: false,
+            paced_origin: None,
+        }
+    }
+
+    fn run(mut self, rx: &Receiver<Command>) -> Result<RunMetrics> {
+        loop {
+            if self.stop || SHUTDOWN.load(Ordering::SeqCst) {
+                break;
+            }
+            match rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(Command::Advance { to, reply }) => {
+                    let _ = reply.send(self.advance(to, rx));
+                }
+                Ok(cmd) => self.handle_non_advance(cmd),
+                Err(RecvTimeoutError::Timeout) => self.drive_paced(),
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        self.hub.publish("shutdown", "{\"draining\":true}");
+        // graceful drain: finish everything in flight (and any
+        // submitted-but-unreached arrivals) before finalizing, so a
+        // SIGTERM'd daemon still accounts every accepted task exactly
+        // once — the same invariant the batch loop ends with
+        if let Some(p) = self.platform.as_mut() {
+            if !self.finished && p.all_done_at.is_none() {
+                while let Ok(true) = p.pump_to_tick() {
+                    p.tick_gather();
+                    if p.step_bank().is_err() {
+                        break;
+                    }
+                    p.tick_finish();
+                    if p.all_done_at.is_some() {
+                        break;
+                    }
+                }
+            }
+        }
+        match self.platform.take() {
+            Some(p) => p.finalize_with_db().map(|(m, _db)| m),
+            None => Ok(RunMetrics::default()),
+        }
+    }
+
+    fn handle_non_advance(&mut self, cmd: Command) {
+        match cmd {
+            Command::Submit(req, reply) => {
+                let _ = reply.send(self.submit(req));
+            }
+            Command::Status { workload, reply } => {
+                let _ = reply.send(self.status_json(workload));
+            }
+            Command::Metrics { reply } => {
+                let _ = reply.send(self.metrics_text());
+            }
+            Command::Subscribe { tx } => self.hub.attach(tx),
+            Command::Shutdown { reply } => {
+                self.stop = true;
+                let _ = reply.send(());
+            }
+            Command::Advance { reply, .. } => {
+                let _ = reply.send(Err("an advance is already in progress".to_string()));
+            }
+        }
+    }
+
+    /// Build the platform from the accumulated submissions: the exact
+    /// batch assembly path, with the submission log as the scripted
+    /// arrival schedule. This is why idle-daemon ingestion is
+    /// bit-identical to the batch scenario *by construction*.
+    fn assemble(&mut self) -> Result<(), String> {
+        let mut scn = self.template.clone();
+        scn.specs = std::mem::take(&mut self.pending_specs);
+        scn.arrivals = ArrivalProcess::Scripted { times: std::mem::take(&mut self.pending_times) };
+        scn.validate().map_err(|e| e.to_string())?;
+        let mut p = Platform::from_scenario_with_cache(scn, &self.cache);
+        p.start();
+        self.platform = Some(p);
+        self.paced_origin = Some(Instant::now());
+        Ok(())
+    }
+
+    fn submit(&mut self, req: SubmitReq) -> Result<SubmitAck, String> {
+        if self.finished {
+            return Err("scenario horizon reached; daemon is drained".to_string());
+        }
+        let id = self.next_id;
+        let spec = WorkloadSpec::generate(id, req.app, req.tasks, req.ttc, &self.rng);
+        let floor = match &self.platform {
+            Some(p) => p.sim.now(),
+            None => 0,
+        };
+        let at = req.at.unwrap_or(floor).max(floor).max(self.last_arrival);
+        match self.platform.as_mut() {
+            None => {
+                self.pending_specs.push(spec);
+                self.pending_times.push(at);
+            }
+            Some(p) => {
+                p.admit_workload(spec, at).map_err(|e| e.to_string())?;
+            }
+        }
+        self.next_id = id + 1;
+        self.last_arrival = at;
+        self.hub.publish("submitted", &format!("{{\"workload\":{id},\"arrival_at\":{at}}}"));
+        if matches!(self.clock, ClockMode::Paced { .. }) && self.platform.is_none() {
+            // paced mode starts the wall clock at first submission
+            self.assemble()?;
+        }
+        Ok(SubmitAck { workload: id, arrival_at: at })
+    }
+
+    /// One tick round (the PR-5 phases), publishing the SSE summary
+    /// and any cloud events applied at this instant. Returns false if
+    /// the bank step failed.
+    fn tick_round(p: &mut Platform, hub: &mut SseHub) -> Result<(), String> {
+        p.tick_gather();
+        p.step_bank().map_err(|e| e.to_string())?;
+        p.tick_finish();
+        if hub.is_empty() {
+            return Ok(());
+        }
+        let now = p.sim.now();
+        for ev in &p.fault_events {
+            let CloudEvent::Reclamation { instances } = ev;
+            hub.publish(
+                "cloud",
+                &format!(
+                    "{{\"type\":\"reclamation\",\"t\":{now},\"instances\":{}}}",
+                    instances.len()
+                ),
+            );
+        }
+        let fleet = p.backend.describe(now);
+        let done = p.wl.iter().filter(|w| matches!(w.phase, WlPhase::Done)).count();
+        let summary = TickSummary {
+            t: now,
+            ticks: p.metrics.ticks,
+            arrived: p.arrived,
+            done,
+            tasks_completed: p.metrics.tasks_completed as u64,
+            requeued_tasks: p.metrics.requeued_tasks,
+            reclamations: p.metrics.reclamations,
+            active_cus: fleet.active_cus,
+            committed_cus: fleet.committed_cus,
+            total_cost: p.backend.total_cost(),
+        };
+        hub.publish("tick", &summary.to_json());
+        Ok(())
+    }
+
+    /// Scripted-mode advance: run the batch loop until quiescent (or
+    /// until sim time reaches `to`), draining queued commands between
+    /// ticks — the ingestion suspension point.
+    fn advance(
+        &mut self,
+        to: Option<SimTime>,
+        rx: &Receiver<Command>,
+    ) -> Result<AdvanceAck, String> {
+        if let ClockMode::Paced { .. } = self.clock {
+            return Err(
+                "paced clock advances with wall time; /advance is scripted-mode only".to_string(),
+            );
+        }
+        if self.finished {
+            return Err("scenario horizon reached; daemon is drained".to_string());
+        }
+        if self.platform.is_none() {
+            if self.pending_specs.is_empty() {
+                return Err("no workloads submitted".to_string());
+            }
+            self.assemble()?;
+        }
+        let mut ticks_run = 0u64;
+        let mut quiescent = false;
+        loop {
+            if self.stop || SHUTDOWN.load(Ordering::SeqCst) {
+                break;
+            }
+            {
+                let p = self.platform.as_mut().expect("assembled above");
+                // quiescent already (e.g. a second advance after the
+                // suite completed): running more ticks here would
+                // execute monitoring instants the batch loop never ran
+                if p.all_done_at.is_some() {
+                    quiescent = true;
+                    break;
+                }
+                if let Some(t) = to {
+                    if p.sim.now() >= t {
+                        break;
+                    }
+                }
+                match p.pump_to_tick().map_err(|e| e.to_string())? {
+                    true => {
+                        Self::tick_round(p, &mut self.hub)?;
+                        ticks_run += 1;
+                        if p.all_done_at.is_some() {
+                            quiescent = true;
+                            break;
+                        }
+                    }
+                    false => {
+                        quiescent = true;
+                        break;
+                    }
+                }
+            }
+            // between-tick suspension point: drain queued submissions
+            // (and any status/metrics probes) before pumping on
+            while let Ok(cmd) = rx.try_recv() {
+                self.handle_non_advance(cmd);
+            }
+        }
+        let p = self.platform.as_ref().expect("assembled above");
+        let now = p.sim.now();
+        let all_done = p.all_done_at.is_some();
+        let crossed = now > p.horizon_s;
+        let ack = AdvanceAck { now, ticks_run, quiescent, all_done };
+        if crossed {
+            self.finished = true;
+        }
+        Ok(ack)
+    }
+
+    /// Paced-mode driver: called on every idle wakeup; runs tick
+    /// rounds while the next scheduled event is inside the wall-mapped
+    /// sim-time budget.
+    fn drive_paced(&mut self) {
+        let ClockMode::Paced { speed } = self.clock else { return };
+        if self.finished {
+            return;
+        }
+        let Some(origin) = self.paced_origin else { return };
+        let Some(p) = self.platform.as_mut() else { return };
+        let target = (origin.elapsed().as_secs_f64() * speed) as SimTime;
+        loop {
+            if self.stop || SHUTDOWN.load(Ordering::SeqCst) {
+                break;
+            }
+            match p.sim.peek_time() {
+                Some(next) if next <= target => {}
+                _ => break, // ahead of the wall clock, or drained
+            }
+            match p.pump_to_tick() {
+                Ok(true) => {
+                    if Self::tick_round(p, &mut self.hub).is_err() {
+                        break;
+                    }
+                    if p.all_done_at.is_some() {
+                        break; // resident: stay up for the next submission
+                    }
+                }
+                _ => break,
+            }
+        }
+        if p.sim.now() > p.horizon_s {
+            self.finished = true;
+        }
+    }
+
+    fn status_json(&self, w: usize) -> Option<String> {
+        if w >= self.next_id {
+            return None;
+        }
+        match &self.platform {
+            None => {
+                let spec = &self.pending_specs[w];
+                Some(format!(
+                    "{{\"workload\":{w},\"app\":\"{}\",\"phase\":\"queued\",\"arrival_at\":{},\"tasks\":{{\"total\":{},\"pending\":{2},\"processing\":0,\"completed\":0,\"failed\":0}}}}",
+                    app_model(spec.app).name,
+                    self.pending_times[w],
+                    spec.n_tasks(),
+                ))
+            }
+            Some(p) => {
+                use crate::db::TaskStatus::*;
+                let spec = &p.specs[w];
+                let phase = if w >= p.arrived {
+                    "queued"
+                } else {
+                    match p.wl[w].phase {
+                        WlPhase::Footprinting => "footprinting",
+                        WlPhase::Running => "running",
+                        WlPhase::Merging => "merging",
+                        WlPhase::Done => "done",
+                    }
+                };
+                Some(format!(
+                    "{{\"workload\":{w},\"app\":\"{}\",\"phase\":\"{phase}\",\"tasks\":{{\"total\":{},\"pending\":{},\"processing\":{},\"completed\":{},\"failed\":{}}}}}",
+                    app_model(spec.app).name,
+                    spec.n_tasks(),
+                    p.db.count_status(w, Pending),
+                    p.db.count_status(w, Processing),
+                    p.db.count_status(w, Completed),
+                    p.db.count_status(w, Failed),
+                ))
+            }
+        }
+    }
+
+    fn metrics_text(&self) -> String {
+        let mut pt = PromText::new();
+        pt.scalar("dithen_up", "gauge", "1 while the daemon's control loop is alive.", 1.0);
+        pt.family("dithen_info", "gauge", "Daemon scenario description (constant 1).");
+        pt.sample(
+            "dithen_info",
+            &[
+                ("backend", self.template.backend.name()),
+                ("fault", &self.template.fault.describe()),
+                ("clock", &self.clock.label()),
+            ],
+            1.0,
+        );
+        pt.scalar(
+            "dithen_workloads_submitted",
+            "counter",
+            "Workloads accepted over HTTP.",
+            self.next_id as f64,
+        );
+        let Some(p) = self.platform.as_ref() else {
+            return pt.into_string();
+        };
+        let now = p.sim.now();
+        let m = &p.metrics;
+        pt.scalar("dithen_sim_time_seconds", "gauge", "Current simulation instant.", now as f64);
+        pt.scalar(
+            "dithen_workloads_arrived",
+            "counter",
+            "Workloads that have reached the front end.",
+            p.arrived as f64,
+        );
+        let done = p.wl.iter().filter(|w| matches!(w.phase, WlPhase::Done)).count();
+        pt.scalar("dithen_workloads_done", "counter", "Workloads fully completed.", done as f64);
+        pt.scalar(
+            "dithen_tasks_completed",
+            "counter",
+            "Tasks completed exactly once across all workloads.",
+            m.tasks_completed as f64,
+        );
+        pt.scalar(
+            "dithen_tasks_requeued",
+            "counter",
+            "Tasks re-entered at the pending tail after a reclamation.",
+            m.requeued_tasks as f64,
+        );
+        pt.scalar(
+            "dithen_reclamations",
+            "counter",
+            "Instances revoked by the fault model.",
+            m.reclamations as f64,
+        );
+        pt.family(
+            "dithen_reclamations_by_pool",
+            "counter",
+            "Instances revoked, by fleet pool index.",
+        );
+        for (pool, n) in m.reclamations_by_pool.iter().enumerate() {
+            pt.sample("dithen_reclamations_by_pool", &[("pool", &pool.to_string())], *n as f64);
+        }
+        pt.scalar(
+            "dithen_unfulfilled_requests",
+            "counter",
+            "Instance requests the provider could not fill.",
+            m.unfulfilled_requests as f64,
+        );
+        pt.scalar(
+            "dithen_ticks",
+            "counter",
+            "Monitoring instants accounted (executed + skipped).",
+            m.ticks as f64,
+        );
+        pt.scalar(
+            "dithen_ticks_skipped",
+            "counter",
+            "Monitoring instants fast-forwarded by the sparse-tick skipper.",
+            m.ticks_skipped as f64,
+        );
+        pt.scalar(
+            "dithen_total_cost_usd",
+            "counter",
+            "Cumulative billed cost.",
+            p.backend.total_cost(),
+        );
+        let fleet = p.backend.describe(now);
+        pt.family("dithen_fleet_instances", "gauge", "Instances by lifecycle state.");
+        pt.sample("dithen_fleet_instances", &[("state", "booting")], fleet.booting as f64);
+        pt.sample("dithen_fleet_instances", &[("state", "running")], fleet.running as f64);
+        pt.sample("dithen_fleet_instances", &[("state", "draining")], fleet.draining as f64);
+        pt.scalar(
+            "dithen_fleet_active_cus",
+            "gauge",
+            "Active compute units (running + draining).",
+            fleet.active_cus,
+        );
+        pt.scalar(
+            "dithen_fleet_committed_cus",
+            "gauge",
+            "Committed compute units (active + booting).",
+            fleet.committed_cus,
+        );
+        pt.into_string()
+    }
+}

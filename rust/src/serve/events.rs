@@ -1,0 +1,106 @@
+//! Server-sent events for `dithen serve` (PR-7): the `GET /events`
+//! stream carrying cloud events (spot reclamations as they are applied
+//! at a monitoring instant) and per-tick summaries
+//! ([`crate::metrics::TickSummary`]).
+//!
+//! The hub lives on the daemon's control thread — the single owner of
+//! the platform — so publishing needs no locking: each `/events`
+//! connection registers an `mpsc` sender via the command channel and
+//! its handler thread forwards frames to the socket until either side
+//! drops. A dead subscriber (closed socket → the handler drops its
+//! receiver → `send` fails) is pruned on the next publish, so slow or
+//! vanished clients can never stall the control loop.
+
+use std::fmt::Write as _;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Render one SSE frame: an `event:` line, the data split across
+/// `data:` lines (SSE reassembles multi-line payloads with `\n`), and
+/// the blank-line terminator. Event names must be single-line; stray
+/// CR/LF are folded to spaces rather than letting them forge frames.
+pub fn sse_frame(event: &str, data: &str) -> String {
+    let mut out = String::with_capacity(event.len() + data.len() + 16);
+    let event = event.replace(['\n', '\r'], " ");
+    let _ = writeln!(out, "event: {event}");
+    for line in data.split('\n') {
+        let line = line.strip_suffix('\r').unwrap_or(line);
+        let _ = writeln!(out, "data: {line}");
+    }
+    out.push('\n');
+    out
+}
+
+/// Fan-out point for SSE frames: one sender per live `/events`
+/// connection.
+#[derive(Debug, Default)]
+pub struct SseHub {
+    subs: Vec<Sender<String>>,
+}
+
+impl SseHub {
+    pub fn new() -> Self {
+        SseHub::default()
+    }
+
+    /// Register a new subscriber; the returned receiver yields
+    /// ready-to-write frames.
+    pub fn subscribe(&mut self) -> Receiver<String> {
+        let (tx, rx) = channel();
+        self.subs.push(tx);
+        rx
+    }
+
+    /// Attach an externally created sender (the `/events` handler
+    /// thread passes its own through the command channel).
+    pub fn attach(&mut self, tx: Sender<String>) {
+        self.subs.push(tx);
+    }
+
+    /// Broadcast one event, pruning subscribers whose receiver is gone.
+    pub fn publish(&mut self, event: &str, data: &str) {
+        if self.subs.is_empty() {
+            return;
+        }
+        let frame = sse_frame(event, data);
+        self.subs.retain(|tx| tx.send(frame.clone()).is_ok());
+    }
+
+    /// Live subscriber count (as of the last publish's pruning).
+    pub fn len(&self) -> usize {
+        self.subs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.subs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_follow_the_sse_wire_format() {
+        assert_eq!(sse_frame("tick", "{\"t\":60}"), "event: tick\ndata: {\"t\":60}\n\n");
+        // multi-line payloads become one data: line each
+        assert_eq!(sse_frame("log", "a\nb\r\nc"), "event: log\ndata: a\ndata: b\ndata: c\n\n");
+        // newline in an event name cannot forge an extra frame
+        assert_eq!(sse_frame("x\ny", "d"), "event: x y\ndata: d\n\n");
+    }
+
+    #[test]
+    fn hub_broadcasts_and_prunes_dead_subscribers() {
+        let mut hub = SseHub::new();
+        let alive = hub.subscribe();
+        let dead = hub.subscribe();
+        assert_eq!(hub.len(), 2);
+        drop(dead);
+        hub.publish("tick", "{}");
+        assert_eq!(hub.len(), 1, "dead subscriber must be pruned on publish");
+        assert_eq!(alive.try_recv().unwrap(), "event: tick\ndata: {}\n\n");
+        // publishing with no subscribers is a no-op, not an allocation
+        let mut empty = SseHub::new();
+        empty.publish("tick", "{}");
+        assert!(empty.is_empty());
+    }
+}

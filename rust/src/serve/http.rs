@@ -1,0 +1,359 @@
+//! Minimal threaded HTTP/1.1 transport for `dithen serve` (PR-7).
+//!
+//! The build is offline-hermetic — vendored crates only, no
+//! tokio/axum/hyper — so the daemon's wire layer is hand-rolled on
+//! `std::net`. This module is transport only: a bounded request parser
+//! and a plain responder. It knows nothing about routes or the
+//! platform; `serve::api` maps parsed requests to daemon commands.
+//!
+//! Contract (the robustness satellite): parsing NEVER panics on
+//! malformed input. Every deviation — bad method token, oversized
+//! request line / header, truncated body, junk where a header should
+//! be — surfaces as an [`HttpError`] with a 4xx/5xx status, and the
+//! connection is closed after the response (`Connection: close` on
+//! every reply; one request per connection, so pipelined garbage after
+//! a valid request is simply never read).
+//!
+//! Bounds: request line ≤ [`MAX_REQUEST_LINE`], each header line ≤
+//! [`MAX_HEADER_LINE`], at most [`MAX_HEADERS`] headers, body ≤
+//! [`MAX_BODY`] with a declared `Content-Length` (chunked bodies are
+//! rejected as 501 — no endpoint needs them).
+
+use std::io::{BufRead, Read, Write};
+
+/// Longest accepted request line (method + target + version), bytes.
+pub const MAX_REQUEST_LINE: usize = 8 * 1024;
+/// Longest accepted single header line, bytes.
+pub const MAX_HEADER_LINE: usize = 8 * 1024;
+/// Most headers accepted on one request.
+pub const MAX_HEADERS: usize = 64;
+/// Largest accepted request body, bytes.
+pub const MAX_BODY: usize = 1 << 20;
+
+/// One parsed request. Header names are lowercased at parse time;
+/// values keep their case with surrounding whitespace trimmed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub method: String,
+    /// Path component of the target, without the query string.
+    pub path: String,
+    /// Raw query string ("" when absent).
+    pub query: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup (names are stored lowercased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// A protocol violation: the status to answer with and a short reason
+/// for the response body / log line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HttpError {
+    pub status: u16,
+    pub reason: &'static str,
+}
+
+impl HttpError {
+    pub fn new(status: u16, reason: &'static str) -> Self {
+        HttpError { status, reason }
+    }
+}
+
+/// Read one bounded line (LF-terminated, optional CR stripped).
+/// `Ok(None)` = clean EOF before any byte; an unterminated line at the
+/// cap reports `over_status` (414 for the request line, 431 for
+/// headers), an EOF mid-line reports 400.
+fn read_line<R: BufRead>(
+    r: &mut R,
+    max: usize,
+    over_status: u16,
+) -> Result<Option<String>, HttpError> {
+    let mut buf = Vec::with_capacity(128);
+    let n = r
+        .by_ref()
+        .take(max as u64 + 1)
+        .read_until(b'\n', &mut buf)
+        .map_err(|_| HttpError::new(400, "read error"))?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if buf.last() != Some(&b'\n') {
+        return Err(if n > max {
+            HttpError::new(over_status, "line too long")
+        } else {
+            HttpError::new(400, "truncated request")
+        });
+    }
+    buf.pop();
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf).map(Some).map_err(|_| HttpError::new(400, "non-utf8 request"))
+}
+
+/// Parse one request off the wire. `Ok(None)` means the peer closed
+/// the connection cleanly before sending anything — not an error.
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>, HttpError> {
+    // request line; tolerate a stray leading CRLF (RFC 7230 §3.5)
+    let mut line = match read_line(r, MAX_REQUEST_LINE, 414)? {
+        None => return Ok(None),
+        Some(l) => l,
+    };
+    if line.is_empty() {
+        line = match read_line(r, MAX_REQUEST_LINE, 414)? {
+            None => return Ok(None),
+            Some(l) => l,
+        };
+    }
+    let mut it = line.split(' ');
+    let method = it.next().unwrap_or("");
+    let target = it.next().ok_or_else(|| HttpError::new(400, "malformed request line"))?;
+    let version = it.next().ok_or_else(|| HttpError::new(400, "malformed request line"))?;
+    if it.next().is_some() {
+        return Err(HttpError::new(400, "malformed request line"));
+    }
+    if method.is_empty() || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(HttpError::new(400, "bad method"));
+    }
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::new(505, "http version not supported"));
+    }
+    if !target.starts_with('/') {
+        return Err(HttpError::new(400, "bad request target"));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+
+    // headers
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let hline = match read_line(r, MAX_HEADER_LINE, 431)? {
+            None => return Err(HttpError::new(400, "truncated request")),
+            Some(l) => l,
+        };
+        if hline.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(HttpError::new(431, "too many headers"));
+        }
+        let (name, value) =
+            hline.split_once(':').ok_or_else(|| HttpError::new(400, "malformed header"))?;
+        if name.is_empty() || name.contains(' ') || name.contains('\t') {
+            return Err(HttpError::new(400, "malformed header name"));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    // body: Content-Length only; no endpoint takes a chunked body
+    let mut req = Request { method: method.to_string(), path, query, headers, body: Vec::new() };
+    if req.header("transfer-encoding").is_some() {
+        return Err(HttpError::new(501, "chunked bodies not supported"));
+    }
+    if let Some(cl) = req.header("content-length") {
+        let len: usize = cl.parse().map_err(|_| HttpError::new(400, "bad content-length"))?;
+        if len > MAX_BODY {
+            return Err(HttpError::new(413, "body too large"));
+        }
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body).map_err(|_| HttpError::new(400, "truncated body"))?;
+        req.body = body;
+    }
+    Ok(Some(req))
+}
+
+/// Canonical reason phrase for the statuses the daemon emits.
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        414 => "URI Too Long",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Status",
+    }
+}
+
+/// Write one complete response and flush. Every response closes the
+/// connection (one request per connection keeps the daemon's threading
+/// model trivial and makes pipelined garbage unreachable).
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status,
+        status_text(status),
+        content_type,
+        body.len()
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Answer a protocol violation with its status and a one-line body.
+pub fn write_error(w: &mut impl Write, e: HttpError) -> std::io::Result<()> {
+    let body = format!("{}\n", e.reason);
+    write_response(w, e.status, "text/plain; charset=utf-8", body.as_bytes())
+}
+
+/// Open an SSE response: headers only, no `Content-Length` — the body
+/// is an unbounded event stream; the connection ends when either side
+/// closes (daemon shutdown drops the subscription sender).
+pub fn write_sse_preamble(w: &mut impl Write) -> std::io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufReader, Cursor};
+
+    fn parse(bytes: &[u8]) -> Result<Option<Request>, HttpError> {
+        read_request(&mut BufReader::new(Cursor::new(bytes.to_vec())))
+    }
+
+    #[test]
+    fn parses_a_plain_get() {
+        let req = parse(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.query, "");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn splits_query_and_reads_declared_body() {
+        let raw = b"POST /submit?app=brisk&tasks=40 HTTP/1.1\r\n\
+                    Content-Length: 4\r\n\r\nbody";
+        let req = parse(raw).unwrap().unwrap();
+        assert_eq!(req.path, "/submit");
+        assert_eq!(req.query, "app=brisk&tasks=40");
+        assert_eq!(req.body, b"body");
+    }
+
+    #[test]
+    fn clean_close_before_a_request_is_not_an_error() {
+        assert_eq!(parse(b""), Ok(None));
+        // stray leading CRLF before the request line is tolerated
+        let req = parse(b"\r\nGET / HTTP/1.1\r\n\r\n").unwrap().unwrap();
+        assert_eq!(req.path, "/");
+    }
+
+    #[test]
+    fn malformed_requests_map_to_4xx_5xx_without_panicking() {
+        // the robustness satellite's table: raw bytes -> expected status
+        let cases: &[(&[u8], u16)] = &[
+            (b"GARBAGE\r\n\r\n", 400),                                    // no target/version
+            (b"GET /\r\n\r\n", 400),                                      // missing version
+            (b"G@T / HTTP/1.1\r\n\r\n", 400),                             // bad method token
+            (b"get / HTTP/1.1\r\n\r\n", 400),                             // lowercase method
+            (b"GET / HTTP/1.1 extra\r\n\r\n", 400),                       // trailing junk
+            (b"GET nohost HTTP/1.1\r\n\r\n", 400),                        // target w/o slash
+            (b"GET / HTTP/2.0\r\n\r\n", 505),                             // wrong major version
+            (b"GET / HTTP/1.1\r\nbroken header\r\n\r\n", 400),            // no colon
+            (b"GET / HTTP/1.1\r\nBad Name: x\r\n\r\n", 400),              // space in name
+            (b"GET / HTTP/1.1\r\n: empty\r\n\r\n", 400),                  // empty name
+            (b"GET / HTTP/1.1\r\nX: y", 400),                             // EOF mid-headers
+            (b"POST /s HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc", 400),  // truncated body
+            (b"POST /s HTTP/1.1\r\nContent-Length: nope\r\n\r\n", 400),   // junk length
+            (b"POST /s HTTP/1.1\r\nContent-Length: 9999999\r\n\r\n", 413), // body over cap
+            (b"POST /s HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", 501),
+        ];
+        for (raw, want) in cases {
+            match parse(raw) {
+                Err(e) => assert_eq!(
+                    e.status,
+                    *want,
+                    "input {:?}: got {} ({}), want {}",
+                    String::from_utf8_lossy(raw),
+                    e.status,
+                    e.reason,
+                    want
+                ),
+                Ok(r) => panic!("input {:?} parsed as {r:?}", String::from_utf8_lossy(raw)),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_lines_and_header_floods_are_bounded() {
+        // request line over the cap -> 414
+        let mut raw = b"GET /".to_vec();
+        raw.resize(raw.len() + MAX_REQUEST_LINE, b'a');
+        raw.extend_from_slice(b" HTTP/1.1\r\n\r\n");
+        assert_eq!(parse(&raw).unwrap_err().status, 414);
+        // one header line over the cap -> 431
+        let mut raw = b"GET / HTTP/1.1\r\nX: ".to_vec();
+        raw.resize(raw.len() + MAX_HEADER_LINE, b'b');
+        raw.extend_from_slice(b"\r\n\r\n");
+        assert_eq!(parse(&raw).unwrap_err().status, 431);
+        // too many headers -> 431
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..=MAX_HEADERS {
+            raw.extend_from_slice(format!("X-{i}: v\r\n").as_bytes());
+        }
+        raw.extend_from_slice(b"\r\n");
+        assert_eq!(parse(&raw).unwrap_err().status, 431);
+    }
+
+    #[test]
+    fn pipelined_garbage_after_a_valid_request_is_never_read() {
+        // one request per connection: the parser consumes exactly the
+        // first request; trailing junk on the wire is ignored because
+        // the daemon responds `Connection: close` and drops the socket
+        let mut r = BufReader::new(Cursor::new(
+            b"GET /metrics HTTP/1.1\r\n\r\n\x00\x01GARBAGE NOT HTTP".to_vec(),
+        ));
+        let req = read_request(&mut r).unwrap().unwrap();
+        assert_eq!(req.path, "/metrics");
+    }
+
+    #[test]
+    fn response_writer_emits_close_and_length() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "application/json", b"{\"ok\":true}").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 11\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+        assert!(text.ends_with("{\"ok\":true}"), "{text}");
+
+        let mut out = Vec::new();
+        write_error(&mut out, HttpError::new(404, "no such route")).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"), "{text}");
+        assert!(text.ends_with("no such route\n"), "{text}");
+
+        let mut out = Vec::new();
+        write_sse_preamble(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Content-Type: text/event-stream"), "{text}");
+    }
+}

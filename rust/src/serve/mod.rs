@@ -1,0 +1,48 @@
+//! `dithen serve` — the resident Computation-as-a-Service daemon
+//! (PR-7).
+//!
+//! The paper's platform is a *service*: workloads arrive from users
+//! over the network, not from a pre-baked suite. Everything before
+//! this module ran Dithen as a batch simulator — assemble a
+//! [`crate::platform::Scenario`], run it to completion, read the
+//! metrics. This module makes the platform resident: a daemon that
+//! holds a live [`crate::platform::Platform`] and accepts workload
+//! submissions over HTTP while the discrete-event loop runs.
+//!
+//! ```text
+//!   POST /submit ──┐                       ┌── GET /status/{w}
+//!   POST /advance ─┤   mpsc Command        ├── GET /metrics   (Prometheus)
+//!   POST /shutdown ┼──► control thread ────┼── GET /events    (SSE)
+//!                  │    owns Platform      └── GET /healthz
+//!   (conn threads) ┘    + SseHub
+//! ```
+//!
+//! Layout:
+//!
+//! * [`http`] — hand-rolled threaded HTTP/1.1 on `std::net` (the build
+//!   is offline-hermetic: no tokio/axum/hyper). Bounded request line,
+//!   headers, and body; malformed input maps to 4xx/5xx, never panics.
+//! * [`api`] — routing, query decoding, JSON escaping.
+//! * [`prometheus`] — text exposition (version 0.0.4) with the real
+//!   escaping rules.
+//! * [`events`] — SSE framing and the subscriber hub.
+//! * [`daemon`] — the control thread that owns the platform, the
+//!   accept loop, clock modes, and graceful shutdown.
+//!
+//! The headline property, pinned by `tests/serve_parity.rs`: under the
+//! scripted clock, submitting a suite over HTTP and advancing to
+//! quiescence yields `RunMetrics` **bit-identical** to the equivalent
+//! batch [`crate::platform::Scenario`] run. Determinism survives HTTP
+//! ingestion because the sim clock never reads the wall clock and
+//! ingestion lands only at tick boundaries (the PR-5 phase seams).
+
+pub mod api;
+pub mod daemon;
+pub mod events;
+pub mod http;
+pub mod prometheus;
+
+pub use daemon::{
+    install_signal_handlers, AdvanceAck, ClockMode, Daemon, DaemonHandle, ServeOpts, SubmitAck,
+    SubmitReq,
+};

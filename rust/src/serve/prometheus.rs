@@ -1,0 +1,178 @@
+//! Prometheus text exposition format (version 0.0.4) for the daemon's
+//! `GET /metrics` endpoint (PR-7).
+//!
+//! Hand-rolled for the same reason as [`super::http`]: the build is
+//! offline-hermetic, so no `prometheus` crate. The format is small —
+//! `# HELP` / `# TYPE` comment lines plus `name{label="value"} 1.5`
+//! samples — but has real escaping rules, which is exactly what the
+//! satellite task pins down:
+//!
+//! * label **values** escape backslash (`\\`), double quote (`\"`) and
+//!   newline (`\n`); everything else passes through verbatim,
+//! * `# HELP` text escapes backslash and newline (quotes are legal
+//!   there),
+//! * metric and label **names** must match `[a-zA-Z_:][a-zA-Z0-9_:]*`
+//!   (label names additionally forbid `:`); out-of-alphabet bytes are
+//!   folded to `_` rather than emitted broken.
+
+use std::fmt::Write as _;
+
+/// Fold a metric name into the exposition alphabet
+/// `[a-zA-Z_:][a-zA-Z0-9_:]*`. Invalid characters become `_`; an empty
+/// name becomes `_` outright.
+pub fn sanitize_metric_name(name: &str) -> String {
+    if name.is_empty() {
+        return "_".to_string();
+    }
+    name.chars()
+        .enumerate()
+        .map(|(i, c)| {
+            let ok = c.is_ascii_alphabetic()
+                || c == '_'
+                || c == ':'
+                || (i > 0 && c.is_ascii_digit());
+            if ok {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+/// Like [`sanitize_metric_name`] but for label names, where `:` is
+/// reserved for recording rules and therefore also folded.
+pub fn sanitize_label_name(name: &str) -> String {
+    sanitize_metric_name(name).replace(':', "_")
+}
+
+/// Escape a label value per the exposition format: backslash, double
+/// quote, and newline.
+pub fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape `# HELP` text: backslash and newline only (quotes are legal).
+pub fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Incremental builder for one exposition page.
+#[derive(Debug, Default)]
+pub struct PromText {
+    buf: String,
+}
+
+impl PromText {
+    pub fn new() -> Self {
+        PromText::default()
+    }
+
+    /// Emit the `# HELP` / `# TYPE` preamble for a metric family.
+    pub fn family(&mut self, name: &str, kind: &str, help: &str) {
+        let name = sanitize_metric_name(name);
+        let _ = writeln!(self.buf, "# HELP {name} {}", escape_help(help));
+        let _ = writeln!(self.buf, "# TYPE {name} {kind}");
+    }
+
+    /// Emit one sample line, with optional labels.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.buf.push_str(&sanitize_metric_name(name));
+        if !labels.is_empty() {
+            self.buf.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.buf.push(',');
+                }
+                let name = sanitize_label_name(k);
+                let _ = write!(self.buf, "{name}=\"{}\"", escape_label_value(v));
+            }
+            self.buf.push('}');
+        }
+        let _ = writeln!(self.buf, " {value}");
+    }
+
+    /// `family` + single unlabelled `sample` in one call — the common
+    /// shape for the daemon's counters and gauges.
+    pub fn scalar(&mut self, name: &str, kind: &str, help: &str, value: f64) {
+        self.family(name, kind, help);
+        self.sample(name, &[], value);
+    }
+
+    pub fn into_string(self) -> String {
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_families_render_help_type_sample() {
+        let mut p = PromText::new();
+        p.scalar("dithen_tasks_completed", "counter", "Tasks completed so far.", 80.0);
+        assert_eq!(
+            p.into_string(),
+            "# HELP dithen_tasks_completed Tasks completed so far.\n\
+             # TYPE dithen_tasks_completed counter\n\
+             dithen_tasks_completed 80\n"
+        );
+    }
+
+    #[test]
+    fn label_values_escape_backslash_newline_quote() {
+        // the exposition-format edge cases from the satellite task
+        let mut p = PromText::new();
+        p.sample(
+            "dithen_fleet_cus",
+            &[("pool", "m3\\medium"), ("note", "line1\nline2"), ("q", "say \"hi\"")],
+            4.0,
+        );
+        assert_eq!(
+            p.into_string(),
+            "dithen_fleet_cus{pool=\"m3\\\\medium\",note=\"line1\\nline2\",q=\"say \\\"hi\\\"\"} 4\n"
+        );
+    }
+
+    #[test]
+    fn names_are_folded_into_the_exposition_alphabet() {
+        assert_eq!(sanitize_metric_name("dithen.tasks-completed"), "dithen_tasks_completed");
+        assert_eq!(sanitize_metric_name("9lives"), "_lives");
+        assert_eq!(sanitize_metric_name("ok_name:sub"), "ok_name:sub");
+        assert_eq!(sanitize_metric_name(""), "_");
+        // label names additionally fold the colon
+        assert_eq!(sanitize_label_name("a:b"), "a_b");
+        assert_eq!(sanitize_label_name("röle"), "r_le");
+    }
+
+    #[test]
+    fn help_text_escapes_backslash_and_newline_only() {
+        assert_eq!(escape_help("a\\b\nc \"quoted\""), "a\\\\b\\nc \"quoted\"");
+    }
+
+    #[test]
+    fn float_values_render_plainly() {
+        let mut p = PromText::new();
+        p.sample("m", &[], 0.5);
+        p.sample("m", &[], 12.0);
+        assert_eq!(p.into_string(), "m 0.5\nm 12\n");
+    }
+}

@@ -1,0 +1,273 @@
+//! `dithen serve` end-to-end tests over real loopback HTTP (PR-7).
+//!
+//! The headline pin: a scripted client that submits the CI-sized
+//! reclamation suite over `POST /submit` and drives the clock with
+//! `POST /advance` produces `RunMetrics` **bit-identical** to the
+//! equivalent batch [`Scenario`] run. Determinism survives HTTP
+//! ingestion because the sim clock never reads the wall clock and the
+//! daemon assembles submissions through the same scenario code path
+//! ([`ArrivalProcess::Scripted`]) the batch twin uses.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use dithen::config::Config;
+use dithen::platform::{ArrivalProcess, FaultSpec, Scenario, ScenarioBuilder};
+use dithen::serve::{ClockMode, Daemon, DaemonHandle, ServeOpts};
+use dithen::util::rng::Rng;
+use dithen::workload::{App, WorkloadSpec};
+
+/// The reclamation integration suite's config: native bank, small
+/// chunk floor.
+fn cfg() -> Config {
+    let mut c = Config::paper_defaults();
+    c.use_xla = false;
+    c.control.n_min = 4.0;
+    c
+}
+
+const WORKLOAD_SEED: u64 = 42;
+const RECLAIM_AT: [u64; 8] = [300, 420, 540, 660, 780, 900, 1020, 1140];
+
+/// The batch arm: exactly `tests/reclamation.rs`'s CI scenario.
+fn batch_scenario() -> Scenario {
+    let rng = Rng::new(WORKLOAD_SEED);
+    let suite: Vec<WorkloadSpec> = (0..2)
+        .map(|i| WorkloadSpec::generate(i, App::FaceDetection, 50, None, &rng))
+        .collect();
+    ScenarioBuilder::new(cfg())
+        .workloads(suite)
+        .fixed_ttc(Some(1500))
+        .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+        .horizon(4 * 3600)
+        .fault(FaultSpec::ReclamationAt { times: RECLAIM_AT.to_vec() })
+        .build()
+}
+
+/// The daemon arm: the same scenario as a workload-less template; the
+/// suite arrives over HTTP instead.
+fn daemon_template() -> Scenario {
+    ScenarioBuilder::new(cfg())
+        .fixed_ttc(Some(1500))
+        .arrivals(ArrivalProcess::Scripted { times: vec![] })
+        .horizon(4 * 3600)
+        .fault(FaultSpec::ReclamationAt { times: RECLAIM_AT.to_vec() })
+        .build()
+}
+
+fn spawn_daemon(template: Scenario) -> DaemonHandle {
+    let opts = ServeOpts { template, clock: ClockMode::Scripted, workload_seed: WORKLOAD_SEED };
+    Daemon::spawn(opts, 0).expect("bind an ephemeral loopback port")
+}
+
+/// Issue one HTTP/1.1 request over a fresh connection and return
+/// (status, body). The daemon closes after each response, so the body
+/// is everything after the header/body separator.
+fn req(addr: SocketAddr, method: &str, target: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect to the daemon");
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    write!(s, "{method} {target} HTTP/1.1\r\nHost: localhost\r\nContent-Length: 0\r\n\r\n")
+        .expect("write request");
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("read response to EOF");
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|code| code.parse().ok())
+        .unwrap_or_else(|| panic!("malformed status line in: {raw:?}"));
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+#[test]
+fn scripted_http_submission_is_bit_identical_to_the_batch_scenario() {
+    let batch = batch_scenario().run().expect("batch arm runs");
+    // sanity: this is the reclamation scenario, not a quiet one
+    assert!(batch.reclamations > 0 && batch.requeued_tasks > 0);
+
+    let handle = spawn_daemon(daemon_template());
+    let addr = handle.addr;
+
+    let (status, body) = req(addr, "GET", "/healthz");
+    assert_eq!(status, 200, "healthz: {body}");
+
+    // the scripted submission log: the batch twin's fixed-interval
+    // arrivals, reproduced as explicit instants
+    let (status, body) = req(addr, "POST", "/submit?app=face-detection&tasks=50&at=0");
+    assert_eq!(status, 200, "submit w0: {body}");
+    assert!(body.contains("\"workload\":0"), "ack: {body}");
+    let (status, body) = req(addr, "POST", "/submit?app=face-detection&tasks=50&at=60");
+    assert_eq!(status, 200, "submit w1: {body}");
+    assert!(body.contains("\"workload\":1"), "ack: {body}");
+
+    // before the first advance the platform is unassembled: queued
+    let (status, body) = req(addr, "GET", "/status/1");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"phase\":\"queued\""), "pre-start status: {body}");
+
+    let (status, body) = req(addr, "POST", "/advance");
+    assert_eq!(status, 200, "advance: {body}");
+    assert!(body.contains("\"all_done\":true"), "suite must complete: {body}");
+
+    let (status, body) = req(addr, "GET", "/status/0");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"phase\":\"done\""), "post-run status: {body}");
+    assert!(body.contains("\"completed\":50"), "post-run status: {body}");
+
+    let (status, text) = req(addr, "GET", "/metrics");
+    assert_eq!(status, 200);
+    assert!(
+        text.contains(&format!("dithen_tasks_completed {}", batch.tasks_completed)),
+        "exposition must carry the completed-task counter: {text}"
+    );
+    assert!(text.contains("dithen_reclamations"), "exposition: {text}");
+
+    // a second advance after quiescence must be a no-op, not extra ticks
+    let (status, body) = req(addr, "POST", "/advance");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"ticks_run\":0"), "post-quiescence advance: {body}");
+
+    let live = handle.join().expect("graceful shutdown with final metrics");
+    assert_eq!(live, batch, "HTTP-ingested run must be bit-identical to the batch scenario");
+}
+
+/// A tiny fault-free template for the endpoint round-trip tests.
+fn tiny_template() -> Scenario {
+    ScenarioBuilder::new(cfg())
+        .fixed_ttc(Some(1500))
+        .arrivals(ArrivalProcess::Scripted { times: vec![] })
+        .horizon(2 * 3600)
+        .build()
+}
+
+#[test]
+fn every_endpoint_round_trips_over_loopback() {
+    let handle = spawn_daemon(tiny_template());
+    let addr = handle.addr;
+
+    // liveness + empty exposition before any submission
+    let (status, body) = req(addr, "GET", "/healthz");
+    assert_eq!(status, 200);
+    assert!(body.contains("true"));
+    let (status, text) = req(addr, "GET", "/metrics");
+    assert_eq!(status, 200);
+    assert!(text.contains("dithen_up 1"));
+    assert!(text.contains("dithen_workloads_submitted 0"));
+
+    // submission validation
+    let (status, _) = req(addr, "POST", "/submit?app=warp-drive&tasks=10");
+    assert_eq!(status, 400, "unknown app");
+    let (status, _) = req(addr, "POST", "/submit?app=face-detection&tasks=0");
+    assert_eq!(status, 400, "zero tasks");
+    let (status, _) = req(addr, "POST", "/advance");
+    assert_eq!(status, 409, "advance with nothing submitted");
+
+    // routing errors
+    let (status, _) = req(addr, "GET", "/nope");
+    assert_eq!(status, 404);
+    let (status, _) = req(addr, "POST", "/healthz");
+    assert_eq!(status, 405);
+    let (status, _) = req(addr, "GET", "/status/abc");
+    assert_eq!(status, 400);
+    let (status, _) = req(addr, "GET", "/status/7");
+    assert_eq!(status, 404, "workload never submitted");
+
+    // a real submission, then the run
+    let (status, body) = req(addr, "POST", "/submit?app=transcode&tasks=12");
+    assert_eq!(status, 200, "{body}");
+    let (status, body) = req(addr, "GET", "/status/0");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"app\":\"transcode\""), "{body}");
+    let (status, body) = req(addr, "POST", "/advance");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"all_done\":true"), "{body}");
+    let (status, text) = req(addr, "GET", "/metrics");
+    assert_eq!(status, 200);
+    assert!(text.contains("dithen_tasks_completed 12"), "{text}");
+    assert!(text.contains("dithen_workloads_done 1"), "{text}");
+
+    // POST /shutdown (instead of handle-initiated): daemon drains and
+    // the control thread returns the finalized metrics
+    let (status, body) = req(addr, "POST", "/shutdown");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"draining\":true"), "{body}");
+    let m = handle.wait().expect("finalize after POST /shutdown");
+    assert_eq!(m.tasks_completed, 12);
+}
+
+#[test]
+fn sse_stream_carries_tick_summaries() {
+    let handle = spawn_daemon(tiny_template());
+    let addr = handle.addr;
+
+    // open the SSE stream; the daemon registers the subscriber through
+    // the same FIFO command channel, so the following healthz
+    // round-trip proves the subscription landed before we advance
+    let mut sse = TcpStream::connect(addr).unwrap();
+    sse.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+    write!(sse, "GET /events HTTP/1.1\r\nHost: localhost\r\n\r\n").unwrap();
+    let (status, _) = req(addr, "GET", "/healthz");
+    assert_eq!(status, 200);
+
+    let (status, _) = req(addr, "POST", "/submit?app=face-detection&tasks=8");
+    assert_eq!(status, 200);
+    let (status, _) = req(addr, "POST", "/advance");
+    assert_eq!(status, 200);
+
+    // accumulate stream bytes until the tick frame shows up
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut seen = String::new();
+    let mut buf = [0u8; 4096];
+    while Instant::now() < deadline {
+        match sse.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                seen.push_str(&String::from_utf8_lossy(&buf[..n]));
+                if seen.contains("event: tick") && seen.contains("\"tasks_completed\":") {
+                    break;
+                }
+            }
+            Err(_) => {} // read timeout: poll again until the deadline
+        }
+    }
+    assert!(seen.contains("200 OK"), "SSE preamble missing: {seen:?}");
+    assert!(seen.contains("event: submitted"), "submission event missing: {seen:?}");
+    assert!(seen.contains("event: tick"), "tick summaries missing: {seen:?}");
+    assert!(seen.contains("\"tasks_completed\":"), "summary payload missing: {seen:?}");
+
+    drop(sse);
+    let m = handle.join().expect("graceful shutdown");
+    assert_eq!(m.tasks_completed, 8);
+}
+
+#[test]
+fn malformed_requests_over_the_wire_get_4xx_and_the_daemon_survives() {
+    let handle = spawn_daemon(tiny_template());
+    let addr = handle.addr;
+
+    // raw garbage straight onto the socket
+    for raw in [
+        "not even http\r\n\r\n",
+        "GET\r\n\r\n",
+        "GET /healthz HTTP/9.9\r\n\r\n",
+        "GET /healthz HTTP/1.1\r\nbroken header line\r\n\r\n",
+        "POST /submit HTTP/1.1\r\nContent-Length: junk\r\n\r\n",
+    ] {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        let code: u16 = resp.split_whitespace().nth(1).and_then(|c| c.parse().ok()).unwrap_or(0);
+        assert!(
+            (400..600).contains(&code),
+            "expected an error status for {raw:?}, got: {resp:?}"
+        );
+    }
+
+    // and the daemon still serves normal traffic afterwards
+    let (status, _) = req(addr, "GET", "/healthz");
+    assert_eq!(status, 200, "daemon must survive malformed connections");
+    handle.join().expect("clean shutdown after abuse");
+}
