@@ -5,7 +5,7 @@
 //! dithen repro <exp|all>      regenerate a paper table/figure (see list)
 //! dithen run [options]        run the platform on the paper suite
 //! dithen scenario [options]   run a composed scenario (backend/fault/arrivals)
-//! dithen sweep <grid>         parallel experiment grid (cost|estimators|seeds|fleet|smoke|sparse)
+//! dithen sweep <grid>         parallel experiment grid (see SWEEP_GRIDS / --help)
 //! dithen bench-report         measure tasks/s, write BENCH json
 //! dithen bench-check          gate: compare two bench reports, exit 1 on regression
 //! dithen serve                resident CaaS daemon: HTTP submission, SSE, Prometheus
@@ -21,17 +21,23 @@
 //! <spot|ondemand|lambda>`, `--fleet <type[:bid=P],..>`, `--fault
 //! <none|reclaim:BID|reclaim-pools|reclaim-at:T,..>`,
 //! `--arrivals <fixed:S|burst:NxGAP|poisson:MEAN>`, `--workloads <n>`,
-//! `--tasks <n>`, `--horizon <s>`, `--no-traces`.
+//! `--tasks <n>`, `--horizon <s>`, `--no-traces`,
+//! `--stream <workloads>x<tasks>` (lazy arrival-time materialization +
+//! shard retirement).
 
 use crate::cloud::{BackendKind, FleetSpec};
 use crate::config::Config;
 use crate::coordinator::PolicyKind;
 use crate::estimation::EstimatorKind;
-use crate::platform::{ArrivalProcess, FaultSpec, Platform, RunOpts, ScenarioBuilder};
+use crate::platform::{ArrivalProcess, FaultSpec, Platform, RunOpts, ScenarioBuilder, StreamSpec};
 use crate::util::rng::Rng;
 use crate::workload::{paper_suite, App, WorkloadSpec};
 
-pub const USAGE: &str = "\
+/// Help-text template. The sweep-grid list is spliced in by [`usage`]
+/// from [`crate::experiments::parallel::SWEEP_GRIDS`] — the same const
+/// `run_sweep` dispatches on — so the help can never drift from the
+/// grids the command actually accepts (a unit test pins this).
+const USAGE_TEMPLATE: &str = "\
 dithen — Computation-as-a-Service control plane (TCC 2016 reproduction)
 
 USAGE:
@@ -42,7 +48,7 @@ COMMANDS:
     run               run the platform on the 30-workload paper suite
     scenario          run a composed scenario: pluggable backend, arrivals, faults
     sweep <grid>      run an experiment grid across cores:
-                      cost | estimators | seeds | fleet | smoke | sparse
+                      {sweep-grids}
     bench-report      measure end-to-end tasks/s + DB ops/s, write a JSON report
     bench-check       regression gate: exit 1 if --current tasks/s < tolerance x --baseline
     serve             resident CaaS daemon: POST /submit + /advance, GET /status/{w},
@@ -64,7 +70,8 @@ OPTIONS:
     --batched              sweep: lockstep batched executor (one padded bank
                            execution across same-shape cells; bit-identical)
     --out <file>           bench-report output path (default: BENCH_PR1.json)
-    --smoke                bench-report/scenario: tiny CI-sized run
+    --smoke                bench-report/scenario/sweep: tiny CI-sized run (sweep
+                           stream keeps only the 100k-task cell)
     --baseline <file>      bench-check: the reference bench-report JSON
     --current <file>       bench-check: the freshly measured bench-report JSON
     --tolerance <ratio>    bench-check: minimum current/baseline tasks/s (default 0.8)
@@ -81,6 +88,9 @@ SCENARIO OPTIONS:
     --tasks <n>            tasks per generated workload (default 120; smoke 40)
     --horizon <s>          hard stop in sim seconds
     --no-traces            skip estimator-trace recording (sweep-style)
+    --stream <n>x<m>       stream n workloads of m tasks: lazy arrival-time
+                           materialization + shard retirement (implies --native;
+                           replaces the eager --workloads/--tasks suite)
     -h, --help             show this help
 
 SERVE OPTIONS (plus the scenario options above for the template):
@@ -88,6 +98,13 @@ SERVE OPTIONS (plus the scenario options above for the template):
     --pace <speed>         paced clock: sim-seconds per wall-second; without it
                            the clock is scripted and only moves on POST /advance
 ";
+
+/// Render the help text; the sweep-grid list comes from its single
+/// source of truth, [`crate::experiments::parallel::SWEEP_GRIDS`].
+pub fn usage() -> String {
+    USAGE_TEMPLATE
+        .replace("{sweep-grids}", &crate::experiments::parallel::SWEEP_GRIDS.join(" | "))
+}
 
 /// Parsed command line.
 #[derive(Debug, Default)]
@@ -119,6 +136,9 @@ pub struct Cli {
     pub tasks: Option<usize>,
     pub horizon: Option<u64>,
     pub no_traces: bool,
+    /// `--stream <workloads>x<tasks>`: scenario streams its suite
+    /// instead of materializing it up front.
+    pub stream: Option<String>,
     pub port: Option<u16>,
     pub pace: Option<f64>,
     pub help: bool,
@@ -194,6 +214,7 @@ pub fn parse(args: &[String]) -> Result<Cli, CliError> {
                     Some(v.parse().map_err(|_| CliError(format!("bad --horizon '{v}'")))?);
             }
             "--no-traces" => cli.no_traces = true,
+            "--stream" => cli.stream = Some(need_value(&mut it, "--stream")?),
             "--port" => {
                 let v = need_value(&mut it, "--port")?;
                 cli.port = Some(v.parse().map_err(|_| CliError(format!("bad --port '{v}'")))?);
@@ -299,6 +320,21 @@ pub fn parse_fault(s: &str) -> Result<FaultSpec, CliError> {
     )))
 }
 
+/// Parse `--stream <workloads>x<tasks>` (e.g. `1000x100`).
+pub fn parse_stream(s: &str) -> Result<(usize, usize), CliError> {
+    let (n, t) = s
+        .split_once('x')
+        .ok_or_else(|| CliError(format!("--stream needs '<workloads>x<tasks>', got '{s}'")))?;
+    let n_workloads: usize =
+        n.parse().map_err(|_| CliError(format!("bad stream workload count '{n}'")))?;
+    let tasks: usize =
+        t.parse().map_err(|_| CliError(format!("bad stream task count '{t}'")))?;
+    if n_workloads == 0 || tasks == 0 {
+        return Err(CliError("--stream dimensions must be >= 1".into()));
+    }
+    Ok((n_workloads, tasks))
+}
+
 pub fn parse_arrivals(s: &str) -> Result<ArrivalProcess, CliError> {
     if let Some(gap) = s.strip_prefix("fixed:") {
         let interval_s: u64 = gap
@@ -362,6 +398,12 @@ fn run_scenario(cli: &Cli, mut cfg: Config) -> anyhow::Result<i32> {
         cfg.use_xla = false;
         cfg.control.n_min = 4.0;
     }
+    let stream = cli.stream.as_deref().map(parse_stream).transpose()?;
+    if stream.is_some() {
+        // streamed admissions grow the estimator bank one lane at a
+        // time, which is native-only (XLA executables are shape-compiled)
+        cfg.use_xla = false;
+    }
     let n_wl = cli.workloads.unwrap_or(if smoke { 3 } else { 6 });
     let tasks = cli.tasks.unwrap_or(if smoke { 40 } else { 120 });
     if n_wl == 0 || tasks == 0 {
@@ -369,10 +411,6 @@ fn run_scenario(cli: &Cli, mut cfg: Config) -> anyhow::Result<i32> {
         // input instead of ticking to the horizon
         anyhow::bail!("--workloads and --tasks must be >= 1");
     }
-    let rng = Rng::new(cfg.seed);
-    let suite: Vec<WorkloadSpec> = (0..n_wl)
-        .map(|i| WorkloadSpec::generate(i, App::FaceDetection, tasks, None, &rng))
-        .collect();
     let arrivals = match &cli.arrivals {
         Some(s) => parse_arrivals(s)?,
         None => ArrivalProcess::FixedInterval { interval_s: if smoke { 60 } else { 300 } },
@@ -390,8 +428,7 @@ fn run_scenario(cli: &Cli, mut cfg: Config) -> anyhow::Result<i32> {
         Some(s) => parse_fleet(s)?,
         None => FleetSpec::default(),
     };
-    let scn = ScenarioBuilder::new(cfg.clone())
-        .workloads(suite)
+    let builder = ScenarioBuilder::new(cfg.clone())
         .fleet(fleet)
         .policy(cli.policy.as_deref().map(parse_policy).transpose()?.unwrap_or(PolicyKind::Aimd))
         .estimator(
@@ -410,9 +447,24 @@ fn run_scenario(cli: &Cli, mut cfg: Config) -> anyhow::Result<i32> {
         .arrivals(arrivals)
         .backend(backend)
         .fault(fault)
-        .record_traces(!cli.no_traces)
-        .build();
+        .record_traces(!cli.no_traces);
+    let scn = match stream {
+        // streaming: workloads materialize lazily at their arrival
+        // instants and retire (shard audit + slab recycling) once done
+        Some((n_workloads, tasks_per_workload)) => builder
+            .stream(StreamSpec { n_workloads, tasks_per_workload, app: App::FaceDetection })
+            .retire_shards(true)
+            .build(),
+        None => {
+            let rng = Rng::new(cfg.seed);
+            let suite: Vec<WorkloadSpec> = (0..n_wl)
+                .map(|i| WorkloadSpec::generate(i, App::FaceDetection, tasks, None, &rng))
+                .collect();
+            builder.workloads(suite).build()
+        }
+    };
     println!("scenario: {}", scn.describe());
+    let streams = scn.stream.is_some();
     let pool_names: Vec<&'static str> = scn.fleet.pools.iter().map(|p| p.name()).collect();
     let m = scn.run()?;
     let done = m.outcomes.iter().filter(|o| o.completed_at.is_some()).count();
@@ -437,6 +489,12 @@ fn run_scenario(cli: &Cli, mut cfg: Config) -> anyhow::Result<i32> {
             .map(|(name, n)| format!("{name}={n}"))
             .collect();
         println!("reclamations by pool: {}", per_pool.join(" "));
+    }
+    if streams {
+        println!(
+            "stream: peak {} live shards | peak arena {} bytes",
+            m.peak_live_shards, m.peak_arena_bytes
+        );
     }
     if smoke && done != m.outcomes.len() {
         let n = m.outcomes.len();
@@ -522,12 +580,12 @@ pub fn main_with(args: &[String]) -> anyhow::Result<i32> {
     let cli = match parse(args) {
         Ok(c) => c,
         Err(e) => {
-            eprintln!("error: {e}\n\n{USAGE}");
+            eprintln!("error: {e}\n\n{}", usage());
             return Ok(2);
         }
     };
     if cli.help || cli.command.is_empty() {
-        println!("{USAGE}");
+        println!("{}", usage());
         return Ok(0);
     }
     let cfg = build_config(&cli)?;
@@ -605,7 +663,7 @@ pub fn main_with(args: &[String]) -> anyhow::Result<i32> {
                 .as_ref()
                 .and_then(|v| v.iter().copied().max())
                 .unwrap_or_else(crate::experiments::parallel::default_threads);
-            crate::experiments::parallel::run_sweep(grid, &cfg, threads, cli.batched)?;
+            crate::experiments::parallel::run_sweep(grid, &cfg, threads, cli.batched, cli.smoke)?;
         }
         "bench-report" => {
             let threads = cli
@@ -634,7 +692,7 @@ pub fn main_with(args: &[String]) -> anyhow::Result<i32> {
             crate::experiments::market::run_table5(&cfg)?;
         }
         other => {
-            eprintln!("error: unknown command '{other}'\n\n{USAGE}");
+            eprintln!("error: unknown command '{other}'\n\n{}", usage());
             return Ok(2);
         }
     }
@@ -819,6 +877,34 @@ mod tests {
         assert!(parse_arrivals("burst:5").is_err());
         assert!(parse_arrivals("poisson:-1").is_err());
         assert!(parse_arrivals("sometimes").is_err());
+    }
+
+    #[test]
+    fn usage_lists_every_sweep_grid() {
+        // the help text is rendered from SWEEP_GRIDS itself, so a new
+        // grid (or a rename) can never leave the usage text stale
+        let text = usage();
+        assert!(!text.contains("{sweep-grids}"), "placeholder must be spliced out");
+        let joined = crate::experiments::parallel::SWEEP_GRIDS.join(" | ");
+        assert!(text.contains(&joined), "usage must list the sweep grids verbatim");
+        for grid in crate::experiments::parallel::SWEEP_GRIDS {
+            assert!(text.contains(grid), "usage is missing sweep grid '{grid}'");
+        }
+        assert!(crate::experiments::parallel::SWEEP_GRIDS.contains(&"stream"));
+    }
+
+    #[test]
+    fn parses_stream_flag() {
+        let c = parse(&argv("scenario --stream 1000x100 --smoke")).unwrap();
+        assert_eq!(c.stream.as_deref(), Some("1000x100"));
+        assert!(c.smoke);
+        assert_eq!(parse_stream("1000x100").unwrap(), (1000, 100));
+        assert_eq!(parse_stream("1x1").unwrap(), (1, 1));
+        assert!(parse_stream("1000").is_err(), "needs the <n>x<m> shape");
+        assert!(parse_stream("0x100").is_err(), "zero workloads rejected");
+        assert!(parse_stream("100x0").is_err(), "zero tasks rejected");
+        assert!(parse_stream("manyxfew").is_err());
+        assert!(parse(&argv("scenario --stream")).is_err(), "--stream needs a value");
     }
 
     #[test]

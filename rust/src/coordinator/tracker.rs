@@ -33,17 +33,24 @@ pub struct Tracker {
     state: Vec<WlSched>,
     /// Per-workload cap on concurrent instances (N_{w,max}).
     cap: f64,
+    /// Watermark: every slot below `lo` is inactive (retired or never
+    /// registered), so the per-tick scans start here instead of at 0 —
+    /// under streaming arrivals with shard retirement (PR-8) the scan
+    /// cost tracks the *live window*, not the total workloads ever
+    /// seen. Lazily advanced; `register` pulls it back down on reuse.
+    lo: usize,
 }
 
 impl Tracker {
     pub fn new(n_w_max: f64) -> Self {
-        Tracker { state: Vec::new(), cap: n_w_max }
+        Tracker { state: Vec::new(), cap: n_w_max, lo: 0 }
     }
 
     pub fn register(&mut self, workload: usize) {
         if self.state.len() <= workload {
             self.state.resize_with(workload + 1, WlSched::default);
         }
+        self.lo = self.lo.min(workload);
         let st = &mut self.state[workload];
         if !st.active {
             *st = WlSched { active: true, ..WlSched::default() };
@@ -54,6 +61,9 @@ impl Tracker {
         if let Some(st) = self.state.get_mut(workload) {
             *st = WlSched::default();
         }
+        while self.lo < self.state.len() && !self.state[self.lo].active {
+            self.lo += 1;
+        }
     }
 
     /// Credit each registered workload with its service rate for one
@@ -62,7 +72,7 @@ impl Tracker {
     /// unbounded backlog and then monopolize the fleet (cap = N_{w,max}).
     pub fn tick(&mut self, rates: &[f64]) {
         let cap = self.cap.max(1.0);
-        for (w, st) in self.state.iter_mut().enumerate() {
+        for (w, st) in self.state.iter_mut().enumerate().skip(self.lo) {
             if !st.active {
                 continue;
             }
@@ -111,7 +121,7 @@ impl Tracker {
     /// a workload only runs at its earned rate). Zero allocation.
     pub fn next_assignment(&self) -> Option<usize> {
         let mut best: Option<(usize, f64)> = None;
-        for (w, st) in self.state.iter().enumerate() {
+        for (w, st) in self.state.iter().enumerate().skip(self.lo) {
             if !(st.active && st.has_pending && (st.allocated as f64) < self.cap && st.credit >= 1.0)
             {
                 continue;
@@ -127,15 +137,17 @@ impl Tracker {
     /// Greedy FIFO assignment, ignoring rates (Amazon-AS mode): earliest
     /// workload with pending tasks.
     pub fn next_fifo(&self) -> Option<usize> {
-        self.state
+        self.state[self.lo..]
             .iter()
             .position(|st| st.active && st.has_pending)
+            .map(|p| self.lo + p)
     }
 
     pub fn workloads(&self) -> impl Iterator<Item = usize> + '_ {
         self.state
             .iter()
             .enumerate()
+            .skip(self.lo)
             .filter(|(_, st)| st.active)
             .map(|(w, _)| w)
     }
@@ -261,6 +273,36 @@ mod tests {
         assert_eq!(t.workloads().count(), 0);
         t.register(0); // slot reuse starts from a clean state
         assert_eq!(t.credit(0), 0.0);
+    }
+
+    #[test]
+    fn retired_prefix_is_skipped_without_changing_results() {
+        // PR-8: removing a contiguous prefix advances the scan
+        // watermark; behaviour toward the surviving suffix (and toward
+        // re-registration below the watermark) is unchanged
+        let mut t = Tracker::new(10.0);
+        for w in 0..4 {
+            t.register(w);
+            t.set_pending(w, true);
+        }
+        t.tick(&rates(&[(0, 1.0), (1, 2.0), (2, 3.0), (3, 4.0)]));
+        t.remove(0);
+        t.remove(1);
+        assert_eq!(t.workloads().collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(t.next_assignment(), Some(3));
+        assert_eq!(t.next_fifo(), Some(2));
+        // a slot below the watermark can come back (mid-run reuse)
+        t.register(1);
+        t.set_pending(1, true);
+        t.tick(&rates(&[(1, 9.0)]));
+        assert_eq!(t.next_assignment(), Some(1));
+        assert_eq!(t.workloads().collect::<Vec<_>>(), vec![1, 2, 3]);
+        // removing everything drains the tracker
+        for w in [1, 2, 3] {
+            t.remove(w);
+        }
+        assert_eq!(t.workloads().count(), 0);
+        assert_eq!(t.next_fifo(), None);
     }
 
     #[test]

@@ -103,14 +103,34 @@ impl Default for StatusList {
     }
 }
 
+/// Exactly-once terminal accounting of one retired shard (PR-8): the
+/// audit receipt [`TaskDb::retire_shard`] hands back before the
+/// shard's slabs move to the free pool. Every task the shard ever held
+/// is accounted terminal here — retirement refuses shards with live
+/// (pending/processing) work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardAudit {
+    pub workload: usize,
+    /// Total tasks the shard held (== `completed + failed`).
+    pub tasks: usize,
+    pub completed: usize,
+    pub failed: usize,
+    /// Arena bytes recycled into the free pool.
+    pub freed_bytes: usize,
+}
+
 /// The workload-sharded task store: a vector of independent
 /// [`Shard`]s behind the pre-shard, workload-indexed API. Deliberately
 /// carries **no** state of its own — every query derives from the
 /// shards, so going through [`Self::shard_mut`] can never desync the
-/// facade.
+/// facade. (The PR-8 free pool holds only *empty* recycled slabs, so
+/// the no-state property stands.)
 #[derive(Debug, Default)]
 pub struct TaskDb {
     shards: Vec<Shard>,
+    /// Recycled arena slabs from retired shards, reused by the next
+    /// admitted workload instead of growing fresh (PR-8).
+    free: Vec<Shard>,
 }
 
 impl TaskDb {
@@ -124,7 +144,7 @@ impl TaskDb {
         for (w, s) in shards.iter().enumerate() {
             assert_eq!(s.workload(), w, "shard at position {w} stores workload {}", s.workload());
         }
-        TaskDb { shards }
+        TaskDb { shards, free: Vec::new() }
     }
 
     /// Decompose into per-workload shards (nothing shared between
@@ -151,9 +171,60 @@ impl TaskDb {
 
     fn shard_for(&mut self, workload: usize) -> &mut Shard {
         while self.shards.len() <= workload {
-            self.shards.push(Shard::new(self.shards.len()));
+            let id = self.shards.len();
+            let shard = match self.free.pop() {
+                Some(mut s) => {
+                    s.recycle(id);
+                    s
+                }
+                None => Shard::new(id),
+            };
+            self.shards.push(shard);
         }
         &mut self.shards[workload]
+    }
+
+    /// Audit and retire one terminal workload's shard (PR-8): assert
+    /// every task is terminal (no pending/processing work — callers
+    /// retire only `Done` workloads), fold the exactly-once terminal
+    /// counts into a [`ShardAudit`] receipt, leave a cheap empty
+    /// tombstone at the shard's position (the vector stays indexed by
+    /// workload id), and move the arena slabs to the free pool for the
+    /// next admission. After retirement the facade's queries on this
+    /// workload read the tombstone (all-zero counts, empty logs) — the
+    /// caller owns the receipt.
+    pub fn retire_shard(&mut self, workload: usize) -> ShardAudit {
+        let s = self.shards.get_mut(workload).expect("retiring unknown workload");
+        assert_eq!(
+            s.count_status(TaskStatus::Pending),
+            0,
+            "retiring workload {workload} with pending tasks"
+        );
+        assert_eq!(
+            s.count_status(TaskStatus::Processing),
+            0,
+            "retiring workload {workload} with in-flight tasks"
+        );
+        let completed = s.count_status(TaskStatus::Completed);
+        let failed = s.count_status(TaskStatus::Failed);
+        let tasks = s.len();
+        assert_eq!(completed + failed, tasks, "workload {workload}: non-terminal rows at audit");
+        let freed_bytes = s.arena_bytes();
+        let mut slab = std::mem::replace(s, Shard::new(workload));
+        slab.recycle(workload);
+        self.free.push(slab);
+        ShardAudit { workload, tasks, completed, failed, freed_bytes }
+    }
+
+    /// Recycled slabs waiting for the next admission.
+    pub fn free_shards(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Heap bytes held by one workload's shard arenas (0 for never-seen
+    /// or retired workloads).
+    pub fn arena_bytes(&self, workload: usize) -> usize {
+        self.shards.get(workload).map(|s| s.arena_bytes()).unwrap_or(0)
     }
 
     /// Register a new pending task. Task ids must be inserted densely
@@ -469,6 +540,141 @@ mod tests {
         let mut shards = db_with(2).into_shards();
         shards.insert(0, Shard::new(7));
         let _ = TaskDb::from_shards(shards);
+    }
+
+    #[test]
+    fn retire_shard_audits_and_recycles() {
+        let mut db = TaskDb::new();
+        for t in 0..5 {
+            db.insert(0, 0, t);
+            db.claim((0, t), 1);
+            db.complete((0, t), 1.0, (t as u64 + 1) * 10, if t == 4 { -1 } else { 0 });
+        }
+        db.insert(1, 0, 0); // a live neighbour must be untouched
+        let bytes = db.arena_bytes(0);
+        assert!(bytes > 0);
+        let audit = db.retire_shard(0);
+        assert_eq!(
+            audit,
+            ShardAudit { workload: 0, tasks: 5, completed: 4, failed: 1, freed_bytes: bytes }
+        );
+        // the tombstone reads as empty but keeps its position
+        assert_eq!(db.count_status(0, TaskStatus::Completed), 0);
+        assert!(db.measurements(0, 0).is_empty());
+        assert_eq!(db.shard(0).unwrap().workload(), 0);
+        assert_eq!(db.shard_count(), 2);
+        assert_eq!(db.len(), 1, "only the live neighbour's task remains");
+        // the slab waits in the pool and the next admission reuses it
+        assert_eq!(db.free_shards(), 1);
+        db.insert(2, 0, 0);
+        assert_eq!(db.free_shards(), 0, "admission must pop the recycled slab");
+        assert!(db.arena_bytes(2) >= bytes, "the new shard inherits the slab capacity");
+    }
+
+    #[test]
+    #[should_panic(expected = "in-flight tasks")]
+    fn retiring_a_live_workload_panics() {
+        let mut db = db_with(2);
+        db.claim((0, 0), 1);
+        db.complete((0, 0), 1.0, 5, 0);
+        db.claim((0, 1), 1);
+        let _ = db.retire_shard(0);
+    }
+
+    /// PR-8 satellite: interleaved admit/claim/complete/requeue/retire
+    /// sequences conserve tasks **exactly once** — every inserted task
+    /// ends up either in a retirement audit receipt or in a shard that
+    /// survives to `into_shards`, never both, never dropped; terminal
+    /// counts (completed vs failed) are conserved the same way.
+    #[test]
+    fn admit_retire_interleavings_conserve_tasks_exactly_once() {
+        forall(
+            "admit-retire-conservation",
+            0xDB08,
+            25,
+            |r| (0..300).map(|_| r.next_u64()).collect::<Vec<u64>>(),
+            |ops| {
+                let mut db = TaskDb::new();
+                let mut inserted = 0usize;
+                let (mut done_ok, mut done_bad) = (0usize, 0usize);
+                let mut audits: Vec<ShardAudit> = Vec::new();
+                let mut retired: Vec<bool> = Vec::new();
+                let mut clock = 0u64;
+                for &op in ops {
+                    clock += 1;
+                    let live: Vec<usize> =
+                        (0..retired.len()).filter(|&w| !retired[w]).collect();
+                    let pick = live.get(op as usize % live.len().max(1)).copied();
+                    match op % 5 {
+                        0 => {
+                            let w = retired.len();
+                            let n = (op / 5 % 6 + 1) as usize;
+                            for t in 0..n {
+                                db.insert(w, t % 2, t);
+                            }
+                            inserted += n;
+                            retired.push(false);
+                        }
+                        1 | 2 => {
+                            if let Some(w) = pick {
+                                if let Some(t) = db.status_iter(w, TaskStatus::Pending).next() {
+                                    db.claim((w, t), op % 9);
+                                    let code = if op % 7 == 0 { -1 } else { 0 };
+                                    db.complete((w, t), (op % 50) as f64, clock, code);
+                                    if code == 0 {
+                                        done_ok += 1;
+                                    } else {
+                                        done_bad += 1;
+                                    }
+                                }
+                            }
+                        }
+                        3 => {
+                            if let Some(w) = pick {
+                                if let Some(t) = db.status_iter(w, TaskStatus::Pending).next() {
+                                    db.claim((w, t), 1);
+                                    db.requeue((w, t));
+                                }
+                            }
+                        }
+                        _ => {
+                            if let Some(&w) = live.iter().find(|&&w| db.workload_complete(w)) {
+                                audits.push(db.retire_shard(w));
+                                retired[w] = true;
+                            }
+                        }
+                    }
+                }
+                for a in &audits {
+                    if a.completed + a.failed != a.tasks {
+                        return Err(format!("audit not terminal-exact: {a:?}"));
+                    }
+                }
+                let shards = db.into_shards();
+                for a in &audits {
+                    if !shards[a.workload].is_empty() {
+                        return Err(format!("workload {} counted twice", a.workload));
+                    }
+                }
+                let surviving: usize = shards.iter().map(|s| s.len()).sum();
+                let audited: usize = audits.iter().map(|a| a.tasks).sum();
+                if audited + surviving != inserted {
+                    return Err(format!(
+                        "task conservation: {audited} audited + {surviving} live != {inserted}"
+                    ));
+                }
+                let c: usize = audits.iter().map(|a| a.completed).sum::<usize>()
+                    + shards.iter().map(|s| s.count_status(TaskStatus::Completed)).sum::<usize>();
+                let f: usize = audits.iter().map(|a| a.failed).sum::<usize>()
+                    + shards.iter().map(|s| s.count_status(TaskStatus::Failed)).sum::<usize>();
+                if c != done_ok || f != done_bad {
+                    return Err(format!(
+                        "terminal conservation: ({c}, {f}) != ({done_ok}, {done_bad})"
+                    ));
+                }
+                Ok(())
+            },
+        );
     }
 
     /// Drive the arena and the seed (legacy) store through the same

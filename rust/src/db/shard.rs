@@ -293,6 +293,45 @@ impl Shard {
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
+
+    /// Clear all task state and re-stamp the shard for `workload`,
+    /// keeping every allocation (row arena, intrusive links,
+    /// measurement logs) — the free-list primitive of shard retirement
+    /// (PR-8): a retired workload's slabs are recycled into the next
+    /// admitted workload instead of being freed and re-grown.
+    pub fn recycle(&mut self, workload: usize) {
+        self.workload = workload;
+        self.rows.clear();
+        self.next.clear();
+        self.prev.clear();
+        self.lists = [StatusList::default(); N_STATUS];
+        for m in &mut self.meas {
+            m.clear();
+        }
+        // keep remaining/n_by_type/meas the same length (all-zero) so
+        // the grow-together invariant of `grow_types` holds
+        self.remaining.clear();
+        self.remaining.resize(self.meas.len(), 0);
+        self.n_by_type.clear();
+        self.n_by_type.resize(self.meas.len(), 0);
+    }
+
+    /// Heap bytes currently held by this shard's arenas (capacity, not
+    /// length — recycled shards keep their slabs). Feeds the
+    /// `peak_arena_bytes` gauge of the streaming run (PR-8).
+    pub fn arena_bytes(&self) -> usize {
+        use std::mem::size_of;
+        self.rows.capacity() * size_of::<TaskRow>()
+            + (self.next.capacity() + self.prev.capacity()) * size_of::<u32>()
+            + self.remaining.capacity() * size_of::<u64>()
+            + self.n_by_type.capacity() * size_of::<usize>()
+            + self.meas.capacity() * size_of::<Vec<(SimTime, f64)>>()
+            + self
+                .meas
+                .iter()
+                .map(|m| m.capacity() * size_of::<(SimTime, f64)>())
+                .sum::<usize>()
+    }
 }
 
 #[cfg(test)]
@@ -354,6 +393,33 @@ mod tests {
             assert_eq!(s.count_status(TaskStatus::Completed), 8);
             assert_eq!(s.remaining_slice(), &[0, 0]);
         }
+    }
+
+    #[test]
+    fn recycle_clears_state_but_keeps_slabs() {
+        let mut s = shard_with(64);
+        for t in 0..64 {
+            s.claim(t, 1);
+            s.complete(t, 1.0, (t as u64 + 1) * 5, 0);
+        }
+        let bytes_before = s.arena_bytes();
+        assert!(bytes_before > 0);
+        s.recycle(9);
+        assert_eq!(s.workload(), 9);
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.count_status(TaskStatus::Completed), 0);
+        assert!(s.measurements(0).is_empty());
+        assert!(s.remaining_slice().iter().all(|&m| m == 0));
+        assert_eq!(s.arena_bytes(), bytes_before, "recycle must keep the slabs");
+        // the recycled shard behaves exactly like a fresh one
+        s.insert(0, 0);
+        s.insert(1, 1);
+        s.reserve_measurements();
+        s.claim(0, 2);
+        s.complete(0, 3.0, 7, 0);
+        assert_eq!(s.get(0).unwrap().workload, 9, "rows re-stamp the new workload");
+        assert_eq!(s.remaining_slice(), &[0, 1]);
+        assert_eq!(s.measurements(0), &[(7, 3.0)]);
     }
 
     #[test]

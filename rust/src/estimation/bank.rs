@@ -198,6 +198,31 @@ impl Bank {
         Ok(())
     }
 
+    /// Drop the estimator row at `lane`, shifting every higher row down
+    /// one slot and zeroing the vacated trailing row (PR-8: shard
+    /// retirement recycles bank lanes instead of growing without
+    /// bound, so `w` tracks the *peak live window*, not the run). The
+    /// compaction is bitwise-safe: every per-row stage reduces within
+    /// its own row, and the one cross-row fold — the n* sum — runs in
+    /// ascending row order over active rows with masked rows
+    /// contributing an exact `+0.0`, so the compacted bank steps live
+    /// rows to the same bits the sparser layout would. Native-only for
+    /// the same reason as [`Self::grow_w`].
+    pub fn retire_lane(&mut self, lane: usize) -> Result<()> {
+        anyhow::ensure!(lane < self.w, "retire_lane {lane} out of range (w = {})", self.w);
+        anyhow::ensure!(
+            matches!(self.backend, Backend::Native),
+            "lane retirement requires the native backend (xla executables are shape-compiled)"
+        );
+        let k = self.k;
+        let end = self.w * k;
+        self.b_hat.copy_within((lane + 1) * k..end, lane * k);
+        self.pi.copy_within((lane + 1) * k..end, lane * k);
+        self.b_hat[end - k..end].fill(0.0);
+        self.pi[end - k..end].fill(0.0);
+        Ok(())
+    }
+
     pub fn b_hat(&self) -> &[f32] {
         &self.b_hat
     }
@@ -856,6 +881,89 @@ mod tests {
         }
         // shrinking is a contract violation, not a resize
         assert!(narrow.grow_w(1).is_err());
+    }
+
+    /// PR-8 pin: compacting a retired row out of the bank is bitwise
+    /// neutral — the compacted bank (live rows packed low, trailing
+    /// row zeroed and masked) steps to exactly the bits the wide bank
+    /// produces for the same live rows with the retired row masked in
+    /// place. This is what makes shard retirement invisible to the
+    /// streaming==materialized twin.
+    #[test]
+    fn retired_lane_compaction_is_bitwise_neutral() {
+        let k = 2;
+        let mut rng = Rng::new(0x8E71);
+        let mut masked = Bank::new(3, k, params(), Backend::Native);
+        let mut compact = Bank::new(3, k, params(), Backend::Native);
+        // warm both banks on identical 3-row traffic
+        for _ in 0..6 {
+            let (slot, meas, b_tilde, m_rem, d, n_tot) = random_tick(3, k, &mut rng);
+            let inp = TickInputs {
+                b_tilde: &b_tilde,
+                meas_mask: &meas,
+                m_rem: &m_rem,
+                slot_mask: &slot,
+                d: &d,
+                n_tot,
+            };
+            masked.step(&inp).unwrap();
+            compact.step(&inp).unwrap();
+        }
+        // retire the middle row: the masked twin zeroes it in place,
+        // the compact twin shifts row 2 down into row 1
+        masked.reset_slot(1, 0);
+        masked.reset_slot(1, 1);
+        compact.retire_lane(1).unwrap();
+        let survivors =
+            [masked.b_hat()[..k].to_vec(), masked.b_hat()[2 * k..].to_vec()].concat();
+        assert_eq!(compact.b_hat()[..2 * k], survivors[..]);
+        assert_eq!(&compact.b_hat()[2 * k..], &[0.0; 2][..], "vacated row must be zeroed");
+        for _ in 0..6 {
+            let (slot, meas, b_tilde, m_rem, d, n_tot) = random_tick(2, k, &mut rng);
+            // masked layout: live rows 0 and 2, row 1 dead (zero masks)
+            let spread = |v: &[f32]| {
+                let mut s = vec![0.0f32; 3 * k];
+                s[..k].copy_from_slice(&v[..k]);
+                s[2 * k..].copy_from_slice(&v[k..]);
+                s
+            };
+            let d3 = vec![d[0], 0.0, d[1]];
+            let a = masked
+                .step(&TickInputs {
+                    b_tilde: &spread(&b_tilde),
+                    meas_mask: &spread(&meas),
+                    m_rem: &spread(&m_rem),
+                    slot_mask: &spread(&slot),
+                    d: &d3,
+                    n_tot,
+                })
+                .unwrap();
+            // compact layout: live rows 0 and 1, trailing row masked
+            let pad = |v: &[f32]| {
+                let mut p = v.to_vec();
+                p.resize(3 * k, 0.0);
+                p
+            };
+            let d_pad = vec![d[0], d[1], 0.0];
+            let b = compact
+                .step(&TickInputs {
+                    b_tilde: &pad(&b_tilde),
+                    meas_mask: &pad(&meas),
+                    m_rem: &pad(&m_rem),
+                    slot_mask: &pad(&slot),
+                    d: &d_pad,
+                    n_tot,
+                })
+                .unwrap();
+            assert_eq!(a.n_star.to_bits(), b.n_star.to_bits(), "n* must survive compaction");
+            assert_eq!(a.n_next.to_bits(), b.n_next.to_bits());
+            assert_eq!(a.b_hat[..k], b.b_hat[..k], "row 0");
+            assert_eq!(a.b_hat[2 * k..], b.b_hat[k..2 * k], "row 2 -> row 1");
+            assert_eq!(a.s[0].to_bits(), b.s[0].to_bits());
+            assert_eq!(a.s[2].to_bits(), b.s[1].to_bits());
+        }
+        // out-of-range lane is an error, not UB
+        assert!(compact.retire_lane(3).is_err());
     }
 
     #[test]

@@ -59,6 +59,16 @@ pub struct BenchReport {
     pub sparse_wall_s: f64,
     pub sparse_ticks_executed: u64,
     pub sparse_ticks_skipped: u64,
+    /// The PR-8 streaming pass: the million-task cell of
+    /// [`super::parallel::stream_grid`], run with lazy workload
+    /// materialization and shard retirement. `stream_peak_live_shards`
+    /// / `stream_peak_arena_bytes` are the residency receipts: they
+    /// track the *arrival window*, not the task total, which is what
+    /// lets a 1M-task run fit in CI.
+    pub stream_tasks: usize,
+    pub stream_wall_s: f64,
+    pub stream_peak_live_shards: usize,
+    pub stream_peak_arena_bytes: usize,
     pub db_tasks: usize,
     pub db_legacy_ops_per_s: f64,
     pub db_arena_ops_per_s: f64,
@@ -94,6 +104,9 @@ impl BenchReport {
     pub fn db_speedup(&self) -> f64 {
         self.db_arena_ops_per_s / self.db_legacy_ops_per_s.max(1e-9)
     }
+    pub fn stream_tasks_per_s(&self) -> f64 {
+        self.stream_tasks as f64 / self.stream_wall_s.max(1e-9)
+    }
 
     /// The tasks/s-by-thread-count series: the measured sweep
     /// throughput at 1 thread plus every requested width — a real
@@ -127,6 +140,9 @@ impl BenchReport {
              \x20 \"batched_tasks_per_s\": {btp:.1},\n\
              \x20 \"sparse\": {{\"runs\": {sruns}, \"wall_s\": {sws:.3}, \
              \"ticks_executed\": {ste}, \"ticks_skipped\": {sts}}},\n\
+             \x20 \"stream\": {{\"tasks\": {mtk}, \"wall_s\": {mws:.3}, \
+             \"tasks_per_s\": {mtps:.1}, \"peak_live_shards\": {mpls}, \
+             \"peak_arena_bytes\": {mpab}}},\n\
              \x20 \"baseline\": {{\n\
              \x20   \"mode\": \"sequential-1-thread (pre-refactor harness had no parallel runner)\",\n\
              \x20   \"wall_s\": {sw:.3},\n\
@@ -152,6 +168,11 @@ impl BenchReport {
             sws = self.sparse_wall_s,
             ste = self.sparse_ticks_executed,
             sts = self.sparse_ticks_skipped,
+            mtk = self.stream_tasks,
+            mws = self.stream_wall_s,
+            mtps = self.stream_tasks_per_s(),
+            mpls = self.stream_peak_live_shards,
+            mpab = self.stream_peak_arena_bytes,
             threads = self.threads(),
             hits = self.cache_hits,
             cold = self.cold_builds,
@@ -408,6 +429,34 @@ pub fn run(cfg: &Config, threads: &[usize], out_path: &str, smoke: bool) -> anyh
         sparse_ticks_skipped > 0,
         "sparse grid executed every tick — the skipper never engaged"
     );
+
+    // PR-8: the streaming pass — one million tasks, suites generated at
+    // arrival instants, terminal shards retired. The residency ensures
+    // below are the whole point: peak live shards must track the
+    // arrival window (TTC / arrival interval = 60 steady-state live
+    // workloads, 4x margin for footprint/drain transients), never the
+    // 10k-workload task total.
+    let stream_cell = super::parallel::stream_grid(&cfg, false)
+        .pop()
+        .expect("stream_grid always carries the 1M cell when smoke is off");
+    let stream_tasks = stream_cell.n_tasks();
+    stream_cell.scenario.bank_variant(&cache); // warm, like the other passes
+    eprintln!(
+        "bench-report: streaming pass ({stream_tasks} tasks, lazy suite + shard retirement)..."
+    );
+    let t0 = Instant::now();
+    let streamed = stream_cell.execute_with_cache(&cache)?;
+    let stream_wall_s = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(
+        streamed.tasks_completed == stream_tasks,
+        "streaming pass lost tasks: {} of {stream_tasks} completed",
+        streamed.tasks_completed
+    );
+    anyhow::ensure!(
+        streamed.peak_live_shards >= 1 && streamed.peak_live_shards <= 240,
+        "streaming pass peak residency ({} live shards) is not bounded by the arrival window",
+        streamed.peak_live_shards
+    );
     let cache_stats = cache.stats();
 
     eprintln!("bench-report: task-DB microbench (arena vs legacy)...");
@@ -429,6 +478,10 @@ pub fn run(cfg: &Config, threads: &[usize], out_path: &str, smoke: bool) -> anyh
         sparse_wall_s,
         sparse_ticks_executed,
         sparse_ticks_skipped,
+        stream_tasks,
+        stream_wall_s,
+        stream_peak_live_shards: streamed.peak_live_shards,
+        stream_peak_arena_bytes: streamed.peak_arena_bytes,
         db_tasks,
         db_legacy_ops_per_s,
         db_arena_ops_per_s,
@@ -454,6 +507,7 @@ pub fn run(cfg: &Config, threads: &[usize], out_path: &str, smoke: bool) -> anyh
          parallel x{threads}:  {pw:.2}s ({ptp:.0} tasks/s, {spd:.2}x) | curve: {curve}\n\
          batched x{threads}:   {bw:.2}s ({btp:.0} tasks/s, lockstep)\n\
          sparse x{threads}:    {sparsew:.2}s ({ste} ticks executed / {sts} skipped, dense-twin verified)\n\
+         stream x1:     {mw:.2}s ({mtk} tasks, {mtps:.0} tasks/s, peak {mpls} live shards / {mpab} arena bytes)\n\
          bank cache: {cold} cold builds / {hits} hits across all passes\n\
          task-DB: arena {da:.2e} ops/s vs legacy {dl:.2e} ops/s ({dspd:.2}x)\n\
          wrote {out_path}\n",
@@ -468,6 +522,11 @@ pub fn run(cfg: &Config, threads: &[usize], out_path: &str, smoke: bool) -> anyh
         sparsew = report.sparse_wall_s,
         ste = report.sparse_ticks_executed,
         sts = report.sparse_ticks_skipped,
+        mw = report.stream_wall_s,
+        mtk = report.stream_tasks,
+        mtps = report.stream_tasks_per_s(),
+        mpls = report.stream_peak_live_shards,
+        mpab = report.stream_peak_arena_bytes,
         da = report.db_arena_ops_per_s,
         dl = report.db_legacy_ops_per_s,
         dspd = report.db_speedup(),
@@ -503,6 +562,10 @@ mod tests {
             sparse_wall_s: 0.5,
             sparse_ticks_executed: 400,
             sparse_ticks_skipped: 900,
+            stream_tasks: 1_000_000,
+            stream_wall_s: 20.0,
+            stream_peak_live_shards: 72,
+            stream_peak_arena_bytes: 1_200_000,
             db_tasks: 1000,
             db_legacy_ops_per_s: 1.0e6,
             db_arena_ops_per_s: 9.0e6,
@@ -549,6 +612,14 @@ mod tests {
         assert_eq!(sparse.get("runs").unwrap().as_usize(), Some(3));
         assert_eq!(sparse.get("ticks_executed").unwrap().as_usize(), Some(400));
         assert_eq!(sparse.get("ticks_skipped").unwrap().as_usize(), Some(900));
+        // the streaming residency receipts travel in the report (PR-8):
+        // CI reads peak_live_shards from the artifact to prove the
+        // million-task run stayed arrival-window-bounded
+        let stream = j.get("stream").unwrap();
+        assert_eq!(stream.get("tasks").unwrap().as_usize(), Some(1_000_000));
+        assert_eq!(stream.get("peak_live_shards").unwrap().as_usize(), Some(72));
+        assert_eq!(stream.get("peak_arena_bytes").unwrap().as_usize(), Some(1_200_000));
+        assert!((stream.get("tasks_per_s").unwrap().as_f64().unwrap() - 50_000.0).abs() < 0.1);
         let cur = j.get("current").unwrap();
         // the DB workload size must travel with the ops/s numbers so
         // cross-report comparisons know what was measured
@@ -574,6 +645,10 @@ mod tests {
             sparse_wall_s: 0.0,
             sparse_ticks_executed: 0,
             sparse_ticks_skipped: 0,
+            stream_tasks: 0,
+            stream_wall_s: 0.0,
+            stream_peak_live_shards: 0,
+            stream_peak_arena_bytes: 0,
             db_tasks: 10,
             db_legacy_ops_per_s: 1.0,
             db_arena_ops_per_s: 1.0,

@@ -30,9 +30,9 @@ use crate::coordinator::PolicyKind;
 use crate::db::TaskStatus;
 use crate::estimation::{BankCache, EstimatorKind};
 use crate::metrics::RunMetrics;
-use crate::platform::{Platform, RunOpts, Scenario, ScenarioBuilder};
+use crate::platform::{ArrivalProcess, Platform, RunOpts, Scenario, ScenarioBuilder, StreamSpec};
 use crate::sim::SimTime;
-use crate::workload::{paper_suite, WorkloadSpec};
+use crate::workload::{paper_suite, App, WorkloadSpec};
 
 /// One cell of an experiment grid: a fully self-contained scenario plus
 /// its display label.
@@ -226,15 +226,59 @@ pub fn seed_grid(cfg: &Config, n: usize) -> Vec<RunSpec> {
         .collect()
 }
 
+/// Streaming million-task grid (`dithen sweep stream`): suites are
+/// *generated at arrival instants* (no up-front materialization) and
+/// terminal shards are retired, so resident memory tracks the arrival
+/// window — not the task total — and a million-task run fits in CI.
+/// `smoke` keeps only the 100k-task cell (`dithen sweep stream
+/// --smoke`, the CI gate); the full grid adds the 1M-task cell the
+/// PR-8 bench report measures.
+pub fn stream_grid(cfg: &Config, smoke: bool) -> Vec<RunSpec> {
+    let mut base = cfg.clone();
+    base.use_xla = false; // streaming needs the growable native bank
+    let cell = |n_workloads: usize, label: &str| {
+        RunSpec::new(
+            format!("stream/{label}"),
+            ScenarioBuilder::new(base.clone())
+                .stream(StreamSpec {
+                    n_workloads,
+                    tasks_per_workload: 100,
+                    app: App::ImRotate,
+                })
+                .retire_shards(true)
+                .fixed_ttc(Some(3600))
+                .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+                // every slot admits (last arrival + ample drain time):
+                // the horizon must clear the stream or the twin caveat
+                // in rust/BENCHMARKS.md applies
+                .horizon(60 * n_workloads as SimTime + 8 * 3600)
+                .record_traces(false)
+                .build(),
+        )
+    };
+    let mut g = vec![cell(1_000, "100k")];
+    if !smoke {
+        g.push(cell(10_000, "1m"));
+    }
+    g
+}
+
+/// Every grid `dithen sweep` accepts — the single source of truth the
+/// CLI usage text and the `unknown sweep` error render from.
+pub const SWEEP_GRIDS: &[&str] =
+    &["cost", "estimators", "seeds", "fleet", "smoke", "sparse", "stream"];
+
 /// Run a named grid and render a summary table (the `dithen sweep`
 /// subcommand). `batched` routes execution through the lockstep
 /// batched executor (`dithen sweep --batched`; bit-identical results —
-/// see [`super::batched`]).
+/// see [`super::batched`]); `smoke` trims grids that honor it (today:
+/// `stream`) to their CI-sized cells.
 pub fn run_sweep(
     name: &str,
     cfg: &Config,
     threads: usize,
     batched: bool,
+    smoke: bool,
 ) -> anyhow::Result<String> {
     let specs = match name {
         "cost" => cost_grid(cfg),
@@ -243,12 +287,17 @@ pub fn run_sweep(
         "fleet" => super::heterogeneous::grid(cfg, 6, 100, 12 * 3600),
         "smoke" => super::bench_report::smoke_grid(cfg),
         "sparse" => super::bench_report::sparse_grid(cfg),
+        "stream" => stream_grid(cfg, smoke),
         other => {
-            anyhow::bail!(
-                "unknown sweep '{other}' (use cost | estimators | seeds | fleet | smoke | sparse)"
-            )
+            anyhow::bail!("unknown sweep '{other}' (use {})", SWEEP_GRIDS.join(" | "))
         }
     };
+    if batched && specs.iter().any(|s| s.scenario.stream.is_some()) {
+        anyhow::bail!(
+            "sweep '{name}' streams its suites; the lockstep batched executor needs \
+             materialized cells (drop --batched)"
+        );
+    }
     let cache = BankCache::global();
     let cache_before = cache.stats();
     let t0 = std::time::Instant::now();
@@ -422,6 +471,10 @@ pub fn merge_metrics(parts: Vec<RunMetrics>) -> RunMetrics {
         out.unfulfilled_requests += p.unfulfilled_requests;
         out.requeued_tasks += p.requeued_tasks;
         out.tasks_completed += p.tasks_completed;
+        // peak residency is per-platform (parts never share shards or
+        // bank lanes); the aggregate reports the largest single part
+        out.peak_live_shards = out.peak_live_shards.max(p.peak_live_shards);
+        out.peak_arena_bytes = out.peak_arena_bytes.max(p.peak_arena_bytes);
         if out.reclamations_by_pool.len() < p.reclamations_by_pool.len() {
             out.reclamations_by_pool.resize(p.reclamations_by_pool.len(), 0);
         }
@@ -669,5 +722,31 @@ mod tests {
         // per-run seeds are distinct and deterministic
         let s: Vec<u64> = seeds.iter().map(|r| r.scenario.cfg.seed).collect();
         assert_eq!(s, vec![cfg.seed, cfg.seed + 1, cfg.seed + 2, cfg.seed + 3]);
+    }
+
+    /// The streaming grid is well-formed without running it: the smoke
+    /// trim keeps the 100k cell, the full grid adds the 1M cell, every
+    /// cell validates (native bank, lazy suite) and counts its tasks
+    /// from the stream shape alone.
+    #[test]
+    fn stream_grid_is_well_formed_and_ci_sized() {
+        let cfg = Config::paper_defaults();
+        let smoke = stream_grid(&cfg, true);
+        assert_eq!(smoke.len(), 1);
+        assert_eq!(smoke[0].n_tasks(), 100_000);
+        let full = stream_grid(&cfg, false);
+        assert_eq!(full.len(), 2);
+        assert_labels_unique(&full);
+        assert_eq!(full[1].n_tasks(), 1_000_000);
+        for s in &full {
+            s.scenario.validate().unwrap_or_else(|e| panic!("{}: {e}", s.label));
+            assert!(s.scenario.stream.is_some() && s.scenario.retire_shards);
+            assert!(s.scenario.specs.is_empty(), "{}: suite must stay lazy", s.label);
+            assert!(!s.scenario.record_traces);
+            // the horizon admits every slot — the bit-identity twin
+            // caveat (rust/BENCHMARKS.md) never applies to shipped grids
+            let last = 60 * (s.scenario.stream.as_ref().unwrap().n_workloads as SimTime - 1);
+            assert!(s.scenario.horizon_s > last + 3600);
+        }
     }
 }

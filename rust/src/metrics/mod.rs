@@ -128,13 +128,24 @@ pub struct RunMetrics {
     /// Tasks that reached Completed/Failed across all workloads — must
     /// balance the suite's task count even under reclamation churn.
     pub tasks_completed: usize,
+    /// High-water mark of simultaneously live (arrived, not yet
+    /// retired) shards (PR-8). Only a shard-retiring run moves it off
+    /// zero; like `ticks_skipped` it describes the *executor's* memory
+    /// footprint, not the simulation, so it is excluded from
+    /// `PartialEq` (the streaming==materialized twin pin compares runs
+    /// whose peaks legitimately differ).
+    pub peak_live_shards: usize,
+    /// High-water mark of arena bytes held by live shards (PR-8).
+    /// Memory observable, excluded from `PartialEq` like
+    /// `peak_live_shards`.
+    pub peak_arena_bytes: usize,
 }
 
 impl PartialEq for RunMetrics {
     fn eq(&self, other: &Self) -> bool {
         // every simulation output, but NOT tick_wall_ns (host wall
-        // clock) or ticks_skipped (executor strategy) — see the struct
-        // docs
+        // clock), ticks_skipped (executor strategy) or the peak_*
+        // memory observables (executor footprint) — see the struct docs
         self.cost_curve == other.cost_curve
             && self.instances_curve == other.instances_curve
             && self.n_star_curve == other.n_star_curve
@@ -300,6 +311,9 @@ mod tests {
         b.ticks_skipped = 5; // executor strategy, not a simulation output
         assert_eq!(a, b);
         assert_eq!(b.ticks_executed(), 4);
+        b.peak_live_shards = 3; // executor memory footprint (PR-8)
+        b.peak_arena_bytes = 4096;
+        assert_eq!(a, b);
         b.total_cost = 2.0;
         assert_ne!(a, b);
         let mut c = a.clone();

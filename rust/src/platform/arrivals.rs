@@ -12,11 +12,18 @@
 //! platform's per-tick bookkeeping (`arrived <= w` guards) relies on
 //! arrival order matching workload-id order.
 //!
-//! Because `Platform::start` schedules *every* arrival instant up front
-//! as a simulator event, the engine's `next_non_tick_time` is a
-//! complete bound on future arrivals — the sparse-tick skipper (PR-6)
-//! leans on this: no arrival can materialize inside a skipped stretch
-//! that the event queue did not already know about.
+//! Materialized scenarios schedule *every* arrival instant up front as
+//! a simulator event, so the engine's `next_non_tick_time` bounds
+//! future arrivals. Streaming scenarios (PR-8) do **not** pre-schedule
+//! arrivals: an [`ArrivalSchedule`] generator yields `(slot, instant)`
+//! pairs lazily and the platform admits each workload at its instant.
+//! The sparse-tick skipper therefore takes its arrival bound from the
+//! schedule cursor (the [`ArrivalProcess::next_arrival_after`] leg)
+//! instead of assuming the event queue already knows every arrival —
+//! the PR-6 queue-bounds-the-horizon assumption is replaced, not
+//! silently kept. [`ArrivalProcess::times`] is defined as a drained
+//! [`ArrivalSchedule`], so the lazy and materialized forms agree on
+//! every prefix by construction.
 
 use crate::sim::SimTime;
 use crate::util::rng::Rng;
@@ -48,39 +55,49 @@ pub enum ArrivalProcess {
 }
 
 impl ArrivalProcess {
-    /// Arrival instant per slot, for `n` workloads under `seed`.
-    /// Deterministic, nondecreasing.
-    pub fn times(&self, n: usize, seed: u64) -> Vec<SimTime> {
-        match *self {
-            ArrivalProcess::FixedInterval { interval_s } => {
-                (0..n as u64).map(|w| w * interval_s).collect()
-            }
+    /// The generator form: a lazily-driven cursor over the first `n`
+    /// arrival slots under `seed`. Streaming scenarios (PR-8) hold one
+    /// of these and admit each workload at its instant instead of
+    /// materializing the whole schedule (and suite) up front.
+    pub fn schedule(&self, n: usize, seed: u64) -> ArrivalSchedule {
+        let kind = match *self {
+            ArrivalProcess::FixedInterval { interval_s } => ScheduleKind::Fixed { interval_s },
             ArrivalProcess::Bursty { burst, gap_s } => {
-                let burst = burst.max(1);
-                (0..n).map(|w| (w / burst) as u64 * gap_s).collect()
+                ScheduleKind::Bursty { burst: burst.max(1), gap_s }
             }
-            ArrivalProcess::Poisson { mean_gap_s } => {
-                let mut rng = Rng::new(seed).substream(ARRIVAL_STREAM);
-                let mut t = 0u64;
-                (0..n)
-                    .map(|w| {
-                        if w > 0 {
-                            t += rng.exponential(mean_gap_s.max(0.0)).round() as u64;
-                        }
-                        t
-                    })
-                    .collect()
-            }
+            ArrivalProcess::Poisson { mean_gap_s } => ScheduleKind::Poisson {
+                mean_gap_s: mean_gap_s.max(0.0),
+                rng: Rng::new(seed).substream(ARRIVAL_STREAM),
+            },
             ArrivalProcess::Scripted { ref times } => {
-                let mut last = 0u64;
-                (0..n)
-                    .map(|w| {
-                        last = times.get(w).copied().unwrap_or(last).max(last);
-                        last
-                    })
-                    .collect()
+                ScheduleKind::Scripted { times: times.clone() }
             }
-        }
+        };
+        let at = if n == 0 {
+            0
+        } else {
+            match &kind {
+                ScheduleKind::Scripted { times } => times.first().copied().unwrap_or(0),
+                _ => 0,
+            }
+        };
+        ArrivalSchedule { kind, n, slot: 0, at }
+    }
+
+    /// Arrival instant per slot, for `n` workloads under `seed`.
+    /// Deterministic, nondecreasing. Defined as the drained
+    /// [`schedule`](Self::schedule) generator, so the materialized and
+    /// streaming forms agree on every prefix by construction.
+    pub fn times(&self, n: usize, seed: u64) -> Vec<SimTime> {
+        self.schedule(n, seed).map(|(_, at)| at).collect()
+    }
+
+    /// Earliest arrival instant strictly after `after` in the first `n`
+    /// slots, or `None` when the schedule is exhausted by then — the
+    /// streaming leg of the PR-6 skip horizon. Scans a fresh cursor;
+    /// the platform's hot path uses its live cursor's peek instead.
+    pub fn next_arrival_after(&self, n: usize, seed: u64, after: SimTime) -> Option<SimTime> {
+        self.schedule(n, seed).next_arrival_after(after)
     }
 
     /// Compact human label (CLI headers).
@@ -91,6 +108,84 @@ impl ArrivalProcess {
             ArrivalProcess::Poisson { mean_gap_s } => format!("poisson:{mean_gap_s}"),
             ArrivalProcess::Scripted { ref times } => format!("scripted:{}", times.len()),
         }
+    }
+}
+
+/// Private per-process cursor state for [`ArrivalSchedule`]. The
+/// Poisson arm owns its RNG substream so draws happen in slot order —
+/// exactly the order [`ArrivalProcess::times`] used to draw them.
+#[derive(Debug, Clone)]
+enum ScheduleKind {
+    Fixed { interval_s: u64 },
+    Bursty { burst: usize, gap_s: u64 },
+    Poisson { mean_gap_s: f64, rng: Rng },
+    Scripted { times: Vec<SimTime> },
+}
+
+/// A lazily-driven arrival cursor: yields `(slot, instant)` pairs in
+/// slot order, nondecreasing in time. Cloneable (the clone replays the
+/// remaining schedule identically — used by lookahead scans that must
+/// not consume the live cursor).
+#[derive(Debug, Clone)]
+pub struct ArrivalSchedule {
+    kind: ScheduleKind,
+    n: usize,
+    slot: usize,
+    /// Arrival instant of `slot`; meaningful only while `slot < n`.
+    at: SimTime,
+}
+
+impl ArrivalSchedule {
+    /// Total number of slots this schedule will yield.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Next pending `(slot, instant)` without consuming it.
+    pub fn peek(&self) -> Option<(usize, SimTime)> {
+        (self.slot < self.n).then_some((self.slot, self.at))
+    }
+
+    /// Consume the pending slot and compute the next instant.
+    pub fn advance(&mut self) {
+        debug_assert!(self.slot < self.n, "advance past the end of the schedule");
+        self.slot += 1;
+        if self.slot >= self.n {
+            return;
+        }
+        self.at = match &mut self.kind {
+            ScheduleKind::Fixed { interval_s } => self.slot as u64 * *interval_s,
+            ScheduleKind::Bursty { burst, gap_s } => (self.slot / *burst) as u64 * *gap_s,
+            ScheduleKind::Poisson { mean_gap_s, rng } => {
+                self.at + rng.exponential(*mean_gap_s).round() as u64
+            }
+            ScheduleKind::Scripted { times } => {
+                times.get(self.slot).copied().unwrap_or(self.at).max(self.at)
+            }
+        };
+    }
+
+    /// Earliest remaining arrival instant strictly after `after`, or
+    /// `None` when the schedule has none. Non-consuming: scans a clone
+    /// of the cursor (times are nondecreasing, so the scan stops at the
+    /// first qualifying instant).
+    pub fn next_arrival_after(&self, after: SimTime) -> Option<SimTime> {
+        self.clone().map(|(_, at)| at).find(|&at| at > after)
+    }
+}
+
+impl Iterator for ArrivalSchedule {
+    type Item = (usize, SimTime);
+
+    /// Pop the next `(slot, instant)`; `None` when drained.
+    fn next(&mut self) -> Option<(usize, SimTime)> {
+        let head = self.peek()?;
+        self.advance();
+        Some(head)
     }
 }
 
@@ -155,6 +250,60 @@ mod tests {
         // an empty script pins every slot to t = 0
         let p = ArrivalProcess::Scripted { times: vec![] };
         assert_eq!(p.times(2, 0), vec![0, 0]);
+    }
+
+    #[test]
+    fn schedule_generator_agrees_with_materialized_times() {
+        for p in [
+            ArrivalProcess::FixedInterval { interval_s: 300 },
+            ArrivalProcess::Bursty { burst: 3, gap_s: 600 },
+            ArrivalProcess::Poisson { mean_gap_s: 120.0 },
+            ArrivalProcess::Scripted { times: vec![5, 1, 60, 60] },
+        ] {
+            let eager = p.times(9, 7);
+            let lazy: Vec<SimTime> = p.schedule(9, 7).map(|(_, at)| at).collect();
+            assert_eq!(eager, lazy, "{p:?}");
+            // slots come out in order and the cursor clone replays the
+            // remaining suffix identically (the lookahead contract)
+            let mut s = p.schedule(9, 7);
+            assert_eq!(s.len(), 9);
+            for want in 0..4 {
+                let (slot, at) = s.next().unwrap();
+                assert_eq!(slot, want);
+                assert_eq!(at, eager[want]);
+            }
+            let replay: Vec<SimTime> = s.clone().map(|(_, at)| at).collect();
+            assert_eq!(replay, eager[4..].to_vec(), "{p:?}");
+            assert_eq!(s.peek(), Some((4, eager[4])));
+        }
+    }
+
+    #[test]
+    fn empty_schedule_is_immediately_drained() {
+        let mut s = ArrivalProcess::Poisson { mean_gap_s: 60.0 }.schedule(0, 3);
+        assert!(s.is_empty());
+        assert_eq!(s.peek(), None);
+        assert_eq!(s.next(), None);
+    }
+
+    #[test]
+    fn next_arrival_after_is_strictly_after_and_none_at_exhaustion() {
+        let p = ArrivalProcess::FixedInterval { interval_s: 300 };
+        assert_eq!(p.next_arrival_after(4, 0, 0), Some(300), "strictly after, not at");
+        assert_eq!(p.next_arrival_after(4, 0, 299), Some(300));
+        assert_eq!(p.next_arrival_after(4, 0, 300), Some(600));
+        assert_eq!(p.next_arrival_after(4, 0, 900), None, "schedule exhausted");
+        // the cursor form is non-consuming
+        let mut s = p.schedule(4, 0);
+        s.next();
+        assert_eq!(s.next_arrival_after(300), Some(600));
+        assert_eq!(s.peek(), Some((1, 300)), "lookahead must not consume the cursor");
+        // Poisson lookahead agrees with the materialized schedule
+        let p = ArrivalProcess::Poisson { mean_gap_s: 120.0 };
+        let times = p.times(12, 9);
+        let mid = times[5];
+        let want = times.iter().copied().find(|&t| t > mid);
+        assert_eq!(p.next_arrival_after(12, 9, mid), want);
     }
 
     #[test]

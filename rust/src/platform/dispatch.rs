@@ -86,7 +86,11 @@ impl Platform {
     /// otherwise a Matlab-style 30 s setup would make every footprint
     /// measurement ~deadband-dominated (§II-E-1).
     pub(crate) fn next_footprint_chunk(&mut self) -> Option<(usize, Vec<usize>)> {
-        for w in 0..self.wl.len() {
+        // lanes ascend in workload id, so this is the old 0..wl.len()
+        // walk restricted to resident workloads (retired ones are Done
+        // and were skipped anyway)
+        for lane in 0..self.lanes.len() {
+            let w = self.lanes[lane] as usize;
             if self.arrived <= w {
                 continue;
             }
@@ -116,7 +120,10 @@ impl Platform {
         // footprint seed; last resort: app deadband + 1s)
         let slot = &self.est[w * self.k_max];
         let est = Some(match self.estimator {
-            EstimatorKind::Kalman => self.bank.estimate(w, 0) as f64,
+            // bank rows are lane-indexed (identity for materialized
+            // suites); only live workloads build chunks, so the lane
+            // always exists
+            EstimatorKind::Kalman => self.bank.estimate(self.lane_of[w] as usize, 0) as f64,
             EstimatorKind::AdHoc => slot.adhoc.b_hat,
             EstimatorKind::Arma => slot.arma.b_hat,
         })
@@ -169,7 +176,8 @@ impl Platform {
 
     pub(crate) fn dispatch_merges(&mut self) {
         let _now = self.sim.now();
-        for w in 0..self.wl.len() {
+        for lane in 0..self.lanes.len() {
+            let w = self.lanes[lane] as usize;
             let needs_merge = {
                 let st = &self.wl[w];
                 st.phase == WlPhase::Merging && !st.merge_dispatched

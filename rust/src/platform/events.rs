@@ -66,6 +66,8 @@ impl Platform {
                     .or_insert_with(EstimatorTrace::default);
             }
         }
+        // a fresh shard is a local maximum of the resident footprint
+        self.sample_live_peaks();
         self.assign_idle();
         Ok(())
     }
@@ -166,6 +168,9 @@ impl Platform {
             self.backend.on_merge_finished(id, now, merge_s);
         }
         self.tracker.remove(w);
+        if self.retire_shards {
+            self.retire_workload(w);
+        }
         self.check_all_done();
         self.assign_idle();
     }
@@ -267,6 +272,9 @@ impl Platform {
                     st.phase = WlPhase::Done;
                     st.completed_at = Some(now);
                     self.tracker.remove(w);
+                    if self.retire_shards {
+                        self.retire_workload(w);
+                    }
                     self.check_all_done();
                 }
             }
@@ -282,7 +290,9 @@ impl Platform {
     }
 
     pub(crate) fn check_all_done(&mut self) {
-        if self.arrived == self.specs.len()
+        // total_slots: a streaming suite is only "all done" once the
+        // stream itself is exhausted, not merely the admitted prefix
+        if self.arrived == self.total_slots()
             && self.wl.iter().all(|st| st.phase == WlPhase::Done)
         {
             self.all_done_at = Some(self.sim.now());

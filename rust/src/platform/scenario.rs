@@ -40,7 +40,45 @@ use crate::coordinator::PolicyKind;
 use crate::estimation::EstimatorKind;
 use crate::metrics::RunMetrics;
 use crate::platform::{ArrivalProcess, FaultSpec, Platform, RunOpts};
-use crate::workload::WorkloadSpec;
+use crate::workload::{App, WorkloadSpec};
+
+/// Lazy workload suite for streaming arrivals (PR-8): instead of
+/// materializing every [`WorkloadSpec`] up front, the platform calls
+/// [`StreamSpec::spec_for`] at each workload's arrival instant, so a
+/// 10M-task run never holds more than the live window's specs.
+///
+/// `spec_for(w, seed)` is *definitionally* the same call a
+/// materialized suite makes for slot `w` (`WorkloadSpec::generate`
+/// derives everything from `rng.substream(0x60D0 + w)`), which is
+/// why streaming runs are bit-identical to their
+/// [`Scenario::materialize`] twin.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamSpec {
+    /// Total workloads the run will admit.
+    pub n_workloads: usize,
+    /// Tasks per workload (uniform across the stream).
+    pub tasks_per_workload: usize,
+    /// Application class every streamed workload runs.
+    pub app: App,
+}
+
+impl StreamSpec {
+    /// Materialize slot `w`'s spec — identical to what an eager suite
+    /// generated for the same slot under the same seed.
+    pub fn spec_for(&self, w: usize, seed: u64) -> WorkloadSpec {
+        WorkloadSpec::generate(
+            w,
+            self.app,
+            self.tasks_per_workload,
+            None,
+            &crate::util::rng::Rng::new(seed),
+        )
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.n_workloads * self.tasks_per_workload
+    }
+}
 
 /// A complete, self-contained experiment description.
 ///
@@ -80,6 +118,14 @@ pub struct Scenario {
     /// switch exists as the dense reference arm of that pin and as an
     /// escape hatch for debugging.
     pub dense_ticks: bool,
+    /// Streaming suite (PR-8): when set, `specs` must be empty and
+    /// workload specs are generated lazily at their arrival instants.
+    pub stream: Option<StreamSpec>,
+    /// Audit-and-retire shards whose workloads reach terminal state
+    /// (PR-8): terminal counts fold into `RunMetrics` exactly once,
+    /// measurement logs drop, and arena slabs recycle through the
+    /// shard free list, so memory tracks the live window.
+    pub retire_shards: bool,
 }
 
 impl Scenario {
@@ -99,7 +145,24 @@ impl Scenario {
             fault: FaultSpec::None,
             record_traces: opts.record_traces,
             dense_ticks: opts.dense_ticks,
+            stream: None,
+            retire_shards: false,
         }
+    }
+
+    /// The eager twin of a streaming scenario: every slot's spec
+    /// generated up front, `stream` cleared. `run()` on the result is
+    /// the materialize-everything reference the streaming run must
+    /// stay bit-identical to
+    /// (`tests/determinism.rs::streaming_is_bit_identical_to_materialized`).
+    /// Non-streaming scenarios materialize to themselves.
+    pub fn materialize(&self) -> Scenario {
+        let mut scn = self.clone();
+        if let Some(stream) = scn.stream.take() {
+            scn.specs =
+                (0..stream.n_workloads).map(|w| stream.spec_for(w, scn.cfg.seed)).collect();
+        }
+        scn
     }
 
     /// Execute the scenario (pure in its inputs; the scenario itself is
@@ -160,20 +223,39 @@ impl Scenario {
         {
             anyhow::bail!("reclaim-pools needs at least one pool bid (--fleet <type>:bid=<$/hr>)");
         }
+        if self.stream.is_some() && !self.specs.is_empty() {
+            anyhow::bail!("streaming scenarios generate their suite lazily: specs must be empty");
+        }
+        if (self.stream.is_some() || self.retire_shards) && self.cfg.use_xla {
+            anyhow::bail!("streaming/retirement needs a growable native bank (drop --use-xla)");
+        }
         Ok(())
     }
 
     /// Total tasks across the suite (throughput accounting).
     pub fn n_tasks(&self) -> usize {
-        self.specs.iter().map(|s| s.n_tasks()).sum()
+        match &self.stream {
+            Some(s) => s.n_tasks(),
+            None => self.specs.iter().map(|s| s.n_tasks()).sum(),
+        }
+    }
+
+    /// Total arrival slots the run will admit (suite size in either
+    /// eager or streaming form).
+    pub fn n_workloads(&self) -> usize {
+        match &self.stream {
+            Some(s) => s.n_workloads,
+            None => self.specs.len(),
+        }
     }
 
     /// One-line human description (CLI headers, sweep labels).
     pub fn describe(&self) -> String {
         format!(
-            "{} workloads / {} tasks | backend={} fleet={} fault={} arrivals={} policy={:?} estimator={:?} ttc={:?}",
-            self.specs.len(),
+            "{} workloads / {} tasks{} | backend={} fleet={} fault={} arrivals={} policy={:?} estimator={:?} ttc={:?}",
+            self.n_workloads(),
             self.n_tasks(),
+            if self.stream.is_some() { " (streamed)" } else { "" },
             self.backend.name(),
             self.fleet.describe(),
             self.fault.describe(),
@@ -254,6 +336,21 @@ impl ScenarioBuilder {
     /// densely (the reference arm of the skip-equivalence pin).
     pub fn dense_ticks(mut self, on: bool) -> Self {
         self.scn.dense_ticks = on;
+        self
+    }
+
+    /// Stream the workload suite: specs are generated lazily at their
+    /// arrival instants instead of up front (PR-8). Mutually exclusive
+    /// with `.workloads(..)`.
+    pub fn stream(mut self, stream: StreamSpec) -> Self {
+        self.scn.stream = Some(stream);
+        self
+    }
+
+    /// Audit-and-retire shards as workloads reach terminal state, so
+    /// memory tracks the live window (PR-8).
+    pub fn retire_shards(mut self, on: bool) -> Self {
+        self.scn.retire_shards = on;
         self
     }
 
@@ -343,6 +440,58 @@ mod tests {
         assert_eq!(scn.fleet, fleet);
         assert!(scn.describe().contains("m4.10xlarge:bid=0.6"));
         assert!(scn.describe().contains("reclaim-pools"));
+    }
+
+    #[test]
+    fn stream_materializes_to_the_same_suite_slot_by_slot() {
+        let cfg = Config::paper_defaults();
+        let stream =
+            StreamSpec { n_workloads: 5, tasks_per_workload: 8, app: crate::workload::App::Brisk };
+        let scn = ScenarioBuilder::new(cfg.clone()).stream(stream).retire_shards(true).build();
+        assert!(scn.validate().is_ok());
+        assert_eq!(scn.n_tasks(), 40);
+        assert_eq!(scn.n_workloads(), 5);
+        assert!(scn.describe().contains("(streamed)"));
+        let twin = scn.materialize();
+        assert!(twin.stream.is_none());
+        assert_eq!(twin.specs.len(), 5);
+        assert_eq!(twin.n_tasks(), 40);
+        // each lazily generated slot is bitwise the spec the twin holds
+        for (w, spec) in twin.specs.iter().enumerate() {
+            let lazy = stream.spec_for(w, cfg.seed);
+            assert_eq!(lazy.id, spec.id);
+            assert_eq!(lazy.name, spec.name);
+            assert_eq!(lazy.tasks.len(), spec.tasks.len());
+            for (a, b) in lazy.tasks.iter().zip(&spec.tasks) {
+                assert_eq!(a.true_cus.to_bits(), b.true_cus.to_bits());
+                assert_eq!(a.bytes, b.bytes);
+            }
+            assert_eq!(lazy.true_mean_cus[0].to_bits(), spec.true_mean_cus[0].to_bits());
+        }
+        // non-streaming scenarios materialize to themselves
+        let plain = ScenarioBuilder::new(cfg).build();
+        assert_eq!(plain.materialize().specs.len(), plain.specs.len());
+    }
+
+    #[test]
+    fn stream_validation_rejects_eager_specs_and_xla() {
+        let cfg = Config::paper_defaults();
+        let stream = StreamSpec {
+            n_workloads: 2,
+            tasks_per_workload: 3,
+            app: crate::workload::App::ImRotate,
+        };
+        let rng = crate::util::rng::Rng::new(1);
+        let spec = WorkloadSpec::generate(0, crate::workload::App::FaceDetection, 7, None, &rng);
+        let both =
+            ScenarioBuilder::new(cfg.clone()).workloads(vec![spec]).stream(stream).build();
+        let err = both.validate().unwrap_err().to_string();
+        assert!(err.contains("specs must be empty"), "{err}");
+        let mut xla_cfg = cfg;
+        xla_cfg.use_xla = true;
+        let xla = ScenarioBuilder::new(xla_cfg).stream(stream).build();
+        let err = xla.validate().unwrap_err().to_string();
+        assert!(err.contains("native bank"), "{err}");
     }
 
     #[test]

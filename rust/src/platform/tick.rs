@@ -78,7 +78,10 @@ impl Platform {
         let mut sc = std::mem::take(&mut self.scratch);
 
         // ----- ME: assemble bank inputs (eqs. 1-3 bookkeeping) ----------
-        let n_w = self.specs.len();
+        // Bank rows are *lane*-indexed (PR-8): `lanes[lane]` is the
+        // workload occupying estimator row `lane`. Materialized suites
+        // hold the identity mapping, so this loop is bitwise the old
+        // id-indexed walk; streaming suites only walk the live window.
         let k = self.k_max;
         let (bw, bk) = (self.bank.w, self.bank.k);
         let wk = bw * bk;
@@ -92,7 +95,8 @@ impl Platform {
         sc.m_rem.fill(0.0);
         sc.slot_mask.fill(0.0);
         sc.d.fill(0.0);
-        for w in 0..n_w {
+        for lane in 0..self.lanes.len() {
+            let w = self.lanes[lane] as usize;
             let st = &self.wl[w];
             if st.arrived_at > now || matches!(st.phase, WlPhase::Done) || self.arrived <= w {
                 continue;
@@ -106,9 +110,9 @@ impl Platform {
             // interval-quantized, so pacing against the raw deadline
             // systematically finishes up to one interval late
             let margin = self.cfg.control.monitor_interval_s;
-            sc.d[w] = dl.saturating_sub(now).saturating_sub(margin).max(1) as f32;
+            sc.d[lane] = dl.saturating_sub(now).saturating_sub(margin).max(1) as f32;
             for ki in 0..self.specs[w].n_types.min(k) {
-                let idx = w * bk + ki;
+                let idx = lane * bk + ki;
                 let slot = w * self.k_max + ki;
                 sc.slot_mask[idx] = 1.0;
                 sc.m_rem[idx] = remaining.get(ki).copied().unwrap_or(0) as f32;
@@ -193,13 +197,14 @@ impl Platform {
 
         // ----- passive estimators + convergence + traces ----------------
         sc.converged.clear();
-        for w in 0..n_w {
+        for lane in 0..self.lanes.len() {
+            let w = self.lanes[lane] as usize;
             if self.arrived <= w || matches!(self.wl[w].phase, WlPhase::Done) {
                 continue;
             }
             let spec = &self.specs[w];
             for ki in 0..spec.n_types {
-                let idx = w * bk + ki;
+                let idx = lane * bk + ki;
                 if sc.slot_mask[idx] == 0.0 {
                     continue;
                 }
@@ -290,9 +295,7 @@ impl Platform {
         };
         if eval_due {
             self.last_policy_eval = now;
-            let work_pending = (0..n_w).any(|w| {
-                self.arrived > w && !matches!(self.wl[w].phase, WlPhase::Done)
-            });
+            let work_pending = self.work_left();
             let ctx = PolicyCtx {
                 now,
                 n_tot: sc.committed_cus,
@@ -314,9 +317,9 @@ impl Platform {
         self.sample_instances(now);
 
         // continue while work remains or arrivals are still scheduled
-        let more_arrivals = self.arrived < self.specs.len();
-        let work_left = (0..n_w)
-            .any(|w| self.arrived > w && !matches!(self.wl[w].phase, WlPhase::Done));
+        // (for streaming suites, while the stream cursor has slots left)
+        let more_arrivals = self.arrived < self.total_slots();
+        let work_left = self.work_left();
         if more_arrivals || work_left {
             let interval = self.cfg.control.monitor_interval_s;
             let mut next_tick = now + interval;
@@ -344,20 +347,27 @@ impl Platform {
 
     /// Earliest instant at which something *other than a monitoring
     /// tick* can change observable platform state: the next non-tick
-    /// simulator event (arrivals are all pre-scheduled at `start`, so
-    /// this bounds them; chunk completions and instance readiness are
-    /// events too), the fault model's next scheduled action, and the
-    /// fleet's next billing increment. Monitoring instants strictly
-    /// before this horizon observe a platform that only the replayed
-    /// per-tick work itself mutates.
+    /// simulator event (chunk completions, instance readiness, and —
+    /// for materialized suites — the pre-scheduled arrivals), the
+    /// streaming cursor's next arrival (PR-8: streamed arrivals never
+    /// enter the queue, so the old queue-bounds-the-horizon assumption
+    /// is replaced by this leg, not silently kept), the fault model's
+    /// next scheduled action, and the fleet's next billing increment.
+    /// Monitoring instants strictly before this horizon observe a
+    /// platform that only the replayed per-tick work itself mutates.
     pub(crate) fn skip_horizon(&self) -> crate::sim::SimTime {
         let now = self.sim.now();
-        // eligibility requires pending arrivals, so the queue holds at
-        // least one non-tick event
-        let mut h = self
-            .sim
-            .next_non_tick_time()
-            .expect("skip eligibility requires a pending arrival event");
+        let mut h = self.sim.next_non_tick_time();
+        if let Some(s) = &self.stream {
+            // every arrival at or before `now` was already admitted, so
+            // the cursor's head strictly bounds future streamed arrivals
+            if let Some((_, at)) = s.schedule.peek() {
+                h = Some(h.map_or(at, |x| x.min(at)));
+            }
+        }
+        // eligibility requires pending arrivals — queued (materialized)
+        // or at the stream cursor — so one of the legs above is Some
+        let mut h = h.expect("skip eligibility requires a pending arrival");
         if let Some(t) = self.fault.next_scheduled(&*self.backend, now) {
             h = h.min(t);
         }
@@ -452,9 +462,7 @@ impl Platform {
         };
         if eval_due {
             self.last_policy_eval = t;
-            let work_pending = (0..n_w).any(|w| {
-                self.arrived > w && !matches!(self.wl[w].phase, WlPhase::Done)
-            });
+            let work_pending = self.work_left();
             let ctx = PolicyCtx {
                 now: t,
                 n_tot: sc.committed_cus,
@@ -475,10 +483,21 @@ impl Platform {
 
     // ----- helpers ---------------------------------------------------------
 
+    /// Any admitted workload not yet terminal? Scans the live lanes
+    /// (identity for materialized suites, the resident window for
+    /// streaming ones — retired workloads are `Done` and lane-less, so
+    /// the two forms agree).
+    pub(crate) fn work_left(&self) -> bool {
+        self.lanes.iter().any(|&w| {
+            let w = w as usize;
+            self.arrived > w && !matches!(self.wl[w].phase, WlPhase::Done)
+        })
+    }
+
     /// r_w under the driving estimator.
     pub(crate) fn driving_r(&self, out: &StepOutputs, w: usize) -> f64 {
         match self.estimator {
-            EstimatorKind::Kalman => out.r[w] as f64,
+            EstimatorKind::Kalman => out.r[self.lane_of[w] as usize] as f64,
             other => {
                 let spec = &self.specs[w];
                 let remaining = self.db.remaining_slice(w);
@@ -510,8 +529,14 @@ impl Platform {
         sc.rates_tmp.resize(n_w, 0.0);
         match self.estimator {
             EstimatorKind::Kalman => {
-                for w in 0..n_w {
-                    sc.rates_tmp[w] = out.s[w] as f64;
+                // bank outputs are lane-indexed; rates stay id-indexed.
+                // Identity lanes make this the old 0..n_w copy; with
+                // retirement, lane-less ids get the 0.0 a masked bank
+                // row would have produced for them.
+                sc.rates_tmp.fill(0.0);
+                for lane in 0..self.lanes.len() {
+                    let w = self.lanes[lane] as usize;
+                    sc.rates_tmp[w] = out.s[lane] as f64;
                 }
                 out.n_star as f64
             }
@@ -520,11 +545,13 @@ impl Platform {
                 sc.dd.resize(n_w, 0.0);
                 sc.active.resize(n_w, false);
                 sc.r.fill(0.0);
+                sc.dd.fill(0.0);
                 sc.active.fill(false);
-                for w in 0..n_w {
-                    sc.dd[w] = sc.d[w] as f64;
+                for lane in 0..self.lanes.len() {
+                    let w = self.lanes[lane] as usize;
+                    sc.dd[w] = sc.d[lane] as f64;
                     for ki in 0..self.specs[w].n_types {
-                        let idx = w * bk + ki;
+                        let idx = lane * bk + ki;
                         if sc.slot_mask[idx] > 0.0 {
                             sc.active[w] = true;
                             let est = &self.est[w * self.k_max + ki];

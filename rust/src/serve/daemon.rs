@@ -526,6 +526,13 @@ impl Control {
         let mut scn = self.template.clone();
         scn.specs = std::mem::take(&mut self.pending_specs);
         scn.arrivals = ArrivalProcess::Scripted { times: std::mem::take(&mut self.pending_times) };
+        // a resident daemon has an unbounded lifetime: audit-and-retire
+        // terminal shards so memory tracks the live window, not the
+        // submission history. Retirement is bitwise-unobservable in
+        // `RunMetrics` (the serve-parity pin still compares against a
+        // keep-everything batch twin); `/status` serves retired
+        // workloads from the audited terminal counts.
+        scn.retire_shards = true;
         scn.validate().map_err(|e| e.to_string())?;
         let mut p = Platform::from_scenario_with_cache(scn, &self.cache);
         p.start();
@@ -740,6 +747,16 @@ impl Control {
                         WlPhase::Done => "done",
                     }
                 };
+                // a retired workload's shard (and its spec's task slab)
+                // is gone — serve the exactly-once audited counts the
+                // retirement recorded instead of querying the tombstone
+                if let Some((completed, failed)) = p.wl[w].terminal {
+                    return Some(format!(
+                        "{{\"workload\":{w},\"app\":\"{}\",\"phase\":\"{phase}\",\"tasks\":{{\"total\":{},\"pending\":0,\"processing\":0,\"completed\":{completed},\"failed\":{failed}}}}}",
+                        app_model(spec.app).name,
+                        p.wl[w].n_tasks,
+                    ));
+                }
                 Some(format!(
                     "{{\"workload\":{w},\"app\":\"{}\",\"phase\":\"{phase}\",\"tasks\":{{\"total\":{},\"pending\":{},\"processing\":{},\"completed\":{},\"failed\":{}}}}}",
                     app_model(spec.app).name,
@@ -786,6 +803,20 @@ impl Control {
         );
         let done = p.wl.iter().filter(|w| matches!(w.phase, WlPhase::Done)).count();
         pt.scalar("dithen_workloads_done", "counter", "Workloads fully completed.", done as f64);
+        // PR-8 residency observability: what the retirement path keeps
+        // resident vs. what it has audited away
+        pt.scalar(
+            "dithen_live_shards",
+            "gauge",
+            "Workload shards currently resident (arrived - retired).",
+            p.live_shards() as f64,
+        );
+        pt.scalar(
+            "dithen_retired_shards",
+            "gauge",
+            "Terminal workload shards audited and retired.",
+            p.retired_shards() as f64,
+        );
         pt.scalar(
             "dithen_tasks_completed",
             "counter",

@@ -106,6 +106,21 @@ impl Engine {
         self.queue.peek().map(|s| s.at)
     }
 
+    /// Peek at the next event's `(time, sequence)` without popping —
+    /// the streaming-arrival pump (PR-8) uses the sequence half to
+    /// decide whether an un-queued streamed arrival at the same instant
+    /// precedes the queued event (arrivals scheduled before the run
+    /// started would have carried a smaller sequence number).
+    pub fn peek(&self) -> Option<(SimTime, u64)> {
+        self.queue.peek().map(|s| (s.at, s.seq))
+    }
+
+    /// Sequence number of the most recently scheduled event. Monotone;
+    /// captures "everything scheduled so far" as a watermark.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
     /// Earliest scheduled instant of any **non-`MonitorTick`** event —
     /// the engine half of the sparse-tick skip horizon (PR-6): a
     /// monitoring instant strictly before this time can only observe
@@ -228,6 +243,23 @@ mod tests {
         e.schedule(10, Event::MonitorTick);
         assert_eq!(e.next().map(|(t, _)| t), Some(50));
         assert_eq!(e.next().map(|(t, _)| t), Some(100));
+    }
+
+    #[test]
+    fn peek_exposes_time_and_sequence_watermark() {
+        let mut e = Engine::new();
+        assert_eq!(e.peek(), None);
+        assert_eq!(e.seq(), 0);
+        e.schedule(20, Event::MonitorTick);
+        e.schedule(10, Event::WorkloadArrival { workload: 0 });
+        assert_eq!(e.seq(), 2, "seq counts every schedule call");
+        let (t, seq) = e.peek().expect("two events pending");
+        assert_eq!(t, 10);
+        assert_eq!(seq, 2, "the earliest event was scheduled second");
+        // peek is non-destructive
+        assert_eq!(e.pending(), 2);
+        assert_eq!(e.next().map(|(t, _)| t), Some(10));
+        assert_eq!(e.peek(), Some((20, 1)));
     }
 
     #[test]

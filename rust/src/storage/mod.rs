@@ -60,6 +60,23 @@ impl ObjectStore {
         self.list(prefix).iter().map(|o| o.size_bytes).sum()
     }
 
+    /// Delete every object under `prefix`, returning how many were
+    /// removed — the bulk-delete a retired workload's `w{w:02}/` tree
+    /// goes through (PR-8). Callers pass a `/`-terminated prefix so
+    /// `w1/` can never swallow `w10/`.
+    pub fn delete_prefix(&mut self, prefix: &str) -> usize {
+        let doomed: Vec<String> = self
+            .objects
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in &doomed {
+            self.objects.remove(k);
+        }
+        doomed.len()
+    }
+
     /// Transfer time in seconds for `bytes` over one instance's share of
     /// bandwidth, including per-request latency for `requests` objects.
     pub fn transfer_time(&self, bytes: u64, requests: u64) -> f64 {
@@ -100,6 +117,19 @@ mod tests {
         assert_eq!(keys, vec!["w1/input/a.jpg", "w1/input/b.jpg"]);
         assert_eq!(s.count("w1/"), 3);
         assert_eq!(s.total_bytes("w1/input/"), 3);
+    }
+
+    #[test]
+    fn delete_prefix_is_exact_and_counts() {
+        let mut s = store();
+        s.put("w01/input/a.jpg", 1);
+        s.put("w01/input/b.jpg", 2);
+        s.put("w01/output/a.out", 3);
+        s.put("w010/input/x.jpg", 4);
+        assert_eq!(s.delete_prefix("w01/"), 3);
+        assert_eq!(s.count("w01/"), 0);
+        assert_eq!(s.count("w010/"), 1, "sibling prefixes must survive");
+        assert_eq!(s.delete_prefix("w01/"), 0, "second delete finds nothing");
     }
 
     #[test]

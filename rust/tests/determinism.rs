@@ -13,7 +13,7 @@ use dithen::estimation::BankCache;
 use dithen::experiments::batched::{run_specs_batched, run_specs_batched_opts};
 use dithen::experiments::parallel::{run_sharded, run_specs, run_specs_with_cache, RunSpec};
 use dithen::platform::{
-    run_experiment, ArrivalProcess, FaultSpec, RunOpts, Scenario, ScenarioBuilder,
+    run_experiment, ArrivalProcess, FaultSpec, RunOpts, Scenario, ScenarioBuilder, StreamSpec,
 };
 use dithen::util::rng::Rng;
 use dithen::workload::{App, WorkloadSpec};
@@ -395,6 +395,74 @@ fn tick_skip_composes_with_batched_and_sharded_executors() {
     assert_eq!(dense, skipped, "sharded tick-skipped run diverged from dense sharded run");
     assert!(skipped.ticks_skipped > 0, "no shard engaged the skipper");
     assert_eq!(dense.ticks_skipped, 0);
+}
+
+/// PR-8 headline pin: a streamed run — workloads materialized lazily at
+/// their arrival instants, shards audited and retired as workloads turn
+/// terminal — must be **bit-identical** to its materialize-everything
+/// twin. Traces stay on, so the equality covers every per-tick curve
+/// and estimator sample, not just end-of-run totals; the comparison is
+/// repeated across dense and tick-skipped execution (the skip horizon
+/// gained an arrival leg from the stream cursor) and across sweep
+/// thread counts.
+#[test]
+fn streaming_is_bit_identical_to_materialized() {
+    let streamed_scn = |seed: u64, dense: bool, retire: bool| {
+        ScenarioBuilder::new(cfg(seed))
+            .stream(StreamSpec {
+                n_workloads: 4,
+                tasks_per_workload: 12,
+                app: App::FaceDetection,
+            })
+            .retire_shards(retire)
+            .fixed_ttc(Some(1800))
+            // the PR-6 sparse shape: each workload finishes well inside
+            // its two-hour arrival gap, so the skipper has idle
+            // stretches to fast-forward — now bounded by the stream
+            // cursor's next-arrival leg as well
+            .arrivals(ArrivalProcess::FixedInterval { interval_s: 7200 })
+            .horizon(12 * 3600)
+            .dense_ticks(dense)
+            .record_traces(true)
+            .build()
+    };
+    for seed in [1u64, 42] {
+        for dense in [true, false] {
+            let scn = streamed_scn(seed, dense, true);
+            let mut twin = scn.materialize();
+            assert!(twin.stream.is_none() && twin.specs.len() == 4, "twin must be eager");
+            twin.retire_shards = false;
+            let batch = twin.run().unwrap();
+            let streamed = scn.run().unwrap();
+            assert_eq!(
+                streamed, batch,
+                "seed {seed} dense={dense}: streamed+retired run diverged from the batch twin"
+            );
+            // retirement alone must be bitwise-unobservable too
+            let kept = streamed_scn(seed, dense, false).run().unwrap();
+            assert_eq!(
+                kept, batch,
+                "seed {seed} dense={dense}: streamed run without retirement diverged"
+            );
+            assert_eq!(streamed.tasks_completed, 4 * 12);
+            if !dense {
+                assert!(streamed.ticks_skipped > 0, "seed {seed}: skipper never engaged");
+            }
+        }
+    }
+    // thread-count invariance through the parallel sweep runner
+    let specs: Vec<RunSpec> = [5u64, 6]
+        .iter()
+        .map(|&s| RunSpec::new(format!("stream/{s}"), streamed_scn(s, false, true)))
+        .collect();
+    let reference = run_specs(&specs, 1).unwrap();
+    for threads in [2usize, 8] {
+        let parallel = run_specs(&specs, threads).unwrap();
+        assert_eq!(
+            reference, parallel,
+            "{threads}-thread streamed sweep diverged from the sequential reference"
+        );
+    }
 }
 
 #[test]
