@@ -1,0 +1,104 @@
+//! Controller bake-off — AIMD vs PID vs MPC vs the reactive baseline.
+//!
+//! Runs one smoke-sized reclamation scenario (three face-detection
+//! workloads arriving a minute apart on the spot market, bid barely
+//! above the m3.medium base price) under four controllers, everything
+//! else held fixed:
+//!
+//! 1. **AIMD** — the paper's billing-aware controller: additive
+//!    increase toward N*, multiplicative decrease only at whole-hour
+//!    billing boundaries (§III-B).
+//! 2. **PID** — the PR-9 trait-dispatched three-term controller with
+//!    conditional-integration anti-windup, tracking the same N* signal.
+//! 3. **MPC** — the PR-9 receding-horizon controller: minimizes
+//!    cost + deadline-shortfall penalty over an LR forecast of N*,
+//!    tightening when the nearest deadline's slack shrinks.
+//! 4. **Reactive** — snap to the instantaneous N* every tick, no
+//!    smoothing and no billing awareness (the Pareto baseline the
+//!    `sweep policies` dominance column is computed against).
+//!
+//! A fifth row swaps the Kalman bank for the last-observation
+//! "reactive" *estimator* under the AIMD controller, separating what
+//! the controller contributes from what the estimator contributes.
+//!
+//! Run:  cargo run --release --example policy_shootout
+
+use dithen::config::Config;
+use dithen::coordinator::PolicyKind;
+use dithen::estimation::EstimatorKind;
+use dithen::metrics::RunMetrics;
+use dithen::platform::{ArrivalProcess, FaultSpec, Scenario, ScenarioBuilder};
+use dithen::util::rng::Rng;
+use dithen::util::table::{fmt_hm, Table};
+use dithen::workload::{App, WorkloadSpec};
+
+fn cell(policy: PolicyKind, estimator: EstimatorKind) -> Scenario {
+    let mut cfg = Config::paper_defaults();
+    cfg.control.n_min = 4.0;
+    let rng = Rng::new(cfg.seed);
+    let suite: Vec<WorkloadSpec> = (0..3)
+        .map(|i| WorkloadSpec::generate(i, App::FaceDetection, 40, None, &rng))
+        .collect();
+    ScenarioBuilder::new(cfg)
+        .workloads(suite)
+        .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+        .fixed_ttc(Some(3600))
+        .horizon(6 * 3600)
+        .fault(FaultSpec::SpotReclamation { bid: 0.0082 })
+        .policy(policy)
+        .estimator(estimator)
+        .build()
+}
+
+fn main() -> anyhow::Result<()> {
+    let cells: Vec<(&str, PolicyKind, EstimatorKind)> = vec![
+        ("aimd+kalman", PolicyKind::Aimd, EstimatorKind::Kalman),
+        ("pid+kalman", PolicyKind::Pid, EstimatorKind::Kalman),
+        ("mpc+kalman", PolicyKind::Mpc, EstimatorKind::Kalman),
+        ("reactive+kalman", PolicyKind::Reactive, EstimatorKind::Kalman),
+        ("aimd+reactive", PolicyKind::Aimd, EstimatorKind::Reactive),
+    ];
+    let mut results: Vec<(&str, RunMetrics)> = Vec::new();
+    for &(label, policy, estimator) in &cells {
+        let scn = cell(policy, estimator);
+        println!("{label:>16}: {}", scn.describe());
+        results.push((label, scn.run()?));
+    }
+
+    let mut t =
+        Table::new(vec!["cell", "cost", "TTC compliance", "finished at", "max inst", "reclaims"]);
+    for (label, m) in &results {
+        t.row(vec![
+            (*label).to_string(),
+            format!("${:.3}", m.total_cost),
+            format!("{:.0}%", 100.0 * m.ttc_compliance()),
+            fmt_hm(m.finished_at as f64),
+            format!("{}", m.max_instances),
+            format!("{}", m.reclamations),
+        ]);
+    }
+    t.print();
+
+    // How to read the table: the reactive controller is the floor on
+    // deadline performance (it buys exactly what N* asks for, instantly)
+    // and usually the ceiling on cost — every fleet-size wiggle becomes
+    // a boot plus a billed hour. AIMD sits on the cheap edge because it
+    // only sheds instances at billing boundaries (an already-paid hour
+    // is free capacity). PID lands between them: the integral term
+    // closes steady-state error that AIMD's fixed additive step leaves,
+    // while anti-windup keeps reclamation transients from slamming the
+    // fleet. MPC spends slightly more than AIMD when forecasted demand
+    // rises (it pre-provisions ahead of the ramp) and is the first to
+    // tighten when deadline slack shrinks. The fifth row shows the
+    // estimator's share of the margin: last-observation estimates make
+    // chunk sizing twitchy, so even the cheap AIMD controller overbuys.
+    let by = |l: &str| &results.iter().find(|(n, _)| *n == l).unwrap().1;
+    let (aimd, reactive) = (by("aimd+kalman"), by("reactive+kalman"));
+    println!(
+        "aimd is {:.2}x the reactive baseline's cost at {:.0}% vs {:.0}% TTC compliance",
+        aimd.total_cost / reactive.total_cost.max(1e-12),
+        100.0 * aimd.ttc_compliance(),
+        100.0 * reactive.ttc_compliance(),
+    );
+    Ok(())
+}

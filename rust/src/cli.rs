@@ -15,8 +15,8 @@
 //! ```
 //!
 //! Common options: `--config <file>`, `--set k=v` (repeatable),
-//! `--policy <aimd|reactive|mwa|lr|as1|as10>`, `--estimator
-//! <kalman|adhoc|arma>`, `--ttc <seconds>`, `--seed <n>`, `--native`,
+//! `--policy <aimd|pid|mpc|reactive|mwa|lr|as1|as10>`, `--estimator
+//! <kalman|adhoc|arma|ewma|reactive>`, `--ttc <seconds>`, `--seed <n>`, `--native`,
 //! `--threads <n>`, `--out <file>`. Scenario options: `--backend
 //! <spot|ondemand|lambda>`, `--fleet <type[:bid=P],..>`, `--fault
 //! <none|reclaim:BID|reclaim-pools|reclaim-at:T,..>`,
@@ -59,8 +59,8 @@ COMMANDS:
 OPTIONS:
     --config <file>        load a TOML config
     --set <section.key=v>  override one config value (repeatable)
-    --policy <p>           aimd | reactive | mwa | lr | as1 | as10
-    --estimator <e>        kalman | adhoc | arma
+    --policy <p>           aimd | pid | mpc | reactive | mwa | lr | as1 | as10
+    --estimator <e>        kalman | adhoc | arma | ewma | reactive
     --ttc <seconds>        fixed per-workload TTC (0 = best effort)
     --seed <n>             master seed
     --native               force the native estimator bank (skip XLA)
@@ -260,6 +260,8 @@ pub fn parse_threads(s: &str) -> Result<Vec<usize>, CliError> {
 pub fn parse_policy(s: &str) -> Result<PolicyKind, CliError> {
     Ok(match s {
         "aimd" => PolicyKind::Aimd,
+        "pid" => PolicyKind::Pid,
+        "mpc" => PolicyKind::Mpc,
         "reactive" => PolicyKind::Reactive,
         "mwa" => PolicyKind::Mwa,
         "lr" => PolicyKind::Lr,
@@ -274,6 +276,8 @@ pub fn parse_estimator(s: &str) -> Result<EstimatorKind, CliError> {
         "kalman" => EstimatorKind::Kalman,
         "adhoc" => EstimatorKind::AdHoc,
         "arma" => EstimatorKind::Arma,
+        "ewma" => EstimatorKind::Ewma,
+        "reactive" => EstimatorKind::Reactive,
         other => return Err(CliError(format!("unknown estimator '{other}'"))),
     })
 }
@@ -826,8 +830,12 @@ mod tests {
     fn policy_and_estimator_names() {
         assert_eq!(parse_policy("aimd").unwrap(), PolicyKind::Aimd);
         assert_eq!(parse_policy("as10").unwrap(), PolicyKind::AmazonAs10);
+        assert_eq!(parse_policy("pid").unwrap(), PolicyKind::Pid);
+        assert_eq!(parse_policy("mpc").unwrap(), PolicyKind::Mpc);
         assert!(parse_policy("nope").is_err());
         assert_eq!(parse_estimator("arma").unwrap(), EstimatorKind::Arma);
+        assert_eq!(parse_estimator("ewma").unwrap(), EstimatorKind::Ewma);
+        assert_eq!(parse_estimator("reactive").unwrap(), EstimatorKind::Reactive);
         assert!(parse_estimator("nope").is_err());
     }
 

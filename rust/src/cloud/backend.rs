@@ -242,6 +242,19 @@ pub trait CloudBackend {
         1.0
     }
 
+    /// Per-*instance* execution-time multiplier (PR-9): the Table V
+    /// catalogue's per-type `exec_mult` for IaaS backends — an ECU-dense
+    /// type runs the same task in less wall time — composed with the
+    /// backend-wide [`execution_multiplier`] at dispatch. Defaults to
+    /// 1.0 (Lambda's fleet is homogeneous; the base m3.medium type is
+    /// exactly 1.0, so default fleets are bit-identical to pre-PR-9).
+    ///
+    /// [`execution_multiplier`]: CloudBackend::execution_multiplier
+    fn instance_exec_mult(&self, id: u64) -> f64 {
+        let _ = id;
+        1.0
+    }
+
     /// Chunk `chunk` of `tasks` tasks finished on `id` after `busy_s`
     /// occupied core-seconds: release its slot and do any usage billing.
     fn on_chunk_finished(&mut self, id: u64, chunk: u64, now: SimTime, busy_s: f64, tasks: usize) {

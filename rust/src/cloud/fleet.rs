@@ -23,6 +23,13 @@
 //! (1 CU) pool with no bid — which reproduces the pre-fleet platform
 //! bit for bit (`platform::tests` pins this).
 //!
+//! Since PR-9 the catalogue also carries a per-type **execution-time
+//! multiplier** (`InstanceType::exec_mult`, normalized per-CU ECU
+//! density): work dispatched onto an ECU-denser type finishes faster,
+//! so a mixed fleet's service rates differ by type — not just CU count.
+//! `m3.medium` is exactly 1.0, keeping the default fleet bitwise
+//! unchanged.
+//!
 //! CLI grammar (`dithen scenario --fleet …`):
 //!
 //! ```text

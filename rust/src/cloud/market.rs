@@ -22,16 +22,70 @@ pub struct InstanceType {
     pub cus: u32,
     pub on_demand: f64,
     pub spot_base: f64,
+    /// Per-type execution-time multiplier (PR-9, Table V extension):
+    /// scheduled busy seconds on this type are scaled by this factor, so
+    /// service rates differ by type — not just CU count — as the
+    /// heterogeneous-transcoding study (arxiv 1809.06529) observes.
+    /// Derived from per-CU ECU density normalized to m3.medium
+    /// (`3.0 * cus / ecus`): an ECU-denser CU finishes the same task in
+    /// less wall time. m3.medium is *exactly* 1.0 by construction, which
+    /// keeps the default single-type fleet bit-identical to pre-PR-9
+    /// runs (`x * 1.0 == x` bitwise).
+    pub exec_mult: f64,
 }
 
-/// Table V catalogue.
+/// Table V catalogue. `exec_mult` entries are the const expressions
+/// `3.0 * cus / ecus` so the derivation stays visible (and m3.medium's
+/// is the exact literal 1.0).
 pub const CATALOG: &[InstanceType] = &[
-    InstanceType { name: "m3.medium", ecus: 3.0, cus: 1, on_demand: 0.067, spot_base: 0.0081 },
-    InstanceType { name: "m3.large", ecus: 6.5, cus: 2, on_demand: 0.133, spot_base: 0.0173 },
-    InstanceType { name: "m3.xlarge", ecus: 13.0, cus: 4, on_demand: 0.266, spot_base: 0.0333 },
-    InstanceType { name: "m3.2xlarge", ecus: 26.0, cus: 8, on_demand: 0.532, spot_base: 0.066 },
-    InstanceType { name: "m4.4xlarge", ecus: 53.5, cus: 16, on_demand: 1.008, spot_base: 0.1097 },
-    InstanceType { name: "m4.10xlarge", ecus: 124.5, cus: 40, on_demand: 2.52, spot_base: 0.5655 },
+    InstanceType {
+        name: "m3.medium",
+        ecus: 3.0,
+        cus: 1,
+        on_demand: 0.067,
+        spot_base: 0.0081,
+        exec_mult: 1.0,
+    },
+    InstanceType {
+        name: "m3.large",
+        ecus: 6.5,
+        cus: 2,
+        on_demand: 0.133,
+        spot_base: 0.0173,
+        exec_mult: 3.0 * 2.0 / 6.5,
+    },
+    InstanceType {
+        name: "m3.xlarge",
+        ecus: 13.0,
+        cus: 4,
+        on_demand: 0.266,
+        spot_base: 0.0333,
+        exec_mult: 3.0 * 4.0 / 13.0,
+    },
+    InstanceType {
+        name: "m3.2xlarge",
+        ecus: 26.0,
+        cus: 8,
+        on_demand: 0.532,
+        spot_base: 0.066,
+        exec_mult: 3.0 * 8.0 / 26.0,
+    },
+    InstanceType {
+        name: "m4.4xlarge",
+        ecus: 53.5,
+        cus: 16,
+        on_demand: 1.008,
+        spot_base: 0.1097,
+        exec_mult: 3.0 * 16.0 / 53.5,
+    },
+    InstanceType {
+        name: "m4.10xlarge",
+        ecus: 124.5,
+        cus: 40,
+        on_demand: 2.52,
+        spot_base: 0.5655,
+        exec_mult: 3.0 * 40.0 / 124.5,
+    },
 ];
 
 pub fn instance_type(name: &str) -> Option<&'static InstanceType> {
@@ -179,6 +233,24 @@ mod tests {
         for ty in CATALOG {
             let per_cu = ty.on_demand / ty.cus as f64;
             assert!((0.05..0.075).contains(&per_cu), "{}: {per_cu}", ty.name);
+        }
+    }
+
+    #[test]
+    fn exec_mult_normalized_to_m3_medium() {
+        // the base type is *exactly* 1.0 (default-fleet bit-identity:
+        // busy_s * 1.0 is bitwise busy_s), larger types within ~10 %
+        assert_eq!(instance_type("m3.medium").unwrap().exec_mult.to_bits(), 1.0f64.to_bits());
+        for ty in CATALOG {
+            assert!(
+                (0.85..=1.0).contains(&ty.exec_mult),
+                "{}: exec_mult={}",
+                ty.name,
+                ty.exec_mult
+            );
+            // derivation: per-CU ECU density normalized to m3.medium
+            let want = 3.0 * ty.cus as f64 / ty.ecus;
+            assert_eq!(ty.exec_mult.to_bits(), want.to_bits(), "{}", ty.name);
         }
     }
 

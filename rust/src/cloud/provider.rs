@@ -378,6 +378,13 @@ impl crate::cloud::CloudBackend for Provider {
     fn unit_price(&self, now: SimTime) -> f64 {
         self.price_at(self.pools[0].type_idx, now)
     }
+
+    fn instance_exec_mult(&self, id: u64) -> f64 {
+        // Table V per-type execution-time multiplier (PR-9): ECU-denser
+        // types finish the same task in less wall time. m3.medium is
+        // exactly 1.0, so the default fleet is untouched bitwise.
+        self.instances.get(&id).map_or(1.0, |i| CATALOG[i.type_idx].exec_mult)
+    }
 }
 
 #[cfg(test)]
@@ -533,6 +540,19 @@ mod tests {
         assert_eq!(p.pool_of_type(4), Some(1));
         assert_eq!(p.pool_of_type(2), None);
         assert_eq!(p.pool_cus(1), 16);
+    }
+
+    #[test]
+    fn instance_exec_mult_follows_the_catalogue() {
+        let mut p = mixed();
+        let (small, rs) = p.request_instance_in(0, 0).unwrap();
+        p.instance_ready(small, rs);
+        let (big, rb) = p.request_instance_in(1, 0).unwrap();
+        p.instance_ready(big, rb);
+        assert_eq!(p.instance_exec_mult(small).to_bits(), 1.0f64.to_bits());
+        assert_eq!(p.instance_exec_mult(big).to_bits(), CATALOG[4].exec_mult.to_bits());
+        assert!(p.instance_exec_mult(big) < 1.0, "m4.4xlarge CUs are ECU-denser");
+        assert_eq!(p.instance_exec_mult(9999), 1.0, "unknown id defaults to 1.0");
     }
 
     #[test]

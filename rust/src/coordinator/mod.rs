@@ -12,7 +12,12 @@ pub mod tracker;
 pub mod ttc;
 
 pub use chunking::{chunk_size, footprint_count};
-pub use policy::{Aimd, AmazonAs, Lr, Mwa, PolicyCtx, PolicyKind, Reactive, ScalingPolicy};
+pub use policy::{
+    Aimd, AmazonAs, ControlPolicy, Lr, Mpc, Mwa, Pid, PolicyCtx, PolicyKind, Reactive, FORECAST_H,
+};
+/// Pre-PR-9 name for [`ControlPolicy`], kept as an alias so existing
+/// imports keep compiling.
+pub use policy::ControlPolicy as ScalingPolicy;
 pub use service_rate::{service_rates, service_rates_into};
 pub use tracker::Tracker;
 pub use ttc::{confirm, Confirmation};

@@ -1,12 +1,29 @@
-//! Instance-scaling policies: the proposed AIMD controller (Fig. 4) and
-//! the §V-C baselines — Reactive, MWA, LR (Gandhi / Krioukov et al.) and
-//! Amazon Autoscale's CPU-utilization rule.
+//! Instance-scaling control policies: the proposed AIMD controller
+//! (Fig. 4), the §V-C baselines — Reactive, MWA, LR (Gandhi / Krioukov
+//! et al.) and Amazon Autoscale's CPU-utilization rule — plus the PR-9
+//! bake-off additions: a PID controller and a receding-horizon MPC over
+//! the demand forecast.
 //!
 //! A policy maps the monitoring-instant context to the desired total CU
-//! count N_tot[t+1]; the platform then requests/terminates single-CU spot
+//! count N_tot[t+1]; the platform then requests/terminates spot
 //! instances to meet it.
+//!
+//! # Adding a policy
+//!
+//! Implement [`ControlPolicy`] (one required method: [`target`]), add a
+//! [`PolicyKind`] variant wired through [`PolicyKind::build`], and the
+//! policy runs unmodified across every (estimator × backend × fault ×
+//! arrivals) scenario cell — the platform evaluates it at each
+//! monitoring instant through the same seam AIMD uses (see
+//! `rust/BENCHMARKS.md` "how to add a policy/estimator").
+//!
+//! [`target`]: ControlPolicy::target
 
 use crate::util::stats;
+
+/// Monitoring instants of demand forecast a [`PolicyCtx`] carries
+/// (index 0 is the current N*_tot; later entries are extrapolated).
+pub const FORECAST_H: usize = 8;
 
 /// What a policy sees at a monitoring instant.
 #[derive(Debug, Clone)]
@@ -22,14 +39,25 @@ pub struct PolicyCtx<'a> {
     /// History of N*_tot at previous monitoring instants (oldest first,
     /// including the current value as the last element).
     pub n_star_history: &'a [f64],
+    /// Demand forecast over the next monitoring instants: entry 0 is
+    /// the current N*_tot (bitwise — [`Reactive`] on `forecast[0]`
+    /// equals `Reactive` on `n_star`), entries `1..` extrapolate the
+    /// Kalman-driven N* history forward (floored at 0). Empty only in
+    /// hand-built test contexts.
+    pub forecast: &'a [f64],
+    /// Seconds until the tightest confirmed workload deadline, minimum
+    /// over live workloads; `f64::INFINITY` when none is live. Lets a
+    /// policy provision more aggressively when slack is short.
+    pub deadline_slack_s: f64,
     /// Mean CPU utilization across active instances, in [0, 1].
     pub mean_utilization: f64,
     /// True when any workload still has pending/processing tasks.
     pub work_pending: bool,
 }
 
-/// A CU-scaling policy.
-pub trait ScalingPolicy: std::fmt::Debug {
+/// A CU-scaling control policy (PR-9 trait seam; the pre-trait code
+/// called this `ScalingPolicy`, which remains re-exported as an alias).
+pub trait ControlPolicy: std::fmt::Debug {
     fn name(&self) -> &'static str;
     /// Desired N_tot for the next interval (the platform clamps/rounds).
     fn target(&mut self, ctx: &PolicyCtx) -> f64;
@@ -40,6 +68,15 @@ pub trait ScalingPolicy: std::fmt::Debug {
     /// Policy evaluation period in seconds (Amazon AS: fixed 5 min).
     fn eval_interval_s(&self) -> Option<u64> {
         None
+    }
+    /// Whether down-scaling should *drain lazily* — keep an idle
+    /// instance until its pre-billed window nears exhaustion instead of
+    /// terminating eagerly (the Fig. 4 AIMD termination rule). The
+    /// AIMD-family controllers (AIMD, PID, MPC) drain lazily; the §V-C
+    /// baselines terminate eagerly, exactly as the paper configures
+    /// them.
+    fn lazy_drain(&self) -> bool {
+        false
     }
 }
 
@@ -58,7 +95,7 @@ impl Aimd {
     }
 }
 
-impl ScalingPolicy for Aimd {
+impl ControlPolicy for Aimd {
     fn name(&self) -> &'static str {
         "AIMD"
     }
@@ -68,6 +105,9 @@ impl ScalingPolicy for Aimd {
         } else {
             (self.beta * ctx.n_tot).max(self.n_min)
         }
+    }
+    fn lazy_drain(&self) -> bool {
+        true
     }
 }
 
@@ -79,7 +119,7 @@ pub struct Reactive {
     pub n_max: f64,
 }
 
-impl ScalingPolicy for Reactive {
+impl ControlPolicy for Reactive {
     fn name(&self) -> &'static str {
         "Reactive"
     }
@@ -96,7 +136,7 @@ pub struct Mwa {
     pub n_max: f64,
 }
 
-impl ScalingPolicy for Mwa {
+impl ControlPolicy for Mwa {
     fn name(&self) -> &'static str {
         "MWA"
     }
@@ -115,7 +155,7 @@ pub struct Lr {
     pub n_max: f64,
 }
 
-impl ScalingPolicy for Lr {
+impl ControlPolicy for Lr {
     fn name(&self) -> &'static str {
         "LR"
     }
@@ -139,7 +179,7 @@ pub struct AmazonAs {
     pub n_max: f64,
 }
 
-impl ScalingPolicy for AmazonAs {
+impl ControlPolicy for AmazonAs {
     fn name(&self) -> &'static str {
         "Amazon AS"
     }
@@ -158,7 +198,158 @@ impl ScalingPolicy for AmazonAs {
     }
 }
 
-/// Which policy a run uses (the §V-C comparison set).
+/// PID controller on the demand error e = N* − N_tot, with
+/// conditional-integration anti-windup: the integral accumulates only
+/// while the actuator is unsaturated, or while the error would pull the
+/// output back inside the [n_min, n_max] range. Without this guard a
+/// long saturated stretch (demand far above `n_max`) winds the integral
+/// up and the controller overshoots for many instants after demand
+/// drops; with it, recovery is immediate (pinned by the
+/// `pid_anti_windup_recovers_immediately` test).
+#[derive(Debug, Clone)]
+pub struct Pid {
+    pub kp: f64,
+    pub ki: f64,
+    pub kd: f64,
+    pub n_min: f64,
+    pub n_max: f64,
+    integral: f64,
+    prev_err: Option<f64>,
+}
+
+impl Pid {
+    pub fn new(kp: f64, ki: f64, kd: f64, n_min: f64, n_max: f64) -> Self {
+        Pid { kp, ki, kd, n_min, n_max, integral: 0.0, prev_err: None }
+    }
+
+    /// Paper-scale default gains: proportional-dominant (a unit demand
+    /// error moves the target by ~0.6 CU), a slow integral to remove
+    /// steady-state offset, and a small derivative to damp demand
+    /// spikes.
+    pub fn from_config(c: &crate::config::ControlCfg) -> Self {
+        Pid::new(0.6, 0.1, 0.2, c.n_min, c.n_max)
+    }
+}
+
+impl ControlPolicy for Pid {
+    fn name(&self) -> &'static str {
+        "PID"
+    }
+    fn target(&mut self, ctx: &PolicyCtx) -> f64 {
+        let e = ctx.n_star - ctx.n_tot;
+        // derivative over monitoring instants; zero on the first
+        // evaluation (no phantom kick against an assumed prior error)
+        let d = match self.prev_err {
+            Some(prev) => e - prev,
+            None => 0.0,
+        };
+        self.prev_err = Some(e);
+        let trial = self.integral + e;
+        let raw = ctx.n_tot + self.kp * e + self.ki * trial + self.kd * d;
+        let clamped = raw.clamp(self.n_min, self.n_max);
+        // conditional integration: commit the accumulated error only if
+        // the output is unsaturated or the error de-saturates it
+        if raw == clamped || (raw > clamped && e < 0.0) || (raw < clamped && e > 0.0) {
+            self.integral = trial;
+        }
+        clamped
+    }
+    fn lazy_drain(&self) -> bool {
+        true
+    }
+}
+
+/// Receding-horizon model-predictive control over the demand forecast:
+/// pick the N_tot minimizing expected cost over the next `horizon`
+/// monitoring instants,
+///
+/// ```text
+/// J(n) = Σ_h [ cu_cost·n + penalty·max(0, forecast[h] − n) ]
+/// ```
+///
+/// — a piecewise-linear convex objective (holding capacity costs
+/// `cu_cost` per CU-instant; under-provisioning against forecast demand
+/// costs `penalty` per missing CU-instant, `penalty > cu_cost`). The
+/// minimum over [n_min, n_max] is attained at one of the clamped
+/// forecast values or an interval endpoint, so those are the only
+/// candidates evaluated. When the tightest live deadline is closer than
+/// `tight_slack_s`, the under-provision penalty doubles — the
+/// deadline-slack input makes MPC provision ahead of a ramp instead of
+/// chasing it.
+///
+/// With `horizon = 1` the argmin is exactly `forecast[0]` clamped —
+/// bitwise the [`Reactive`] baseline, since `forecast[0]` *is* `n_star`
+/// (pinned by `mpc_horizon_one_degenerates_to_reactive`).
+#[derive(Debug, Clone)]
+pub struct Mpc {
+    /// Forecast instants optimized over (capped at the forecast length).
+    pub horizon: usize,
+    /// Cost of holding one CU for one monitoring instant (relative).
+    pub cu_cost: f64,
+    /// Cost of one CU of unmet forecast demand for one instant; must
+    /// exceed `cu_cost` or the objective degenerates to "hold nothing".
+    pub penalty: f64,
+    /// Deadline slack (s) below which `penalty` doubles.
+    pub tight_slack_s: f64,
+    pub n_min: f64,
+    pub n_max: f64,
+}
+
+impl Mpc {
+    pub fn from_config(c: &crate::config::ControlCfg) -> Self {
+        Mpc {
+            horizon: 4,
+            cu_cost: 1.0,
+            penalty: 3.0,
+            tight_slack_s: 1800.0,
+            n_min: c.n_min,
+            n_max: c.n_max,
+        }
+    }
+
+    fn objective(&self, window: &[f64], penalty: f64, n: f64) -> f64 {
+        window.iter().map(|&d| self.cu_cost * n + penalty * (d - n).max(0.0)).sum()
+    }
+}
+
+impl ControlPolicy for Mpc {
+    fn name(&self) -> &'static str {
+        "MPC"
+    }
+    fn target(&mut self, ctx: &PolicyCtx) -> f64 {
+        let h = self.horizon.min(ctx.forecast.len());
+        if h == 0 {
+            // hand-built context without a forecast: track demand
+            return ctx.n_star.clamp(self.n_min, self.n_max);
+        }
+        let window = &ctx.forecast[..h];
+        let penalty = if ctx.deadline_slack_s < self.tight_slack_s {
+            2.0 * self.penalty
+        } else {
+            self.penalty
+        };
+        let mut best = self.n_max;
+        let mut best_j = f64::INFINITY;
+        let candidates = [self.n_min, self.n_max]
+            .into_iter()
+            .chain(window.iter().map(|d| d.clamp(self.n_min, self.n_max)));
+        for n in candidates {
+            let j = self.objective(window, penalty, n);
+            // ties break toward the smaller (cheaper) fleet
+            if j < best_j || (j == best_j && n < best) {
+                best_j = j;
+                best = n;
+            }
+        }
+        best
+    }
+    fn lazy_drain(&self) -> bool {
+        true
+    }
+}
+
+/// Which policy a run uses (the §V-C comparison set plus the PR-9
+/// bake-off controllers).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PolicyKind {
     Aimd,
@@ -167,6 +358,8 @@ pub enum PolicyKind {
     Lr,
     AmazonAs1,
     AmazonAs10,
+    Pid,
+    Mpc,
 }
 
 impl PolicyKind {
@@ -181,17 +374,20 @@ impl PolicyKind {
             PolicyKind::Lr => "LR",
             PolicyKind::AmazonAs1 => "Amazon AS (+1)",
             PolicyKind::AmazonAs10 => "Amazon AS (+10)",
+            PolicyKind::Pid => "PID",
+            PolicyKind::Mpc => "MPC",
         }
     }
 
     /// Instantiate with the given control config.
     ///
-    /// N_min/N_max are parameters *of the AIMD algorithm* (Fig. 4); the
-    /// predictive baselines track the demand estimate directly (floored
-    /// at one instance so progress is always possible, capped at N_max),
-    /// exactly the §V-C configuration where Reactive peaked at 28
-    /// instances while AIMD never left [10, 13].
-    pub fn build(&self, c: &crate::config::ControlCfg) -> Box<dyn ScalingPolicy> {
+    /// N_min/N_max are parameters *of the AIMD-family algorithms*
+    /// (Fig. 4) — PID and MPC share them; the predictive baselines track
+    /// the demand estimate directly (floored at one instance so progress
+    /// is always possible, capped at N_max), exactly the §V-C
+    /// configuration where Reactive peaked at 28 instances while AIMD
+    /// never left [10, 13].
+    pub fn build(&self, c: &crate::config::ControlCfg) -> Box<dyn ControlPolicy> {
         match self {
             PolicyKind::Aimd => Box::new(Aimd::from_config(c)),
             PolicyKind::Reactive => Box::new(Reactive { n_min: 1.0, n_max: c.n_max }),
@@ -203,6 +399,8 @@ impl PolicyKind {
             PolicyKind::AmazonAs10 => {
                 Box::new(AmazonAs { step: 10.0, threshold: 0.20, n_max: c.n_max })
             }
+            PolicyKind::Pid => Box::new(Pid::from_config(c)),
+            PolicyKind::Mpc => Box::new(Mpc::from_config(c)),
         }
     }
 }
@@ -218,7 +416,24 @@ mod tests {
             n_tot,
             n_star,
             n_star_history: hist,
+            forecast: &[],
+            deadline_slack_s: f64::INFINITY,
             mean_utilization: util,
+            work_pending: true,
+        }
+    }
+
+    /// Context with a demand forecast (`forecast[0]` = `n_star`, like
+    /// the platform constructs) and an explicit deadline slack.
+    fn fctx<'a>(n_tot: f64, forecast: &'a [f64], slack_s: f64) -> PolicyCtx<'a> {
+        PolicyCtx {
+            now: 0,
+            n_tot,
+            n_star: forecast.first().copied().unwrap_or(0.0),
+            n_star_history: &[],
+            forecast,
+            deadline_slack_s: slack_s,
+            mean_utilization: 0.9,
             work_pending: true,
         }
     }
@@ -244,6 +459,31 @@ mod tests {
         // Fig. 4: incr = TRUE when N_tot <= N*
         let mut p = Aimd { alpha: 5.0, beta: 0.9, n_min: 10.0, n_max: 100.0 };
         assert_eq!(p.target(&ctx(30.0, 30.0, &[], 0.9)), 35.0);
+    }
+
+    /// The PR-9 trait-seam pin at the unit level: `PolicyKind::Aimd`
+    /// built and driven through `dyn ControlPolicy` must be *bitwise*
+    /// the closed-form Fig. 4 expression on every input — the whole-run
+    /// twin lives in `tests/determinism.rs`.
+    #[test]
+    fn aimd_trait_dispatch_is_bitwise_the_closed_form() {
+        let c = ControlCfg::default();
+        let mut boxed = PolicyKind::Aimd.build(&c);
+        assert!(boxed.lazy_drain(), "AIMD drains lazily through the trait");
+        let mut n_tot = c.n_min;
+        for (i, n_star) in
+            [0.0, 3.7, 12.2, 40.0, 1e6, 0.1, 25.0, 24.999, 7.3].into_iter().enumerate()
+        {
+            let hist = [n_star];
+            let got = boxed.target(&ctx(n_tot, n_star, &hist, 0.5 + 0.01 * i as f64));
+            let want = if n_tot <= n_star {
+                (n_tot + c.alpha).min(c.n_max)
+            } else {
+                (c.beta * n_tot).max(c.n_min)
+            };
+            assert_eq!(got.to_bits(), want.to_bits(), "step {i}");
+            n_tot = got.round().max(0.0);
+        }
     }
 
     #[test]
@@ -286,6 +526,119 @@ mod tests {
     }
 
     #[test]
+    fn pid_closes_steady_state_error() {
+        let mut p = Pid::new(0.6, 0.1, 0.2, 1.0, 100.0);
+        // persistent demand above the fleet: the target must climb past
+        // what proportional action alone gives (integral at work)
+        let mut n_tot = 10.0;
+        let mut last = 0.0;
+        for _ in 0..20 {
+            last = p.target(&ctx(n_tot, 30.0, &[], 0.9));
+            n_tot = last;
+        }
+        assert!((last - 30.0).abs() < 1.0, "converged near demand, got {last}");
+    }
+
+    /// Anti-windup: 100 saturated instants (demand ≫ n_max) must not
+    /// wind the integral up. The very next evaluation after demand
+    /// collapses has error −40 and an unwound integral, so the raw
+    /// output dives below n_min and the target recovers *immediately* —
+    /// a wound-up integral (~100 × 450 × ki = 4500) would pin the
+    /// output at n_max for dozens of instants instead.
+    #[test]
+    fn pid_anti_windup_recovers_immediately() {
+        let mut p = Pid::new(0.6, 0.1, 0.2, 1.0, 50.0);
+        for _ in 0..100 {
+            assert_eq!(p.target(&ctx(50.0, 500.0, &[], 0.9)), 50.0);
+        }
+        // demand collapses: the first post-saturation target is already
+        // at the floor, not creeping down from a saturated integral
+        assert_eq!(p.target(&ctx(50.0, 10.0, &[], 0.9)), 1.0);
+    }
+
+    #[test]
+    fn pid_first_evaluation_has_no_derivative_kick() {
+        let mut a = Pid::new(0.6, 0.0, 5.0, 1.0, 100.0);
+        let mut b = Pid::new(0.6, 0.0, 0.0, 1.0, 100.0);
+        // huge kd, zero prior error: first outputs must match (d = 0)
+        assert_eq!(
+            a.target(&ctx(10.0, 20.0, &[], 0.9)),
+            b.target(&ctx(10.0, 20.0, &[], 0.9))
+        );
+    }
+
+    /// The MPC degeneracy pin: with a one-instant horizon the convex
+    /// objective's argmin is exactly `forecast[0].clamp(n_min, n_max)` —
+    /// bitwise the Reactive baseline (same f64 clamp on the same value).
+    #[test]
+    fn mpc_horizon_one_degenerates_to_reactive() {
+        let mut mpc = Mpc {
+            horizon: 1,
+            cu_cost: 1.0,
+            penalty: 3.0,
+            tight_slack_s: 1800.0,
+            n_min: 10.0,
+            n_max: 100.0,
+        };
+        let mut reactive = Reactive { n_min: 10.0, n_max: 100.0 };
+        for n_star in [0.0, 3.0, 10.0, 42.3, 99.999, 100.0, 500.0, 17.000000000000004] {
+            let f = [n_star];
+            let got = mpc.target(&fctx(5.0, &f, f64::INFINITY));
+            let want = reactive.target(&ctx(5.0, n_star, &[], 0.9));
+            assert_eq!(got.to_bits(), want.to_bits(), "n_star {n_star}");
+        }
+    }
+
+    #[test]
+    fn mpc_provisions_ahead_of_a_ramp() {
+        let mut p = Mpc {
+            horizon: 4,
+            cu_cost: 1.0,
+            penalty: 3.0,
+            tight_slack_s: 1800.0,
+            n_min: 1.0,
+            n_max: 100.0,
+        };
+        // rising forecast: J(10)=220, J(20)=170, J(30)=150, J(40)=160
+        let f = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(p.target(&fctx(10.0, &f, f64::INFINITY)), 30.0);
+        // reactive would sit at forecast[0] = 10 and chase the ramp
+    }
+
+    #[test]
+    fn mpc_tight_deadline_doubles_the_penalty() {
+        let mut p = Mpc {
+            horizon: 4,
+            cu_cost: 1.0,
+            penalty: 3.0,
+            tight_slack_s: 1800.0,
+            n_min: 1.0,
+            n_max: 100.0,
+        };
+        let f = [10.0, 20.0, 30.0, 40.0];
+        // ample slack: argmin 30 (see above). Tight slack doubles the
+        // under-provision penalty: J6(30)=180 > J6(40)=160 -> 40.
+        assert_eq!(p.target(&fctx(10.0, &f, 600.0)), 40.0);
+    }
+
+    #[test]
+    fn lazy_drain_is_an_aimd_family_property() {
+        let c = ControlCfg::default();
+        for (k, lazy) in [
+            (PolicyKind::Aimd, true),
+            (PolicyKind::Pid, true),
+            (PolicyKind::Mpc, true),
+            (PolicyKind::Reactive, false),
+            (PolicyKind::Mwa, false),
+            (PolicyKind::Lr, false),
+            (PolicyKind::AmazonAs1, false),
+            (PolicyKind::AmazonAs10, false),
+        ] {
+            assert_eq!(k.build(&c).lazy_drain(), lazy, "{k:?}");
+        }
+    }
+
+    #[test]
     fn kind_builds_all() {
         let c = ControlCfg::default();
         for k in [
@@ -295,6 +648,8 @@ mod tests {
             PolicyKind::Lr,
             PolicyKind::AmazonAs1,
             PolicyKind::AmazonAs10,
+            PolicyKind::Pid,
+            PolicyKind::Mpc,
         ] {
             let p = k.build(&c);
             assert!(!p.name().is_empty());

@@ -1,6 +1,18 @@
 //! CUS estimation (§II-E-3, §V-B): Kalman (proposed), ad-hoc fixed-gain
-//! and ARMA baselines, convergence detection, and the batched estimator
-//! bank with its XLA (Pallas/JAX AOT) and native backends.
+//! and ARMA baselines, the PR-9 bake-off additions (EWMA and the
+//! arxiv-1604.04804-style last-observation "reactive" predictor),
+//! convergence detection, and the batched estimator bank with its XLA
+//! (Pallas/JAX AOT) and native backends.
+//!
+//! # Adding an estimator
+//!
+//! Implement [`Estimator`] (the `seed`/`update(Option<f64>)` shape every
+//! passive estimator here shares), add an [`EstimatorKind`] variant, and
+//! wire the three platform dispatch points that read the driving
+//! estimate (`driving_r`, `driving_rates_into`, `build_chunk`) plus a
+//! slot in the platform's per-(workload, type) `SlotEst` — see
+//! `rust/BENCHMARKS.md` "how to add a policy/estimator" for the
+//! file-by-file walk.
 
 pub mod adhoc;
 pub mod arma;
@@ -8,6 +20,7 @@ pub mod bank;
 pub mod cache;
 pub mod convergence;
 pub mod kalman;
+pub mod simple;
 
 pub use adhoc::AdHoc;
 pub use arma::Arma;
@@ -18,13 +31,106 @@ pub use bank::{
 pub use cache::{BankCache, BankVariant, CacheStats};
 pub use convergence::{DeviationDetector, SlopeDetector};
 pub use kalman::Kalman;
+pub use simple::{Ewma, LastObservation};
 
-/// Which estimator a simulation run uses (Table II comparisons).
+/// The common surface of the passive per-(workload, media-type) CUS
+/// predictors (PR-9 trait seam). `seed` stashes the pre-run footprint
+/// measurement b̃[0]; `update` consumes one monitoring instant's
+/// measurement — `None` when the instant completed no item of the type,
+/// in which case estimators re-use their last measurement (or hold).
+///
+/// The platform's tick loop drives the concrete structs directly (the
+/// passive loop is on the zero-allocation hot path and is pinned
+/// bit-identical across PRs); this trait is the *extension seam* — new
+/// estimators implement it, and the conformance tests below hold every
+/// family to the same contract.
+pub trait Estimator: std::fmt::Debug {
+    fn name(&self) -> &'static str;
+    /// Record the pre-run footprint measurement b̃[0].
+    fn seed(&mut self, b_tilde0: f64);
+    /// Consume a monitoring instant's measurement; returns the estimate.
+    fn update(&mut self, meas: Option<f64>) -> f64;
+    /// Current per-item CUS estimate b̂.
+    fn estimate(&self) -> f64;
+}
+
+impl Estimator for AdHoc {
+    fn name(&self) -> &'static str {
+        "Ad-hoc"
+    }
+    fn seed(&mut self, b_tilde0: f64) {
+        AdHoc::seed(self, b_tilde0)
+    }
+    fn update(&mut self, meas: Option<f64>) -> f64 {
+        AdHoc::update(self, meas)
+    }
+    fn estimate(&self) -> f64 {
+        self.b_hat
+    }
+}
+
+impl Estimator for Ewma {
+    fn name(&self) -> &'static str {
+        "EWMA"
+    }
+    fn seed(&mut self, b_tilde0: f64) {
+        Ewma::seed(self, b_tilde0)
+    }
+    fn update(&mut self, meas: Option<f64>) -> f64 {
+        Ewma::update(self, meas)
+    }
+    fn estimate(&self) -> f64 {
+        self.b_hat
+    }
+}
+
+impl Estimator for LastObservation {
+    fn name(&self) -> &'static str {
+        "Reactive"
+    }
+    fn seed(&mut self, b_tilde0: f64) {
+        LastObservation::seed(self, b_tilde0)
+    }
+    fn update(&mut self, meas: Option<f64>) -> f64 {
+        LastObservation::update(self, meas)
+    }
+    fn estimate(&self) -> f64 {
+        self.b_hat
+    }
+}
+
+/// ARMA adapts to the trait by holding its estimate over measurement
+/// gaps (its inherent `update` consumes *normalized* observations and
+/// has no gap semantics of its own) and ignoring the seed (eq. 15 has
+/// no seed term).
+impl Estimator for Arma {
+    fn name(&self) -> &'static str {
+        "ARMA"
+    }
+    fn seed(&mut self, _b_tilde0: f64) {}
+    fn update(&mut self, meas: Option<f64>) -> f64 {
+        match meas {
+            Some(b_norm) => Arma::update(self, b_norm),
+            None => self.b_hat,
+        }
+    }
+    fn estimate(&self) -> f64 {
+        self.b_hat
+    }
+}
+
+/// Which estimator a simulation run uses (Table II comparisons plus the
+/// PR-9 bake-off additions).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum EstimatorKind {
     Kalman,
     AdHoc,
     Arma,
+    /// EWMA smoother (λ = 0.5), between ad-hoc and last-observation.
+    Ewma,
+    /// Last-observation predictor (arxiv 1604.04804's reactive
+    /// estimation — the baseline the paper's >27 % claim is against).
+    Reactive,
 }
 
 impl EstimatorKind {
@@ -33,9 +139,68 @@ impl EstimatorKind {
             EstimatorKind::Kalman => "Kalman-based",
             EstimatorKind::AdHoc => "Ad-hoc",
             EstimatorKind::Arma => "ARMA",
+            EstimatorKind::Ewma => "EWMA",
+            EstimatorKind::Reactive => "Reactive",
         }
     }
 
-    pub const ALL: [EstimatorKind; 3] =
-        [EstimatorKind::Kalman, EstimatorKind::AdHoc, EstimatorKind::Arma];
+    pub const ALL: [EstimatorKind; 5] = [
+        EstimatorKind::Kalman,
+        EstimatorKind::AdHoc,
+        EstimatorKind::Arma,
+        EstimatorKind::Ewma,
+        EstimatorKind::Reactive,
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every passive family through the one trait contract: seed, a
+    /// measurement, a gap — estimates stay finite and non-negative, and
+    /// `estimate()` always agrees with the last `update` return.
+    #[test]
+    fn estimator_trait_conformance() {
+        let mut all: Vec<Box<dyn Estimator>> = vec![
+            Box::new(AdHoc::paper()),
+            Box::new(Arma::paper()),
+            Box::new(Ewma::paper()),
+            Box::new(LastObservation::new()),
+        ];
+        for est in &mut all {
+            est.seed(10.0);
+            for meas in [Some(12.0), None, Some(8.0), None] {
+                let b = est.update(meas);
+                assert!(b.is_finite() && b >= 0.0, "{}: {b}", est.name());
+                assert_eq!(b.to_bits(), est.estimate().to_bits(), "{}", est.name());
+            }
+            assert!(!est.name().is_empty());
+        }
+    }
+
+    /// The trait adapters are transparent: driving `AdHoc` through
+    /// `dyn Estimator` is bitwise the inherent calls (the same guarantee
+    /// the platform's concrete-field dispatch relies on).
+    #[test]
+    fn trait_dispatch_is_bitwise_the_inherent_calls() {
+        let mut direct = AdHoc::paper();
+        let mut boxed: Box<dyn Estimator> = Box::new(AdHoc::paper());
+        direct.seed(7.0);
+        boxed.seed(7.0);
+        for meas in [Some(9.0), None, Some(2.5), Some(2.5), None] {
+            let a = direct.update(meas);
+            let b = boxed.update(meas);
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn kind_names_are_distinct() {
+        for (i, a) in EstimatorKind::ALL.iter().enumerate() {
+            for b in &EstimatorKind::ALL[i + 1..] {
+                assert_ne!(a.name(), b.name());
+            }
+        }
+    }
 }

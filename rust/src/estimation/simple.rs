@@ -1,0 +1,129 @@
+//! Simple per-item CUS predictors for the PR-9 estimator bake-off:
+//! an EWMA smoother and the last-observation "reactive" predictor the
+//! predecessor paper (arxiv 1604.04804, CVSS) used for resource
+//! estimation — the baseline the Dithen paper's >27 % cost-saving claim
+//! is measured against.
+//!
+//! Both follow the [`super::AdHoc`] idiom exactly — `seed` stashes the
+//! pre-run footprint measurement, `update(Option<f64>)` consumes a
+//! per-instant measurement (or re-uses the last one when the instant
+//! produced none) — so the platform's passive-estimator loop drives all
+//! four families through one code shape.
+
+/// Exponentially-weighted moving average of the per-item CUS
+/// measurements: `b̂ ← b̂ + λ(b̃ − b̂)`. Structurally the ad-hoc
+/// recursion, but with the heavier paper-EWMA weight λ = 0.5 — it
+/// tracks fast and smooths little, sitting between ad-hoc (λ = 0.1)
+/// and the raw last observation (λ = 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Ewma {
+    pub b_hat: f64,
+    pub lambda: f64,
+    pub last_meas: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(lambda: f64) -> Self {
+        Ewma { b_hat: 0.0, lambda, last_meas: None }
+    }
+
+    /// Default weight λ = 0.5.
+    pub fn paper() -> Self {
+        Self::new(0.5)
+    }
+
+    pub fn seed(&mut self, b_tilde0: f64) {
+        self.last_meas = Some(b_tilde0);
+    }
+
+    pub fn update(&mut self, meas: Option<f64>) -> f64 {
+        if let Some(b_tilde) = meas.or(self.last_meas) {
+            self.b_hat += self.lambda * (b_tilde - self.b_hat);
+        }
+        if meas.is_some() {
+            self.last_meas = meas;
+        }
+        self.b_hat
+    }
+}
+
+/// Last-observation ("reactive") predictor: the estimate *is* the most
+/// recent measurement, no smoothing at all — the arxiv-1604.04804-style
+/// baseline. Fast to "converge" (one sample) and maximally noisy, which
+/// is exactly the trade the Pareto sweep (`dithen sweep policies`)
+/// quantifies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LastObservation {
+    pub b_hat: f64,
+    pub last_meas: Option<f64>,
+}
+
+impl LastObservation {
+    pub fn new() -> Self {
+        LastObservation { b_hat: 0.0, last_meas: None }
+    }
+
+    pub fn seed(&mut self, b_tilde0: f64) {
+        self.last_meas = Some(b_tilde0);
+    }
+
+    pub fn update(&mut self, meas: Option<f64>) -> f64 {
+        if let Some(b_tilde) = meas.or(self.last_meas) {
+            self.b_hat = b_tilde;
+        }
+        if meas.is_some() {
+            self.last_meas = meas;
+        }
+        self.b_hat
+    }
+}
+
+impl Default for LastObservation {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_tracks_faster_than_adhoc() {
+        let mut e = Ewma::paper();
+        let mut a = crate::estimation::AdHoc::paper();
+        e.seed(10.0);
+        a.seed(10.0);
+        for _ in 0..5 {
+            e.update(Some(10.0));
+            a.update(Some(10.0));
+        }
+        assert!((e.b_hat - 10.0).abs() < (a.b_hat - 10.0).abs());
+    }
+
+    #[test]
+    fn ewma_recursion_values() {
+        let mut e = Ewma::new(0.5);
+        e.seed(100.0);
+        assert!((e.update(Some(100.0)) - 50.0).abs() < 1e-12);
+        assert!((e.update(Some(100.0)) - 75.0).abs() < 1e-12);
+        e.update(None); // re-uses 100.0 -> 87.5
+        assert!((e.b_hat - 87.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn last_observation_is_the_measurement() {
+        let mut r = LastObservation::new();
+        r.seed(10.0);
+        assert_eq!(r.update(Some(42.0)), 42.0);
+        assert_eq!(r.update(Some(7.0)), 7.0);
+        // no measurement: holds the last one (no decay)
+        assert_eq!(r.update(None), 7.0);
+    }
+
+    #[test]
+    fn never_seeded_stay_zero() {
+        assert_eq!(Ewma::paper().update(None), 0.0);
+        assert_eq!(LastObservation::new().update(None), 0.0);
+    }
+}

@@ -30,7 +30,9 @@ use crate::coordinator::PolicyKind;
 use crate::db::TaskStatus;
 use crate::estimation::{BankCache, EstimatorKind};
 use crate::metrics::RunMetrics;
-use crate::platform::{ArrivalProcess, Platform, RunOpts, Scenario, ScenarioBuilder, StreamSpec};
+use crate::platform::{
+    ArrivalProcess, FaultSpec, Platform, RunOpts, Scenario, ScenarioBuilder, StreamSpec,
+};
 use crate::sim::SimTime;
 use crate::workload::{paper_suite, App, WorkloadSpec};
 
@@ -263,10 +265,95 @@ pub fn stream_grid(cfg: &Config, smoke: bool) -> Vec<RunSpec> {
     g
 }
 
+/// Controller bake-off grid (`dithen sweep policies`, PR-9): the
+/// proposed AIMD/PID/MPC controllers and the reactive baseline, each
+/// under the Kalman estimator and the arxiv-1604.04804-style
+/// last-observation ("reactive") estimator, on the spot-reclamation
+/// scenario — the regime where forecast quality actually moves the
+/// cost-vs-deadline-violations trade. `smoke` swaps the paper suite for
+/// a 3-workload CI-sized suite (the `sweep policies --smoke` CI step).
+pub fn policy_grid(cfg: &Config, smoke: bool) -> Vec<RunSpec> {
+    let mut base = cfg.clone();
+    base.control.monitor_interval_s = 300;
+    let suite: Vec<WorkloadSpec> = if smoke {
+        let rng = crate::util::rng::Rng::new(base.seed);
+        (0..3).map(|w| WorkloadSpec::generate(w, App::FaceDetection, 40, None, &rng)).collect()
+    } else {
+        paper_suite(base.seed)
+    };
+    let mut specs = vec![];
+    for (pname, policy) in [
+        ("aimd", PolicyKind::Aimd),
+        ("pid", PolicyKind::Pid),
+        ("mpc", PolicyKind::Mpc),
+        ("reactive", PolicyKind::Reactive),
+    ] {
+        for (ename, estimator) in
+            [("kalman", EstimatorKind::Kalman), ("reactive", EstimatorKind::Reactive)]
+        {
+            specs.push(RunSpec::new(
+                format!("policy/{pname}+{ename}"),
+                grid_cell(&base, &suite)
+                    .policy(policy)
+                    .estimator(estimator)
+                    .fixed_ttc(Some(super::cost::TTC_LONG_S))
+                    .fault(FaultSpec::SpotReclamation { bid: 0.0082 })
+                    .build(),
+            ));
+        }
+    }
+    specs
+}
+
+/// Serialize the policy grid's results as a `dithen-bench-report/v1`
+/// payload whose `policy_pareto` block carries one point per
+/// (policy, estimator) cell: total cost, TTC compliance, the deadline
+/// violation rate (`1 − compliance`), and whether the cell *dominates*
+/// the reactive-policy + reactive-estimator baseline cell (≤ on both
+/// axes, < on at least one). `rust/BENCHMARKS.md` documents the format.
+pub fn policy_pareto_json(specs: &[RunSpec], results: &[RunMetrics]) -> String {
+    let baseline = specs
+        .iter()
+        .position(|s| s.label == "policy/reactive+reactive")
+        .map(|i| &results[i]);
+    let rows = specs
+        .iter()
+        .zip(results)
+        .map(|(s, m)| {
+            let violations = 1.0 - m.ttc_compliance();
+            let dominates = baseline.is_some_and(|b| {
+                let bv = 1.0 - b.ttc_compliance();
+                m.total_cost <= b.total_cost
+                    && violations <= bv
+                    && (m.total_cost < b.total_cost || violations < bv)
+            });
+            format!(
+                "{{\"label\": \"{}\", \"policy\": \"{}\", \"estimator\": \"{}\", \
+                 \"cost\": {:.4}, \"ttc_compliance\": {:.4}, \
+                 \"deadline_violations\": {:.4}, \"finished_at\": {}, \
+                 \"dominates_reactive_baseline\": {}}}",
+                s.label,
+                s.scenario.policy.name(),
+                s.scenario.estimator.name(),
+                m.total_cost,
+                m.ttc_compliance(),
+                violations,
+                m.finished_at,
+                dominates,
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n    ");
+    format!(
+        "{{\n  \"schema\": \"dithen-bench-report/v1\",\n  \"grid\": \"policies\",\n\
+         \x20 \"policy_pareto\": [\n    {rows}\n  ]\n}}\n"
+    )
+}
+
 /// Every grid `dithen sweep` accepts — the single source of truth the
 /// CLI usage text and the `unknown sweep` error render from.
 pub const SWEEP_GRIDS: &[&str] =
-    &["cost", "estimators", "seeds", "fleet", "smoke", "sparse", "stream"];
+    &["cost", "estimators", "seeds", "fleet", "smoke", "sparse", "stream", "policies"];
 
 /// Run a named grid and render a summary table (the `dithen sweep`
 /// subcommand). `batched` routes execution through the lockstep
@@ -288,6 +375,7 @@ pub fn run_sweep(
         "smoke" => super::bench_report::smoke_grid(cfg),
         "sparse" => super::bench_report::sparse_grid(cfg),
         "stream" => stream_grid(cfg, smoke),
+        "policies" => policy_grid(cfg, smoke),
         other => {
             anyhow::bail!("unknown sweep '{other}' (use {})", SWEEP_GRIDS.join(" | "))
         }
@@ -335,7 +423,14 @@ pub fn run_sweep(
         cache_after.cold_builds - cache_before.cold_builds,
         cache_after.hits - cache_before.hits,
     );
-    let out = format!("{}{summary}", table.render());
+    let mut out = format!("{}{summary}", table.render());
+    if name == "policies" {
+        let pareto = policy_pareto_json(&specs, &results);
+        let path = "out/policy-pareto.json";
+        std::fs::create_dir_all("out")?;
+        std::fs::write(path, &pareto)?;
+        out.push_str(&format!("wrote {path} (cost-vs-violations Pareto per policy)\n"));
+    }
     println!("{out}");
     Ok(out)
 }
@@ -714,7 +809,10 @@ mod tests {
         assert!(g.iter().all(|s| s.n_tasks() > 0));
         // sweeps never read traces; recording stays off (perf)
         assert!(g.iter().all(|s| !s.scenario.record_traces));
-        assert_eq!(estimator_grid(&cfg).len(), 3);
+        // every estimator family rides the Table II axis (PR-9 added
+        // EWMA and the reactive last-observation baseline)
+        assert_eq!(estimator_grid(&cfg).len(), EstimatorKind::ALL.len());
+        assert_eq!(estimator_grid(&cfg).len(), 5);
         assert_labels_unique(&estimator_grid(&cfg));
         let seeds = seed_grid(&cfg, 4);
         assert_eq!(seeds.len(), 4);
@@ -722,6 +820,74 @@ mod tests {
         // per-run seeds are distinct and deterministic
         let s: Vec<u64> = seeds.iter().map(|r| r.scenario.cfg.seed).collect();
         assert_eq!(s, vec![cfg.seed, cfg.seed + 1, cfg.seed + 2, cfg.seed + 3]);
+    }
+
+    /// The PR-9 controller bake-off grid: 4 policies × 2 estimators,
+    /// every cell on the reclamation scenario, labels unique, traces
+    /// off, and both smoke and full variants validate without running.
+    #[test]
+    fn policy_grid_is_well_formed() {
+        let cfg = Config::paper_defaults();
+        for smoke in [true, false] {
+            let g = policy_grid(&cfg, smoke);
+            assert_eq!(g.len(), 8, "4 policies x 2 estimators");
+            assert_labels_unique(&g);
+            assert!(g.iter().all(|s| s.n_tasks() > 0));
+            assert!(g.iter().all(|s| !s.scenario.record_traces));
+            for s in &g {
+                s.scenario.validate().unwrap_or_else(|e| panic!("{}: {e}", s.label));
+                assert_eq!(s.scenario.fault, FaultSpec::SpotReclamation { bid: 0.0082 });
+            }
+        }
+        // the smoke trim shrinks the suite, not the grid shape
+        assert!(
+            policy_grid(&cfg, true)[0].n_tasks() < policy_grid(&cfg, false)[0].n_tasks(),
+            "smoke cells must be CI-sized"
+        );
+    }
+
+    /// The Pareto payload is valid bench-report v1 JSON and the
+    /// dominance flag is `true` exactly for cells at-or-better than the
+    /// reactive+reactive baseline on both axes and strictly better on
+    /// one.
+    #[test]
+    fn policy_pareto_json_is_well_formed() {
+        let cfg = Config::paper_defaults();
+        let specs = policy_grid(&cfg, true);
+        let results: Vec<RunMetrics> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| RunMetrics {
+                // baseline dearest, aimd+kalman cheapest: compliance is
+                // 1.0 across the board (no outcomes), so dominance must
+                // key off cost alone here
+                total_cost: if s.label == "policy/reactive+reactive" {
+                    9.0
+                } else {
+                    1.0 + i as f64 * 0.1
+                },
+                finished_at: 3600,
+                ..RunMetrics::default()
+            })
+            .collect();
+        let json = policy_pareto_json(&specs, &results);
+        let doc = crate::util::json::parse(&json).unwrap();
+        assert_eq!(doc.get("schema").and_then(|s| s.as_str()), Some("dithen-bench-report/v1"));
+        assert_eq!(doc.get("grid").and_then(|s| s.as_str()), Some("policies"));
+        let rows = doc.get("policy_pareto").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(rows.len(), specs.len());
+        for (row, spec) in rows.iter().zip(&specs) {
+            assert_eq!(row.get("label").and_then(|l| l.as_str()), Some(spec.label.as_str()));
+            // every non-baseline cell is strictly cheaper at equal
+            // violations; the baseline never dominates itself
+            let want = crate::util::json::Json::Bool(spec.label != "policy/reactive+reactive");
+            assert_eq!(
+                row.get("dominates_reactive_baseline"),
+                Some(&want),
+                "{}",
+                spec.label
+            );
+        }
     }
 
     /// The streaming grid is well-formed without running it: the smoke

@@ -10,14 +10,20 @@ pub struct EstimatorTrace {
     pub kalman: Vec<(SimTime, f64)>,
     pub adhoc: Vec<(SimTime, f64)>,
     pub arma: Vec<(SimTime, f64)>,
+    pub ewma: Vec<(SimTime, f64)>,
+    pub reactive: Vec<(SimTime, f64)>,
     /// Convergence instants (absolute sim time), if reached.
     pub kalman_t_init: Option<SimTime>,
     pub adhoc_t_init: Option<SimTime>,
     pub arma_t_init: Option<SimTime>,
+    pub ewma_t_init: Option<SimTime>,
+    pub reactive_t_init: Option<SimTime>,
     /// Estimate value at each estimator's own t_init.
     pub kalman_at_init: Option<f64>,
     pub adhoc_at_init: Option<f64>,
     pub arma_at_init: Option<f64>,
+    pub ewma_at_init: Option<f64>,
+    pub reactive_at_init: Option<f64>,
     /// Ground truth: empirical mean measured CUS over the whole workload
     /// (the paper's "final measured value" for MAE).
     pub final_measured: Option<f64>,
@@ -31,6 +37,8 @@ impl EstimatorTrace {
             Kalman => self.kalman_at_init,
             AdHoc => self.adhoc_at_init,
             Arma => self.arma_at_init,
+            Ewma => self.ewma_at_init,
+            Reactive => self.reactive_at_init,
         }?;
         let fin = self.final_measured?;
         if fin <= 0.0 {
@@ -50,6 +58,8 @@ impl EstimatorTrace {
             Kalman => self.kalman_t_init,
             AdHoc => self.adhoc_t_init,
             Arma => self.arma_t_init,
+            Ewma => self.ewma_t_init,
+            Reactive => self.reactive_t_init,
         }?;
         Some(t.saturating_sub(arrived_at) as f64)
     }

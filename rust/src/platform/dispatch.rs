@@ -126,6 +126,8 @@ impl Platform {
             EstimatorKind::Kalman => self.bank.estimate(self.lane_of[w] as usize, 0) as f64,
             EstimatorKind::AdHoc => slot.adhoc.b_hat,
             EstimatorKind::Arma => slot.arma.b_hat,
+            EstimatorKind::Ewma => slot.ewma.b_hat,
+            EstimatorKind::Reactive => slot.reactive.b_hat,
         })
         .filter(|&b| b > 0.0)
         .or_else(|| {
@@ -167,8 +169,14 @@ impl Platform {
         if let Some(inst) = self.backend.instance_mut(inst_id) {
             inst.begin_chunk(id);
         }
+        // wall time scales by the backend stretch and by the *instance's*
+        // per-type multiplier (PR-9 heterogeneity: an ECU-denser type
+        // finishes the same chunk sooner); measurements and busy-CUS
+        // accounting stay in backend-normalized CU-seconds. m3.medium's
+        // multiplier is exactly 1.0, so the default fleet is unchanged.
+        let wall = result.busy_s * self.exec_mult * self.backend.instance_exec_mult(inst_id);
         self.sim.schedule(
-            (result.busy_s * self.exec_mult).ceil().max(1.0) as SimTime,
+            wall.ceil().max(1.0) as SimTime,
             Event::ChunkDone { instance: inst_id, chunk: id },
         );
         self.update_pending_flag(w);
@@ -195,8 +203,11 @@ impl Platform {
                 let epoch = self.wl[w].merge_epoch;
                 self.wl[w].merge_dispatched = true;
                 self.wl[w].merge_instance = Some(inst_id);
+                // merge wall time scales with the aggregation instance's
+                // type multiplier too (billing stays usage-based)
+                let wall = merge_s * self.backend.instance_exec_mult(inst_id);
                 self.sim
-                    .schedule(merge_s.ceil() as SimTime, Event::MergeDone { workload: w, epoch });
+                    .schedule(wall.ceil() as SimTime, Event::MergeDone { workload: w, epoch });
             }
         }
     }

@@ -140,6 +140,8 @@ impl Platform {
         for k in 0..spec.n_types {
             let est = &mut self.est[w * self.k_max + k];
             est.adhoc.seed(seed);
+            est.ewma.seed(seed);
+            est.reactive.seed(seed);
             est.seeded = true;
             // the bank's slot sees the seed as its first measurement at
             // the next tick through the measurement-log cursor (the

@@ -64,11 +64,12 @@ use anyhow::Result;
 
 use crate::cloud::CloudBackend;
 use crate::config::Config;
-use crate::coordinator::policy::{PolicyKind, ScalingPolicy};
+use crate::coordinator::policy::{ControlPolicy, PolicyKind, FORECAST_H};
 use crate::coordinator::Tracker;
 use crate::db::TaskDb;
 use crate::estimation::{
-    AdHoc, Arma, Bank, BankCache, DeviationDetector, EstimatorKind, SlopeDetector,
+    AdHoc, Arma, Bank, BankCache, DeviationDetector, EstimatorKind, Ewma, LastObservation,
+    SlopeDetector,
 };
 use crate::lci::Chunk;
 use crate::metrics::{RunMetrics, WorkloadOutcome};
@@ -138,9 +139,13 @@ pub(crate) enum WlPhase {
 pub(crate) struct SlotEst {
     pub(crate) adhoc: AdHoc,
     pub(crate) arma: Arma,
+    pub(crate) ewma: Ewma,
+    pub(crate) reactive: LastObservation,
     pub(crate) kalman_det: SlopeDetector,
     pub(crate) adhoc_det: SlopeDetector,
     pub(crate) arma_det: DeviationDetector,
+    pub(crate) ewma_det: SlopeDetector,
+    pub(crate) reactive_det: DeviationDetector,
     /// Cumulative measured CUS and completed count (ARMA normalization).
     pub(crate) cum_cus: f64,
     pub(crate) cum_done: usize,
@@ -251,7 +256,6 @@ pub struct Platform {
     pub(crate) cfg: Config,
     // scenario knobs (broken out of the Scenario so the hot loop reads
     // plain fields)
-    pub(crate) policy_kind: PolicyKind,
     pub(crate) estimator: EstimatorKind,
     pub(crate) fixed_ttc_s: Option<u64>,
     pub(crate) horizon_s: u64,
@@ -270,7 +274,7 @@ pub struct Platform {
     pub(crate) db: TaskDb,
     pub(crate) bank: Bank,
     pub(crate) tracker: Tracker,
-    pub(crate) policy: Box<dyn ScalingPolicy>,
+    pub(crate) policy: Box<dyn ControlPolicy>,
     pub(crate) specs: Vec<WorkloadSpec>,
     pub(crate) wl: Vec<WlState>,
     /// Dense estimator slots, `w * k_max + k`.
@@ -288,6 +292,10 @@ pub struct Platform {
     /// Latest service rates, indexed by workload id.
     pub(crate) rates: Vec<f64>,
     pub(crate) n_star_history: Vec<f64>,
+    /// Allocation-free forecast window handed to the policy each
+    /// evaluation: `forecast_buf[0]` is the *current* N*_tot (bitwise),
+    /// `forecast_buf[h]` an LR extrapolation `h` intervals out (PR-9).
+    pub(crate) forecast_buf: [f64; FORECAST_H],
     pub(crate) last_policy_eval: SimTime,
     pub(crate) k_max: usize,
     pub(crate) scratch: TickScratch,
@@ -395,9 +403,13 @@ impl Platform {
             .map(|_| SlotEst {
                 adhoc: AdHoc::paper(),
                 arma: Arma::paper(),
+                ewma: Ewma::paper(),
+                reactive: LastObservation::new(),
                 kalman_det: SlopeDetector::new(),
                 adhoc_det: SlopeDetector::new(),
                 arma_det: DeviationDetector::paper(cfg.control.monitor_interval_s),
+                ewma_det: SlopeDetector::new(),
+                reactive_det: DeviationDetector::paper(cfg.control.monitor_interval_s),
                 cum_cus: 0.0,
                 cum_done: 0,
                 seeded: false,
@@ -410,7 +422,6 @@ impl Platform {
         };
         Platform {
             cfg,
-            policy_kind,
             estimator,
             fixed_ttc_s,
             horizon_s,
@@ -436,6 +447,7 @@ impl Platform {
             next_chunk_id: 0,
             rates: vec![0.0; n_real],
             n_star_history: vec![],
+            forecast_buf: [0.0; FORECAST_H],
             last_policy_eval: 0,
             k_max,
             scratch: TickScratch::default(),
@@ -569,9 +581,13 @@ impl Platform {
             self.est.push(SlotEst {
                 adhoc: AdHoc::paper(),
                 arma: Arma::paper(),
+                ewma: Ewma::paper(),
+                reactive: LastObservation::new(),
                 kalman_det: SlopeDetector::new(),
                 adhoc_det: SlopeDetector::new(),
                 arma_det: DeviationDetector::paper(self.cfg.control.monitor_interval_s),
+                ewma_det: SlopeDetector::new(),
+                reactive_det: DeviationDetector::paper(self.cfg.control.monitor_interval_s),
                 cum_cus: 0.0,
                 cum_done: 0,
                 seeded: false,

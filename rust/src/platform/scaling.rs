@@ -26,7 +26,6 @@
 //! platform-owned buffers so policy evaluation stays allocation-light.
 
 use crate::cloud::InstanceState;
-use crate::coordinator::policy::PolicyKind;
 use crate::platform::Platform;
 use crate::sim::Event;
 
@@ -127,9 +126,12 @@ impl Platform {
         let fleet = self.backend.describe(now);
         let committed = fleet.committed_cus;
         // §IV's billing-aware termination prudence is part of the
-        // *proposed* controller; the baselines set N_tot[t+1] directly
-        // (Gandhi et al. semantics) and Amazon AS terminates eagerly.
-        let lazy = self.policy_kind == PolicyKind::Aimd;
+        // *proposed* controller family; the baselines set N_tot[t+1]
+        // directly (Gandhi et al. semantics) and Amazon AS terminates
+        // eagerly. Since PR-9 the policy itself declares which side it
+        // is on ([`crate::coordinator::policy::ControlPolicy::lazy_drain`]),
+        // so new policies opt in without touching this function.
+        let lazy = self.policy.lazy_drain();
         // renewal window: terminate before the next billing increment hits
         let window = (self.cfg.control.monitor_interval_s * 3 / 2 + 1).max(120);
         if target > committed {

@@ -212,7 +212,7 @@ impl Platform {
                 let kalman_b = outs.b_hat[idx] as f64;
                 // update the passive estimators + detectors (borrow of
                 // the slot ends before any trace recording below)
-                let (adhoc_b, arma_b, kalman_conv, adhoc_conv, arma_conv) = {
+                let (vals, conv) = {
                     let est = &mut self.est[w * self.k_max + ki];
                     if !est.seeded {
                         continue;
@@ -226,19 +226,28 @@ impl Platform {
                         Some(bn) if had_meas => est.arma.update(bn),
                         _ => est.arma.b_hat,
                     };
+                    let ewma_b = est.ewma.update(m);
+                    let reactive_b = est.reactive.update(m);
                     (
-                        adhoc_b,
-                        arma_b,
-                        est.kalman_det.push(kalman_b).is_some(),
-                        est.adhoc_det.push(adhoc_b).is_some(),
-                        est.arma_det.push(arma_b).is_some(),
+                        [adhoc_b, arma_b, ewma_b, reactive_b],
+                        [
+                            est.kalman_det.push(kalman_b).is_some(),
+                            est.adhoc_det.push(adhoc_b).is_some(),
+                            est.arma_det.push(arma_b).is_some(),
+                            est.ewma_det.push(ewma_b).is_some(),
+                            est.reactive_det.push(reactive_b).is_some(),
+                        ],
                     )
                 };
+                let [adhoc_b, arma_b, ewma_b, reactive_b] = vals;
+                let [kalman_conv, adhoc_conv, arma_conv, ewma_conv, reactive_conv] = conv;
                 if self.record_traces {
                     let trace = self.metrics.traces.get_mut(&(w, ki)).unwrap();
                     trace.kalman.push((now, kalman_b));
                     trace.adhoc.push((now, adhoc_b));
                     trace.arma.push((now, arma_b));
+                    trace.ewma.push((now, ewma_b));
+                    trace.reactive.push((now, reactive_b));
                     if kalman_conv {
                         trace.kalman_t_init = Some(now);
                         trace.kalman_at_init = Some(kalman_b);
@@ -251,6 +260,14 @@ impl Platform {
                         trace.arma_t_init = Some(now);
                         trace.arma_at_init = Some(arma_b);
                     }
+                    if ewma_conv {
+                        trace.ewma_t_init = Some(now);
+                        trace.ewma_at_init = Some(ewma_b);
+                    }
+                    if reactive_conv {
+                        trace.reactive_t_init = Some(now);
+                        trace.reactive_at_init = Some(reactive_b);
+                    }
                 }
                 if kalman_conv && self.estimator == EstimatorKind::Kalman {
                     sc.converged.push(w);
@@ -259,6 +276,12 @@ impl Platform {
                     sc.converged.push(w);
                 }
                 if arma_conv && self.estimator == EstimatorKind::Arma {
+                    sc.converged.push(w);
+                }
+                if ewma_conv && self.estimator == EstimatorKind::Ewma {
+                    sc.converged.push(w);
+                }
+                if reactive_conv && self.estimator == EstimatorKind::Reactive {
                     sc.converged.push(w);
                 }
             }
@@ -296,11 +319,15 @@ impl Platform {
         if eval_due {
             self.last_policy_eval = now;
             let work_pending = self.work_left();
+            self.fill_forecast(n_star);
+            let deadline_slack_s = self.deadline_slack(now);
             let ctx = PolicyCtx {
                 now,
                 n_tot: sc.committed_cus,
                 n_star,
                 n_star_history: &self.n_star_history,
+                forecast: &self.forecast_buf,
+                deadline_slack_s,
                 mean_utilization: self.backend.mean_utilization(now),
                 work_pending,
             };
@@ -463,11 +490,15 @@ impl Platform {
         if eval_due {
             self.last_policy_eval = t;
             let work_pending = self.work_left();
+            self.fill_forecast(n_star);
+            let deadline_slack_s = self.deadline_slack(t);
             let ctx = PolicyCtx {
                 now: t,
                 n_tot: sc.committed_cus,
                 n_star,
                 n_star_history: &self.n_star_history,
+                forecast: &self.forecast_buf,
+                deadline_slack_s,
                 mean_utilization: self.backend.mean_utilization(t),
                 work_pending,
             };
@@ -494,6 +525,58 @@ impl Platform {
         })
     }
 
+    /// Fill the policy forecast window (PR-9). `forecast_buf[0]` is the
+    /// *current* N*_tot — bitwise, so `forecast[0].clamp(..)` is the
+    /// reactive target and MPC at horizon 1 degenerates to it — and
+    /// `forecast_buf[h]` extrapolates a least-squares line over the last
+    /// 6 N* samples `h` intervals out, floored at zero (the same LR
+    /// family as [`crate::util::stats::lr_extrapolate`], hand-rolled
+    /// here because the hot path may not allocate the xs vector).
+    pub(crate) fn fill_forecast(&mut self, n_star: f64) {
+        const WINDOW: usize = 6;
+        self.forecast_buf[0] = n_star;
+        let hist = &self.n_star_history;
+        let tail = if hist.len() > WINDOW { &hist[hist.len() - WINDOW..] } else { &hist[..] };
+        let n = tail.len() as f64;
+        let (slope, icept) = if tail.len() < 2 {
+            (0.0, crate::util::stats::mean(tail))
+        } else {
+            let mx = (n - 1.0) / 2.0;
+            let my = crate::util::stats::mean(tail);
+            let mut sxx = 0.0;
+            let mut sxy = 0.0;
+            for (i, &v) in tail.iter().enumerate() {
+                let dx = i as f64 - mx;
+                sxx += dx * dx;
+                sxy += dx * (v - my);
+            }
+            let slope = sxy / sxx;
+            (slope, my - slope * mx)
+        };
+        for (step, slot) in self.forecast_buf.iter_mut().enumerate().skip(1) {
+            *slot = (slope * (n - 1.0 + step as f64) + icept).max(0.0);
+        }
+    }
+
+    /// Tightest live deadline, in seconds from `now` (PR-9): the
+    /// minimum over admitted, non-`Done` workloads that carry a
+    /// deadline. `f64::INFINITY` when none is live — a policy reading
+    /// this sees "no deadline pressure", and any finite threshold
+    /// comparison is false.
+    pub(crate) fn deadline_slack(&self, now: crate::sim::SimTime) -> f64 {
+        let mut slack = f64::INFINITY;
+        for &w in &self.lanes {
+            let w = w as usize;
+            if self.arrived <= w || matches!(self.wl[w].phase, WlPhase::Done) {
+                continue;
+            }
+            if let Some(dl) = self.wl[w].deadline {
+                slack = slack.min(dl.saturating_sub(now) as f64);
+            }
+        }
+        slack
+    }
+
     /// r_w under the driving estimator.
     pub(crate) fn driving_r(&self, out: &StepOutputs, w: usize) -> f64 {
         match self.estimator {
@@ -507,6 +590,8 @@ impl Platform {
                     let b = match other {
                         EstimatorKind::AdHoc => est.adhoc.b_hat,
                         EstimatorKind::Arma => est.arma.b_hat,
+                        EstimatorKind::Ewma => est.ewma.b_hat,
+                        EstimatorKind::Reactive => est.reactive.b_hat,
                         EstimatorKind::Kalman => unreachable!(),
                     };
                     r += remaining.get(ki).copied().unwrap_or(0) as f64 * b;
@@ -558,6 +643,8 @@ impl Platform {
                             let b = match other {
                                 EstimatorKind::AdHoc => est.adhoc.b_hat,
                                 EstimatorKind::Arma => est.arma.b_hat,
+                                EstimatorKind::Ewma => est.ewma.b_hat,
+                                EstimatorKind::Reactive => est.reactive.b_hat,
                                 EstimatorKind::Kalman => unreachable!(),
                             };
                             sc.r[w] += sc.m_rem[idx] as f64 * b;

@@ -465,6 +465,37 @@ fn streaming_is_bit_identical_to_materialized() {
     }
 }
 
+/// PR-9 trait-seam pin: routing AIMD + Kalman through the
+/// `ControlPolicy` trait object (and the per-instance exec-multiplier
+/// hook, exactly 1.0 on the default m3.medium fleet) must leave the
+/// platform bit-identical to itself wherever it runs — repeated direct
+/// runs with traces ON (every per-tick estimator sample and curve
+/// compared, exhaustive `RunMetrics` equality) and the parallel runner
+/// at 1/2/8 threads all produce one value. The scenario is the
+/// reclamation cell the PR-9 Pareto sweep leans on.
+#[test]
+fn trait_dispatched_aimd_kalman_is_bit_identical_across_executors() {
+    let traced = |seed: u64| {
+        let mut s = reclamation_scenario(seed);
+        s.record_traces = true;
+        s
+    };
+    for seed in [11u64, 20161021] {
+        let direct_a = traced(seed).run().unwrap();
+        let direct_b = traced(seed).run().unwrap();
+        assert_eq!(direct_a, direct_b, "seed {seed}: trait-dispatched AIMD+Kalman diverged");
+        assert!(!direct_a.traces.is_empty(), "traces must be on for this pin to bite");
+        let specs = vec![RunSpec::new("pin/aimd-kalman", traced(seed))];
+        for threads in [1usize, 2, 8] {
+            let swept = run_specs(&specs, threads).unwrap();
+            assert_eq!(
+                direct_a, swept[0],
+                "seed {seed}: {threads}-thread sweep diverged from the direct run"
+            );
+        }
+    }
+}
+
 #[test]
 fn parallel_runner_is_thread_count_invariant() {
     // a mixed grid: different seeds, estimators, policies, and a
@@ -483,6 +514,8 @@ fn parallel_runner_is_thread_count_invariant() {
         dithen::coordinator::PolicyKind::Aimd,
         dithen::coordinator::PolicyKind::Reactive,
         dithen::coordinator::PolicyKind::Mwa,
+        dithen::coordinator::PolicyKind::Pid,
+        dithen::coordinator::PolicyKind::Mpc,
     ]
     .iter()
     .enumerate()
