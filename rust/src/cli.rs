@@ -83,6 +83,12 @@ SCENARIO OPTIONS:
                            m3.medium:bid=0.0085,m4.10xlarge:bid=0.6
     --fault <f>            none (default) | reclaim:<bid $/hr> | reclaim-pools
                            (each pool revoked on its own bid) | reclaim-at:<t1,t2,...>
+                           | straggler:<frac>x<slowdown> (seeded fraction of
+                           instances runs chunks <slowdown>x slower; speculative
+                           re-execution arms) | crash:<rate> (per-chunk transient
+                           failure hazard per wall-second; retry with backoff)
+                           | flake:<prob>+<delay_s> (fulfilled requests fail to
+                           boot and re-request after delay)
     --arrivals <a>         fixed:<gap_s> | burst:<n>x<gap_s> | poisson:<mean_gap_s>
     --workloads <n>        generated workload count (default 6; smoke 3)
     --tasks <n>            tasks per generated workload (default 120; smoke 40)
@@ -319,8 +325,47 @@ pub fn parse_fault(s: &str) -> Result<FaultSpec, CliError> {
         }
         return Ok(FaultSpec::ReclamationAt { times });
     }
+    if let Some(rest) = s.strip_prefix("straggler:") {
+        let (frac, slowdown) = rest.split_once('x').ok_or_else(|| {
+            CliError(format!("straggler needs '<frac>x<slowdown>' (e.g. 0.2x4), got '{rest}'"))
+        })?;
+        let frac: f64 =
+            frac.parse().map_err(|_| CliError(format!("bad straggler fraction '{frac}'")))?;
+        let slowdown: f64 = slowdown
+            .parse()
+            .map_err(|_| CliError(format!("bad straggler slowdown '{slowdown}'")))?;
+        if frac.is_nan() || !(0.0..=1.0).contains(&frac) {
+            return Err(CliError("straggler fraction must be in [0, 1]".into()));
+        }
+        if slowdown.is_nan() || slowdown < 1.0 {
+            return Err(CliError("straggler slowdown must be >= 1".into()));
+        }
+        return Ok(FaultSpec::Straggler { frac, slowdown });
+    }
+    if let Some(rate) = s.strip_prefix("crash:") {
+        let rate: f64 =
+            rate.parse().map_err(|_| CliError(format!("bad crash rate '{rate}'")))?;
+        if rate.is_nan() || !(0.0..=1.0).contains(&rate) {
+            return Err(CliError("crash rate must be a per-second hazard in [0, 1]".into()));
+        }
+        return Ok(FaultSpec::ChunkCrash { rate });
+    }
+    if let Some(rest) = s.strip_prefix("flake:") {
+        let (prob, delay) = rest.split_once('+').ok_or_else(|| {
+            CliError(format!("flake needs '<prob>+<delay_s>' (e.g. 0.3+120), got '{rest}'"))
+        })?;
+        let prob: f64 =
+            prob.parse().map_err(|_| CliError(format!("bad flake probability '{prob}'")))?;
+        let delay_s: u64 =
+            delay.parse().map_err(|_| CliError(format!("bad flake delay '{delay}'")))?;
+        if prob.is_nan() || !(0.0..=1.0).contains(&prob) {
+            return Err(CliError("flake probability must be in [0, 1]".into()));
+        }
+        return Ok(FaultSpec::LaunchFlake { prob, delay_s });
+    }
     Err(CliError(format!(
-        "unknown fault '{s}' (use none | reclaim:<bid> | reclaim-pools | reclaim-at:<t1,t2,...>)"
+        "unknown fault '{s}' (use none | reclaim:<bid> | reclaim-pools | reclaim-at:<t1,t2,...> \
+         | straggler:<frac>x<slowdown> | crash:<rate> | flake:<prob>+<delay_s>)"
     )))
 }
 
@@ -486,6 +531,15 @@ fn run_scenario(cli: &Cli, mut cfg: Config) -> anyhow::Result<i32> {
         m.requeued_tasks,
         m.unfulfilled_requests,
     );
+    // partial-failure receipts (PR-10); printed only when any fired so
+    // the fault-free summary line set is unchanged
+    if m.chunk_retries + m.speculative_launches + m.straggler_instances + m.tasks_abandoned > 0 {
+        println!(
+            "faults: chunk retries {} | speculative launches {} | straggler instances {} | \
+             tasks abandoned {}",
+            m.chunk_retries, m.speculative_launches, m.straggler_instances, m.tasks_abandoned,
+        );
+    }
     if m.reclamations_by_pool.len() > 1 {
         let per_pool: Vec<String> = pool_names
             .iter()
@@ -865,6 +919,41 @@ mod tests {
         assert!(parse_fault("reclaim:-1").is_err());
         assert!(parse_fault("reclaim-at:").is_err());
         assert!(parse_fault("meteor").is_err());
+    }
+
+    #[test]
+    fn partial_failure_fault_specs() {
+        assert_eq!(
+            parse_fault("straggler:0.2x4").unwrap(),
+            FaultSpec::Straggler { frac: 0.2, slowdown: 4.0 }
+        );
+        assert_eq!(parse_fault("crash:0.01").unwrap(), FaultSpec::ChunkCrash { rate: 0.01 });
+        assert_eq!(
+            parse_fault("flake:0.3+120").unwrap(),
+            FaultSpec::LaunchFlake { prob: 0.3, delay_s: 120 }
+        );
+        // boundary values round-trip
+        assert_eq!(
+            parse_fault("straggler:1x1").unwrap(),
+            FaultSpec::Straggler { frac: 1.0, slowdown: 1.0 }
+        );
+        assert_eq!(parse_fault("crash:0").unwrap(), FaultSpec::ChunkCrash { rate: 0.0 });
+        // malformed forms are named errors, never panics
+        assert!(parse_fault("straggler:0.2").is_err()); // missing slowdown
+        assert!(parse_fault("straggler:2x4").is_err()); // frac > 1
+        assert!(parse_fault("straggler:0.2x0.5").is_err()); // slowdown < 1
+        assert!(parse_fault("straggler:nanx4").is_err());
+        assert!(parse_fault("crash:1.5").is_err());
+        assert!(parse_fault("crash:-0.1").is_err());
+        assert!(parse_fault("crash:nan").is_err());
+        assert!(parse_fault("flake:0.3").is_err()); // missing delay
+        assert!(parse_fault("flake:1.5+120").is_err());
+        assert!(parse_fault("flake:0.3+-5").is_err());
+        // the unknown-fault error now advertises the new grammar
+        let err = parse_fault("meteor").unwrap_err().to_string();
+        assert!(err.contains("straggler:<frac>x<slowdown>"));
+        assert!(err.contains("crash:<rate>"));
+        assert!(err.contains("flake:<prob>+<delay_s>"));
     }
 
     #[test]

@@ -261,6 +261,13 @@ impl TaskDb {
         self.shards.get_mut(key.0).expect("unknown task").requeue(key.1);
     }
 
+    /// Abandon a processing task terminally (PR-10 retry budget
+    /// exhausted): Processing -> Failed, remaining-work counter
+    /// drained, no measurement logged. O(1).
+    pub fn abandon(&mut self, key: TaskKey, at: SimTime) {
+        self.shards.get_mut(key.0).expect("unknown task").abandon(key.1, at);
+    }
+
     pub fn get(&self, key: TaskKey) -> Option<&TaskRow> {
         self.shards.get(key.0).and_then(|s| s.get(key.1))
     }

@@ -221,6 +221,31 @@ impl Shard {
         }
     }
 
+    /// Abandon a processing task whose PR-10 retry budget is exhausted:
+    /// Processing -> Failed, terminally (it will never be re-queued).
+    /// Unlike a `complete` with a nonzero exit code, abandonment also
+    /// drains the remaining-work counter — the task is out of the
+    /// demand picture, so N* must stop sizing capacity for it. No
+    /// measurement is logged (there is nothing to measure). O(1).
+    pub fn abandon(&mut self, task: usize, at: SimTime) {
+        {
+            let row = self.rows.get(task).expect("unknown task");
+            assert_eq!(
+                row.status,
+                TaskStatus::Processing,
+                "abandoning unclaimed task ({}, {task})",
+                self.workload
+            );
+        }
+        self.unlink(TaskStatus::Processing, task);
+        self.push_back(TaskStatus::Failed, task);
+        let row = &mut self.rows[task];
+        row.status = TaskStatus::Failed;
+        row.completed_at = Some(at);
+        row.exit_code = -1;
+        self.remaining[row.media_type] -= 1;
+    }
+
     /// Requeue a processing task (instance lost / spot reclaimed):
     /// Processing -> Pending, at the **tail** of the pending list (see
     /// the module docs in [`super`]). O(1).

@@ -566,6 +566,10 @@ pub fn merge_metrics(parts: Vec<RunMetrics>) -> RunMetrics {
         out.unfulfilled_requests += p.unfulfilled_requests;
         out.requeued_tasks += p.requeued_tasks;
         out.tasks_completed += p.tasks_completed;
+        out.chunk_retries += p.chunk_retries;
+        out.speculative_launches += p.speculative_launches;
+        out.straggler_instances += p.straggler_instances;
+        out.tasks_abandoned += p.tasks_abandoned;
         // peak residency is per-platform (parts never share shards or
         // bank lanes); the aggregate reports the largest single part
         out.peak_live_shards = out.peak_live_shards.max(p.peak_live_shards);

@@ -74,10 +74,19 @@ pub struct WorkloadOutcome {
     pub ttc_extended: bool,
     pub n_tasks: usize,
     pub total_bytes: u64,
+    /// Tasks whose retry budget was exhausted (PR-10): terminal
+    /// failures, counted as completed for conservation (the run never
+    /// hangs) but the workload can no longer meet its TTC.
+    pub tasks_abandoned: usize,
 }
 
 impl WorkloadOutcome {
     pub fn met_ttc(&self) -> Option<bool> {
+        if self.tasks_abandoned > 0 {
+            // an abandoned task is a deadline violation by definition,
+            // even on best-effort workloads that finished "early"
+            return Some(false);
+        }
         Some(self.completed_at? <= self.deadline?)
     }
 }
@@ -132,12 +141,28 @@ pub struct RunMetrics {
     /// the scaling loop retries at later instants.
     pub unfulfilled_requests: u64,
     /// In-flight tasks re-queued through `TaskDb::requeue` after their
-    /// instance was reclaimed (each later completes exactly once; the
-    /// DB state machine panics on double completion).
+    /// instance was reclaimed or their chunk crashed and served its
+    /// retry backoff (each later completes exactly once; the DB state
+    /// machine panics on double completion).
     pub requeued_tasks: u64,
     /// Tasks that reached Completed/Failed across all workloads — must
     /// balance the suite's task count even under reclamation churn.
     pub tasks_completed: usize,
+    /// Chunk re-dispatches after a transient crash (PR-10
+    /// `ChunkCrash`): each crash costs the chunk's work and re-enters
+    /// its tasks at the pending tail after an exponential backoff.
+    pub chunk_retries: u64,
+    /// Speculative twin chunks launched for timed-out stragglers
+    /// (PR-10): first completion wins, the loser is torn down without
+    /// double-counting.
+    pub speculative_launches: u64,
+    /// Instances the fault model marked as stragglers, counted at
+    /// readiness (PR-10 `Straggler`).
+    pub straggler_instances: u64,
+    /// Tasks whose retry budget was exhausted (PR-10): terminally
+    /// Failed, counted into `tasks_completed` for conservation (the
+    /// run never hangs) and into their workload's deadline violation.
+    pub tasks_abandoned: u64,
     /// High-water mark of simultaneously live (arrived, not yet
     /// retired) shards (PR-8). Only a shard-retiring run moves it off
     /// zero; like `ticks_skipped` it describes the *executor's* memory
@@ -171,6 +196,10 @@ impl PartialEq for RunMetrics {
             && self.unfulfilled_requests == other.unfulfilled_requests
             && self.requeued_tasks == other.requeued_tasks
             && self.tasks_completed == other.tasks_completed
+            && self.chunk_retries == other.chunk_retries
+            && self.speculative_launches == other.speculative_launches
+            && self.straggler_instances == other.straggler_instances
+            && self.tasks_abandoned == other.tasks_abandoned
     }
 }
 
@@ -329,6 +358,41 @@ mod tests {
         let mut c = a.clone();
         c.ticks = 10; // tick *count* is a simulation output and must compare
         assert_ne!(a, c);
+        // the PR-10 degradation receipts are simulation outputs too
+        for field in 0..4 {
+            let mut d = a.clone();
+            match field {
+                0 => d.chunk_retries = 1,
+                1 => d.speculative_launches = 1,
+                2 => d.straggler_instances = 1,
+                _ => d.tasks_abandoned = 1,
+            }
+            assert_ne!(a, d, "receipt field {field} must participate in equality");
+        }
+    }
+
+    #[test]
+    fn abandoned_tasks_count_as_ttc_violations() {
+        // an on-time workload with an abandoned task still violates
+        let on_time = WorkloadOutcome {
+            completed_at: Some(50),
+            deadline: Some(100),
+            tasks_abandoned: 1,
+            ..Default::default()
+        };
+        assert_eq!(on_time.met_ttc(), Some(false));
+        // even a best-effort (deadline-less) workload reports violation
+        let best_effort =
+            WorkloadOutcome { completed_at: Some(50), tasks_abandoned: 2, ..Default::default() };
+        assert_eq!(best_effort.met_ttc(), Some(false));
+        let clean = WorkloadOutcome {
+            completed_at: Some(50),
+            deadline: Some(100),
+            ..Default::default()
+        };
+        assert_eq!(clean.met_ttc(), Some(true));
+        let m = RunMetrics { outcomes: vec![on_time, clean], ..Default::default() };
+        assert!((m.ttc_compliance() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -175,11 +175,55 @@ impl Platform {
         // accounting stay in backend-normalized CU-seconds. m3.medium's
         // multiplier is exactly 1.0, so the default fleet is unchanged.
         let wall = result.busy_s * self.exec_mult * self.backend.instance_exec_mult(inst_id);
+        // PR-10 stragglers stretch wall time further; the multiply is
+        // skipped entirely on healthy units (None) so the fault-free
+        // float chain stays bitwise what it was
+        let wall = match self.fault.straggler_mult(inst_id) {
+            Some(slow) => wall * slow,
+            None => wall,
+        };
         self.sim.schedule(
             wall.ceil().max(1.0) as SimTime,
             Event::ChunkDone { instance: inst_id, chunk: id },
         );
         self.update_pending_flag(w);
+    }
+
+    /// PR-10: launch a speculative twin of timed-out chunk `orig` on
+    /// `inst_id`. The twin re-executes the same task set under a fresh
+    /// chunk id but takes **no** new DB claims (the tasks stay
+    /// Processing under the original's claim) and no tracker
+    /// assignment (the original's is still outstanding): the pair
+    /// resolves to exactly one completion through the `spec_twin`
+    /// links — first finisher wins, the loser is torn down.
+    pub(crate) fn dispatch_speculative_twin(&mut self, orig: u64, inst_id: u64, now: SimTime) {
+        let (w, tasks) = {
+            let c = &self.chunks[&orig];
+            (c.workload, c.tasks.clone())
+        };
+        self.next_chunk_id += 1;
+        let id = self.next_chunk_id;
+        let spec = &self.specs[w];
+        let result = execute_chunk(spec, &tasks, false, &self.storage);
+        let chunk =
+            Chunk { id, workload: w, instance: inst_id, tasks, footprint: false, started_at: now };
+        self.chunks.insert(id, chunk);
+        if let Some(inst) = self.backend.instance_mut(inst_id) {
+            inst.begin_chunk(id);
+        }
+        let wall = result.busy_s * self.exec_mult * self.backend.instance_exec_mult(inst_id);
+        // the target was picked healthy, but compose defensively
+        let wall = match self.fault.straggler_mult(inst_id) {
+            Some(slow) => wall * slow,
+            None => wall,
+        };
+        self.sim.schedule(
+            wall.ceil().max(1.0) as SimTime,
+            Event::ChunkDone { instance: inst_id, chunk: id },
+        );
+        self.spec_twin.insert(orig, id);
+        self.spec_twin.insert(id, orig);
+        self.metrics.speculative_launches += 1;
     }
 
     pub(crate) fn dispatch_merges(&mut self) {

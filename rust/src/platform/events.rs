@@ -22,13 +22,22 @@
 
 use crate::cloud::MERGE_CHUNK;
 use crate::coordinator::footprint_count;
-use crate::lci::execute_chunk;
+use crate::lci::{execute_chunk, Chunk};
 use crate::metrics::EstimatorTrace;
 use crate::platform::{CloudEvent, Platform, WlPhase};
-use crate::sim::SimTime;
+use crate::sim::{Event, SimTime};
 use crate::workload::Mode;
 
 use anyhow::Result;
+
+/// PR-10 recovery policy: how many transient crashes one task survives
+/// before it is terminally abandoned (Failed, a deadline violation —
+/// never a hang).
+pub(crate) const CHUNK_RETRY_BUDGET: u32 = 3;
+
+/// Base re-dispatch backoff after a crash, doubled per prior crash of
+/// the most-retried task in the chunk (capped well inside SimTime).
+pub(crate) const RETRY_BACKOFF_BASE_S: SimTime = 30;
 
 impl Platform {
     pub(crate) fn on_arrival(&mut self, w: usize) -> Result<()> {
@@ -74,6 +83,13 @@ impl Platform {
 
     pub(crate) fn on_instance_ready(&mut self, id: u64) {
         let now = self.sim.now();
+        // PR-10 receipt: the straggler decision is a pure function of
+        // (seed, id), so counting at readiness agrees with every later
+        // dispatch-time query. Healthy models answer None and the
+        // counter stays at its fault-free zero.
+        if self.fault.straggler_mult(id).is_some() {
+            self.metrics.straggler_instances += 1;
+        }
         self.backend.instance_ready(id, now);
         self.sample_instances(now);
         self.assign_idle();
@@ -92,6 +108,29 @@ impl Platform {
         let mult = self.exec_mult;
         // re-derive the result (deterministic) to record measurements
         let result = execute_chunk(spec, &chunk.tasks, chunk.footprint, &self.storage);
+        // PR-10 transient crash, evaluated exactly once per chunk id at
+        // this (deterministic) completion instant. Footprint chunks are
+        // exempt — the sampling stage is tiny and keeps its own queue.
+        // A fault-free model answers false and the path below is
+        // untouched.
+        if !chunk.footprint {
+            let wall = now.saturating_sub(chunk.started_at);
+            if self.fault.chunk_crashes(chunk_id, wall) {
+                self.on_chunk_crashed(chunk, result.busy_s * mult, now);
+                return;
+            }
+        }
+        // PR-10 speculation: first completion wins. Tear the losing
+        // twin down — free its slot, drop it from the live map so its
+        // later ChunkDone hits the stale guard — before completing the
+        // tasks exactly once below.
+        if let Some(twin) = self.spec_twin.remove(&chunk_id) {
+            self.spec_twin.remove(&twin);
+            if let Some(loser) = self.chunks.remove(&twin) {
+                // no busy contribution: the loser produced nothing
+                self.backend.on_chunk_finished(loser.instance, twin, now, 0.0, 0);
+            }
+        }
         for (i, &t) in chunk.tasks.iter().enumerate() {
             let cus = result.per_task_cus[i] * mult;
             let k = spec.tasks[t].media_type;
@@ -127,6 +166,72 @@ impl Platform {
         self.tracker.on_release(w);
         self.update_pending_flag(w);
         self.check_workload_done(w);
+        self.assign_idle();
+    }
+
+    /// PR-10: absorb a transient chunk crash at its completion instant.
+    /// The chunk's work is lost (the instance slot frees and the lost
+    /// attempt is still charged on usage-billed backends); each member
+    /// task either re-enters the pending tail after an exponential
+    /// backoff — via a scheduled [`Event::RetryTasks`], so the sparse
+    /// skipper can never jump the retry — or, once its budget is
+    /// exhausted, is terminally abandoned (Failed; the workload still
+    /// reaches Done, but as a deadline violation). If the crashed chunk
+    /// had a live speculative twin, the twin still owns every task and
+    /// nothing needs recovery.
+    pub(crate) fn on_chunk_crashed(&mut self, chunk: Chunk, busy: f64, now: SimTime) {
+        let w = chunk.workload;
+        self.backend
+            .on_chunk_finished(chunk.instance, chunk.id, now, busy, chunk.tasks.len());
+        if let Some(twin) = self.spec_twin.remove(&chunk.id) {
+            self.spec_twin.remove(&twin);
+            if self.chunks.contains_key(&twin) {
+                // the twin carries the tasks to completion; the tracker
+                // assignment stays outstanding with it
+                self.assign_idle();
+                return;
+            }
+        }
+        let mut retry: Vec<usize> = Vec::new();
+        let mut worst = 0u32;
+        for &t in &chunk.tasks {
+            let c = self.retry_counts.entry((w, t)).or_insert(0);
+            *c += 1;
+            if *c <= CHUNK_RETRY_BUDGET {
+                worst = worst.max(*c);
+                retry.push(t);
+            } else {
+                // budget exhausted: terminal failure, counted as
+                // completed for conservation (the run never hangs)
+                self.db.abandon((w, t), now);
+                let st = &mut self.wl[w];
+                st.completed_tasks += 1;
+                st.tasks_abandoned += 1;
+                self.metrics.tasks_abandoned += 1;
+            }
+        }
+        if !retry.is_empty() {
+            self.metrics.chunk_retries += 1;
+            // exponential backoff, keyed on the chunk's most-retried
+            // task (the shift stays small; budget bounds `worst`)
+            let backoff = RETRY_BACKOFF_BASE_S << (worst - 1).min(16);
+            self.sim.schedule(backoff, Event::RetryTasks { workload: w, tasks: retry });
+        }
+        self.tracker.on_release(w);
+        self.update_pending_flag(w);
+        self.check_workload_done(w);
+        self.assign_idle();
+    }
+
+    /// PR-10: a crashed chunk's backoff elapsed — its tasks re-enter
+    /// the pending tail (they sat Processing in the interim, invisible
+    /// to dispatch, so nothing could double-claim them).
+    pub(crate) fn on_retry_tasks(&mut self, w: usize, tasks: &[usize]) {
+        for &t in tasks {
+            self.db.requeue((w, t));
+        }
+        self.metrics.requeued_tasks += tasks.len() as u64;
+        self.update_pending_flag(w);
         self.assign_idle();
     }
 
@@ -189,6 +294,10 @@ impl Platform {
                 // the surviving fleet (if any) picks up requeued work
                 self.assign_idle();
             }
+            // a boot failure was already absorbed at request time (the
+            // readiness push-back in scaling.rs); the event is the
+            // observability receipt for the daemon's SSE stream
+            CloudEvent::BootFailure { .. } => {}
         }
     }
 
@@ -232,6 +341,22 @@ impl Platform {
                 }
             } else if let Some(chunk) = self.chunks.remove(&chunk_id) {
                 let w = chunk.workload;
+                // PR-10 speculation: a torn-down chunk with a *live*
+                // twin leaves its tasks with the twin (they stay
+                // Processing there; requeueing would double-claim).
+                // The link is cleared from both sides, so if the twin
+                // is reclaimed later in this same event, it requeues
+                // the tasks normally — exactly once either way.
+                let twin_alive = match self.spec_twin.remove(&chunk_id) {
+                    Some(twin) => {
+                        self.spec_twin.remove(&twin);
+                        self.chunks.contains_key(&twin)
+                    }
+                    None => false,
+                };
+                if twin_alive {
+                    continue;
+                }
                 for &t in &chunk.tasks {
                     self.db.requeue((w, t));
                 }

@@ -20,6 +20,7 @@
 
 use crate::cloud::{CloudBackend, InstanceState};
 use crate::sim::SimTime;
+use crate::util::rng::Rng;
 
 /// An injected cloud event, applied by the platform loop at a
 /// monitoring instant.
@@ -28,6 +29,11 @@ pub enum CloudEvent {
     /// These instances are revoked *now* (forced immediate termination;
     /// in-flight chunks must be requeued).
     Reclamation { instances: Vec<u64> },
+    /// These fulfilled requests failed to boot (PR-10 [`LaunchFlake`]):
+    /// readiness is pushed back by the flake delay, observable over the
+    /// daemon's SSE stream. The delay itself is applied at request time
+    /// in `scaling.rs`; this event is the receipt, not the mechanism.
+    BootFailure { instances: Vec<u64> },
 }
 
 /// A fault model: polled once per monitoring tick, reads the backend,
@@ -45,6 +51,44 @@ pub trait FaultModel: std::fmt::Debug {
     /// allow it.
     fn next_scheduled(&self, _backend: &dyn CloudBackend, now: SimTime) -> Option<SimTime> {
         Some(now)
+    }
+
+    /// Wall-time multiplier for chunks executed on `instance`, or
+    /// `None` for a healthy unit (PR-10 [`Straggler`]). A pure function
+    /// of `(seed, instance)` — queried at dispatch instants and once at
+    /// instance readiness (the `straggler_instances` receipt), so the
+    /// answer must be stable across repeated calls. Call sites skip the
+    /// multiply entirely on `None`, keeping the fault-free path
+    /// bit-identical to the pre-PR-10 platform.
+    fn straggler_mult(&self, _instance: u64) -> Option<f64> {
+        None
+    }
+
+    /// Does `chunk` crash at its scheduled completion instant after
+    /// `wall` seconds of execution (PR-10 [`ChunkCrash`])? Evaluated
+    /// exactly once per chunk id, at the `ChunkDone` event — a
+    /// deterministic event instant, so dense and tick-skipped runs ask
+    /// the same question at the same time. A pure function of
+    /// `(seed, chunk, wall)`.
+    fn chunk_crashes(&self, _chunk: u64, _wall: SimTime) -> bool {
+        false
+    }
+
+    /// Boot-failure delay for fulfilled request `instance`, or `None`
+    /// when the launch succeeds (PR-10 [`LaunchFlake`]). A pure
+    /// function of `(seed, instance)`, queried once at the request
+    /// instant.
+    fn launch_flake_delay(&self, _instance: u64) -> Option<SimTime> {
+        None
+    }
+
+    /// Whether the PR-10 speculative re-execution scan arms at all.
+    /// Only fault models that can slow individual units ([`Straggler`])
+    /// return true: speculation's timeout heuristic could otherwise
+    /// fire on an honest estimate miss, and the fault-free / reclaim
+    /// scenarios are pinned bit-identical to the pre-PR-10 platform.
+    fn enables_speculation(&self) -> bool {
+        false
     }
 }
 
@@ -75,16 +119,55 @@ pub enum FaultSpec {
     /// at/after it). Like the market-driven variants, only applies to
     /// reclaimable (spot) backends.
     ReclamationAt { times: Vec<SimTime> },
+    /// A seeded fraction `frac` of launched instances are stragglers:
+    /// every chunk they run takes `slowdown`x the healthy wall time
+    /// (composing multiplicatively with the backend `exec_mult` chain).
+    /// CLI token `straggler:<frac>x<slowdown>`.
+    Straggler { frac: f64, slowdown: f64 },
+    /// Seeded transient per-chunk failure: a chunk running `wall`
+    /// seconds crashes at its completion instant with hazard
+    /// probability `1 - (1-rate)^wall` (per-second hazard `rate`), its
+    /// work lost; the recovery policy requeues its tasks with backoff.
+    /// CLI token `crash:<rate>`.
+    ChunkCrash { rate: f64 },
+    /// Seeded launch flake: each fulfilled spot request fails to boot
+    /// with probability `prob`, pushing its readiness back by `delay_s`
+    /// (the re-request round trip). CLI token `flake:<prob>+<delay_s>`.
+    LaunchFlake { prob: f64, delay_s: SimTime },
 }
 
+/// Substream salts separating the partial-failure decision streams from
+/// each other (and from everything else keyed off the master seed).
+const STRAGGLER_SALT: u64 = 0x5747;
+const CRASH_SALT: u64 = 0xC4A5;
+const FLAKE_SALT: u64 = 0xF1A6;
+
 impl FaultSpec {
-    pub fn build(&self) -> Box<dyn FaultModel> {
+    /// Build the run's fault model. `seed` is the scenario's master
+    /// seed; the partial-failure models derive per-entity substreams
+    /// from it so their decisions are pure functions of
+    /// `(seed, entity id)` — order- and thread-count-independent.
+    pub fn build(&self, seed: u64) -> Box<dyn FaultModel> {
         match self {
             FaultSpec::None => Box::new(NoFaults),
             FaultSpec::SpotReclamation { bid } => Box::new(SpotReclamation { bid: *bid }),
             // per-pool bids only: the fallback can never be crossed
             FaultSpec::PoolReclamation => Box::new(SpotReclamation { bid: f64::INFINITY }),
             FaultSpec::ReclamationAt { times } => Box::new(ReclamationAt::new(times.clone())),
+            FaultSpec::Straggler { frac, slowdown } => Box::new(Straggler {
+                frac: *frac,
+                slowdown: *slowdown,
+                stream: Rng::new(seed).substream(STRAGGLER_SALT),
+            }),
+            FaultSpec::ChunkCrash { rate } => Box::new(ChunkCrash {
+                rate: *rate,
+                stream: Rng::new(seed).substream(CRASH_SALT),
+            }),
+            FaultSpec::LaunchFlake { prob, delay_s } => Box::new(LaunchFlake {
+                prob: *prob,
+                delay_s: *delay_s,
+                stream: Rng::new(seed).substream(FLAKE_SALT),
+            }),
         }
     }
 
@@ -106,6 +189,9 @@ impl FaultSpec {
             // through parse_fault
             FaultSpec::PoolReclamation => "reclaim-pools".into(),
             FaultSpec::ReclamationAt { times } => format!("reclaim-at:{times:?}"),
+            FaultSpec::Straggler { frac, slowdown } => format!("straggler:{frac}x{slowdown}"),
+            FaultSpec::ChunkCrash { rate } => format!("crash:{rate}"),
+            FaultSpec::LaunchFlake { prob, delay_s } => format!("flake:{prob}+{delay_s}"),
         }
     }
 }
@@ -226,6 +312,98 @@ impl FaultModel for ReclamationAt {
     }
 }
 
+/// One uniform draw for `id`, derived from a salted substream of the
+/// master seed: pure in `(stream, id)`, so repeated queries agree and
+/// answer order never matters.
+fn unit_draw(stream: &Rng, id: u64) -> f64 {
+    stream.substream(id).f64()
+}
+
+/// Seeded straggler fleet (see [`FaultSpec::Straggler`]): each launched
+/// instance is independently a straggler with probability `frac`, and
+/// stays one for its whole lifetime. The decision is a pure function of
+/// `(seed, instance id)` — dispatch-time queries and the readiness-time
+/// receipt count always agree.
+#[derive(Debug)]
+pub struct Straggler {
+    pub frac: f64,
+    pub slowdown: f64,
+    stream: Rng,
+}
+
+impl FaultModel for Straggler {
+    fn poll(&mut self, _backend: &dyn CloudBackend, _now: SimTime, _out: &mut Vec<CloudEvent>) {}
+
+    fn next_scheduled(&self, _backend: &dyn CloudBackend, _now: SimTime) -> Option<SimTime> {
+        // straggling acts at dispatch instants, never at an idle tick;
+        // skipping is only attempted while no chunks are in flight, so
+        // there is no fault leg to pin on the horizon
+        None
+    }
+
+    fn straggler_mult(&self, instance: u64) -> Option<f64> {
+        (unit_draw(&self.stream, instance) < self.frac).then_some(self.slowdown)
+    }
+
+    fn enables_speculation(&self) -> bool {
+        true
+    }
+}
+
+/// Seeded transient chunk failure (see [`FaultSpec::ChunkCrash`]): the
+/// per-second hazard `rate` integrates over the chunk's wall time, so a
+/// long chunk is proportionally likelier to die than a short one —
+/// `p = 1 - (1-rate)^wall`, computed by repeated multiplication
+/// (`powi`) so the result is bit-identical across platforms (no libm
+/// `exp`). Evaluated at the chunk's scheduled completion event.
+#[derive(Debug)]
+pub struct ChunkCrash {
+    pub rate: f64,
+    stream: Rng,
+}
+
+impl FaultModel for ChunkCrash {
+    fn poll(&mut self, _backend: &dyn CloudBackend, _now: SimTime, _out: &mut Vec<CloudEvent>) {}
+
+    fn next_scheduled(&self, _backend: &dyn CloudBackend, _now: SimTime) -> Option<SimTime> {
+        // crashes fire at ChunkDone events, which already bound the
+        // skip horizon through the engine's next_non_tick_time leg
+        None
+    }
+
+    fn chunk_crashes(&self, chunk: u64, wall: SimTime) -> bool {
+        let survive_per_s = (1.0 - self.rate).clamp(0.0, 1.0);
+        let crash_p = 1.0 - survive_per_s.powi(wall.min(i32::MAX as u64) as i32);
+        unit_draw(&self.stream, chunk) < crash_p
+    }
+}
+
+/// Seeded launch flake (see [`FaultSpec::LaunchFlake`]): a fulfilled
+/// request fails to boot with probability `prob` and becomes ready
+/// `delay_s` later than the provider quoted. Pure in
+/// `(seed, instance id)`, queried once at the request instant.
+#[derive(Debug)]
+pub struct LaunchFlake {
+    pub prob: f64,
+    pub delay_s: SimTime,
+    stream: Rng,
+}
+
+impl FaultModel for LaunchFlake {
+    fn poll(&mut self, _backend: &dyn CloudBackend, _now: SimTime, _out: &mut Vec<CloudEvent>) {}
+
+    fn next_scheduled(&self, _backend: &dyn CloudBackend, _now: SimTime) -> Option<SimTime> {
+        // flakes act at request instants (inside adjust_fleet, which
+        // runs on every executed tick); the delayed InstanceReady event
+        // they schedule bounds the horizon via next_non_tick_time
+        None
+    }
+
+    fn launch_flake_delay(&self, instance: u64) -> Option<SimTime> {
+        (unit_draw(&self.stream, instance) < self.prob).then_some(self.delay_s)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -258,6 +436,7 @@ mod tests {
         assert_eq!(out.len(), 1);
         match &out[0] {
             CloudEvent::Reclamation { instances } => assert_eq!(instances.len(), 3),
+            other => panic!("expected a reclamation, got {other:?}"),
         }
         // bid above any possible price: never crossed
         out.clear();
@@ -294,6 +473,7 @@ mod tests {
             CloudEvent::Reclamation { instances } => {
                 assert_eq!(instances, &vec![big], "only the big pool is revoked");
             }
+            other => panic!("expected a reclamation, got {other:?}"),
         }
     }
 
@@ -303,7 +483,7 @@ mod tests {
         let mut p = Provider::with_fleet(MarketCfg::default(), 11, 8, &fleet);
         let (a, ra) = p.request_spot_instance(0, 0);
         Provider::instance_ready(&mut p, a, ra);
-        let mut m = FaultSpec::PoolReclamation.build();
+        let mut m = FaultSpec::PoolReclamation.build(11);
         let mut out = vec![];
         m.poll(&p, 500, &mut out);
         assert!(out.is_empty(), "no pool has a bid, nothing can cross it");
@@ -372,13 +552,100 @@ mod tests {
         assert_eq!(FaultSpec::SpotReclamation { bid: 0.01 }.spot_bid(), Some(0.01));
         assert_eq!(FaultSpec::PoolReclamation.spot_bid(), None);
         assert_eq!(FaultSpec::None.spot_bid(), None);
+        // the partial-failure variants round-trip the CLI grammar and
+        // carry no spot bid
+        let s = FaultSpec::Straggler { frac: 0.2, slowdown: 4.0 };
+        assert_eq!(s.describe(), "straggler:0.2x4");
+        assert_eq!(s.spot_bid(), None);
+        assert_eq!(FaultSpec::ChunkCrash { rate: 0.01 }.describe(), "crash:0.01");
+        assert_eq!(FaultSpec::LaunchFlake { prob: 0.3, delay_s: 120 }.describe(), "flake:0.3+120");
         let spec = FaultSpec::ReclamationAt { times: vec![5, 2] };
         assert!(spec.describe().contains("reclaim-at"));
         // building sorts the scripted schedule
         let p = fleet_of(1);
-        let mut m = spec.build();
+        let mut m = spec.build(11);
         let mut out = vec![];
         m.poll(&p, 2, &mut out);
         assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn straggler_decisions_are_stable_and_hit_the_fraction() {
+        let m = FaultSpec::Straggler { frac: 0.25, slowdown: 4.0 }.build(42);
+        let mut hits = 0;
+        for id in 0..1000u64 {
+            let first = m.straggler_mult(id);
+            assert_eq!(first, m.straggler_mult(id), "decision must be idempotent");
+            if let Some(mult) = first {
+                assert_eq!(mult, 4.0);
+                hits += 1;
+            }
+        }
+        // seeded binomial(1000, 0.25): a loose window proves the draw
+        // actually spans the unit interval
+        assert!((150..350).contains(&hits), "straggler fraction off: {hits}/1000");
+        // frac=0 never straggles, frac=1 always does
+        assert!(FaultSpec::Straggler { frac: 0.0, slowdown: 4.0 }
+            .build(42)
+            .straggler_mult(7)
+            .is_none());
+        assert_eq!(
+            FaultSpec::Straggler { frac: 1.0, slowdown: 2.5 }.build(42).straggler_mult(7),
+            Some(2.5)
+        );
+    }
+
+    #[test]
+    fn chunk_crash_hazard_scales_with_wall_time() {
+        let m = FaultSpec::ChunkCrash { rate: 0.01 }.build(42);
+        let crashes = |wall: SimTime| (0..1000u64).filter(|&c| m.chunk_crashes(c, wall)).count();
+        // p(60s) ≈ 0.45, p(1s) ≈ 0.01: the hazard must integrate over
+        // wall time, and each query must be stable
+        let short = crashes(1);
+        let long = crashes(60);
+        assert!(short < 50, "1s chunks should rarely crash: {short}/1000");
+        assert!((300..600).contains(&long), "60s chunks crash ~45%: {long}/1000");
+        assert_eq!(m.chunk_crashes(3, 60), m.chunk_crashes(3, 60));
+        // rate=0 never crashes, even for very long chunks
+        let never = FaultSpec::ChunkCrash { rate: 0.0 }.build(42);
+        assert!((0..1000u64).all(|c| !never.chunk_crashes(c, 100_000)));
+    }
+
+    #[test]
+    fn launch_flake_delays_a_seeded_fraction() {
+        let m = FaultSpec::LaunchFlake { prob: 0.3, delay_s: 120 }.build(42);
+        let mut hits = 0;
+        for id in 0..1000u64 {
+            let first = m.launch_flake_delay(id);
+            assert_eq!(first, m.launch_flake_delay(id), "decision must be idempotent");
+            if let Some(d) = first {
+                assert_eq!(d, 120);
+                hits += 1;
+            }
+        }
+        assert!((200..400).contains(&hits), "flake fraction off: {hits}/1000");
+        assert!(FaultSpec::LaunchFlake { prob: 0.0, delay_s: 120 }
+            .build(42)
+            .launch_flake_delay(7)
+            .is_none());
+    }
+
+    #[test]
+    fn partial_failure_models_add_no_skip_horizon_leg() {
+        // these faults act at dispatch/completion/request instants —
+        // events that already bound the skip horizon — so the fault leg
+        // itself must stay empty (the PR-6 skipper may engage)
+        let p = fleet_of(1);
+        for spec in [
+            FaultSpec::Straggler { frac: 0.2, slowdown: 4.0 },
+            FaultSpec::ChunkCrash { rate: 0.01 },
+            FaultSpec::LaunchFlake { prob: 0.3, delay_s: 120 },
+        ] {
+            let mut m = spec.build(42);
+            assert_eq!(m.next_scheduled(&p, 500), None, "{}", spec.describe());
+            let mut out = vec![];
+            m.poll(&p, 500, &mut out);
+            assert!(out.is_empty(), "{}: poll must not emit", spec.describe());
+        }
     }
 }

@@ -55,7 +55,10 @@ pub mod scenario;
 pub mod tick;
 
 pub use arrivals::ArrivalProcess;
-pub use faults::{CloudEvent, FaultModel, FaultSpec, NoFaults, ReclamationAt, SpotReclamation};
+pub use faults::{
+    ChunkCrash, CloudEvent, FaultModel, FaultSpec, LaunchFlake, NoFaults, ReclamationAt,
+    SpotReclamation, Straggler,
+};
 pub use scenario::{Scenario, ScenarioBuilder, StreamSpec};
 
 use std::collections::BTreeMap;
@@ -183,6 +186,10 @@ pub(crate) struct WlState {
     /// at retirement; `None` while the shard is live (counts are read
     /// from the DB then).
     pub(crate) terminal: Option<(usize, usize)>,
+    /// Tasks terminally Failed after exhausting the PR-10 retry budget.
+    /// Counted into `completed_tasks` too (terminal = never a hang);
+    /// any nonzero value makes the workload a deadline violation.
+    pub(crate) tasks_abandoned: usize,
 }
 
 impl WlState {
@@ -207,6 +214,7 @@ impl WlState {
             n_tasks: spec.n_tasks(),
             total_bytes: spec.total_bytes(),
             terminal: None,
+            tasks_abandoned: 0,
         }
     }
 }
@@ -289,6 +297,14 @@ pub struct Platform {
     pub(crate) last_meas: Vec<f32>,
     pub(crate) chunks: BTreeMap<u64, Chunk>,
     pub(crate) next_chunk_id: u64,
+    /// PR-10 recovery policy: crash-retry counts per task key. A task
+    /// appears once it has crashed; its count gates the retry budget
+    /// and scales the exponential backoff.
+    pub(crate) retry_counts: BTreeMap<(usize, usize), u32>,
+    /// PR-10 speculation: chunk id ↔ chunk id links between a timed-out
+    /// original and its speculative twin (stored in both directions).
+    /// First completion wins; the loser is torn down via this map.
+    pub(crate) spec_twin: BTreeMap<u64, u64>,
     /// Latest service rates, indexed by workload id.
     pub(crate) rates: Vec<f64>,
     pub(crate) n_star_history: Vec<f64>,
@@ -384,7 +400,7 @@ impl Platform {
         let fleet = fleet.with_default_bid(fault.spot_bid());
         let backend = backend_kind.build(&cfg, cfg.seed, horizon_h, &fleet);
         let exec_mult = backend.execution_multiplier();
-        let fault = fault.build();
+        let fault = fault.build(cfg.seed);
         let storage = ObjectStore::new(cfg.storage.clone());
         let tracker = Tracker::new(cfg.control.n_w_max);
         let policy = policy_kind.build(&cfg.control);
@@ -445,6 +461,8 @@ impl Platform {
             last_meas: vec![f32::NAN; n_slots],
             chunks: BTreeMap::new(),
             next_chunk_id: 0,
+            retry_counts: BTreeMap::new(),
+            spec_twin: BTreeMap::new(),
             rates: vec![0.0; n_real],
             n_star_history: vec![],
             forecast_buf: [0.0; FORECAST_H],
@@ -715,6 +733,7 @@ impl Platform {
                 Event::InstanceReady { instance } => self.on_instance_ready(instance),
                 Event::ChunkDone { instance, chunk } => self.on_chunk_done(instance, chunk),
                 Event::MergeDone { workload, epoch } => self.on_merge_done(workload, epoch),
+                Event::RetryTasks { workload, tasks } => self.on_retry_tasks(workload, &tasks),
                 Event::MonitorTick => return Ok(true),
                 Event::FootprintDone { .. } => {} // handled inline
             }
@@ -753,6 +772,7 @@ impl Platform {
                 // gone, but the shape facts survive in the state
                 n_tasks: st.n_tasks,
                 total_bytes: st.total_bytes,
+                tasks_abandoned: st.tasks_abandoned,
             })
             .collect();
         // finalize estimator traces with ground truth
@@ -988,6 +1008,47 @@ mod tests {
             .run()
             .unwrap();
         assert_eq!(shim, built, "explicit single-pool fleet diverged from the shim");
+    }
+
+    /// PR-10 fault-free parity pin: the partial-failure machinery
+    /// (the straggler lookup at dispatch, the crash check at chunk
+    /// completion, the flake hook at instance request, the speculation
+    /// gate in the tick) must be invisible when disabled — a
+    /// `FaultSpec::None` run and the degenerate zero-rate fault models
+    /// are all bit-identical (exhaustive `RunMetrics` equality, traces
+    /// on) to the plain `RunOpts` shim, i.e. the pre-PR-10 trajectory,
+    /// and every new degradation receipt stays zero.
+    ///
+    /// `Straggler { frac: 0 }` is deliberately absent from the list: a
+    /// straggler model *arms* the speculation scan
+    /// ([`FaultModel::enables_speculation`]), whose timeout heuristic
+    /// may legitimately fire on an honest estimate miss — only models
+    /// that leave the scan disarmed promise bit-identity.
+    #[test]
+    fn partial_fault_machinery_is_bit_identical_when_disabled() {
+        let reference = run_experiment(small_cfg(), small_suite(2, 30), fast_opts()).unwrap();
+        assert_eq!(reference.chunk_retries, 0);
+        assert_eq!(reference.speculative_launches, 0);
+        assert_eq!(reference.straggler_instances, 0);
+        assert_eq!(reference.tasks_abandoned, 0);
+        assert!(reference.outcomes.iter().all(|o| o.tasks_abandoned == 0));
+        for fault in [
+            FaultSpec::None,
+            FaultSpec::ChunkCrash { rate: 0.0 },
+            FaultSpec::LaunchFlake { prob: 0.0, delay_s: 120 },
+        ] {
+            let label = format!("{fault:?}");
+            let m = ScenarioBuilder::new(small_cfg())
+                .workloads(small_suite(2, 30))
+                .fixed_ttc(Some(3600))
+                .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+                .horizon(6 * 3600)
+                .fault(fault)
+                .build()
+                .run()
+                .unwrap();
+            assert_eq!(reference, m, "disabled fault machinery diverged under {label}");
+        }
     }
 
     /// Regression for the old up-scaling 1-CU assumption: a CU deficit

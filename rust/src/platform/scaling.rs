@@ -26,7 +26,7 @@
 //! platform-owned buffers so policy evaluation stays allocation-light.
 
 use crate::cloud::InstanceState;
-use crate::platform::Platform;
+use crate::platform::{CloudEvent, Platform};
 use crate::sim::Event;
 
 /// One up-scaling candidate pool (reused buffer element).
@@ -49,6 +49,19 @@ impl Platform {
         let now = self.sim.now();
         match self.backend.request_instance_in(pool, now) {
             Some((id, ready)) => {
+                // PR-10 launch flake: the fulfilled request fails to boot
+                // and is transparently re-requested — modeled as a seeded
+                // readiness push-back (the `InstanceReady` event still
+                // bounds the skip horizon, so sparse ticking stays exact).
+                // `unfulfilled_requests` is *not* bumped: that counter
+                // means "price above bid", and the policy keys off it.
+                let ready = match self.fault.launch_flake_delay(id) {
+                    Some(delay) => {
+                        self.fault_events.push(CloudEvent::BootFailure { instances: vec![id] });
+                        ready + delay
+                    }
+                    None => ready,
+                };
                 self.sim.schedule_at(ready, Event::InstanceReady { instance: id });
                 self.backend.pool_cus(pool)
             }

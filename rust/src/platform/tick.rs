@@ -338,6 +338,7 @@ impl Platform {
         // ----- tracker credits + assignment -------------------------------
         self.tracker.tick(&self.rates);
         self.assign_idle();
+        self.check_speculation(now);
 
         self.metrics.ticks += 1;
         self.metrics.tick_wall_ns += t0.elapsed().as_nanos();
@@ -510,6 +511,88 @@ impl Platform {
         self.metrics.ticks += 1;
         self.metrics.ticks_skipped += 1;
         self.sample_instances(t);
+    }
+
+    // ----- speculative re-execution (PR-10) --------------------------------
+
+    /// Expected wall time of chunk `c`: the same deadband + per-item
+    /// estimate chain [`Platform::build_chunk`] sizes chunks with
+    /// (driving estimator → footprint mean → app prior), stretched by
+    /// the backend and instance-type multipliers. Deliberately blind to
+    /// any straggler multiplier on `c.instance` — the whole point is
+    /// that the *controller* does not know which units are slow.
+    pub(crate) fn expected_chunk_wall(&self, c: &crate::lci::Chunk) -> f64 {
+        let w = c.workload;
+        let model = self.specs[w].app_model();
+        let slot = &self.est[w * self.k_max];
+        let est = Some(match self.estimator {
+            EstimatorKind::Kalman => self.bank.estimate(self.lane_of[w] as usize, 0) as f64,
+            EstimatorKind::AdHoc => slot.adhoc.b_hat,
+            EstimatorKind::Arma => slot.arma.b_hat,
+            EstimatorKind::Ewma => slot.ewma.b_hat,
+            EstimatorKind::Reactive => slot.reactive.b_hat,
+        })
+        .filter(|&b| b > 0.0)
+        .or_else(|| {
+            let st = &self.wl[w];
+            if st.footprint_meas.is_empty() {
+                None
+            } else {
+                Some(crate::util::stats::mean(&st.footprint_meas))
+            }
+        })
+        .unwrap_or(model.mean_cus + 1.0);
+        (model.deadband_s + est * c.tasks.len() as f64)
+            * self.exec_mult
+            * self.backend.instance_exec_mult(c.instance)
+    }
+
+    /// Deadline-aware speculative re-execution: a regular chunk whose
+    /// age exceeds a slack-dependent multiple of its expected wall time
+    /// (1.5× when the workload's TTC is within two expected walls, 3×
+    /// otherwise) gets a *twin* on a healthy free slot; first completion
+    /// wins ([`Platform::dispatch_speculative_twin`]). Gated on
+    /// [`crate::platform::FaultModel::enables_speculation`] so the
+    /// timeout heuristic can never fire on an honest estimate miss in a
+    /// fault-free or reclamation-only run — those stay bitwise on the
+    /// pre-PR-10 trajectory.
+    pub(crate) fn check_speculation(&mut self, now: crate::sim::SimTime) {
+        if !self.fault.enables_speculation() || self.chunks.is_empty() {
+            return;
+        }
+        let mut candidates: Vec<u64> = Vec::new();
+        for (&id, c) in &self.chunks {
+            if c.footprint || self.spec_twin.contains_key(&id) {
+                continue;
+            }
+            let expected = self.expected_chunk_wall(c);
+            let age = now.saturating_sub(c.started_at) as f64;
+            let slack = match self.wl[c.workload].deadline {
+                Some(dl) => dl.saturating_sub(now) as f64,
+                None => f64::INFINITY,
+            };
+            let factor = if slack < 2.0 * expected { 1.5 } else { 3.0 };
+            if age > factor * expected {
+                candidates.push(id);
+            }
+        }
+        for orig in candidates {
+            let orig_inst = self.chunks[&orig].instance;
+            let mut target: Option<u64> = None;
+            let fault = &self.fault;
+            self.backend.for_each_instance(&mut |i| {
+                if target.is_none()
+                    && i.has_free_slot()
+                    && i.id != orig_inst
+                    && fault.straggler_mult(i.id).is_none()
+                {
+                    target = Some(i.id);
+                }
+            });
+            if let Some(inst) = target {
+                self.dispatch_speculative_twin(orig, inst, now);
+            }
+        }
     }
 
     // ----- helpers ---------------------------------------------------------

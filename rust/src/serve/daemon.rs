@@ -583,14 +583,22 @@ impl Control {
         }
         let now = p.sim.now();
         for ev in &p.fault_events {
-            let CloudEvent::Reclamation { instances } = ev;
-            hub.publish(
-                "cloud",
-                &format!(
-                    "{{\"type\":\"reclamation\",\"t\":{now},\"instances\":{}}}",
-                    instances.len()
+            match ev {
+                CloudEvent::Reclamation { instances } => hub.publish(
+                    "cloud",
+                    &format!(
+                        "{{\"type\":\"reclamation\",\"t\":{now},\"instances\":{}}}",
+                        instances.len()
+                    ),
                 ),
-            );
+                CloudEvent::BootFailure { instances } => hub.publish(
+                    "cloud",
+                    &format!(
+                        "{{\"type\":\"boot_failure\",\"t\":{now},\"instances\":{}}}",
+                        instances.len()
+                    ),
+                ),
+            }
         }
         let fleet = p.backend.describe(now);
         let done = p.wl.iter().filter(|w| matches!(w.phase, WlPhase::Done)).count();
@@ -828,6 +836,31 @@ impl Control {
             "counter",
             "Tasks re-entered at the pending tail after a reclamation.",
             m.requeued_tasks as f64,
+        );
+        // PR-10 partial-failure receipts
+        pt.scalar(
+            "dithen_chunk_retries",
+            "counter",
+            "Chunks lost to transient crashes that scheduled a retry.",
+            m.chunk_retries as f64,
+        );
+        pt.scalar(
+            "dithen_speculative_launches",
+            "counter",
+            "Speculative twin chunks launched against suspected stragglers.",
+            m.speculative_launches as f64,
+        );
+        pt.scalar(
+            "dithen_straggler_instances",
+            "counter",
+            "Instances that came up degraded under the straggler fault model.",
+            m.straggler_instances as f64,
+        );
+        pt.scalar(
+            "dithen_tasks_abandoned",
+            "counter",
+            "Tasks dropped after exhausting the per-task retry budget.",
+            m.tasks_abandoned as f64,
         );
         pt.scalar(
             "dithen_reclamations",

@@ -32,6 +32,11 @@ pub enum Event {
     /// cancellation, so the re-dispatched merge bumps the workload's
     /// merge epoch and the platform ignores events from older epochs.
     MergeDone { workload: usize, epoch: u32 },
+    /// A crashed chunk's tasks re-enter the pending tail after their
+    /// exponential backoff elapses (PR-10 recovery policy). Being a
+    /// non-tick event it bounds the sparse-tick skip horizon, so a
+    /// skipped stretch can never jump over a scheduled retry.
+    RetryTasks { workload: usize, tasks: Vec<usize> },
 }
 
 #[derive(Debug, Clone, Eq, PartialEq)]
@@ -230,6 +235,9 @@ mod tests {
         e.next(); // tick @10
         e.next(); // chunk @30
         assert_eq!(e.next_non_tick_time(), Some(50));
+        // a scheduled retry (PR-10 backoff) bounds the horizon too
+        e.schedule_at(45, Event::RetryTasks { workload: 0, tasks: vec![1, 2] });
+        assert_eq!(e.next_non_tick_time(), Some(45));
     }
 
     #[test]

@@ -319,6 +319,13 @@ fn tick_skip_under_faults_is_bit_identical_to_dense() {
         // 20000 s sits in the post-completion idle tail — the scripted
         // leg must cut the skip there so the cursor state stays dense
         ("reclaim-at", FaultSpec::ReclamationAt { times: vec![600, 5000, 20000] }),
+        // PR-10 partial failures act at dispatch/completion/request
+        // instants, so they add no skip-horizon leg of their own:
+        // retries, delayed boots and twin completions all surface as
+        // ordinary events that already bound the fast-forward
+        ("straggler", FaultSpec::Straggler { frac: 0.25, slowdown: 4.0 }),
+        ("crash", FaultSpec::ChunkCrash { rate: 0.01 }),
+        ("flake", FaultSpec::LaunchFlake { prob: 0.3, delay_s: 120 }),
     ];
     for (name, fault) in faults {
         let skip = scn(13, fault.clone(), false).run().unwrap();
@@ -493,6 +500,51 @@ fn trait_dispatched_aimd_kalman_is_bit_identical_across_executors() {
                 "seed {seed}: {threads}-thread sweep diverged from the direct run"
             );
         }
+    }
+}
+
+/// PR-10 partial-failure determinism pin: straggler marking, per-chunk
+/// crash draws and launch flakes are all pure functions of (seed,
+/// entity id) through salted substreams, so a fault-injected run must
+/// be bit-identical run-to-run and thread-count-invariant through the
+/// parallel sweep runner — including the recovery machinery it drags
+/// in (retry backoff, speculative twins, abandonment receipts).
+#[test]
+fn partial_failure_faults_are_deterministic_across_runs_and_threads() {
+    let scn = |seed: u64, fault: FaultSpec| {
+        ScenarioBuilder::new(cfg(seed))
+            .workloads(suite(seed, 2, 30))
+            .fixed_ttc(Some(1800))
+            .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+            .horizon(8 * 3600)
+            .fault(fault)
+            .build()
+    };
+    let faults = [
+        ("straggler", FaultSpec::Straggler { frac: 0.25, slowdown: 4.0 }),
+        ("crash", FaultSpec::ChunkCrash { rate: 0.01 }),
+        ("flake", FaultSpec::LaunchFlake { prob: 0.3, delay_s: 120 }),
+    ];
+    let mut specs: Vec<RunSpec> = vec![];
+    for (name, fault) in faults {
+        let a = scn(21, fault.clone()).run().unwrap();
+        let b = scn(21, fault.clone()).run().unwrap();
+        assert_eq!(a, b, "{name}: two sequential runs diverged");
+        // the receipts are part of the exhaustive equality above, but
+        // make the fault-stream determinism explicit too
+        assert_eq!(a.chunk_retries, b.chunk_retries, "{name}");
+        assert_eq!(a.speculative_launches, b.speculative_launches, "{name}");
+        assert_eq!(a.straggler_instances, b.straggler_instances, "{name}");
+        assert_eq!(a.tasks_abandoned, b.tasks_abandoned, "{name}");
+        specs.push(RunSpec::new(format!("pf/{name}"), scn(21, fault)));
+    }
+    let sequential = run_specs(&specs, 1).unwrap();
+    for threads in [2usize, 8] {
+        let parallel = run_specs(&specs, threads).unwrap();
+        assert_eq!(
+            sequential, parallel,
+            "{threads}-thread partial-failure sweep diverged from the sequential reference"
+        );
     }
 }
 

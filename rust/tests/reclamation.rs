@@ -187,3 +187,119 @@ fn splitmerge_merge_step_survives_reclamation() {
     assert!(m.outcomes[0].completed_at.is_some(), "split-merge did not recover");
     assert_eq!(m.tasks_completed, 30);
 }
+
+// ----- PR-10 partial failures -------------------------------------------
+
+fn cfg_seeded(seed: u64) -> Config {
+    let mut c = cfg();
+    c.seed = seed;
+    c
+}
+
+#[test]
+fn chunk_crashes_retry_with_backoff_and_conserve_tasks() {
+    // a 0.01/s hazard over ~minute-scale chunk walls crashes a large
+    // share of attempts, so the retry/backoff path is exercised hard
+    // and a few tasks plausibly exhaust the 3-retry budget. The
+    // conservation law is exact either way: every task ends Completed
+    // or abandoned, never both, never lost — double completion panics
+    // inside the task DB, so a clean run is the exactly-once proof.
+    let total = 2 * 50;
+    let m = ScenarioBuilder::new(cfg())
+        .workloads(suite(2, 50, App::FaceDetection))
+        .fixed_ttc(Some(1800))
+        .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+        .horizon(6 * 3600)
+        .fault(FaultSpec::ChunkCrash { rate: 0.01 })
+        .build()
+        .run()
+        .unwrap();
+    assert!(m.chunk_retries > 0, "no chunk crash scheduled a retry");
+    assert!(m.requeued_tasks > 0, "crash retries must re-enter the pending tail");
+    for (w, o) in m.outcomes.iter().enumerate() {
+        assert!(o.completed_at.is_some(), "workload {w} hung instead of finishing degraded");
+    }
+    // `tasks_completed` counts *terminal* tasks (the shard audit's
+    // Completed + Failed), so an abandoned task is inside the total —
+    // exactly once — and the receipt counter bounds the degraded share
+    assert_eq!(m.tasks_completed, total, "every task must turn terminal exactly once");
+    assert!(
+        (m.tasks_abandoned as usize) < total,
+        "the retry budget cannot abandon the entire suite at this hazard"
+    );
+    let outcome_abandoned: usize = m.outcomes.iter().map(|o| o.tasks_abandoned).sum();
+    assert_eq!(
+        outcome_abandoned, m.tasks_abandoned as usize,
+        "per-workload abandonment receipts must decompose the total"
+    );
+    // budget exhaustion is a deadline violation, never a hang
+    if m.tasks_abandoned > 0 {
+        assert!(m.ttc_compliance() < 1.0, "abandoned tasks must count as TTC violations");
+    }
+}
+
+#[test]
+fn speculative_twins_complete_exactly_once_under_stragglers() {
+    // first-completion-wins: the loser teardown is audited by the DB
+    // state machine (a double count panics on the second complete) and
+    // the balance check proves no task is lost to the teardown either
+    let mut saw_spec = false;
+    let mut saw_straggler = false;
+    for seed in [1u64, 7, 11, 42, 20161021] {
+        let m = ScenarioBuilder::new(cfg_seeded(seed))
+            .workloads(suite(2, 40, App::FaceDetection))
+            .fixed_ttc(Some(1800))
+            .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+            .horizon(8 * 3600)
+            .fault(FaultSpec::Straggler { frac: 0.25, slowdown: 4.0 })
+            .build()
+            .run()
+            .unwrap();
+        for (w, o) in m.outcomes.iter().enumerate() {
+            assert!(o.completed_at.is_some(), "seed {seed}: workload {w} never completed");
+        }
+        assert_eq!(m.tasks_completed, 2 * 40, "seed {seed}: completions must balance");
+        assert_eq!(m.tasks_abandoned, 0, "seed {seed}: stragglers never abandon work");
+        assert_eq!(m.chunk_retries, 0, "seed {seed}: stragglers never crash chunks");
+        saw_spec |= m.speculative_launches > 0;
+        saw_straggler |= m.straggler_instances > 0;
+    }
+    assert!(saw_straggler, "no seed marked any instance as a straggler");
+    assert!(saw_spec, "no seed launched a speculative twin");
+}
+
+#[test]
+fn aimd_regrows_capacity_under_stragglers() {
+    // a 4x-degraded quarter of the fleet drains the remaining-task
+    // count slower, so N* stays high longer and AIMD keeps additively
+    // growing — on at least one seed the straggler run must provably
+    // carry more concurrent capacity than the clean run of the same
+    // suite (and every seed must still finish everything)
+    let mut saw_growth = false;
+    for seed in [1u64, 7, 11, 42, 20161021] {
+        let clean = ScenarioBuilder::new(cfg_seeded(seed))
+            .workloads(suite(2, 40, App::FaceDetection))
+            .fixed_ttc(Some(1800))
+            .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+            .horizon(8 * 3600)
+            .build()
+            .run()
+            .unwrap();
+        let m = ScenarioBuilder::new(cfg_seeded(seed))
+            .workloads(suite(2, 40, App::FaceDetection))
+            .fixed_ttc(Some(1800))
+            .arrivals(ArrivalProcess::FixedInterval { interval_s: 60 })
+            .horizon(8 * 3600)
+            .fault(FaultSpec::Straggler { frac: 0.25, slowdown: 4.0 })
+            .build()
+            .run()
+            .unwrap();
+        assert!(
+            m.outcomes.iter().all(|o| o.completed_at.is_some()),
+            "seed {seed}: AIMD did not recover from stragglers"
+        );
+        assert_eq!(m.tasks_completed, 2 * 40, "seed {seed}: unbalanced completions");
+        saw_growth |= m.max_instances > clean.max_instances;
+    }
+    assert!(saw_growth, "no seed grew the fleet beyond its clean-run peak");
+}
